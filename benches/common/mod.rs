@@ -1,0 +1,39 @@
+//! Minimal bench harness (criterion is unavailable offline —
+//! DESIGN.md §3). Each bench target uses `harness = false` and calls
+//! `bench` / `bench_n` here: warmup, N timed iterations, min/mean
+//! reported. `--quick` (or BENCH_QUICK=1) trims iterations for CI.
+
+use std::time::Instant;
+
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").is_ok()
+}
+
+#[allow(dead_code)]
+/// Time `f` over `iters` iterations (after one warmup) and print a
+/// criterion-ish line. Returns mean seconds.
+pub fn bench_n<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("bench {name:<40} iters {iters:>3}  min {:>10.3} ms  \
+              mean {:>10.3} ms", min * 1e3, mean * 1e3);
+    mean
+}
+
+#[allow(dead_code)]
+/// One-shot wall-clock measurement for end-to-end table generation.
+pub fn bench_once<F: FnOnce() -> String>(name: &str, f: F) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{out}");
+    println!("bench {name:<40} end-to-end {:>10.2} s", dt);
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate the paper's fig7 end-to-end (workload
+//! generation -> DSE -> model evaluation -> rendered rows).
+//! Run `cargo bench --bench fig7` (add --quick for CI depth).
+mod common;
+use harflow3d::report::{self, ReportCfg};
+
+fn main() {
+    let cfg = ReportCfg {
+        seed: 0x4A8F,
+        n_seeds: if common::quick() { 2 } else { 4 },
+        fast: common::quick(),
+    };
+    common::bench_once("fig7", || report::by_name("fig7", &cfg).unwrap());
+}

@@ -1,0 +1,61 @@
+//! Micro-benchmarks for the L3 hot paths (the §Perf targets in
+//! EXPERIMENTS.md): SA move throughput, schedule evaluation, the
+//! cycle simulator, and the JSON substrate.
+//!
+//! `cargo bench --bench hotpath`
+
+mod common;
+
+use harflow3d::device;
+use harflow3d::model::{onnx, zoo};
+use harflow3d::optim::{self, OptCfg};
+use harflow3d::perf::BwEnv;
+use harflow3d::resource::ResourceModel;
+use harflow3d::sched::{self, SchedCfg};
+use harflow3d::sdf::Design;
+use harflow3d::sim::{self, SimCfg};
+use harflow3d::util::json::Json;
+
+fn main() {
+    let quick = common::quick();
+    let k = if quick { 1 } else { 5 };
+
+    // Latency evaluation of a full design (the SA inner loop's cost).
+    let m = zoo::x3d_m();
+    let dev = device::by_name("zcu102").unwrap();
+    let env = BwEnv::of_device(&dev);
+    let d = Design::initial(&m);
+    let scfg = SchedCfg::default();
+    common::bench_n("sched/total_latency x3d_m (396 layers)", 20 * k,
+                    || {
+        std::hint::black_box(sched::total_latency_cycles(&m, &d, &env,
+                                                         &scfg));
+    });
+
+    // Full SA run (fast preset) — states/second is the DSE throughput.
+    let rm = ResourceModel::default_fit();
+    let c3d = zoo::c3d();
+    common::bench_n("optim/SA c3d fast preset", 3 * k, || {
+        std::hint::black_box(
+            optim::optimize(&c3d, &dev, &rm, OptCfg::fast(1)).unwrap());
+    });
+
+    // Cycle-approximate simulation of a schedule.
+    let dd = Design::initial(&c3d);
+    common::bench_n("sim/simulate c3d initial design", 10 * k, || {
+        std::hint::black_box(sim::simulate(&c3d, &dd, &dev, &scfg,
+                                           &SimCfg::default()));
+    });
+
+    // Resource-model fit (startup cost) and evaluation.
+    common::bench_n("resource/fit 833 modules x 6 types", 3 * k, || {
+        std::hint::black_box(ResourceModel::default_fit());
+    });
+
+    // ONNX-JSON parse of the largest model.
+    let text = onnx::to_json(&m).to_string();
+    common::bench_n("onnx/parse x3d_m json", 10 * k, || {
+        let j = Json::parse(&text).unwrap();
+        std::hint::black_box(onnx::from_json(&j).unwrap());
+    });
+}

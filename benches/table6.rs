@@ -1,0 +1,14 @@
+//! Bench: regenerate the paper's table6 end-to-end (workload
+//! generation -> DSE -> model evaluation -> rendered rows).
+//! Run `cargo bench --bench table6` (add --quick for CI depth).
+mod common;
+use harflow3d::report::{self, ReportCfg};
+
+fn main() {
+    let cfg = ReportCfg {
+        seed: 0x4A8F,
+        n_seeds: if common::quick() { 2 } else { 4 },
+        fast: common::quick(),
+    };
+    common::bench_once("table6", || report::by_name("table6", &cfg).unwrap());
+}

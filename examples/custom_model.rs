@@ -1,0 +1,75 @@
+//! Bring-your-own-model: define a 3D CNN with the builder API (or
+//! ONNX-JSON), round-trip it through the parser, and map it onto two
+//! different boards — the workflow a downstream user follows for a
+//! network that is not in the zoo.
+//!
+//! ```bash
+//! cargo run --release --example custom_model
+//! ```
+
+use harflow3d::device;
+use harflow3d::model::graph::{GraphBuilder, INPUT};
+use harflow3d::model::layer::{ActKind, EltOp, PoolOp, Shape};
+use harflow3d::model::onnx;
+use harflow3d::optim::{self, OptCfg};
+use harflow3d::resource::ResourceModel;
+use harflow3d::util::json::Json;
+
+/// A little residual 3D CNN for 8x64x64 medical-volume-style inputs —
+/// the kind of "future work" domain the paper's conclusion names.
+fn build_model() -> harflow3d::model::ModelGraph {
+    let mut b = GraphBuilder::new("volnet", Shape::new(8, 64, 64, 1));
+    let c1 = b.conv("stem", INPUT, 16, [3, 5, 5], [1, 2, 2], [1, 2, 2], 1);
+    let r1 = b.act("stem_relu", c1, ActKind::Relu);
+
+    // Two residual blocks.
+    let mut x = r1;
+    for i in 0..2 {
+        let f = 16 * (i + 1);
+        let c = b.conv(&format!("res{i}_a"), x, f, [3; 3], [1; 3], [1; 3], 1);
+        let a = b.act(&format!("res{i}_a_relu"), c, ActKind::Relu);
+        let c2 = b.conv(&format!("res{i}_b"), a, f, [3; 3], [1; 3],
+                        [1; 3], 1);
+        let short = if i == 0 {
+            x
+        } else {
+            b.conv(&format!("res{i}_proj"), x, f, [1; 3], [1; 3], [0; 3], 1)
+        };
+        let add = b.eltwise(&format!("res{i}_add"), c2, short, EltOp::Add,
+                            false);
+        x = b.act(&format!("res{i}_relu"), add, ActKind::Relu);
+        x = b.pool(&format!("pool{i}"), x, PoolOp::Max, [2; 3], [2; 3],
+                   [0; 3]);
+    }
+    let g = b.gap("gap", x);
+    b.fc("head", g, 10);
+    b.finish(10)
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = build_model();
+    println!("{}: {:.3} GMACs, {} layers ({} conv)", model.name,
+             model.total_macs() as f64 / 1e9, model.num_layers(),
+             model.num_conv_layers());
+
+    // ONNX-JSON round trip — what `harflow3d export/optimize <file>`
+    // do on disk.
+    let json_text = onnx::to_json(&model).to_string();
+    let parsed = onnx::from_json(&Json::parse(&json_text).unwrap())
+        .map_err(anyhow::Error::msg)?;
+    assert_eq!(parsed.total_macs(), model.total_macs());
+    println!("onnx-json round trip ok ({} bytes)", json_text.len());
+
+    let rm = ResourceModel::default_fit();
+    for dev_name in ["zc706", "zcu102"] {
+        let dev = device::by_name(dev_name).unwrap();
+        let r = optim::optimize_multi(&parsed, &dev, &rm,
+                                      OptCfg::default(), 4)
+            .map_err(anyhow::Error::msg)?;
+        println!("{dev_name}: {:.3} ms/clip, DSP {:.1}%, {} nodes",
+                 r.latency_ms,
+                 100.0 * r.resources.dsp / dev.avail.dsp,
+                 r.design.used_nodes());
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Device/model sweep: optimise every evaluated 3D CNN for every
+//! board and print the latency/accuracy + DSP-efficiency landscape
+//! (the data behind Figs 1 and 8).
+//!
+//! ```bash
+//! cargo run --release --example pareto_sweep [--fast]
+//! ```
+
+use harflow3d::device;
+use harflow3d::model::zoo;
+use harflow3d::optim::{self, OptCfg};
+use harflow3d::resource::ResourceModel;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let rm = ResourceModel::default_fit();
+    println!("{:<14} {:<8} {:>10} {:>10} {:>12} {:>7} {:>7}",
+             "model", "device", "lat ms", "GOps/s", "GOps/s/DSP",
+             "DSP %", "acc %");
+    for model_name in zoo::EVALUATED {
+        let model = zoo::by_name(model_name).unwrap();
+        let acc = zoo::ucf101_accuracy(model_name).unwrap();
+        for dev in device::all_devices() {
+            let cfg = if fast { OptCfg::fast(1) } else { OptCfg::default() };
+            let n_seeds = if fast { 2 } else { 4 };
+            let Ok(r) = optim::optimize_multi(&model, &dev, &rm, cfg,
+                                              n_seeds) else {
+                println!("{model_name:<14} {:<8} infeasible", dev.name);
+                continue;
+            };
+            let gops = model.total_macs() as f64 / 1e9
+                / (r.latency_ms / 1e3);
+            println!("{:<14} {:<8} {:>10.2} {:>10.1} {:>12.3} {:>7.1} \
+                      {:>7.2}",
+                     model_name, dev.name, r.latency_ms, gops,
+                     gops / r.resources.dsp,
+                     100.0 * r.resources.dsp / dev.avail.dsp, acc);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Quickstart: optimise a 3D CNN for an FPGA and inspect the design.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the 60-second tour of the public API: build (or parse) a
+//! model, pick a device, run the latency-driven DSE, and look at the
+//! resulting accelerator + schedule.
+
+use harflow3d::device;
+use harflow3d::model::zoo;
+use harflow3d::optim::{self, OptCfg};
+use harflow3d::resource::ResourceModel;
+use harflow3d::sched::{self, SchedCfg};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A model: from the zoo (or onnx::from_json for your own).
+    let model = zoo::c3d();
+    println!("model: {} — {:.2} GMACs, {:.2} M params, {} layers",
+             model.name, model.total_macs() as f64 / 1e9,
+             model.total_params() as f64 / 1e6, model.num_layers());
+
+    // 2. A device from the database.
+    let dev = device::by_name("zcu102").expect("device");
+    println!("device: {} ({}) — {} DSPs, {} BRAM18",
+             dev.name, dev.family, dev.avail.dsp, dev.avail.bram);
+
+    // 3. The resource model (fits the LUT/FF regression once).
+    let rm = ResourceModel::default_fit();
+
+    // 4. Latency-driven design space exploration (Algorithm 2).
+    let result = optim::optimize_multi(&model, &dev, &rm,
+                                       OptCfg::default(), 4)
+        .map_err(anyhow::Error::msg)?;
+    let gops = model.total_macs() as f64 / 1e9
+        / (result.latency_ms / 1e3);
+    println!("\noptimised design: {:.2} ms/clip  ({:.1} GOps/s, \
+              {:.3} GOps/s/DSP)", result.latency_ms, gops,
+             gops / result.resources.dsp);
+    println!("resources: DSP {:.0} ({:.1}%)  BRAM {:.0} ({:.1}%)",
+             result.resources.dsp,
+             100.0 * result.resources.dsp / dev.avail.dsp,
+             result.resources.bram,
+             100.0 * result.resources.bram / dev.avail.bram);
+
+    // 5. The hardware graph G and its schedule Φ_G.
+    println!("\ncomputation nodes:");
+    for (i, node) in result.design.nodes.iter().enumerate() {
+        let layers = result.design.layers_of(i);
+        if layers.is_empty() {
+            continue;
+        }
+        println!("  {:>7} node: tile {}x{}x{}x{}, F {}, K {:?}, \
+                  c_in {}, c_out {}, f {} — executes {} layers",
+                 node.kind.tag(), node.max_in.d, node.max_in.h,
+                 node.max_in.w, node.max_in.c, node.max_filters,
+                 node.max_kernel, node.coarse_in, node.coarse_out,
+                 node.fine, layers.len());
+    }
+    let phi = sched::build_schedule(&model, &result.design,
+                                    &SchedCfg::default());
+    println!("schedule: {} runtime-parameterized invocations", phi.len());
+    Ok(())
+}

@@ -1,0 +1,156 @@
+"""AOT entry point: lower L2/L1 to HLO *text* artifacts for the Rust side.
+
+Run once via ``make artifacts`` (no-op if inputs unchanged); Python never
+runs on the request path afterwards.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted artifacts (all ``artifacts/*.hlo.txt`` + ``manifest.json``):
+
+* ``layer_<name>`` — one per C3D-tiny layer, Pallas building blocks,
+  weights baked as constants. Conv layers take pre-padded inputs.
+* ``layer_conv2_tile`` — the runtime-parameterized tile variant: conv2
+  executed on an H-halved input tile with halo, proving the schedule's
+  tiled invocations compose to the exact full-layer result.
+* ``c3d_tiny_ref`` — the golden whole-model forward (pure-jnp oracle).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, *specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def padded_in_shape(name, shapes):
+    """Input shape of a conv layer *after* coordinator-side padding."""
+    prm = model._PARAMS[name]
+    (d, h, w, c), _ = shapes[name]
+    pd, ph, pw = prm["p"]
+    return (d + 2 * pd, h + 2 * ph, w + 2 * pw, c)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    weights = model.make_weights()
+    shapes = model.layer_shapes()
+    manifest = {"input_shape": list(model.INPUT_SHAPE),
+                "num_classes": model.NUM_CLASSES,
+                "weight_seed": model.WEIGHT_SEED,
+                "layers": [], "artifacts": {}, "weights": {}}
+
+    # Weight binaries ------------------------------------------------------
+    # HLO text elides large constants, so weights are runtime parameters
+    # of each artifact, exported as raw little-endian f32 and streamed in
+    # by the coordinator (the paper's off-chip weight DMA).
+    for key, arr in weights.items():
+        fname = f"{key}.bin"
+        arr.astype("<f4").tofile(os.path.join(args.out_dir, fname))
+        manifest["weights"][key] = {"file": fname, "shape": list(arr.shape)}
+
+    def emit(tag, fn, in_shapes):
+        specs = [jax.ShapeDtypeStruct(tuple(s), jnp.float32)
+                 for s in in_shapes]
+        text = lower_fn(fn, *specs)
+        fname = f"{tag}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        out_shape = jax.eval_shape(fn, *specs)[0].shape
+        manifest["artifacts"][tag] = {
+            "file": fname,
+            "input_shapes": [list(s) for s in in_shapes],
+            "output_shape": list(out_shape),
+        }
+        print(f"  {fname}: {[tuple(s) for s in in_shapes]} ->"
+              f" {tuple(out_shape)} ({len(text)} chars)")
+        return out_shape
+
+    # Per-layer artifacts ------------------------------------------------
+    for name, kind, prm in model.C3D_TINY:
+        fwd = model.layer_pallas(name)
+        if kind == "conv":
+            in_shapes = [padded_in_shape(name, shapes),
+                         weights[name + ".w"].shape,
+                         weights[name + ".b"].shape]
+            pad = list(prm["p"])
+        elif kind == "fc":
+            in_shapes = [shapes[name][0], weights[name + ".w"].shape,
+                         weights[name + ".b"].shape]
+            pad = [0, 0, 0]
+        else:
+            in_shapes = [shapes[name][0]]
+            pad = [0, 0, 0]
+        emit(f"layer_{name}", fwd, in_shapes)
+        manifest["layers"].append({
+            "name": name, "kind": kind, "artifact": f"layer_{name}",
+            "pad": pad,
+            "weights": ([name + ".w", name + ".b"]
+                        if kind in ("conv", "fc") else []),
+            "in_shape": list(shapes[name][0]),
+            "out_shape": list(shapes[name][1]),
+        })
+
+    # Tiled conv2 variant -------------------------------------------------
+    # conv2 full padded input is (10, 18, 18, 16) -> out (8, 16, 16, 32).
+    # Split the output H dimension into two tiles of 8 rows; each tile
+    # needs 10 padded input rows (8 + K_H - 1). The coordinator slices
+    # the halo'd rows out of the padded feature-map (DESIGN.md §6).
+    (d2, h2, w2, c2) = padded_in_shape("conv2", shapes)
+    tile_h_in = 8 + 3 - 1
+    emit("layer_conv2_tile", model.layer_pallas("conv2"),
+         [(d2, tile_h_in, w2, c2), weights["conv2.w"].shape,
+          weights["conv2.b"].shape])
+    manifest["conv2_tile"] = {
+        "artifact": "layer_conv2_tile",
+        "tiles": 2,
+        "halo": 1,
+        "out_rows_per_tile": 8,
+    }
+
+    # Golden whole-model reference ---------------------------------------
+    # Weights are parameters here too, in C3D_TINY order (w, b per
+    # parametric layer, after the clip input).
+    wkeys = [k for name, kind, _ in model.C3D_TINY
+             if kind in ("conv", "fc") for k in (name + ".w", name + ".b")]
+
+    def ref_fn(x, *ws):
+        wmap = dict(zip(wkeys, ws))
+        return (model.ref_forward(x, wmap),)
+
+    emit("c3d_tiny_ref", ref_fn,
+         [model.INPUT_SHAPE] + [weights[k].shape for k in wkeys])
+    manifest["ref_weight_order"] = wkeys
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,168 @@
+"""Pallas 3D convolution kernel — the toolflow's Conv3D building block.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's FPGA
+datapath is a sliding-window generator fed from BRAM line buffers into a
+``c_in x c_out x f``-folded DSP dot-product engine. On a TPU-shaped
+target the same insight — keep the working tile on-chip, fold the
+channel/filter dimensions onto the MAC array — maps to:
+
+* the *tile* the L3 scheduler assigns to an invocation is the Pallas
+  block: it lives in VMEM for the whole invocation (the line buffer);
+* the kernel im2cols the tile into a ``(Do*Ho*Wo, K^3*Cin)`` patch
+  matrix and multiplies it against the ``(K^3*Cin, F_t)`` filter slab
+  on the MXU (the DSP array), with the grid iterating over filter
+  tiles ``F_t`` (coarse-grain out-folding) so each step's working set
+  fits VMEM and Mosaic double-buffers the weight slabs (the paper's
+  weight double-buffering);
+* ragged tiles at feature-map edges are handled by the L3 scheduler
+  exactly as in the paper: runtime-parameterized shapes, realised here
+  as per-shape compiled artifacts.
+
+``interpret=True`` always: the CPU PJRT client cannot execute Mosaic
+custom-calls; numerics are validated against ``ref.conv3d`` and TPU
+performance is estimated analytically (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_f_tile(f: int) -> int:
+    """Largest filter-tile <= 128 that divides F (MXU lane alignment)."""
+    for cand in (128, 64, 32, 16, 8, 4, 2, 1):
+        if f % cand == 0:
+            return cand
+    return 1
+
+
+def _conv3d_kernel(x_ref, w_ref, b_ref, o_ref, *, kernel, stride, out_shape,
+                   activation):
+    """One grid step: all output voxels for one filter tile ``F_t``.
+
+    ``x_ref``: ``(Dp, Hp, Wp, Cin)`` pre-padded input tile (whole tile —
+    the VMEM-resident line buffer). ``w_ref``: ``(KD, KH, KW, Cin, Ft)``.
+    """
+    kd, kh, kw = kernel
+    jd, jh, jw = stride
+    do, ho, wo = out_shape
+    x = x_ref[...]
+    cin = x.shape[-1]
+
+    # Sliding-window generation: one strided slice per kernel offset.
+    # K is a compile-time constant (<= 11 in every supported model), so
+    # this unrolls into K^3 slices — the FPGA sliding-window module's
+    # tap pattern, expressed as data movement instead of line buffers.
+    patches = []
+    for dk in range(kd):
+        for hk in range(kh):
+            for wk in range(kw):
+                sl = x[dk:dk + (do - 1) * jd + 1:jd,
+                       hk:hk + (ho - 1) * jh + 1:jh,
+                       wk:wk + (wo - 1) * jw + 1:jw, :]
+                patches.append(sl)
+    # (Do, Ho, Wo, K^3 * Cin) -> (Do*Ho*Wo, K^3*Cin)
+    pat = jnp.concatenate(patches, axis=-1).reshape(do * ho * wo,
+                                                    kd * kh * kw * cin)
+    # Filter slab: (KD,KH,KW,Cin,Ft) -> (K^3*Cin, Ft). Axis order must
+    # match the patch concat order (kernel offsets outer, channels inner).
+    wmat = w_ref[...].reshape(kd * kh * kw * cin, -1)
+    acc = jnp.dot(pat, wmat, preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][jnp.newaxis, :]
+    acc = ref.apply_activation(acc, activation)
+    o_ref[...] = acc.reshape(do, ho, wo, -1)
+
+
+def _dw_conv3d_kernel(x_ref, w_ref, b_ref, o_ref, *, kernel, stride,
+                      out_shape, activation):
+    """Depth-wise variant: per-channel taps, no cross-channel reduction."""
+    kd, kh, kw = kernel
+    jd, jh, jw = stride
+    do, ho, wo = out_shape
+    x = x_ref[...]
+    acc = jnp.zeros((do, ho, wo, x.shape[-1]), jnp.float32)
+    for dk in range(kd):
+        for hk in range(kh):
+            for wk in range(kw):
+                sl = x[dk:dk + (do - 1) * jd + 1:jd,
+                       hk:hk + (ho - 1) * jh + 1:jh,
+                       wk:wk + (wo - 1) * jw + 1:jw, :]
+                acc = acc + sl * w_ref[dk, hk, wk, :][jnp.newaxis,
+                                                      jnp.newaxis,
+                                                      jnp.newaxis, :]
+    acc = acc + b_ref[...]
+    o_ref[...] = ref.apply_activation(acc, activation)
+
+
+def conv3d(x, w, b=None, stride=(1, 1, 1), padding=(0, 0, 0), groups=1,
+           activation=None):
+    """Pallas Conv3D building block, matching ``ref.conv3d`` exactly.
+
+    Supports the paper's five convolution flavours: full ``KxKxK``,
+    spatial ``1xKxK``, temporal ``Kx1x1``, point-wise ``1x1x1`` and
+    depth-wise (``groups == Cin``). Grouped (non-depthwise) convolution
+    splits channels and runs one block per group.
+    """
+    d, h, wd, cin = x.shape
+    kd, kh, kw, wcin, f = w.shape
+    if b is None:
+        b = jnp.zeros((f,), jnp.float32)
+    pd, ph, pw = padding
+    xp = jnp.pad(x.astype(jnp.float32),
+                 [(pd, pd), (ph, ph), (pw, pw), (0, 0)])
+    jd, jh, jw = stride
+    do = (d + 2 * pd - kd) // jd + 1
+    ho = (h + 2 * ph - kh) // jh + 1
+    wo = (wd + 2 * pw - kw) // jw + 1
+
+    if groups == cin and wcin == 1:
+        # Depth-wise: weights (KD,KH,KW,1,C) -> (KD,KH,KW,C)
+        kern = functools.partial(_dw_conv3d_kernel, kernel=(kd, kh, kw),
+                                 stride=stride, out_shape=(do, ho, wo),
+                                 activation=activation)
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((do, ho, wo, f), jnp.float32),
+            interpret=True,
+        )(xp, w.reshape(kd, kh, kw, f).astype(jnp.float32),
+          b.astype(jnp.float32))
+
+    if groups > 1:
+        # Grouped: independent blocks over the channel dimension (the
+        # paper's Gr parameter). Cheap static loop — groups is small
+        # whenever it is not the depthwise case.
+        outs = []
+        gc_in = cin // groups
+        gc_out = f // groups
+        for g in range(groups):
+            outs.append(conv3d(
+                x[..., g * gc_in:(g + 1) * gc_in],
+                w[..., g * gc_out:(g + 1) * gc_out],
+                b[g * gc_out:(g + 1) * gc_out],
+                stride=stride, padding=padding, groups=1,
+                activation=activation))
+        return jnp.concatenate(outs, axis=-1)
+
+    ft = _pick_f_tile(f)
+    kern = functools.partial(_conv3d_kernel, kernel=(kd, kh, kw),
+                             stride=stride, out_shape=(do, ho, wo),
+                             activation=activation)
+    dp, hp, wp = xp.shape[:3]
+    return pl.pallas_call(
+        kern,
+        grid=(f // ft,),
+        in_specs=[
+            pl.BlockSpec((dp, hp, wp, cin), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((kd, kh, kw, cin, ft), lambda i: (0, 0, 0, 0, i)),
+            pl.BlockSpec((ft,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((do, ho, wo, ft), lambda i: (0, 0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((do, ho, wo, f), jnp.float32),
+        interpret=True,
+    )(xp, w.astype(jnp.float32), b.astype(jnp.float32))

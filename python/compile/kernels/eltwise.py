@@ -1,0 +1,68 @@
+"""Pallas activation, element-wise and fully-connected building blocks.
+
+Activation and Eltwise are the paper's memory-bound nodes (§VII ablation:
+fusing them into the preceding Conv removes an off-chip round trip — the
+fused path is the ``activation=`` argument of ``conv3d.conv3d``; the
+standalone nodes below are the *unfused* baseline the ablation compares
+against). FC shares the Conv engine with no feature-map buffering
+(§III-B), i.e. a plain VMEM-resident matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _act_kernel(x_ref, o_ref, *, kind):
+    o_ref[...] = ref.apply_activation(x_ref[...], kind)
+
+
+def activation(x, kind="relu"):
+    """Standalone Activation node (runtime parameter ``T`` = kind)."""
+    return pl.pallas_call(
+        functools.partial(_act_kernel, kind=kind),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))
+
+
+def _eltwise_kernel(a_ref, b_ref, o_ref, *, op, broadcast):
+    a = a_ref[...]
+    b = b_ref[...]
+    if broadcast:
+        b = b.reshape((1, 1, 1, -1))
+    o_ref[...] = a + b if op == "add" else a * b
+
+
+def eltwise(a, b, op="add", broadcast=False):
+    """Element-wise node (``T`` = op, ``B`` = broadcast mode)."""
+    return pl.pallas_call(
+        functools.partial(_eltwise_kernel, op=op, broadcast=broadcast),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.float32),
+        interpret=True,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def _fc_kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    acc = jnp.dot(x_ref[...], w_ref[...],
+                  preferred_element_type=jnp.float32) + b_ref[...]
+    o_ref[...] = ref.apply_activation(acc, activation)
+
+
+def fc(x, w, b=None, activation=None):
+    """Fully-connected node: ``(C,) @ (C, F) + (F,)`` on the MXU."""
+    c, f = w.shape
+    if b is None:
+        b = jnp.zeros((f,), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_fc_kernel, activation=activation),
+        out_shape=jax.ShapeDtypeStruct((f,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32).reshape(c), w.astype(jnp.float32),
+      b.astype(jnp.float32))

@@ -1,0 +1,86 @@
+"""Pallas 3D pooling + global-average-pool building blocks.
+
+The paper's Pool3D node shares the sliding-window front-end with Conv3D
+but replaces the dot-product engine with a max/mean reduction tree; the
+runtime parameter ``T`` selects the op. Here the window taps are the
+same strided slices as in ``conv3d.py`` and the reduction happens in
+VREGs. Global average pooling is the dedicated optimised node from
+§III-B (a single running mean over the whole tile).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool3d_kernel(x_ref, o_ref, *, kernel, stride, out_shape, op):
+    kd, kh, kw = kernel
+    jd, jh, jw = stride
+    do, ho, wo = out_shape
+    x = x_ref[...]
+    acc = None
+    for dk in range(kd):
+        for hk in range(kh):
+            for wk in range(kw):
+                sl = x[dk:dk + (do - 1) * jd + 1:jd,
+                       hk:hk + (ho - 1) * jh + 1:jh,
+                       wk:wk + (wo - 1) * jw + 1:jw, :]
+                if acc is None:
+                    acc = sl
+                elif op == "max":
+                    acc = jnp.maximum(acc, sl)
+                else:
+                    acc = acc + sl
+    if op == "avg":
+        acc = acc / float(kd * kh * kw)
+    o_ref[...] = acc
+
+
+def pool3d(x, kernel=(2, 2, 2), stride=None, padding=(0, 0, 0), op="max"):
+    """Pallas Pool3D building block matching ``ref.pool3d``."""
+    if stride is None:
+        stride = kernel
+    kd, kh, kw = kernel
+    jd, jh, jw = stride
+    pd, ph, pw = padding
+    x = x.astype(jnp.float32)
+    if any(padding):
+        pad_val = -jnp.inf if op == "max" else 0.0
+        x = jnp.pad(x, [(pd, pd), (ph, ph), (pw, pw), (0, 0)],
+                    constant_values=pad_val)
+    d, h, w, c = x.shape
+    do = (d - kd) // jd + 1
+    ho = (h - kh) // jh + 1
+    wo = (w - kw) // jw + 1
+    kern = functools.partial(_pool3d_kernel, kernel=kernel, stride=stride,
+                             out_shape=(do, ho, wo), op=op)
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((do, ho, wo, c), jnp.float32),
+        interpret=True,
+    )(x)
+    if op == "avg" and any(padding):
+        # ref.pool3d divides by the full window size even at padded
+        # borders (count_include_pad semantics) — already matched since
+        # we padded with zeros and divide by |K|.
+        pass
+    return out
+
+
+def _gap_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    o_ref[...] = jnp.mean(x, axis=(0, 1, 2))
+
+
+def global_avg_pool(x):
+    """Pallas Global-Average-Pool node: ``(D, H, W, C) -> (C,)``."""
+    c = x.shape[-1]
+    return pl.pallas_call(
+        _gap_kernel,
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))

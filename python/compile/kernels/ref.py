@@ -1,0 +1,133 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness ground truth).
+
+All feature-maps are channels-last ``(D, H, W, C)`` — the paper's NHWDC
+ordering with the channel dimension fastest-changing (the batch dim is
+carried by the caller; the toolflow is latency-oriented, batch == 1).
+
+These functions are the *specification*: the Pallas kernels in this
+package must match them to float32 tolerance for every parameter
+combination the toolflow can schedule (kernel size, stride, padding,
+groups). ``pytest python/tests`` sweeps that space with hypothesis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Convolution
+# ---------------------------------------------------------------------------
+
+
+def conv3d(x, w, b=None, stride=(1, 1, 1), padding=(0, 0, 0), groups=1,
+           activation=None):
+    """Reference 3D convolution.
+
+    Args:
+      x: ``(D, H, W, Cin)`` input feature-map.
+      w: ``(KD, KH, KW, Cin // groups, F)`` filters.
+      b: optional ``(F,)`` bias.
+      stride: ``(JD, JH, JW)``.
+      padding: symmetric ``(PD, PH, PW)`` zero padding.
+      groups: channel groups (``groups == Cin`` is depthwise).
+      activation: ``None | 'relu' | 'sigmoid' | 'swish'`` fused activation.
+
+    Returns:
+      ``(Do, Ho, Wo, F)`` output feature-map.
+    """
+    xb = x[jnp.newaxis]  # NDHWC
+    pd, ph, pw = padding
+    out = lax.conv_general_dilated(
+        xb.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=stride,
+        padding=[(pd, pd), (ph, ph), (pw, pw)],
+        dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+        feature_group_count=groups,
+    )[0]
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return apply_activation(out, activation)
+
+
+# ---------------------------------------------------------------------------
+# Pooling
+# ---------------------------------------------------------------------------
+
+
+def pool3d(x, kernel=(2, 2, 2), stride=None, padding=(0, 0, 0), op="max"):
+    """Reference 3D max/avg pooling over ``(D, H, W, C)``."""
+    if stride is None:
+        stride = kernel
+    kd, kh, kw = kernel
+    jd, jh, jw = stride
+    pd, ph, pw = padding
+    pads = [(pd, pd), (ph, ph), (pw, pw), (0, 0)]
+    x = x.astype(jnp.float32)
+    if op == "max":
+        init = -jnp.inf
+        out = lax.reduce_window(
+            x, init, lax.max, (kd, kh, kw, 1), (jd, jh, jw, 1), pads)
+    elif op == "avg":
+        summed = lax.reduce_window(
+            x, 0.0, lax.add, (kd, kh, kw, 1), (jd, jh, jw, 1), pads)
+        out = summed / float(kd * kh * kw)
+    else:
+        raise ValueError(f"unknown pool op {op!r}")
+    return out
+
+
+def global_avg_pool(x):
+    """Reference global average pooling: ``(D, H, W, C) -> (C,)``."""
+    return jnp.mean(x.astype(jnp.float32), axis=(0, 1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Activation / element-wise
+# ---------------------------------------------------------------------------
+
+
+def apply_activation(x, kind):
+    """Apply one of the paper's supported activation types ``T``."""
+    if kind is None or kind == "linear":
+        return x
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if kind == "swish":
+        return x * jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def eltwise(a, bx, op="add", broadcast=False):
+    """Reference element-wise op with the paper's broadcast mode ``B``.
+
+    In broadcast mode the second operand is a per-channel vector
+    ``(C,)`` (the squeeze-excite pattern in X3D), otherwise it has the
+    same shape as ``a``.
+    """
+    a = a.astype(jnp.float32)
+    bx = bx.astype(jnp.float32)
+    if broadcast:
+        bx = bx.reshape((1, 1, 1, -1))
+    if op == "add":
+        return a + bx
+    if op == "mul":
+        return a * bx
+    raise ValueError(f"unknown eltwise op {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# Fully connected
+# ---------------------------------------------------------------------------
+
+
+def fc(x, w, b=None, activation=None):
+    """Reference fully-connected layer: ``(C,) @ (C, F) + (F,)``."""
+    out = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return apply_activation(out, activation)

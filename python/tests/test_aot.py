@@ -1,0 +1,88 @@
+"""AOT pipeline checks: HLO text artifacts are complete, parseable in
+the interchange format, and consistent with the manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..",
+                         "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_files():
+    m = _manifest()
+    for tag, meta in m["artifacts"].items():
+        path = os.path.join(ARTIFACTS, meta["file"])
+        assert os.path.exists(path), f"{tag}: missing {meta['file']}"
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{tag}: not HLO text"
+        # HLO text must not elide constants (the weights-as-parameters
+        # design exists precisely because `constant({...})` does not
+        # round-trip).
+        assert "constant({...})" not in text, f"{tag}: elided constant"
+
+
+def test_weight_binaries_match_shapes():
+    import numpy as np
+    m = _manifest()
+    for key, meta in m["weights"].items():
+        path = os.path.join(ARTIFACTS, meta["file"])
+        data = np.fromfile(path, dtype="<f4")
+        assert data.size == np.prod(meta["shape"]), key
+        assert np.all(np.isfinite(data)), key
+
+
+def test_weights_regenerate_identically():
+    """The weight seed pins the binaries: regenerating must agree."""
+    import numpy as np
+    from compile import model
+    m = _manifest()
+    assert m["weight_seed"] == model.WEIGHT_SEED
+    weights = model.make_weights()
+    for key, meta in m["weights"].items():
+        path = os.path.join(ARTIFACTS, meta["file"])
+        data = np.fromfile(path, dtype="<f4")
+        np.testing.assert_array_equal(
+            data, weights[key].astype("<f4").ravel(), err_msg=key)
+
+
+def test_layer_chain_covers_model():
+    m = _manifest()
+    names = [l["name"] for l in m["layers"]]
+    assert names == ["conv1", "pool1", "conv2", "pool2", "conv3",
+                     "pool3", "gap", "fc"]
+    # Chain shapes line up.
+    prev = m["input_shape"]
+    for l in m["layers"]:
+        assert l["in_shape"] == prev, l["name"]
+        prev = l["out_shape"]
+    assert prev == [m["num_classes"]]
+
+
+def test_conv2_tile_metadata():
+    m = _manifest()
+    t = m["conv2_tile"]
+    assert t["tiles"] == 2
+    art = m["artifacts"][t["artifact"]]
+    # Tile input: 8 out rows + (K_h - 1) halo rows = 10.
+    assert art["input_shapes"][0][1] == t["out_rows_per_tile"] + 2 * t["halo"]
+
+
+def test_make_artifacts_is_idempotent():
+    """Second `make artifacts` run is a no-op (stamp newer than deps)."""
+    repo = os.path.join(os.path.dirname(__file__), "..", "..")
+    r = subprocess.run(["make", "-q", "artifacts"], cwd=repo,
+                       capture_output=True)
+    assert r.returncode == 0, "make artifacts not up to date"
+    _ = sys  # keep import (used in debugging variants)

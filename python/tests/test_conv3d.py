@@ -1,0 +1,139 @@
+"""Pallas Conv3D vs pure-jnp oracle — the core L1 correctness signal.
+
+Sweeps the parameter space the toolflow can actually schedule (the five
+convolution flavours of §III-B, strides, paddings, groups) both with
+explicit paper-relevant cases and a hypothesis sweep over random
+shapes/dtypes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import conv3d as kconv
+from compile.kernels import ref
+
+RNG = np.random.RandomState(7)
+
+
+def _rand(shape, dtype=np.float32):
+    return RNG.randn(*shape).astype(dtype)
+
+
+def _check(x, w, b, **kw):
+    got = kconv.conv3d(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), **kw)
+    want = ref.conv3d(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --- The paper's five convolution flavours (§III-B) ----------------------
+
+def test_full_conv_3x3x3():
+    _check(_rand((6, 10, 10, 4)), _rand((3, 3, 3, 4, 8)), _rand((8,)),
+           stride=(1, 1, 1), padding=(1, 1, 1))
+
+
+def test_spatial_conv_1x3x3():
+    _check(_rand((4, 9, 9, 6)), _rand((1, 3, 3, 6, 12)), _rand((12,)),
+           stride=(1, 1, 1), padding=(0, 1, 1))
+
+
+def test_temporal_conv_3x1x1():
+    _check(_rand((8, 5, 5, 6)), _rand((3, 1, 1, 6, 10)), _rand((10,)),
+           stride=(1, 1, 1), padding=(1, 0, 0))
+
+
+def test_pointwise_conv_1x1x1():
+    _check(_rand((4, 6, 6, 16)), _rand((1, 1, 1, 16, 24)), _rand((24,)))
+
+
+def test_depthwise_conv():
+    c = 12
+    x = _rand((4, 8, 8, c))
+    w = _rand((3, 3, 3, 1, c))
+    b = _rand((c,))
+    _check(x, w, b, stride=(1, 1, 1), padding=(1, 1, 1), groups=c)
+
+
+def test_grouped_conv():
+    _check(_rand((4, 6, 6, 8)), _rand((3, 3, 3, 4, 8)), _rand((8,)),
+           stride=(1, 1, 1), padding=(1, 1, 1), groups=2)
+
+
+# --- Strides / paddings / fused activations ------------------------------
+
+@pytest.mark.parametrize("stride", [(1, 1, 1), (2, 2, 2), (1, 2, 2),
+                                    (2, 1, 1)])
+def test_strides(stride):
+    _check(_rand((6, 8, 8, 4)), _rand((3, 3, 3, 4, 8)), _rand((8,)),
+           stride=stride, padding=(1, 1, 1))
+
+
+@pytest.mark.parametrize("pad", [(0, 0, 0), (1, 1, 1), (2, 2, 2),
+                                 (0, 1, 1), (1, 0, 0)])
+def test_paddings(pad):
+    _check(_rand((6, 8, 8, 4)), _rand((3, 3, 3, 4, 8)), _rand((8,)),
+           stride=(1, 1, 1), padding=pad)
+
+
+@pytest.mark.parametrize("act", [None, "relu", "sigmoid", "swish"])
+def test_fused_activation(act):
+    _check(_rand((4, 6, 6, 4)), _rand((3, 3, 3, 4, 8)), _rand((8,)),
+           stride=(1, 1, 1), padding=(1, 1, 1), activation=act)
+
+
+def test_no_bias():
+    x = _rand((4, 6, 6, 4))
+    w = _rand((3, 3, 3, 4, 8))
+    got = kconv.conv3d(jnp.asarray(x), jnp.asarray(w))
+    want = ref.conv3d(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_large_filter_count_tiles_mxu():
+    # F = 160 forces a non-trivial filter-tile grid (Ft=32, 5 steps).
+    _check(_rand((2, 5, 5, 3)), _rand((3, 3, 3, 3, 160)), _rand((160,)),
+           stride=(1, 1, 1), padding=(1, 1, 1))
+
+
+def test_f16_inputs_promote_to_f32():
+    x = _rand((4, 6, 6, 4), np.float16)
+    w = _rand((3, 3, 3, 4, 8), np.float16)
+    b = _rand((8,), np.float16)
+    got = kconv.conv3d(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                       padding=(1, 1, 1))
+    want = ref.conv3d(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                      padding=(1, 1, 1))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-2, atol=1e-2)
+
+
+# --- Hypothesis sweep -----------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(3, 6), h=st.integers(3, 8), w=st.integers(3, 8),
+    cin=st.integers(1, 6), f=st.sampled_from([1, 2, 3, 4, 8]),
+    kd=st.sampled_from([1, 3]), ks=st.sampled_from([1, 3]),
+    jd=st.integers(1, 2), js=st.integers(1, 2),
+    pad=st.integers(0, 1),
+)
+def test_hypothesis_sweep(d, h, w, cin, f, kd, ks, jd, js, pad):
+    rng = np.random.RandomState(d * 31 + h * 7 + w)
+    x = rng.randn(d, h, w, cin).astype(np.float32)
+    wt = rng.randn(kd, ks, ks, cin, f).astype(np.float32)
+    b = rng.randn(f).astype(np.float32)
+    pd = pad if kd > 1 else 0
+    ps = pad if ks > 1 else 0
+    # Output dims must be >= 1.
+    if (d + 2 * pd - kd) // jd + 1 < 1:
+        return
+    if (h + 2 * ps - ks) // js + 1 < 1:
+        return
+    if (w + 2 * ps - ks) // js + 1 < 1:
+        return
+    _check(x, wt, b, stride=(jd, js, js), padding=(pd, ps, ps))

@@ -1,0 +1,81 @@
+"""L2 model consistency: Pallas chain == jnp oracle; shapes; tiling.
+
+The tiled-conv2 test is the python-side proof of the property the Rust
+coordinator relies on at serving time: executing a layer as halo'd tile
+invocations (the schedule's runtime-parameterized tiles) reproduces the
+full-layer output exactly.
+"""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_layer_shapes_chain():
+    shapes = model.layer_shapes()
+    prev_out = model.INPUT_SHAPE
+    for name, kind, _ in model.C3D_TINY:
+        sin, sout = shapes[name]
+        assert sin == prev_out, f"{name}: shape chain broken"
+        prev_out = sout
+    assert prev_out == (model.NUM_CLASSES,)
+
+
+def test_weights_deterministic():
+    w1 = model.make_weights()
+    w2 = model.make_weights()
+    for k in w1:
+        np.testing.assert_array_equal(w1[k], w2[k])
+
+
+def test_pallas_forward_matches_ref():
+    weights = model.make_weights()
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(*model.INPUT_SHAPE).astype(np.float32))
+    got = model.pallas_forward(x, weights)
+    want = model.ref_forward(x, weights)
+    assert got.shape == (model.NUM_CLASSES,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_conv2_tiled_equals_full():
+    """Two halo'd H-tiles through the tile kernel == full conv2."""
+    weights = model.make_weights()
+    shapes = model.layer_shapes()
+    rng = np.random.RandomState(1)
+    (d, h, w, c), _ = shapes["conv2"]
+    x = jnp.asarray(rng.randn(d, h, w, c).astype(np.float32))
+
+    prm = model._PARAMS["conv2"]
+    pd, ph, pw = prm["p"]
+    xp = jnp.pad(x, [(pd, pd), (ph, ph), (pw, pw), (0, 0)])
+    wt = jnp.asarray(weights["conv2.w"])
+    bt = jnp.asarray(weights["conv2.b"])
+    fwd = model.layer_pallas("conv2")
+    full = fwd(xp, wt, bt)[0]
+
+    # Tile: out rows [0,8) need padded rows [0,10); out rows [8,16)
+    # need padded rows [8,18).
+    t0 = fwd(xp[:, 0:10], wt, bt)[0]
+    t1 = fwd(xp[:, 8:18], wt, bt)[0]
+    tiled = jnp.concatenate([t0, t1], axis=1)
+    np.testing.assert_allclose(np.asarray(tiled), np.asarray(full),
+                               rtol=1e-4, atol=1e-4)
+
+    want = ref.conv3d(x, jnp.asarray(weights["conv2.w"]),
+                      jnp.asarray(weights["conv2.b"]),
+                      stride=prm["j"], padding=prm["p"],
+                      activation=prm["act"])
+    np.testing.assert_allclose(np.asarray(tiled), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ref_forward_finite():
+    weights = model.make_weights()
+    x = jnp.zeros(model.INPUT_SHAPE, jnp.float32)
+    out = model.ref_forward(x, weights)
+    assert np.all(np.isfinite(np.asarray(out)))

@@ -1,0 +1,108 @@
+"""Pallas Pool3D / GAP / Activation / Eltwise / FC vs the jnp oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import pool3d as kpool
+from compile.kernels import eltwise as kelt
+from compile.kernels import ref
+
+RNG = np.random.RandomState(11)
+
+
+def _rand(shape):
+    return RNG.randn(*shape).astype(np.float32)
+
+
+def _close(got, want, tol=1e-5):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+# --- Pooling --------------------------------------------------------------
+
+@pytest.mark.parametrize("op", ["max", "avg"])
+@pytest.mark.parametrize("kernel,stride", [
+    ((2, 2, 2), (2, 2, 2)),    # C3D pool2-5
+    ((1, 2, 2), (1, 2, 2)),    # C3D pool1 (spatial only)
+    ((3, 3, 3), (2, 2, 2)),    # overlapping windows
+    ((2, 3, 3), (1, 2, 2)),
+])
+def test_pool3d(op, kernel, stride):
+    x = _rand((6, 9, 9, 5))
+    _close(kpool.pool3d(jnp.asarray(x), kernel=kernel, stride=stride, op=op),
+           ref.pool3d(jnp.asarray(x), kernel=kernel, stride=stride, op=op))
+
+
+def test_pool3d_padded_max():
+    x = _rand((5, 7, 7, 4))
+    _close(kpool.pool3d(jnp.asarray(x), kernel=(3, 3, 3), stride=(2, 2, 2),
+                        padding=(1, 1, 1), op="max"),
+           ref.pool3d(jnp.asarray(x), kernel=(3, 3, 3), stride=(2, 2, 2),
+                      padding=(1, 1, 1), op="max"))
+
+
+def test_global_avg_pool():
+    x = _rand((4, 7, 7, 32))
+    _close(kpool.global_avg_pool(jnp.asarray(x)),
+           ref.global_avg_pool(jnp.asarray(x)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.integers(2, 6), h=st.integers(2, 8), c=st.integers(1, 8),
+       k=st.integers(1, 3), j=st.integers(1, 2),
+       op=st.sampled_from(["max", "avg"]))
+def test_pool_hypothesis(d, h, c, k, j, op):
+    if (d - k) // j + 1 < 1 or (h - k) // j + 1 < 1:
+        return
+    rng = np.random.RandomState(d * 13 + h)
+    x = rng.randn(d, h, h, c).astype(np.float32)
+    _close(kpool.pool3d(jnp.asarray(x), kernel=(k, k, k), stride=(j, j, j),
+                        op=op),
+           ref.pool3d(jnp.asarray(x), kernel=(k, k, k), stride=(j, j, j),
+                      op=op))
+
+
+# --- Activation / Eltwise ---------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["relu", "sigmoid", "swish"])
+def test_activation(kind):
+    x = _rand((4, 6, 6, 8))
+    _close(kelt.activation(jnp.asarray(x), kind),
+           ref.apply_activation(jnp.asarray(x), kind), tol=1e-5)
+
+
+@pytest.mark.parametrize("op", ["add", "mul"])
+@pytest.mark.parametrize("broadcast", [False, True])
+def test_eltwise(op, broadcast):
+    a = _rand((4, 6, 6, 8))
+    b = _rand((8,)) if broadcast else _rand((4, 6, 6, 8))
+    _close(kelt.eltwise(jnp.asarray(a), jnp.asarray(b), op=op,
+                        broadcast=broadcast),
+           ref.eltwise(jnp.asarray(a), jnp.asarray(b), op=op,
+                       broadcast=broadcast))
+
+
+# --- FC ---------------------------------------------------------------------
+
+def test_fc():
+    x = _rand((64,))
+    w = _rand((64, 101))
+    b = _rand((101,))
+    _close(kelt.fc(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)),
+           ref.fc(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)),
+           tol=1e-4)
+
+
+@pytest.mark.parametrize("act", [None, "relu", "sigmoid"])
+def test_fc_activation(act):
+    x = _rand((32,))
+    w = _rand((32, 16))
+    b = _rand((16,))
+    _close(kelt.fc(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                   activation=act),
+           ref.fc(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                  activation=act), tol=1e-4)

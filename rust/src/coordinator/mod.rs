@@ -1,0 +1,299 @@
+//! Serving coordinator — the L3 request path.
+//!
+//! At serving time the accelerator (here: the PJRT-executed building
+//! blocks) is driven layer-by-layer exactly as the paper's CPU drives
+//! its custom instructions: feature-maps round-trip through "off-chip
+//! memory" (host buffers) between computation-node invocations, conv
+//! tiles are sliced with halos and stitched back (the schedule's
+//! runtime-parameterized invocations), and weights stream in alongside
+//! the feature-maps.
+//!
+//! `ServingEngine` executes single clips; `Server` wraps it in a
+//! FIFO request queue on a worker thread with latency metrics — the
+//! shape of a production deployment (enqueue → execute → respond).
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Execution mode for conv2: whole-layer artifact or the two halo'd
+/// H-tiles (proving the tiled schedule composes exactly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvMode {
+    Whole,
+    Tiled,
+}
+
+/// Per-clip execution result.
+#[derive(Debug, Clone)]
+pub struct ClipResult {
+    pub logits: Tensor,
+    pub class: usize,
+    /// Max |pallas chain - golden reference| when verification ran.
+    pub verify_err: Option<f32>,
+    pub wall_us: u128,
+}
+
+/// The serving engine: executes the C3D-tiny layer chain on PJRT.
+pub struct ServingEngine {
+    pub rt: Runtime,
+}
+
+impl ServingEngine {
+    pub fn load(artifacts_dir: &Path) -> Result<ServingEngine> {
+        Ok(ServingEngine { rt: Runtime::load(artifacts_dir)? })
+    }
+
+    /// Execute one layer by name on an input feature-map.
+    fn run_layer(&self, idx: usize, x: &Tensor, conv_mode: ConvMode)
+        -> Result<Tensor> {
+        let entry = &self.rt.layers[idx];
+        match entry.kind.as_str() {
+            "conv" => {
+                // Coordinator-side padding (the DMA/line-buffer role).
+                let xp = x.pad3d(entry.pad);
+                let w = &self.rt.weights[&format!("{}.w", entry.name)];
+                let b = &self.rt.weights[&format!("{}.b", entry.name)];
+                if entry.name == "conv2" && conv_mode == ConvMode::Tiled {
+                    // Runtime-parameterized tiling: two H-tiles with a
+                    // 1-row halo each (manifest `conv2_tile`): padded
+                    // rows [0,10) -> out rows [0,8); rows [8,18) ->
+                    // out rows [8,16).
+                    let t0 = self.rt.execute(
+                        "layer_conv2_tile",
+                        &[&xp.slice_axis(1, 0, 10), w, b],
+                    )?;
+                    let t1 = self.rt.execute(
+                        "layer_conv2_tile",
+                        &[&xp.slice_axis(1, 8, 18), w, b],
+                    )?;
+                    Ok(Tensor::concat(&[t0, t1], 1))
+                } else {
+                    self.rt.execute(&entry.artifact, &[&xp, w, b])
+                }
+            }
+            "fc" => {
+                let w = &self.rt.weights[&format!("{}.w", entry.name)];
+                let b = &self.rt.weights[&format!("{}.b", entry.name)];
+                self.rt.execute(&entry.artifact, &[x, w, b])
+            }
+            _ => self.rt.execute(&entry.artifact, &[x]),
+        }
+    }
+
+    /// Run the full layer chain for one clip.
+    pub fn forward(&self, clip: &Tensor, conv_mode: ConvMode)
+        -> Result<Tensor> {
+        if clip.shape != self.rt.input_shape {
+            return Err(anyhow!(
+                "clip shape {:?} != model input {:?}",
+                clip.shape, self.rt.input_shape
+            ));
+        }
+        let mut x = clip.clone();
+        for idx in 0..self.rt.layers.len() {
+            x = self.run_layer(idx, &x, conv_mode)?;
+        }
+        Ok(x)
+    }
+
+    /// Process one clip, optionally verifying the layer chain against
+    /// the golden whole-model artifact.
+    pub fn process(&self, clip: &Tensor, conv_mode: ConvMode,
+                   verify: bool) -> Result<ClipResult> {
+        let t0 = Instant::now();
+        let logits = self.forward(clip, conv_mode)?;
+        let wall_us = t0.elapsed().as_micros();
+        let verify_err = if verify {
+            let golden = self.rt.execute_reference(clip)?;
+            Some(logits.max_abs_diff(&golden))
+        } else {
+            None
+        };
+        Ok(ClipResult {
+            class: logits.argmax(),
+            logits,
+            verify_err,
+            wall_us,
+        })
+    }
+}
+
+/// Latency metrics over a serving run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub clips: usize,
+    pub wall_us: Vec<u128>,
+    pub max_verify_err: f32,
+}
+
+impl Metrics {
+    pub fn percentile(&self, p: f64) -> u128 {
+        if self.wall_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.wall_us.clone();
+        v.sort_unstable();
+        let idx = ((v.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        v[idx]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.wall_us.is_empty() {
+            return 0.0;
+        }
+        self.wall_us.iter().sum::<u128>() as f64 / self.wall_us.len() as f64
+    }
+
+    pub fn clips_per_s(&self, elapsed_s: f64) -> f64 {
+        self.clips as f64 / elapsed_s.max(1e-9)
+    }
+}
+
+enum Req {
+    Clip(u64, mpsc::Sender<Result<ClipResult>>),
+    Stop,
+}
+
+/// FIFO request server: one executor thread *owns* the engine and
+/// drains the queue (PJRT handles are not `Send` — exactly like a
+/// single accelerator card, the device context lives with its driver
+/// thread; requests cross via channels).
+pub struct Server {
+    tx: mpsc::Sender<Req>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn the executor thread; artifact loading + compilation
+    /// happens on the worker, errors are reported back synchronously.
+    pub fn start(artifacts_dir: std::path::PathBuf, conv_mode: ConvMode,
+                 verify: bool) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::spawn(move || {
+            let engine = match ServingEngine::load(&artifacts_dir) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let shape = engine.rt.input_shape.clone();
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::Clip(seed, resp) => {
+                        let clip = Tensor::random(&shape, seed);
+                        let r = engine.process(&clip, conv_mode, verify);
+                        let _ = resp.send(r);
+                    }
+                    Req::Stop => break,
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server thread died during load"))??;
+        Ok(Server { tx, handle: Some(handle) })
+    }
+
+    /// Submit a clip (by synthetic seed); blocks for the result.
+    pub fn submit(&self, seed: u64) -> Result<ClipResult> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .send(Req::Clip(seed, rtx))
+            .map_err(|_| anyhow!("server stopped"))?;
+        rrx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    /// Serve `n` clips FIFO, returning metrics.
+    pub fn serve_batch(&self, n: usize, seed0: u64) -> Result<Metrics> {
+        let mut m = Metrics::default();
+        for i in 0..n {
+            let r = self.submit(seed0 + i as u64)?;
+            m.clips += 1;
+            m.wall_us.push(r.wall_us);
+            if let Some(e) = r.verify_err {
+                m.max_verify_err = m.max_verify_err.max(e);
+            }
+        }
+        Ok(m)
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Stop);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<ServingEngine> {
+        let dir =
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(ServingEngine::load(&dir).expect("engine"))
+    }
+
+    #[test]
+    fn layer_chain_matches_reference() {
+        let Some(e) = engine() else { return };
+        let clip = Tensor::random(&e.rt.input_shape.clone(), 7);
+        let r = e.process(&clip, ConvMode::Whole, true).unwrap();
+        let err = r.verify_err.unwrap();
+        assert!(err < 1e-3, "verification error {err}");
+    }
+
+    #[test]
+    fn tiled_conv2_matches_reference() {
+        // The runtime-parameterized tiled execution must agree with
+        // both the whole-layer path and the golden reference.
+        let Some(e) = engine() else { return };
+        let clip = Tensor::random(&e.rt.input_shape.clone(), 8);
+        let whole = e.process(&clip, ConvMode::Whole, true).unwrap();
+        let tiled = e.process(&clip, ConvMode::Tiled, true).unwrap();
+        assert!(tiled.verify_err.unwrap() < 1e-3);
+        let diff = whole.logits.max_abs_diff(&tiled.logits);
+        assert!(diff < 1e-4, "tiled vs whole diff {diff}");
+        assert_eq!(whole.class, tiled.class);
+    }
+
+    #[test]
+    fn server_processes_queue() {
+        let dir =
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let server = Server::start(dir, ConvMode::Whole, false).unwrap();
+        let m = server.serve_batch(4, 100).unwrap();
+        assert_eq!(m.clips, 4);
+        assert!(m.mean_us() > 0.0);
+        assert!(m.percentile(99.0) >= m.percentile(50.0));
+    }
+
+    #[test]
+    fn server_reports_load_errors() {
+        let r = Server::start(PathBuf::from("/nonexistent-artifacts"),
+                              ConvMode::Whole, false);
+        assert!(r.is_err());
+    }
+}

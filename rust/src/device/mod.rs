@@ -1,0 +1,230 @@
+//! FPGA device database — the "description of the FPGA characteristics"
+//! input of the toolflow (§I).
+//!
+//! Resource counts follow the conventions the paper uses in Table II:
+//! BRAM is counted in **18 Kb blocks** (the `R^BRAM` model of §IV-B is
+//! `ceil(depth/512) * ceil(16*words/36)`, i.e. 512-deep x 36-bit
+//! primitives = 18 Kb), so ZCU102 has 1824 of them. DSP counts are
+//! DSP48 slices. Off-chip bandwidth is the effective DDR bandwidth the
+//! DMA pair can sustain, split evenly between the read and write
+//! engines; the performance model works in 16-bit words/cycle.
+
+/// Four common FPGA resource types (§IV-B).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub dsp: f64,
+    pub bram: f64, // 18 Kb blocks
+    pub lut: f64,
+    pub ff: f64,
+}
+
+impl Resources {
+    pub const ZERO: Resources =
+        Resources { dsp: 0.0, bram: 0.0, lut: 0.0, ff: 0.0 };
+
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            dsp: self.dsp + o.dsp,
+            bram: self.bram + o.bram,
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+        }
+    }
+
+    pub fn scale(&self, k: f64) -> Resources {
+        Resources {
+            dsp: self.dsp * k,
+            bram: self.bram * k,
+            lut: self.lut * k,
+            ff: self.ff * k,
+        }
+    }
+
+    /// True if every component fits within `avail`.
+    pub fn fits(&self, avail: &Resources) -> bool {
+        self.dsp <= avail.dsp
+            && self.bram <= avail.bram
+            && self.lut <= avail.lut
+            && self.ff <= avail.ff
+    }
+}
+
+/// An FPGA platform the toolflow can target.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: &'static str,
+    pub family: &'static str,
+    pub avail: Resources,
+    /// Target clock for generated designs (MHz) — the frequency the
+    /// paper reports per board in Table V.
+    pub clock_mhz: f64,
+    /// Effective off-chip memory bandwidth (GB/s) across the DMA pair.
+    pub mem_bw_gbps: f64,
+}
+
+impl Device {
+    /// Total DMA words/cycle (16-bit words at the design clock).
+    pub fn bw_words_per_cycle(&self) -> f64 {
+        let bytes_per_cycle = self.mem_bw_gbps * 1e9 / (self.clock_mhz * 1e6);
+        bytes_per_cycle / 2.0
+    }
+
+    /// Read-side DMA words/cycle (half-duplex split, as the generated
+    /// designs instantiate a symmetric DMA pair — Fig 2).
+    pub fn bw_in_words_per_cycle(&self) -> f64 {
+        self.bw_words_per_cycle() / 2.0
+    }
+
+    pub fn bw_out_words_per_cycle(&self) -> f64 {
+        self.bw_words_per_cycle() / 2.0
+    }
+
+    pub fn cycles_per_ms(&self) -> f64 {
+        self.clock_mhz * 1e3
+    }
+}
+
+/// The boards evaluated in the paper (§VII, Tables II/V/VI, Figs 4/8).
+/// Resource counts from the vendor datasheets; bandwidth is the
+/// effective DDR throughput for the board's memory configuration.
+pub fn all_devices() -> Vec<Device> {
+    vec![
+        Device {
+            name: "zc706",
+            family: "Zynq-7045",
+            avail: Resources {
+                dsp: 900.0,
+                bram: 1090.0, // 545 x 36Kb
+                lut: 218_600.0,
+                ff: 437_200.0,
+            },
+            clock_mhz: 200.0,
+            mem_bw_gbps: 12.8,
+        },
+        Device {
+            name: "zcu102",
+            family: "Zynq US+ ZU9EG",
+            avail: Resources {
+                dsp: 2520.0,
+                bram: 1824.0, // matches Table II "Avail."
+                lut: 274_080.0,
+                ff: 548_160.0,
+            },
+            clock_mhz: 200.0,
+            mem_bw_gbps: 19.2,
+        },
+        Device {
+            name: "zcu104",
+            family: "Zynq US+ ZU7EV",
+            avail: Resources {
+                dsp: 1728.0,
+                bram: 1248.0,
+                lut: 230_400.0,
+                ff: 460_800.0,
+            },
+            clock_mhz: 200.0,
+            mem_bw_gbps: 19.2,
+        },
+        Device {
+            name: "zcu106",
+            family: "Zynq US+ ZU7EV",
+            avail: Resources {
+                dsp: 1728.0,
+                bram: 1248.0,
+                lut: 230_400.0,
+                ff: 460_800.0,
+            },
+            clock_mhz: 200.0,
+            mem_bw_gbps: 19.2,
+        },
+        Device {
+            name: "vc707",
+            family: "Virtex-7 485T",
+            avail: Resources {
+                dsp: 2800.0,
+                bram: 2060.0,
+                lut: 303_600.0,
+                ff: 607_200.0,
+            },
+            clock_mhz: 160.0,
+            mem_bw_gbps: 12.8,
+        },
+        Device {
+            name: "vc709",
+            family: "Virtex-7 690T",
+            avail: Resources {
+                dsp: 3600.0,
+                bram: 2940.0,
+                lut: 433_200.0,
+                ff: 866_400.0,
+            },
+            clock_mhz: 150.0,
+            mem_bw_gbps: 25.6, // two DDR3 SODIMMs
+        },
+        Device {
+            name: "vus440",
+            family: "Virtex US VU440",
+            avail: Resources {
+                dsp: 2880.0,
+                bram: 5040.0,
+                lut: 2_532_960.0,
+                ff: 5_065_920.0,
+            },
+            clock_mhz: 150.0,
+            mem_bw_gbps: 25.6,
+        },
+    ]
+}
+
+/// Look up a device by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Device> {
+    let lower = name.to_lowercase();
+    all_devices().into_iter().find(|d| d.name == lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zcu102_matches_paper_avail() {
+        let d = by_name("zcu102").unwrap();
+        assert_eq!(d.avail.dsp, 2520.0);
+        assert_eq!(d.avail.bram, 1824.0);
+        assert_eq!(d.avail.lut, 274_080.0);
+        assert_eq!(d.avail.ff, 548_160.0);
+    }
+
+    #[test]
+    fn lookup_case_insensitive() {
+        assert!(by_name("ZCU102").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn bandwidth_sane() {
+        // ZCU102 @ 200 MHz, 19.2 GB/s -> 96 B/cycle -> 48 words/cycle.
+        let d = by_name("zcu102").unwrap();
+        assert!((d.bw_words_per_cycle() - 48.0).abs() < 1e-9);
+        assert!((d.bw_in_words_per_cycle() - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resources_fit() {
+        let a = Resources { dsp: 1.0, bram: 2.0, lut: 3.0, ff: 4.0 };
+        let b = Resources { dsp: 2.0, bram: 2.0, lut: 4.0, ff: 5.0 };
+        assert!(a.fits(&b));
+        assert!(!b.fits(&a));
+        assert_eq!(a.add(&a).dsp, 2.0);
+        assert_eq!(a.scale(3.0).ff, 12.0);
+    }
+
+    #[test]
+    fn all_devices_distinct_names() {
+        let ds = all_devices();
+        let mut names: Vec<_> = ds.iter().map(|d| d.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), ds.len());
+    }
+}

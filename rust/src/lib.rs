@@ -1,0 +1,21 @@
+//! HARFLOW3D — a latency-oriented 3D-CNN accelerator toolflow (FCCM'23),
+//! reproduced as a Rust + JAX + Pallas three-layer stack.
+//!
+//! See DESIGN.md for the system inventory and the experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+pub mod baselines;
+pub mod codegen;
+pub mod coordinator;
+pub mod device;
+pub mod model;
+pub mod optim;
+pub mod perf;
+pub mod report;
+pub mod resource;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod sdf;
+pub mod synth;
+pub mod tensor;
+pub mod util;

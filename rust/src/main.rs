@@ -1,0 +1,235 @@
+//! HARFLOW3D launcher.
+//!
+//! ```text
+//! harflow3d optimize <model> <device> [--seeds N] [--seed S] [--fast]
+//! harflow3d schedule <model> <device> [--fast]        dump Φ_G summary
+//! harflow3d simulate <model> <device> [--fast]        cycle-approx run
+//! harflow3d report <table2|table3|table4|table5|table6|
+//!                   fig1|fig4|fig6|fig7|fig8|ablation|all> [--fast]
+//! harflow3d serve [--clips N] [--tiled] [--no-verify]  e2e PJRT serving
+//! harflow3d export <model> <out.json>                  ONNX-JSON export
+//! harflow3d devices | models                           list targets
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use harflow3d::coordinator::{ConvMode, Server};
+use harflow3d::model::{onnx, zoo};
+use harflow3d::optim::{self, OptCfg};
+use harflow3d::report::{self, ReportCfg};
+use harflow3d::resource::ResourceModel;
+use harflow3d::sched::{self, SchedCfg};
+use harflow3d::sim::{self, SimCfg};
+use harflow3d::util::cli::Args;
+use harflow3d::{device, sdf};
+
+fn opt_cfg(args: &Args) -> OptCfg {
+    let seed = args.opt_u64("seed", 0x4A8F);
+    if args.flag("fast") {
+        OptCfg::fast(seed)
+    } else {
+        OptCfg { seed, ..OptCfg::default() }
+    }
+}
+
+fn load_model(name: &str) -> Result<harflow3d::model::ModelGraph> {
+    if let Some(m) = zoo::by_name(name) {
+        return Ok(m);
+    }
+    // Fall back to an ONNX-JSON file path.
+    let text = std::fs::read_to_string(name)
+        .map_err(|e| anyhow!("unknown model {name} ({e})"))?;
+    let j = harflow3d::util::json::Json::parse(&text)
+        .map_err(|e| anyhow!("{name}: {e}"))?;
+    onnx::from_json(&j).map_err(|e| anyhow!("{name}: {e}"))
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_str() {
+        "optimize" | "schedule" | "simulate" => {
+            let model_name = args
+                .positional
+                .first()
+                .ok_or(anyhow!("usage: {} <model> <device>", args.command))?;
+            let dev_name =
+                args.positional.get(1).map(|s| s.as_str()).unwrap_or("zcu102");
+            let m = load_model(model_name)?;
+            let dev = device::by_name(dev_name)
+                .ok_or(anyhow!("unknown device {dev_name}"))?;
+            let rm = ResourceModel::default_fit();
+            let n_seeds = args.opt_u64("seeds", 6);
+            let r = optim::optimize_multi(&m, &dev, &rm, opt_cfg(&args),
+                                          n_seeds)
+                .map_err(|e| anyhow!(e))?;
+            let gops = m.total_macs() as f64 / 1e9 / (r.latency_ms / 1e3);
+            println!(
+                "{} @ {}: latency {:.2} ms/clip | {:.1} GOps/s | \
+                 {:.3} GOps/s/DSP | DSP {:.1}% BRAM {:.1}% LUT {:.1}% \
+                 FF {:.1}% | {} nodes | {} SA iters",
+                m.name, dev.name, r.latency_ms, gops,
+                gops / r.resources.dsp,
+                100.0 * r.resources.dsp / dev.avail.dsp,
+                100.0 * r.resources.bram / dev.avail.bram,
+                100.0 * r.resources.lut / dev.avail.lut,
+                100.0 * r.resources.ff / dev.avail.ff,
+                r.design.used_nodes(), r.iterations,
+            );
+            match args.command.as_str() {
+                "schedule" => {
+                    let phi = sched::build_schedule(&m, &r.design,
+                                                    &SchedCfg::default());
+                    println!("schedule: {} invocations over {} layers",
+                             phi.len(), m.num_layers());
+                    for (i, node) in r.design.nodes.iter().enumerate() {
+                        let layers = r.design.layers_of(i);
+                        if layers.is_empty() {
+                            continue;
+                        }
+                        println!(
+                            "  node {i} {:>7}: S_max {}x{}x{}x{} F {} \
+                             K {:?} c_in {} c_out {} f {} <- {} layers",
+                            node.kind.tag(), node.max_in.d, node.max_in.h,
+                            node.max_in.w, node.max_in.c,
+                            node.max_filters, node.max_kernel,
+                            node.coarse_in, node.coarse_out, node.fine,
+                            layers.len(),
+                        );
+                    }
+                }
+                "simulate" => {
+                    let srep = sim::simulate(&m, &r.design, &dev,
+                                             &SchedCfg::default(),
+                                             &SimCfg::default());
+                    let meas = srep.ms(&dev);
+                    println!(
+                        "simulated: {:.2} ms measured vs {:.2} ms \
+                         predicted ({:+.2}%), {} invocations, \
+                         {:.1} MB moved",
+                        meas, r.latency_ms,
+                        (meas - r.latency_ms) / r.latency_ms * 100.0,
+                        srep.invocations,
+                        srep.words_moved * 2.0 / 1e6,
+                    );
+                    if args.flag("trace") {
+                        let events = sim::trace::trace(
+                            &m, &r.design, &dev, &SchedCfg::default(),
+                            &SimCfg::default());
+                        let rows = args.opt_usize("trace-rows", 20);
+                        print!("{}", sim::trace::render(&events, &m,
+                                                        &dev, rows));
+                    }
+                }
+                _ => {}
+            }
+        }
+        "report" => {
+            let which = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            let cfg = ReportCfg {
+                seed: args.opt_u64("seed", 0x4A8F),
+                n_seeds: args.opt_u64("seeds", 6),
+                fast: args.flag("fast"),
+            };
+            let out = report::by_name(which, &cfg)
+                .ok_or(anyhow!("unknown report {which}"))?;
+            println!("{out}");
+        }
+        "serve" => {
+            let clips = args.opt_usize("clips", 16);
+            let mode = if args.flag("tiled") {
+                ConvMode::Tiled
+            } else {
+                ConvMode::Whole
+            };
+            let verify = !args.flag("no-verify");
+            let dir = std::path::PathBuf::from(
+                args.opt_or("artifacts", "artifacts"));
+            let t0 = std::time::Instant::now();
+            let server = Server::start(dir, mode, verify)?;
+            println!("artifacts compiled in {:?}", t0.elapsed());
+            let t1 = std::time::Instant::now();
+            let m = server.serve_batch(clips, 1000)?;
+            let el = t1.elapsed().as_secs_f64();
+            println!(
+                "served {} clips in {:.2}s: {:.1} clips/s | mean {:.2} ms \
+                 p50 {:.2} ms p99 {:.2} ms | max verify err {:.2e}",
+                m.clips, el, m.clips_per_s(el), m.mean_us() / 1e3,
+                m.percentile(50.0) as f64 / 1e3,
+                m.percentile(99.0) as f64 / 1e3, m.max_verify_err,
+            );
+        }
+        "generate" => {
+            let model_name = args
+                .positional
+                .first()
+                .ok_or(anyhow!("usage: generate <model> <device> \
+                                [--out dir]"))?;
+            let dev_name =
+                args.positional.get(1).map(|s| s.as_str()).unwrap_or("zcu102");
+            let m = load_model(model_name)?;
+            let dev = device::by_name(dev_name)
+                .ok_or(anyhow!("unknown device {dev_name}"))?;
+            let rm = ResourceModel::default_fit();
+            let r = optim::optimize_multi(&m, &dev, &rm, opt_cfg(&args),
+                                          args.opt_u64("seeds", 6))
+                .map_err(|e| anyhow!(e))?;
+            let project = harflow3d::codegen::generate(&m, &r.design);
+            let out = std::path::PathBuf::from(
+                args.opt_or("out", "generated"));
+            project.write_to(&out)?;
+            println!("wrote {} files ({} lines) to {out:?} — design \
+                      {:.2} ms/clip",
+                     project.files.len(), project.total_lines(),
+                     r.latency_ms);
+        }
+        "export" => {
+            let model_name = args
+                .positional
+                .first()
+                .ok_or(anyhow!("usage: export <model> <out.json>"))?;
+            let out = args
+                .positional
+                .get(1)
+                .ok_or(anyhow!("usage: export <model> <out.json>"))?;
+            let m = load_model(model_name)?;
+            std::fs::write(out, onnx::to_json(&m).to_string())?;
+            println!("wrote {out}");
+        }
+        "devices" => {
+            for d in device::all_devices() {
+                println!(
+                    "{:8} {:18} DSP {:>5} BRAM18 {:>5} LUT {:>8} \
+                     FF {:>8} {:>4} MHz {:>5} GB/s",
+                    d.name, d.family, d.avail.dsp, d.avail.bram,
+                    d.avail.lut, d.avail.ff, d.clock_mhz, d.mem_bw_gbps,
+                );
+            }
+        }
+        "models" => {
+            for name in zoo::EVALUATED.iter().chain(["c3d_tiny"].iter()) {
+                let m = zoo::by_name(name).unwrap();
+                println!(
+                    "{:14} {:>7.2} GMACs {:>7.2} MParams {:>4} layers \
+                     {:>4} convs",
+                    name, m.total_macs() as f64 / 1e9,
+                    m.total_params() as f64 / 1e6, m.num_layers(),
+                    m.num_conv_layers(),
+                );
+            }
+        }
+        "" => {
+            // Default smoke: validate the design objects exist.
+            let m = zoo::c3d_tiny();
+            let d = sdf::Design::initial(&m);
+            d.validate(&m).map_err(|e| anyhow!(e))?;
+            println!("harflow3d: use optimize/schedule/simulate/report/\
+                      serve/export/devices/models (see README)");
+        }
+        other => return Err(anyhow!("unknown command {other}")),
+    }
+    Ok(())
+}

@@ -1,0 +1,296 @@
+//! Model DAG `M = {l_1, ..., l_L}` + builder with shape inference.
+
+use super::layer::{ActKind, EltOp, Layer, LayerKind, PoolOp, Shape};
+
+/// A 3D-CNN model as a directed acyclic graph of execution nodes,
+/// stored in topological order (every layer's inputs precede it).
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    pub input_shape: Shape,
+    pub layers: Vec<Layer>,
+    pub num_classes: usize,
+}
+
+impl ModelGraph {
+    /// Total MACs for one clip (Table IV "FLOPs (G)", MAC-counted).
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total parameters (Table IV "Parameters (M)").
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn num_conv_layers(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv3d { .. }))
+            .count()
+    }
+
+    /// Validate DAG invariants: topological input order, shape
+    /// agreement along every edge, eltwise arity.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, l) in self.layers.iter().enumerate() {
+            for &src in &l.inputs {
+                if src >= i {
+                    return Err(format!(
+                        "layer {} ({}) has non-topological input {}",
+                        i, l.name, src
+                    ));
+                }
+            }
+            let expected_in = match l.inputs.first() {
+                Some(&src) => self.layers[src].out_shape,
+                None => self.input_shape,
+            };
+            if expected_in != l.in_shape {
+                return Err(format!(
+                    "layer {} ({}): in_shape {:?} != producer out {:?}",
+                    i, l.name, l.in_shape, expected_in
+                ));
+            }
+            match &l.kind {
+                LayerKind::Eltwise { broadcast, .. } => {
+                    if l.inputs.len() != 2 {
+                        return Err(format!(
+                            "eltwise {} needs 2 inputs", l.name
+                        ));
+                    }
+                    let b = self.layers[l.inputs[1]].out_shape;
+                    if *broadcast {
+                        if b.c != l.in_shape.c {
+                            return Err(format!(
+                                "broadcast eltwise {}: channel mismatch",
+                                l.name
+                            ));
+                        }
+                    } else if b != l.in_shape {
+                        return Err(format!(
+                            "eltwise {}: operand shapes differ", l.name
+                        ));
+                    }
+                }
+                LayerKind::Concat => {
+                    if l.inputs.len() < 2 {
+                        return Err(format!(
+                            "concat {} needs >= 2 inputs", l.name
+                        ));
+                    }
+                    let mut c_sum = 0;
+                    for &src in &l.inputs {
+                        let s = self.layers[src].out_shape;
+                        if (s.d, s.h, s.w)
+                            != (l.in_shape.d, l.in_shape.h, l.in_shape.w)
+                        {
+                            return Err(format!(
+                                "concat {}: spatial mismatch", l.name
+                            ));
+                        }
+                        c_sum += s.c;
+                    }
+                    if l.out_shape != (Shape { c: c_sum, ..l.in_shape }) {
+                        return Err(format!(
+                            "concat {}: bad output channels", l.name
+                        ));
+                    }
+                }
+                _ => {
+                    if l.inputs.len() > 1 {
+                        return Err(format!(
+                            "layer {} has {} inputs",
+                            l.name,
+                            l.inputs.len()
+                        ));
+                    }
+                }
+            }
+            if !matches!(l.kind, LayerKind::Concat) {
+                let inferred = Layer::infer_out(&l.kind, l.in_shape);
+                if inferred != l.out_shape {
+                    return Err(format!(
+                        "layer {} ({}): out_shape {:?} != inferred {:?}",
+                        i, l.name, l.out_shape, inferred
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Incremental builder used by the zoo and the ONNX parser. Methods
+/// return the new layer's index so graphs compose functionally:
+/// `let x = b.conv("c1", x, ...);`
+pub struct GraphBuilder {
+    name: String,
+    input_shape: Shape,
+    layers: Vec<Layer>,
+    num_classes: usize,
+}
+
+/// Pseudo-index for "the model input" as a producer.
+pub const INPUT: usize = usize::MAX;
+
+impl GraphBuilder {
+    pub fn new(name: &str, input_shape: Shape) -> GraphBuilder {
+        GraphBuilder {
+            name: name.to_string(),
+            input_shape,
+            layers: Vec::new(),
+            num_classes: 0,
+        }
+    }
+
+    fn shape_of(&self, src: usize) -> Shape {
+        if src == INPUT {
+            self.input_shape
+        } else {
+            self.layers[src].out_shape
+        }
+    }
+
+    fn push(&mut self, name: &str, kind: LayerKind, inputs: Vec<usize>)
+        -> usize {
+        let in_shape = self.shape_of(*inputs.first().unwrap_or(&INPUT));
+        let out_shape = Layer::infer_out(&kind, in_shape);
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind,
+            inputs: inputs.into_iter().filter(|&i| i != INPUT).collect(),
+            in_shape,
+            out_shape,
+        });
+        self.layers.len() - 1
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(&mut self, name: &str, from: usize, filters: usize,
+                kernel: [usize; 3], stride: [usize; 3], padding: [usize; 3],
+                groups: usize) -> usize {
+        self.push(name,
+                  LayerKind::Conv3d { filters, kernel, stride, padding,
+                                      groups },
+                  vec![from])
+    }
+
+    pub fn pool(&mut self, name: &str, from: usize, op: PoolOp,
+                kernel: [usize; 3], stride: [usize; 3],
+                padding: [usize; 3]) -> usize {
+        self.push(name, LayerKind::Pool3d { op, kernel, stride, padding },
+                  vec![from])
+    }
+
+    pub fn act(&mut self, name: &str, from: usize, kind: ActKind) -> usize {
+        self.push(name, LayerKind::Activation(kind), vec![from])
+    }
+
+    pub fn scale(&mut self, name: &str, from: usize) -> usize {
+        self.push(name, LayerKind::Scale, vec![from])
+    }
+
+    pub fn eltwise(&mut self, name: &str, a: usize, b: usize, op: EltOp,
+                   broadcast: bool) -> usize {
+        self.push(name, LayerKind::Eltwise { op, broadcast }, vec![a, b])
+    }
+
+    /// Channel concatenation of `srcs` (all must share spatial dims).
+    pub fn concat(&mut self, name: &str, srcs: &[usize]) -> usize {
+        assert!(srcs.len() >= 2, "concat needs >= 2 inputs");
+        let first = self.shape_of(srcs[0]);
+        let c_sum: usize =
+            srcs.iter().map(|&s| self.shape_of(s).c).sum();
+        let idx = self.push(name, LayerKind::Concat, srcs.to_vec());
+        self.layers[idx].in_shape = first;
+        self.layers[idx].out_shape = Shape { c: c_sum, ..first };
+        idx
+    }
+
+    pub fn gap(&mut self, name: &str, from: usize) -> usize {
+        self.push(name, LayerKind::GlobalAvgPool, vec![from])
+    }
+
+    pub fn fc(&mut self, name: &str, from: usize, filters: usize) -> usize {
+        self.push(name, LayerKind::Fc { filters }, vec![from])
+    }
+
+    pub fn out_shape(&self, idx: usize) -> Shape {
+        self.shape_of(idx)
+    }
+
+    pub fn finish(mut self, num_classes: usize) -> ModelGraph {
+        self.num_classes = num_classes;
+        let g = ModelGraph {
+            name: self.name,
+            input_shape: self.input_shape,
+            layers: self.layers,
+            num_classes,
+        };
+        debug_assert_eq!(g.validate(), Ok(()));
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelGraph {
+        let mut b = GraphBuilder::new("t", Shape::new(8, 32, 32, 3));
+        let c1 = b.conv("c1", INPUT, 16, [3; 3], [1; 3], [1; 3], 1);
+        let r1 = b.act("r1", c1, ActKind::Relu);
+        let p1 = b.pool("p1", r1, PoolOp::Max, [1, 2, 2], [1, 2, 2], [0; 3]);
+        let g = b.gap("gap", p1);
+        b.fc("fc", g, 10);
+        b.finish(10)
+    }
+
+    #[test]
+    fn builder_chains_shapes() {
+        let g = tiny();
+        assert_eq!(g.validate(), Ok(()));
+        assert_eq!(g.layers.last().unwrap().out_shape, Shape::flat(10));
+        assert_eq!(g.num_conv_layers(), 1);
+        assert_eq!(g.num_layers(), 5);
+    }
+
+    #[test]
+    fn totals_positive() {
+        let g = tiny();
+        assert!(g.total_macs() > 0);
+        assert!(g.total_params() > 0);
+    }
+
+    #[test]
+    fn residual_branch_validates() {
+        let mut b = GraphBuilder::new("res", Shape::new(4, 8, 8, 16));
+        let c1 = b.conv("c1", INPUT, 16, [3; 3], [1; 3], [1; 3], 1);
+        // Residual: add conv output to the branch point (model input).
+        let c2 = b.conv("c2", c1, 16, [3; 3], [1; 3], [1; 3], 1);
+        // Second operand is c1 (same shape).
+        let e = b.eltwise("add", c2, c1, EltOp::Add, false);
+        b.act("relu", e, ActKind::Relu);
+        let g = b.finish(0);
+        assert_eq!(g.validate(), Ok(()));
+    }
+
+    #[test]
+    fn validate_catches_shape_break() {
+        let mut g = tiny();
+        g.layers[2].in_shape = Shape::new(1, 1, 1, 1);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_topology() {
+        let mut g = tiny();
+        g.layers[0].inputs = vec![3];
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! Execution-node (layer) definitions — the paper's Table I parameter
+//! space, on the model side.
+
+/// Feature-map dimensions `S = {H, W, D, C}` (§III-B). Stored as
+/// (D, H, W, C) with C fastest-changing, matching the accelerator's
+/// NHWDC streaming order and the L1 kernels' channels-last layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub d: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape {
+    pub fn new(d: usize, h: usize, w: usize, c: usize) -> Shape {
+        Shape { d, h, w, c }
+    }
+
+    /// Flat vector shape (FC inputs/outputs).
+    pub fn flat(c: usize) -> Shape {
+        Shape { d: 1, h: 1, w: 1, c }
+    }
+
+    /// `|S|` — number of elements.
+    pub fn elems(&self) -> usize {
+        self.d * self.h * self.w * self.c
+    }
+
+    /// Spatial-temporal voxels (no channels).
+    pub fn voxels(&self) -> usize {
+        self.d * self.h * self.w
+    }
+}
+
+/// Activation types `T` supported by the Activation block (§III-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActKind {
+    Relu,
+    Sigmoid,
+    Swish,
+}
+
+/// Pooling types `T`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PoolOp {
+    Max,
+    Avg,
+}
+
+/// Element-wise op types `T`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EltOp {
+    Add,
+    Mul,
+}
+
+/// Layer operator + compile-time hyper-parameters (Table I).
+/// Kernel/stride/padding triplets are `(D, H, W)` ordered; padding is
+/// symmetric per dimension (the asymmetric start/end split of Table I
+/// only matters for HDL generation, not for modelling).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    Conv3d {
+        filters: usize,
+        kernel: [usize; 3],
+        stride: [usize; 3],
+        padding: [usize; 3],
+        groups: usize,
+    },
+    Pool3d {
+        op: PoolOp,
+        kernel: [usize; 3],
+        stride: [usize; 3],
+        padding: [usize; 3],
+    },
+    Activation(ActKind),
+    /// Two-input element-wise op; `broadcast` means the second operand
+    /// is a per-channel vector (§III-B mode `B`).
+    Eltwise { op: EltOp, broadcast: bool },
+    /// Per-channel affine `x*g + b` — folded BatchNorm as exported by
+    /// the ONNX path; scheduled like a broadcast Eltwise.
+    Scale,
+    /// Channel concatenation of N inputs (Inception-style branches) —
+    /// pure data movement through the crossbars, scheduled on the
+    /// element-wise block.
+    Concat,
+    GlobalAvgPool,
+    Fc { filters: usize },
+}
+
+impl LayerKind {
+    /// Short type tag; computation nodes combine execution nodes of
+    /// equal type (§V-C4), keyed by this.
+    pub fn type_tag(&self) -> &'static str {
+        match self {
+            LayerKind::Conv3d { .. } => "conv",
+            LayerKind::Pool3d { .. } => "pool",
+            LayerKind::Activation(_) => "act",
+            LayerKind::Eltwise { .. } | LayerKind::Scale
+            | LayerKind::Concat => "eltwise",
+            LayerKind::GlobalAvgPool => "gap",
+            LayerKind::Fc { .. } => "fc",
+        }
+    }
+}
+
+/// An execution node `l` of the model graph `M`.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Producer layer indices; empty means the model input feeds this
+    /// layer. Eltwise has two entries.
+    pub inputs: Vec<usize>,
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+}
+
+impl Layer {
+    /// Multiply-accumulate operations (the paper's FLOPs unit,
+    /// Table IV footnote: "FLOPs are reported as MAC operations").
+    pub fn macs(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv3d { filters, kernel, groups, .. } => {
+                let k: usize = kernel.iter().product();
+                (self.out_shape.voxels() * filters * k
+                    * (self.in_shape.c / groups)) as u64
+            }
+            LayerKind::Fc { filters } => {
+                (self.in_shape.elems() * filters) as u64
+            }
+            // Non-MAC layers contribute no Ops in the paper's counting.
+            _ => 0,
+        }
+    }
+
+    /// Parameter count (weights + biases).
+    pub fn params(&self) -> u64 {
+        match &self.kind {
+            LayerKind::Conv3d { filters, kernel, groups, .. } => {
+                let k: usize = kernel.iter().product();
+                (k * (self.in_shape.c / groups) * filters + filters) as u64
+            }
+            LayerKind::Fc { filters } => {
+                (self.in_shape.elems() * filters + filters) as u64
+            }
+            LayerKind::Scale => (2 * self.in_shape.c) as u64,
+            _ => 0,
+        }
+    }
+
+    /// Output shape given an input shape and this layer's parameters.
+    pub fn infer_out(kind: &LayerKind, input: Shape) -> Shape {
+        fn conv_dim(i: usize, k: usize, s: usize, p: usize) -> usize {
+            (i + 2 * p - k) / s + 1
+        }
+        match kind {
+            LayerKind::Conv3d { filters, kernel, stride, padding, .. } => {
+                Shape {
+                    d: conv_dim(input.d, kernel[0], stride[0], padding[0]),
+                    h: conv_dim(input.h, kernel[1], stride[1], padding[1]),
+                    w: conv_dim(input.w, kernel[2], stride[2], padding[2]),
+                    c: *filters,
+                }
+            }
+            LayerKind::Pool3d { kernel, stride, padding, .. } => Shape {
+                d: conv_dim(input.d, kernel[0], stride[0], padding[0]),
+                h: conv_dim(input.h, kernel[1], stride[1], padding[1]),
+                w: conv_dim(input.w, kernel[2], stride[2], padding[2]),
+                c: input.c,
+            },
+            LayerKind::Activation(_)
+            | LayerKind::Eltwise { .. }
+            | LayerKind::Scale => input,
+            // Concat's output channels depend on *all* inputs; the
+            // builder overrides this (infer_out sees only the first).
+            LayerKind::Concat => input,
+            LayerKind::GlobalAvgPool => Shape::flat(input.c),
+            LayerKind::Fc { filters } => Shape::flat(*filters),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_elems() {
+        let s = Shape::new(8, 32, 32, 3);
+        assert_eq!(s.elems(), 8 * 32 * 32 * 3);
+        assert_eq!(s.voxels(), 8 * 32 * 32);
+        assert_eq!(Shape::flat(64).elems(), 64);
+    }
+
+    #[test]
+    fn conv_shape_inference() {
+        let kind = LayerKind::Conv3d {
+            filters: 64,
+            kernel: [3, 3, 3],
+            stride: [1, 2, 2],
+            padding: [1, 1, 1],
+            groups: 1,
+        };
+        let out = Layer::infer_out(&kind, Shape::new(16, 112, 112, 3));
+        assert_eq!(out, Shape::new(16, 56, 56, 64));
+    }
+
+    #[test]
+    fn pool_shape_inference() {
+        let kind = LayerKind::Pool3d {
+            op: PoolOp::Max,
+            kernel: [2, 2, 2],
+            stride: [2, 2, 2],
+            padding: [0, 0, 0],
+        };
+        let out = Layer::infer_out(&kind, Shape::new(16, 56, 56, 64));
+        assert_eq!(out, Shape::new(8, 28, 28, 64));
+    }
+
+    #[test]
+    fn conv_macs_and_params() {
+        let l = Layer {
+            name: "c".into(),
+            kind: LayerKind::Conv3d {
+                filters: 64,
+                kernel: [3, 3, 3],
+                stride: [1, 1, 1],
+                padding: [1, 1, 1],
+                groups: 1,
+            },
+            inputs: vec![],
+            in_shape: Shape::new(16, 112, 112, 3),
+            out_shape: Shape::new(16, 112, 112, 64),
+        };
+        // out_voxels * F * 27 * Cin
+        assert_eq!(l.macs(), (16 * 112 * 112 * 64 * 27 * 3) as u64);
+        assert_eq!(l.params(), (27 * 3 * 64 + 64) as u64);
+    }
+
+    #[test]
+    fn depthwise_macs() {
+        let l = Layer {
+            name: "dw".into(),
+            kind: LayerKind::Conv3d {
+                filters: 96,
+                kernel: [3, 3, 3],
+                stride: [1, 1, 1],
+                padding: [1, 1, 1],
+                groups: 96,
+            },
+            inputs: vec![],
+            in_shape: Shape::new(8, 16, 16, 96),
+            out_shape: Shape::new(8, 16, 16, 96),
+        };
+        assert_eq!(l.macs(), (8 * 16 * 16 * 96 * 27) as u64);
+    }
+
+    #[test]
+    fn fc_counts() {
+        let l = Layer {
+            name: "fc".into(),
+            kind: LayerKind::Fc { filters: 101 },
+            inputs: vec![],
+            in_shape: Shape::flat(4096),
+            out_shape: Shape::flat(101),
+        };
+        assert_eq!(l.macs(), 4096 * 101);
+        assert_eq!(l.params(), 4096 * 101 + 101);
+    }
+}

@@ -1,0 +1,16 @@
+//! 3D-CNN model intermediate representation.
+//!
+//! The toolflow's front-end (§III-A): models arrive as a DAG
+//! `M = {l_1, ..., l_L}` of execution nodes. The zoo builders
+//! (`zoo/`) construct the five evaluated networks layer-by-layer; the
+//! ONNX-JSON codec (`onnx.rs`) is the interchange format standing in
+//! for binary ONNX (DESIGN.md §3 — no protobuf available offline, and
+//! the mmaction2 exports are not redistributable here).
+
+pub mod graph;
+pub mod layer;
+pub mod onnx;
+pub mod zoo;
+
+pub use graph::{GraphBuilder, ModelGraph};
+pub use layer::{ActKind, EltOp, Layer, LayerKind, PoolOp, Shape};

@@ -1,0 +1,228 @@
+//! ONNX-JSON interchange: serialise/parse model graphs using ONNX
+//! operator vocabulary (`Conv`, `MaxPool`, `AveragePool`, `Relu`,
+//! `Sigmoid`, `Mul`, `Add`, `GlobalAveragePool`, `Gemm`, ...).
+//!
+//! This is the NN model parser of §III-A. Binary ONNX protobuf is not
+//! parseable offline (no protobuf crate), so the toolflow's on-disk
+//! model format is the same graph as JSON — the parsing/mapping logic
+//! (attribute extraction, op -> building-block classification, shape
+//! propagation) is identical to what a protobuf front-end would feed.
+
+use std::collections::BTreeMap;
+
+use crate::model::graph::{GraphBuilder, ModelGraph, INPUT};
+use crate::model::layer::{ActKind, EltOp, LayerKind, PoolOp, Shape};
+use crate::util::json::Json;
+
+/// Serialise a model graph to ONNX-JSON.
+pub fn to_json(g: &ModelGraph) -> Json {
+    let mut nodes = Vec::new();
+    for l in &g.layers {
+        let mut o: Vec<(&str, Json)> = vec![
+            ("name", Json::Str(l.name.clone())),
+            ("inputs", Json::from_usizes(&l.inputs)),
+        ];
+        match &l.kind {
+            LayerKind::Conv3d { filters, kernel, stride, padding, groups } => {
+                o.push(("op", Json::Str("Conv".into())));
+                o.push(("filters", Json::Num(*filters as f64)));
+                o.push(("kernel_shape", Json::from_usizes(kernel)));
+                o.push(("strides", Json::from_usizes(stride)));
+                o.push(("pads", Json::from_usizes(padding)));
+                o.push(("group", Json::Num(*groups as f64)));
+            }
+            LayerKind::Pool3d { op, kernel, stride, padding } => {
+                o.push(("op", Json::Str(match op {
+                    PoolOp::Max => "MaxPool".into(),
+                    PoolOp::Avg => "AveragePool".into(),
+                })));
+                o.push(("kernel_shape", Json::from_usizes(kernel)));
+                o.push(("strides", Json::from_usizes(stride)));
+                o.push(("pads", Json::from_usizes(padding)));
+            }
+            LayerKind::Activation(a) => {
+                o.push(("op", Json::Str(match a {
+                    ActKind::Relu => "Relu".into(),
+                    ActKind::Sigmoid => "Sigmoid".into(),
+                    ActKind::Swish => "Swish".into(),
+                })));
+            }
+            LayerKind::Eltwise { op, broadcast } => {
+                o.push(("op", Json::Str(match op {
+                    EltOp::Add => "Add".into(),
+                    EltOp::Mul => "Mul".into(),
+                })));
+                o.push(("broadcast", Json::Bool(*broadcast)));
+            }
+            LayerKind::Scale => o.push(("op", Json::Str("BatchNormalization"
+                .into()))),
+            LayerKind::Concat => {
+                o.push(("op", Json::Str("Concat".into())))
+            }
+            LayerKind::GlobalAvgPool => {
+                o.push(("op", Json::Str("GlobalAveragePool".into())))
+            }
+            LayerKind::Fc { filters } => {
+                o.push(("op", Json::Str("Gemm".into())));
+                o.push(("filters", Json::Num(*filters as f64)));
+            }
+        }
+        nodes.push(Json::Obj(
+            o.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>(),
+        ));
+    }
+    Json::obj(vec![
+        ("format", Json::Str("harflow3d-onnx-json/1".into())),
+        ("name", Json::Str(g.name.clone())),
+        ("input_shape", Json::from_usizes(&[
+            g.input_shape.d, g.input_shape.h, g.input_shape.w,
+            g.input_shape.c,
+        ])),
+        ("num_classes", Json::Num(g.num_classes as f64)),
+        ("nodes", Json::Arr(nodes)),
+    ])
+}
+
+/// Parse an ONNX-JSON model into the toolflow IR. Shape inference runs
+/// as layers are added, exactly like an ONNX shape-inference pass.
+pub fn from_json(j: &Json) -> Result<ModelGraph, String> {
+    let name = j.get("name").and_then(Json::as_str).unwrap_or("model");
+    let ishape = j
+        .get("input_shape")
+        .and_then(Json::usize_arr)
+        .ok_or("missing input_shape")?;
+    if ishape.len() != 4 {
+        return Err("input_shape must be [D,H,W,C]".into());
+    }
+    let input = Shape::new(ishape[0], ishape[1], ishape[2], ishape[3]);
+    let num_classes =
+        j.get("num_classes").and_then(Json::as_usize).unwrap_or(0);
+    let nodes = j.get("nodes").and_then(Json::as_arr).ok_or("missing nodes")?;
+
+    let mut b = GraphBuilder::new(name, input);
+    for (i, n) in nodes.iter().enumerate() {
+        let nname = n
+            .get("name")
+            .and_then(Json::as_str)
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("node{i}"));
+        let op = n.get("op").and_then(Json::as_str).ok_or("node missing op")?;
+        let inputs = n
+            .get("inputs")
+            .and_then(Json::usize_arr)
+            .unwrap_or_default();
+        let from = inputs.first().copied().unwrap_or(INPUT);
+        let triple = |key: &str| -> Result<[usize; 3], String> {
+            let v = n
+                .get(key)
+                .and_then(Json::usize_arr)
+                .ok_or(format!("{nname}: missing {key}"))?;
+            if v.len() != 3 {
+                return Err(format!("{nname}: {key} must have 3 entries"));
+            }
+            Ok([v[0], v[1], v[2]])
+        };
+        match op {
+            "Conv" => {
+                let filters = n
+                    .get("filters")
+                    .and_then(Json::as_usize)
+                    .ok_or(format!("{nname}: missing filters"))?;
+                let groups =
+                    n.get("group").and_then(Json::as_usize).unwrap_or(1);
+                b.conv(&nname, from, filters, triple("kernel_shape")?,
+                       triple("strides")?, triple("pads")?, groups);
+            }
+            "MaxPool" | "AveragePool" => {
+                let pop = if op == "MaxPool" { PoolOp::Max } else { PoolOp::Avg };
+                b.pool(&nname, from, pop, triple("kernel_shape")?,
+                       triple("strides")?, triple("pads")?);
+            }
+            "Relu" => {
+                b.act(&nname, from, ActKind::Relu);
+            }
+            "Sigmoid" => {
+                b.act(&nname, from, ActKind::Sigmoid);
+            }
+            "Swish" => {
+                b.act(&nname, from, ActKind::Swish);
+            }
+            "BatchNormalization" => {
+                b.scale(&nname, from);
+            }
+            "Add" | "Mul" => {
+                if inputs.len() != 2 {
+                    return Err(format!("{nname}: {op} needs 2 inputs"));
+                }
+                let eop = if op == "Add" { EltOp::Add } else { EltOp::Mul };
+                let broadcast = n
+                    .get("broadcast")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false);
+                b.eltwise(&nname, inputs[0], inputs[1], eop, broadcast);
+            }
+            "Concat" => {
+                if inputs.len() < 2 {
+                    return Err(format!("{nname}: Concat needs >=2 \
+                                        inputs"));
+                }
+                b.concat(&nname, &inputs);
+            }
+            "GlobalAveragePool" => {
+                b.gap(&nname, from);
+            }
+            "Gemm" => {
+                let filters = n
+                    .get("filters")
+                    .and_then(Json::as_usize)
+                    .ok_or(format!("{nname}: missing filters"))?;
+                b.fc(&nname, from, filters);
+            }
+            other => return Err(format!("{nname}: unsupported op {other}")),
+        }
+    }
+    let g = b.finish(num_classes);
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn roundtrip_all_zoo_models() {
+        for name in zoo::EVALUATED.iter().chain(["c3d_tiny"].iter()) {
+            let g = zoo::by_name(name).unwrap();
+            let j = to_json(&g);
+            let g2 = from_json(&j).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(g.num_layers(), g2.num_layers(), "{name}");
+            assert_eq!(g.total_macs(), g2.total_macs(), "{name}");
+            assert_eq!(g.total_params(), g2.total_params(), "{name}");
+            // Text stability through a second roundtrip.
+            let j2 = to_json(&g2);
+            assert_eq!(j.to_string(), j2.to_string(), "{name}");
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let j = Json::parse(
+            r#"{"name":"x","input_shape":[2,4,4,3],"nodes":
+                [{"name":"n","op":"LSTM","inputs":[]}]}"#,
+        )
+        .unwrap();
+        assert!(from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_attrs() {
+        let j = Json::parse(
+            r#"{"name":"x","input_shape":[2,4,4,3],"nodes":
+                [{"name":"n","op":"Conv","inputs":[]}]}"#,
+        )
+        .unwrap();
+        assert!(from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! C3D (Tran et al.) — the 8-conv workhorse every prior FPGA work
+//! targets, and the C3D-tiny pairing used by the e2e serving example.
+
+use crate::model::graph::{GraphBuilder, ModelGraph, INPUT};
+use crate::model::layer::{ActKind, PoolOp, Shape};
+
+/// Full C3D for UCF101: 16 frames of 112x112 RGB, 38.61 GMACs,
+/// 78.4 M params (Table IV).
+pub fn c3d() -> ModelGraph {
+    let mut b = GraphBuilder::new("c3d", Shape::new(16, 112, 112, 3));
+    let mut x = INPUT;
+
+    let conv_relu = |b: &mut GraphBuilder, name: &str, from, f| {
+        let c = b.conv(name, from, f, [3; 3], [1; 3], [1; 3], 1);
+        b.act(&format!("{name}_relu"), c, ActKind::Relu)
+    };
+
+    x = conv_relu(&mut b, "conv1a", x, 64);
+    x = b.pool("pool1", x, PoolOp::Max, [1, 2, 2], [1, 2, 2], [0; 3]);
+    x = conv_relu(&mut b, "conv2a", x, 128);
+    x = b.pool("pool2", x, PoolOp::Max, [2; 3], [2; 3], [0; 3]);
+    x = conv_relu(&mut b, "conv3a", x, 256);
+    x = conv_relu(&mut b, "conv3b", x, 256);
+    x = b.pool("pool3", x, PoolOp::Max, [2; 3], [2; 3], [0; 3]);
+    x = conv_relu(&mut b, "conv4a", x, 512);
+    x = conv_relu(&mut b, "conv4b", x, 512);
+    x = b.pool("pool4", x, PoolOp::Max, [2; 3], [2; 3], [0; 3]);
+    x = conv_relu(&mut b, "conv5a", x, 512);
+    x = conv_relu(&mut b, "conv5b", x, 512);
+    // pool5 pads H/W so the 7x7 maps reduce to 4x4 (original Caffe
+    // C3D behaviour).
+    x = b.pool("pool5", x, PoolOp::Max, [2; 3], [2; 3], [0, 1, 1]);
+
+    let f6 = b.fc("fc6", x, 4096);
+    let r6 = b.act("fc6_relu", f6, ActKind::Relu);
+    let f7 = b.fc("fc7", r6, 4096);
+    let r7 = b.act("fc7_relu", f7, ActKind::Relu);
+    let f8 = b.fc("fc8", r7, 101);
+    // Softmax modelled as a (memory-bound) activation execution node:
+    // the hardware maps it onto the Activation block.
+    b.act("softmax", f8, ActKind::Sigmoid);
+    b.finish(101)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::LayerKind;
+
+    #[test]
+    fn layer_counts_match_table4() {
+        let g = c3d();
+        assert_eq!(g.num_conv_layers(), 8);
+        assert_eq!(g.num_layers(), 27); // Table IV: 27
+        let fcs = g
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Fc { .. }))
+            .count();
+        assert_eq!(fcs, 3);
+    }
+
+    #[test]
+    fn macs_match_table4() {
+        let g = c3d();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((gmacs - 38.61).abs() < 1.0, "GMACs = {gmacs:.2}");
+    }
+
+    #[test]
+    fn params_match_table4() {
+        let g = c3d();
+        let mp = g.total_params() as f64 / 1e6;
+        assert!((mp - 78.41).abs() < 2.0, "MParams = {mp:.2}");
+    }
+
+    #[test]
+    fn pool5_output_is_4x4() {
+        let g = c3d();
+        let pool5 = g.layers.iter().find(|l| l.name == "pool5").unwrap();
+        assert_eq!(pool5.out_shape, Shape::new(1, 4, 4, 512));
+    }
+}

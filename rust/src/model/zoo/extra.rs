@@ -1,0 +1,173 @@
+//! Extension models beyond the paper's Table IV — the architectures
+//! its related work targets and its conclusion names as future work:
+//!
+//! * **E3DNet** (Fan et al. [6]) — the efficient 3D CNN behind the
+//!   F-E3D accelerator: MobileNet-style "3D-1" bottlenecks,
+//!   ~6.1 GMACs at 16x112x112, 85.17% UCF101.
+//! * **I3D** (Carreira & Zisserman; targeted by Khan et al. [14]) —
+//!   inflated Inception-V1: the Inception-branch topology (channel
+//!   concatenation) the paper's conclusion lists as the next backbone
+//!   to support. Mapping it exercises the `Concat` execution nodes.
+
+use crate::model::graph::{GraphBuilder, ModelGraph, INPUT};
+use crate::model::layer::{ActKind, EltOp, PoolOp, Shape};
+
+/// E3DNet-style inverted "3D-1" bottleneck.
+#[allow(clippy::too_many_arguments)]
+fn e3d_block(b: &mut GraphBuilder, name: &str, x: usize, inner: usize,
+             out: usize, stride: usize, residual: bool) -> usize {
+    let c1 = b.conv(&format!("{name}_expand"), x, inner, [1; 3], [1; 3],
+                    [0; 3], 1);
+    let r1 = b.act(&format!("{name}_expand_relu"), c1, ActKind::Relu);
+    let dw = b.conv(&format!("{name}_dw"), r1, inner, [3; 3],
+                    [1, stride, stride], [1; 3], inner);
+    let r2 = b.act(&format!("{name}_dw_relu"), dw, ActKind::Relu);
+    let c3 = b.conv(&format!("{name}_project"), r2, out, [1; 3], [1; 3],
+                    [0; 3], 1);
+    if residual {
+        b.eltwise(&format!("{name}_add"), c3, x, EltOp::Add, false)
+    } else {
+        c3
+    }
+}
+
+/// E3DNet: ~6.1 GMACs at 16 frames of 112x112 (Table V row [6]).
+pub fn e3d() -> ModelGraph {
+    let mut b = GraphBuilder::new("e3d", Shape::new(16, 112, 112, 3));
+    let c = b.conv("stem", INPUT, 64, [3; 3], [1, 2, 2], [1; 3], 1);
+    let mut x = b.act("stem_relu", c, ActKind::Relu);
+    // (blocks, inner expansion, out) — widths sized so the network
+    // lands at F-E3D's reported 6.1 GOPs budget.
+    let stages: [(usize, usize, usize); 5] = [
+        (1, 192, 48),
+        (2, 288, 64),
+        (3, 384, 128),
+        (3, 768, 192),
+        (2, 1152, 320),
+    ];
+    for (si, (blocks, inner, out)) in stages.iter().enumerate() {
+        for blk in 0..*blocks {
+            let first = blk == 0;
+            let stride = if first && si > 0 { 2 } else { 1 };
+            x = e3d_block(&mut b, &format!("s{si}_{blk}"), x, *inner,
+                          *out, stride, !first);
+        }
+    }
+    let c5 = b.conv("head_conv", x, 960, [1; 3], [1; 3], [0; 3], 1);
+    let r5 = b.act("head_relu", c5, ActKind::Relu);
+    let g = b.gap("gap", r5);
+    let f = b.fc("fc", g, 101);
+    b.act("softmax", f, ActKind::Sigmoid);
+    b.finish(101)
+}
+
+/// One inflated Inception module: four branches concatenated.
+#[allow(clippy::too_many_arguments)]
+fn inception(b: &mut GraphBuilder, name: &str, x: usize, b1: usize,
+             b2r: usize, b2: usize, b3r: usize, b3: usize,
+             b4: usize) -> usize {
+    let p1 = b.conv(&format!("{name}_b1"), x, b1, [1; 3], [1; 3],
+                    [0; 3], 1);
+    let p1 = b.act(&format!("{name}_b1_relu"), p1, ActKind::Relu);
+
+    let p2a = b.conv(&format!("{name}_b2r"), x, b2r, [1; 3], [1; 3],
+                     [0; 3], 1);
+    let p2a = b.act(&format!("{name}_b2r_relu"), p2a, ActKind::Relu);
+    let p2 = b.conv(&format!("{name}_b2"), p2a, b2, [3; 3], [1; 3],
+                    [1; 3], 1);
+    let p2 = b.act(&format!("{name}_b2_relu"), p2, ActKind::Relu);
+
+    let p3a = b.conv(&format!("{name}_b3r"), x, b3r, [1; 3], [1; 3],
+                     [0; 3], 1);
+    let p3a = b.act(&format!("{name}_b3r_relu"), p3a, ActKind::Relu);
+    let p3 = b.conv(&format!("{name}_b3"), p3a, b3, [3; 3], [1; 3],
+                    [1; 3], 1);
+    let p3 = b.act(&format!("{name}_b3_relu"), p3, ActKind::Relu);
+
+    let p4a = b.pool(&format!("{name}_b4_pool"), x, PoolOp::Max,
+                     [3; 3], [1; 3], [1; 3]);
+    let p4 = b.conv(&format!("{name}_b4"), p4a, b4, [1; 3], [1; 3],
+                    [0; 3], 1);
+    let p4 = b.act(&format!("{name}_b4_relu"), p4, ActKind::Relu);
+
+    b.concat(&format!("{name}_concat"), &[p1, p2, p3, p4])
+}
+
+/// I3D (inflated Inception-V1), 16 frames of 224x224.
+pub fn i3d() -> ModelGraph {
+    let mut b = GraphBuilder::new("i3d", Shape::new(16, 224, 224, 3));
+    let c1 = b.conv("conv1", INPUT, 64, [7, 7, 7], [2, 2, 2], [3, 3, 3], 1);
+    let r1 = b.act("conv1_relu", c1, ActKind::Relu);
+    let p1 = b.pool("pool1", r1, PoolOp::Max, [1, 3, 3], [1, 2, 2],
+                    [0, 1, 1]);
+    let c2a = b.conv("conv2a", p1, 64, [1; 3], [1; 3], [0; 3], 1);
+    let r2a = b.act("conv2a_relu", c2a, ActKind::Relu);
+    let c2b = b.conv("conv2b", r2a, 192, [3; 3], [1; 3], [1; 3], 1);
+    let r2b = b.act("conv2b_relu", c2b, ActKind::Relu);
+    let mut x = b.pool("pool2", r2b, PoolOp::Max, [1, 3, 3], [1, 2, 2],
+                       [0, 1, 1]);
+
+    x = inception(&mut b, "mixed3b", x, 64, 96, 128, 16, 32, 32);
+    x = inception(&mut b, "mixed3c", x, 128, 128, 192, 32, 96, 64);
+    x = b.pool("pool3", x, PoolOp::Max, [3, 3, 3], [2, 2, 2], [1, 1, 1]);
+    x = inception(&mut b, "mixed4b", x, 192, 96, 208, 16, 48, 64);
+    x = inception(&mut b, "mixed4c", x, 160, 112, 224, 24, 64, 64);
+    x = inception(&mut b, "mixed4d", x, 128, 128, 256, 24, 64, 64);
+    x = inception(&mut b, "mixed4e", x, 112, 144, 288, 32, 64, 64);
+    x = inception(&mut b, "mixed4f", x, 256, 160, 320, 32, 128, 128);
+    x = b.pool("pool4", x, PoolOp::Max, [2, 2, 2], [2, 2, 2], [0, 0, 0]);
+    x = inception(&mut b, "mixed5b", x, 256, 160, 320, 32, 128, 128);
+    x = inception(&mut b, "mixed5c", x, 384, 192, 384, 48, 128, 128);
+
+    let g = b.gap("gap", x);
+    let f = b.fc("fc", g, 101);
+    b.act("softmax", f, ActKind::Sigmoid);
+    b.finish(101)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::LayerKind;
+
+    #[test]
+    fn e3d_characteristics() {
+        let g = e3d();
+        assert_eq!(g.validate(), Ok(()));
+        let gmacs = g.total_macs() as f64 / 1e9;
+        // F-E3D reports 6.1 GOPs for E3DNet.
+        assert!((gmacs - 6.1).abs() / 6.1 < 0.35, "GMACs {gmacs:.2}");
+        let dw = g
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind,
+                LayerKind::Conv3d { groups, .. } if groups > 1))
+            .count();
+        assert_eq!(dw, 11); // one per bottleneck
+    }
+
+    #[test]
+    fn i3d_structure() {
+        let g = i3d();
+        assert_eq!(g.validate(), Ok(()));
+        // 9 inception modules x 6 convs + stem 3 + fc = 58 convs.
+        assert_eq!(g.num_conv_layers(), 9 * 6 + 3);
+        let concats = g
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Concat))
+            .count();
+        assert_eq!(concats, 9);
+        // Mixed5c output channels: 384+384+128+128 = 1024.
+        let gap = g.layers.iter().find(|l| l.name == "gap").unwrap();
+        assert_eq!(gap.in_shape.c, 1024);
+    }
+
+    #[test]
+    fn i3d_macs_plausible() {
+        let g = i3d();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        // I3D @ 16x224^2 is ~28 GMACs at 64 frames scaled to 16 -> ~27.
+        assert!(gmacs > 15.0 && gmacs < 60.0, "GMACs {gmacs:.2}");
+    }
+}

@@ -1,0 +1,141 @@
+//! R(2+1)D (Tran et al., CVPR'18) as released by Hara et al. [21] —
+//! the checkpoints the paper's ONNX files come from. Every 3D
+//! convolution is factored into a spatial 1xkxk followed by a temporal
+//! kx1x1 with an interleaved BN+ReLU; midplane counts chosen so the
+//! factored pair matches the parameter budget of the full 3D kernel
+//! ([12] §3.5).
+//!
+//! Hara-style backbone: 7x7x7 (factored) stem with stride (1,2,2),
+//! 3x3x3/2 max-pool, then basic blocks with stride 2 in all three
+//! dimensions at stage transitions.
+//!
+//! Table IV: R(2+1)D-18 — 8.52 GMACs, 33.41 M params, 37 convs;
+//!           R(2+1)D-34 — 12.91 GMACs, 63.72 M params, 69 convs.
+//! (16 frames of 112x112.)
+
+use crate::model::graph::{GraphBuilder, ModelGraph, INPUT};
+use crate::model::layer::{ActKind, EltOp, PoolOp, Shape};
+
+/// Midplanes M_i from [12]: t*d^2*Nin*Nout / (d^2*Nin + t*Nout),
+/// with t = 3 (temporal extent) and d = 3 (spatial extent).
+fn midplanes(n_in: usize, n_out: usize) -> usize {
+    (3 * 9 * n_in * n_out) / (9 * n_in + 3 * n_out)
+}
+
+/// A factored (2+1)D convolution: spatial then temporal with an
+/// interleaved ReLU. The Hara et al. export folds BatchNorm into the
+/// convolution weights (unlike the mmaction2 exports of
+/// SlowOnly/X3D-M), so no Scale execution nodes appear here — which is
+/// why Table IV counts only 82 layers for R(2+1)D-18.
+fn conv2plus1d(b: &mut GraphBuilder, name: &str, x: usize, n_out: usize,
+               stride: usize) -> usize {
+    let n_in = b.out_shape(x).c;
+    let mid = midplanes(n_in, n_out);
+    let cs = b.conv(&format!("{name}_s"), x, mid, [1, 3, 3],
+                    [1, stride, stride], [0, 1, 1], 1);
+    let rs = b.act(&format!("{name}_s_relu"), cs, ActKind::Relu);
+    b.conv(&format!("{name}_t"), rs, n_out, [3, 1, 1], [stride, 1, 1],
+           [1, 0, 0], 1)
+}
+
+/// Basic residual block of two (2+1)D convolutions.
+fn basic_block(b: &mut GraphBuilder, name: &str, x: usize, planes: usize,
+               stride: usize, downsample: bool) -> usize {
+    let c1 = conv2plus1d(b, &format!("{name}_1"), x, planes, stride);
+    let r1 = b.act(&format!("{name}_1_relu"), c1, ActKind::Relu);
+    let c2 = conv2plus1d(b, &format!("{name}_2"), r1, planes, 1);
+    let shortcut = if downsample {
+        b.conv(&format!("{name}_down"), x, planes, [1; 3],
+               [stride; 3], [0; 3], 1)
+    } else {
+        x
+    };
+    let add = b.eltwise(&format!("{name}_add"), c2, shortcut, EltOp::Add,
+                        false);
+    b.act(&format!("{name}_relu"), add, ActKind::Relu)
+}
+
+fn r2plus1d(name: &str, blocks: [usize; 4]) -> ModelGraph {
+    let mut b = GraphBuilder::new(name, Shape::new(16, 112, 112, 3));
+
+    // Factored 7x7x7 stem: 1x7x7 s(1,2,2) then 7x1x1, with the
+    // MAC/param-preserving midplane count from [21]:
+    // (7*7*7*3*64) / (7*7*3 + 7*64) = 110.
+    let stem_mid = (343 * 3 * 64) / (49 * 3 + 7 * 64);
+    let cs = b.conv("stem_s", INPUT, stem_mid, [1, 7, 7], [1, 2, 2],
+                    [0, 3, 3], 1);
+    let rs = b.act("stem_s_relu", cs, ActKind::Relu);
+    let ct = b.conv("stem_t", rs, 64, [7, 1, 1], [1, 1, 1], [3, 0, 0], 1);
+    let r = b.act("stem_relu", ct, ActKind::Relu);
+    let mut x = b.pool("stem_pool", r, PoolOp::Max, [3; 3], [2; 3], [1; 3]);
+
+    let planes = [64usize, 128, 256, 512];
+    for (si, (&n_blocks, &p)) in blocks.iter().zip(&planes).enumerate() {
+        for blk in 0..n_blocks {
+            let first = blk == 0;
+            let stride = if first && si > 0 { 2 } else { 1 };
+            let down = first && si > 0;
+            x = basic_block(&mut b, &format!("res{}_{blk}", si + 2), x, p,
+                            stride, down);
+        }
+    }
+    let g = b.gap("gap", x);
+    let f = b.fc("fc", g, 101);
+    b.act("softmax", f, ActKind::Sigmoid);
+    b.finish(101)
+}
+
+/// R(2+1)D-18: [2, 2, 2, 2] basic blocks.
+pub fn r2plus1d_18() -> ModelGraph {
+    r2plus1d("r2plus1d_18", [2, 2, 2, 2])
+}
+
+/// R(2+1)D-34: [3, 4, 6, 3] basic blocks.
+pub fn r2plus1d_34() -> ModelGraph {
+    r2plus1d("r2plus1d_34", [3, 4, 6, 3])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_counts_match_table4() {
+        assert_eq!(r2plus1d_18().num_conv_layers(), 37);
+        assert_eq!(r2plus1d_34().num_conv_layers(), 69);
+    }
+
+    #[test]
+    fn midplanes_formula() {
+        // From [12]: 64->64 gives M = 3*9*64*64/(9*64+3*64) = 144.
+        assert_eq!(midplanes(64, 64), 144);
+    }
+
+    #[test]
+    fn characteristics_r18() {
+        let g = r2plus1d_18();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        let mp = g.total_params() as f64 / 1e6;
+        assert!((gmacs - 8.52).abs() / 8.52 < 0.2, "GMACs {gmacs:.2}");
+        assert!((mp - 33.41).abs() / 33.41 < 0.2, "MParams {mp:.2}");
+    }
+
+    #[test]
+    fn characteristics_r34() {
+        let g = r2plus1d_34();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        let mp = g.total_params() as f64 / 1e6;
+        assert!((gmacs - 12.91).abs() / 12.91 < 0.2, "GMACs {gmacs:.2}");
+        assert!((mp - 63.72).abs() / 63.72 < 0.2, "MParams {mp:.2}");
+    }
+
+    #[test]
+    fn temporal_downsampling_happens() {
+        let g = r2plus1d_18();
+        let gap = g.layers.iter().find(|l| l.name == "gap").unwrap();
+        // 16 frames: /2 stem pool, /2 res3..5 -> 1; 112/2/2/8 = 4 (ceil).
+        assert_eq!(gap.in_shape.d, 1);
+        assert_eq!(gap.in_shape.h, 4);
+        assert_eq!(gap.in_shape.c, 512);
+    }
+}

@@ -1,0 +1,114 @@
+//! SlowOnly (Feichtenhofer et al., the SlowFast slow pathway) —
+//! ResNet50 backbone, 8 frames at 256x256 (Table IV: 54.81 GMACs,
+//! 32.51 M params, 53 conv layers).
+//!
+//! Stage layout follows the mmaction2 export: res2/res3 are purely
+//! spatial bottlenecks; res4/res5 inflate the first 1x1 of every
+//! bottleneck to 3x1x1 (temporal). BatchNorm appears as per-channel
+//! Scale execution nodes (the export keeps them as separate ONNX
+//! nodes).
+
+use crate::model::graph::{GraphBuilder, ModelGraph, INPUT};
+use crate::model::layer::{ActKind, EltOp, PoolOp, Shape};
+
+/// One ResNet50 bottleneck block. `temporal` inflates conv1 to 3x1x1;
+/// `stride` is the spatial stride applied in conv2; `downsample` adds
+/// a projection shortcut.
+#[allow(clippy::too_many_arguments)]
+fn bottleneck(b: &mut GraphBuilder, name: &str, x: usize, inner: usize,
+              out: usize, temporal: bool, stride: usize,
+              downsample: bool) -> usize {
+    let (k1, p1) = if temporal { ([3, 1, 1], [1, 0, 0]) } else { ([1; 3], [0; 3]) };
+    let c1 = b.conv(&format!("{name}_conv1"), x, inner, k1, [1; 3], p1, 1);
+    let s1 = b.scale(&format!("{name}_bn1"), c1);
+    let r1 = b.act(&format!("{name}_relu1"), s1, ActKind::Relu);
+
+    let c2 = b.conv(&format!("{name}_conv2"), r1, inner, [1, 3, 3],
+                    [1, stride, stride], [0, 1, 1], 1);
+    let s2 = b.scale(&format!("{name}_bn2"), c2);
+    let r2 = b.act(&format!("{name}_relu2"), s2, ActKind::Relu);
+
+    let c3 = b.conv(&format!("{name}_conv3"), r2, out, [1; 3], [1; 3],
+                    [0; 3], 1);
+    let s3 = b.scale(&format!("{name}_bn3"), c3);
+
+    let shortcut = if downsample {
+        let d = b.conv(&format!("{name}_down"), x, out, [1; 3],
+                       [1, stride, stride], [0; 3], 1);
+        b.scale(&format!("{name}_down_bn"), d)
+    } else {
+        x
+    };
+    let add = b.eltwise(&format!("{name}_add"), s3, shortcut, EltOp::Add,
+                        false);
+    b.act(&format!("{name}_relu"), add, ActKind::Relu)
+}
+
+pub fn slowonly() -> ModelGraph {
+    let mut b = GraphBuilder::new("slowonly", Shape::new(8, 256, 256, 3));
+
+    // Stem: 1x7x7 stride (1,2,2).
+    let c = b.conv("conv1", INPUT, 64, [1, 7, 7], [1, 2, 2], [0, 3, 3], 1);
+    let s = b.scale("conv1_bn", c);
+    let r = b.act("conv1_relu", s, ActKind::Relu);
+    let mut x = b.pool("pool1", r, PoolOp::Max, [1, 3, 3], [1, 2, 2],
+                       [0, 1, 1]);
+
+    // (stage, blocks, inner, out, temporal)
+    let stages = [
+        ("res2", 3usize, 64usize, 256usize, false),
+        ("res3", 4, 128, 512, false),
+        ("res4", 6, 256, 1024, true),
+        ("res5", 3, 512, 2048, true),
+    ];
+    for (si, (name, blocks, inner, out, temporal)) in
+        stages.iter().enumerate()
+    {
+        for blk in 0..*blocks {
+            let first = blk == 0;
+            let stride = if first && si > 0 { 2 } else { 1 };
+            x = bottleneck(&mut b, &format!("{name}_{blk}"), x, *inner,
+                           *out, *temporal, stride, first);
+        }
+    }
+
+    let g = b.gap("gap", x);
+    let f = b.fc("fc", g, 101);
+    b.act("softmax", f, ActKind::Sigmoid);
+    b.finish(101)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_count_matches_table4() {
+        let g = slowonly();
+        assert_eq!(g.num_conv_layers(), 53);
+    }
+
+    #[test]
+    fn macs_in_range() {
+        let g = slowonly();
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((gmacs - 54.81).abs() / 54.81 < 0.15, "GMACs {gmacs:.2}");
+    }
+
+    #[test]
+    fn params_in_range() {
+        let g = slowonly();
+        let mp = g.total_params() as f64 / 1e6;
+        assert!((mp - 32.51).abs() / 32.51 < 0.15, "MParams {mp:.2}");
+    }
+
+    #[test]
+    fn final_feature_is_2048() {
+        let g = slowonly();
+        let gap = g.layers.iter().find(|l| l.name == "gap").unwrap();
+        assert_eq!(gap.out_shape.c, 2048);
+        // res5 spatial output: 256/32 = 8.
+        assert_eq!(gap.in_shape.h, 8);
+        assert_eq!(gap.in_shape.d, 8); // no temporal downsampling
+    }
+}

@@ -1,0 +1,48 @@
+//! C3D-tiny — the end-to-end verification network.
+//!
+//! Mirrors `python/compile/model.py::C3D_TINY` exactly: same layer
+//! names, shapes and parameters, so the optimiser's schedule for this
+//! graph can be executed functionally against the AOT artifacts and
+//! verified against the `c3d_tiny_ref` golden output.
+
+use crate::model::graph::{GraphBuilder, ModelGraph, INPUT};
+use crate::model::layer::{ActKind, PoolOp, Shape};
+
+pub fn c3d_tiny() -> ModelGraph {
+    let mut b = GraphBuilder::new("c3d_tiny", Shape::new(8, 32, 32, 3));
+    let c1 = b.conv("conv1", INPUT, 16, [3; 3], [1; 3], [1; 3], 1);
+    let r1 = b.act("conv1_relu", c1, ActKind::Relu);
+    let p1 = b.pool("pool1", r1, PoolOp::Max, [1, 2, 2], [1, 2, 2], [0; 3]);
+    let c2 = b.conv("conv2", p1, 32, [3; 3], [1; 3], [1; 3], 1);
+    let r2 = b.act("conv2_relu", c2, ActKind::Relu);
+    let p2 = b.pool("pool2", r2, PoolOp::Max, [2; 3], [2; 3], [0; 3]);
+    let c3 = b.conv("conv3", p2, 64, [3; 3], [1; 3], [1; 3], 1);
+    let r3 = b.act("conv3_relu", c3, ActKind::Relu);
+    let p3 = b.pool("pool3", r3, PoolOp::Max, [2; 3], [2; 3], [0; 3]);
+    let g = b.gap("gap", p3);
+    b.fc("fc", g, 101);
+    b.finish(101)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_python_model() {
+        let g = c3d_tiny();
+        assert_eq!(g.validate(), Ok(()));
+        let by_name = |n: &str| {
+            g.layers.iter().find(|l| l.name == n).unwrap().out_shape
+        };
+        // From python/compile/model.py layer_shapes().
+        assert_eq!(by_name("conv1"), Shape::new(8, 32, 32, 16));
+        assert_eq!(by_name("pool1"), Shape::new(8, 16, 16, 16));
+        assert_eq!(by_name("conv2"), Shape::new(8, 16, 16, 32));
+        assert_eq!(by_name("pool2"), Shape::new(4, 8, 8, 32));
+        assert_eq!(by_name("conv3"), Shape::new(4, 8, 8, 64));
+        assert_eq!(by_name("pool3"), Shape::new(2, 4, 4, 64));
+        assert_eq!(by_name("gap"), Shape::flat(64));
+        assert_eq!(by_name("fc"), Shape::flat(101));
+    }
+}

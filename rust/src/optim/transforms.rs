@@ -1,0 +1,547 @@
+//! The transformation set of §V-C, applied as random SA moves.
+
+use crate::model::layer::LayerKind;
+use crate::model::ModelGraph;
+use crate::resource::ResourceModel;
+use crate::sdf::{CompNode, Design, MapTarget, NodeKind};
+use crate::util::math::{factors, max_factor_leq};
+use crate::util::rng::Rng;
+
+use super::OptCfg;
+
+/// Indices of nodes with at least one mapped layer.
+fn used_nodes(design: &Design) -> Vec<usize> {
+    let mut used = vec![false; design.nodes.len()];
+    for m in &design.mapping {
+        if let MapTarget::Node(i) = m {
+            used[*i] = true;
+        }
+    }
+    used.iter()
+        .enumerate()
+        .filter_map(|(i, &u)| if u { Some(i) } else { None })
+        .collect()
+}
+
+/// The effective "channels-in" of a layer as seen by its node (FC
+/// flattens the producer feature-map).
+fn layer_cin(model: &ModelGraph, l: usize) -> usize {
+    match model.layers[l].kind {
+        LayerKind::Fc { .. } => model.layers[l].in_shape.elems(),
+        _ => model.layers[l].in_shape.c,
+    }
+}
+
+fn layer_filters(model: &ModelGraph, l: usize) -> usize {
+    match model.layers[l].kind {
+        LayerKind::Conv3d { filters, .. } | LayerKind::Fc { filters } => {
+            filters
+        }
+        _ => model.layers[l].in_shape.c,
+    }
+}
+
+/// Candidate pools for the feature-map reshaping transform (§V-C1):
+/// D/W bounded by the mapped layers' maxima, H pinned to the maximum,
+/// C/F drawn from the factor sets of the mapped layers' dimensions.
+struct ReshapePools {
+    max_d: usize,
+    max_h: usize,
+    max_w: usize,
+    c_pool: Vec<usize>,
+    f_pool: Vec<usize>,
+}
+
+fn reshape_pools(model: &ModelGraph, design: &Design, n: usize)
+    -> Option<ReshapePools> {
+    let layers = design.layers_of(n);
+    if layers.is_empty() {
+        return None;
+    }
+    let is_fc = design.nodes[n].kind == NodeKind::Fc;
+    let (mut max_d, mut max_h, mut max_w) = (1, 1, 1);
+    let mut c_pool = Vec::new();
+    let mut f_pool = Vec::new();
+    for &l in &layers {
+        let s = model.layers[l].in_shape;
+        if !is_fc {
+            max_d = max_d.max(s.d);
+            max_h = max_h.max(s.h);
+            max_w = max_w.max(s.w);
+        }
+        c_pool.extend(factors(layer_cin(model, l)));
+        f_pool.extend(factors(layer_filters(model, l)));
+    }
+    c_pool.sort_unstable();
+    c_pool.dedup();
+    f_pool.sort_unstable();
+    f_pool.dedup();
+    Some(ReshapePools { max_d, max_h, max_w, c_pool, f_pool })
+}
+
+/// Re-fix folding parameters after a dimension change so the §V-B
+/// divisibility constraints keep holding.
+fn refix_folding(node: &mut CompNode) {
+    node.coarse_in = max_factor_leq(node.max_in.c, node.coarse_in.max(1));
+    node.coarse_out =
+        max_factor_leq(node.max_filters.max(1), node.coarse_out.max(1));
+    if !matches!(node.kind, NodeKind::Conv | NodeKind::Fc) {
+        node.coarse_out = node.coarse_in;
+    }
+    let k: usize = node.max_kernel.iter().product();
+    node.fine = max_factor_leq(k, node.fine.max(1));
+    if node.kind != NodeKind::Conv {
+        node.fine = 1;
+    }
+}
+
+/// Step `cur` to a neighbouring value in the sorted candidate pool
+/// (one notch up or down — the factor lattice is the natural move
+/// graph for the folding constraints; fully random re-sampling makes
+/// the high-parallelism corner unreachable in practice).
+fn step_in_pool(pool: &[usize], cur: usize, rng: &mut Rng) -> usize {
+    if pool.is_empty() {
+        return cur;
+    }
+    let pos = pool
+        .iter()
+        .position(|&x| x >= cur)
+        .unwrap_or(pool.len() - 1);
+    let up = rng.uniform() < 0.5;
+    let next = if up { (pos + 1).min(pool.len() - 1) } else { pos.saturating_sub(1) };
+    pool[next]
+}
+
+/// §V-C1 — Feature-Map Dimensions Reshaping (step move).
+pub fn reshape(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
+               n: usize) -> bool {
+    let Some(pools) = reshape_pools(model, design, n) else {
+        return false;
+    };
+    let node = &mut design.nodes[n];
+    if node.kind == NodeKind::Fc {
+        // FC has no spatial dims; step the channel capacities only.
+        node.max_in.c = step_in_pool(&pools.c_pool, node.max_in.c, rng);
+        node.max_filters =
+            step_in_pool(&pools.f_pool, node.max_filters, rng);
+    } else {
+        match rng.below(3) {
+            0 => {
+                let d_pool: Vec<usize> = (1..=pools.max_d).collect();
+                node.max_in.d = step_in_pool(&d_pool, node.max_in.d, rng);
+            }
+            1 => {
+                let w_pool: Vec<usize> = (1..=pools.max_w).collect();
+                node.max_in.w = step_in_pool(&w_pool, node.max_in.w, rng);
+            }
+            _ => {
+                node.max_in.c =
+                    step_in_pool(&pools.c_pool, node.max_in.c, rng);
+                if node.kind == NodeKind::Conv {
+                    node.max_filters =
+                        step_in_pool(&pools.f_pool, node.max_filters, rng);
+                } else {
+                    node.max_filters = node.max_in.c;
+                }
+            }
+        }
+        node.max_in.h = pools.max_h; // row dim has no resource impact
+    }
+    refix_folding(node);
+    true
+}
+
+/// §V-C2 — Coarse-grain Folding (step move on the factor lattice).
+pub fn coarse(design: &mut Design, rng: &mut Rng, n: usize) -> bool {
+    let node = &mut design.nodes[n];
+    let cf = factors(node.max_in.c);
+    match node.kind {
+        NodeKind::Conv | NodeKind::Fc => {
+            if rng.uniform() < 0.5 {
+                node.coarse_in = step_in_pool(&cf, node.coarse_in, rng);
+            } else {
+                let ff = factors(node.max_filters.max(1));
+                node.coarse_out =
+                    step_in_pool(&ff, node.coarse_out, rng);
+            }
+        }
+        _ => {
+            node.coarse_in = step_in_pool(&cf, node.coarse_in, rng);
+            node.coarse_out = node.coarse_in;
+        }
+    }
+    true
+}
+
+/// §V-C3 — Fine-grain Folding (conv only; step move).
+pub fn fine(design: &mut Design, rng: &mut Rng, n: usize) -> bool {
+    let node = &mut design.nodes[n];
+    if node.kind != NodeKind::Conv {
+        return false;
+    }
+    let k: usize = node.max_kernel.iter().product();
+    node.fine = step_in_pool(&factors(k), node.fine, rng);
+    true
+}
+
+/// §V-C4 — Separate: detach `L_e` execution nodes onto fresh
+/// computation nodes (one per type among the selected layers).
+pub fn separate(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
+                l_e: usize) -> Option<Vec<usize>> {
+    let mapped: Vec<usize> = design
+        .mapping
+        .iter()
+        .enumerate()
+        .filter_map(|(l, m)| match m {
+            MapTarget::Node(_) => Some(l),
+            _ => None,
+        })
+        .collect();
+    if mapped.len() <= 1 {
+        return None;
+    }
+    let mut touched = Vec::new();
+    let mut new_node_of_kind: Vec<(NodeKind, usize)> = Vec::new();
+    for _ in 0..l_e {
+        let l = *rng.choose(&mapped);
+        let MapTarget::Node(old) = design.mapping[l] else { continue };
+        // Skip if the layer is alone on its node already.
+        if design.layers_of(old).len() <= 1 {
+            continue;
+        }
+        let kind = NodeKind::of_layer(&model.layers[l].kind);
+        let new_idx = match new_node_of_kind
+            .iter()
+            .find(|(k, _)| *k == kind)
+        {
+            Some(&(_, i)) => i,
+            None => {
+                // The detached node inherits the old node's
+                // compile-time parameters (the optimiser then adapts
+                // them with reshape/folding moves).
+                design.nodes.push(design.nodes[old].clone());
+                let i = design.nodes.len() - 1;
+                new_node_of_kind.push((kind, i));
+                i
+            }
+        };
+        ensure_kernel(&mut design.nodes[new_idx], &model.layers[l].kind);
+        refix_folding(&mut design.nodes[new_idx]);
+        design.mapping[l] = MapTarget::Node(new_idx);
+        touched.push(old);
+        touched.push(new_idx);
+    }
+    if touched.is_empty() {
+        None
+    } else {
+        touched.sort_unstable();
+        touched.dedup();
+        // Donor nodes may now cover a smaller kernel class.
+        for &n in &touched {
+            fit_kernel(model, design, n);
+        }
+        Some(touched)
+    }
+}
+
+/// §V-C4 — Combine: merge `N_c` computation nodes of one type.
+pub fn combine(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
+               n_c: usize) -> Option<Vec<usize>> {
+    let used = used_nodes(design);
+    // Types with at least two used nodes.
+    let mut by_kind: Vec<(NodeKind, Vec<usize>)> = Vec::new();
+    for &n in &used {
+        let k = design.nodes[n].kind;
+        match by_kind.iter_mut().find(|(kk, _)| *kk == k) {
+            Some((_, v)) => v.push(n),
+            None => by_kind.push((k, vec![n])),
+        }
+    }
+    let cands: Vec<&(NodeKind, Vec<usize>)> =
+        by_kind.iter().filter(|(_, v)| v.len() >= 2).collect();
+    if cands.is_empty() {
+        return None;
+    }
+    let (_, nodes) = rng.choose(&cands);
+    // Pick up to n_c distinct nodes of this type.
+    let mut chosen = nodes.clone();
+    while chosen.len() > n_c.max(2) {
+        let i = rng.below(chosen.len());
+        chosen.remove(i);
+    }
+    let target = chosen[0];
+    for &src in &chosen[1..] {
+        for l in design.layers_of(src) {
+            design.mapping[l] = MapTarget::Node(target);
+        }
+    }
+    // Update the target to support the new set of workloads: only the
+    // kernel must cover every mapped layer (runtime bypass goes down,
+    // never up) — feature-map dims are handled by tiling, so keeping
+    // the target's tile size avoids the line-buffer blow-up that would
+    // make every merge infeasible.
+    for l in design.layers_of(target) {
+        ensure_kernel(&mut design.nodes[target], &model.layers[l].kind);
+    }
+    refix_folding(&mut design.nodes[target]);
+    Some(chosen)
+}
+
+/// Recompute a node's compile-time dims as the maximum over its mapped
+/// layers — the *non-runtime-parameterized* sizing rule (§III-C: the
+/// hardware pads every execution up to its compile-time dimensions, so
+/// those dimensions must cover every layer it serves).
+pub fn fit_dims_to_max(model: &ModelGraph, design: &mut Design, n: usize) {
+    let layers = design.layers_of(n);
+    if layers.is_empty() {
+        return;
+    }
+    let node = &mut design.nodes[n];
+    node.max_in = crate::model::layer::Shape::new(1, 1, 1, 1);
+    node.max_filters = 1;
+    node.max_kernel = [1; 3];
+    for l in layers {
+        crate::sdf::grow_node_for_layer(node, &model.layers[l]);
+    }
+    refix_folding(node);
+}
+
+/// Apply one random transformation; returns the touched node indices
+/// (whose mapped layers need re-scheduling), or None if the move was a
+/// no-op.
+pub fn random_move(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
+                   cfg: &OptCfg) -> Option<Vec<usize>> {
+    let used = used_nodes(design);
+    if used.is_empty() {
+        return None;
+    }
+    let roll = rng.uniform();
+    let n = *rng.choose(&used);
+    if !cfg.runtime_params {
+        // Baseline hardware cannot tile below its compile-time dims:
+        // feature-map reshaping is unavailable, and combination /
+        // separation must re-size nodes to the max of their layers.
+        let touched = if roll < 0.45 {
+            coarse(design, rng, n).then(|| vec![n])
+        } else if roll < 0.60 {
+            fine(design, rng, n).then(|| vec![n])
+        } else if cfg.enable_combine && roll < 0.80 {
+            separate(model, design, rng, cfg.l_e)
+        } else if cfg.enable_combine {
+            combine(model, design, rng, cfg.n_c)
+        } else {
+            coarse(design, rng, n).then(|| vec![n])
+        };
+        if let Some(ts) = &touched {
+            for &t in ts {
+                fit_dims_to_max(model, design, t);
+            }
+        }
+        return touched;
+    }
+    if roll < 0.30 {
+        reshape(model, design, rng, n).then(|| vec![n])
+    } else if roll < 0.60 {
+        coarse(design, rng, n).then(|| vec![n])
+    } else if roll < 0.75 {
+        fine(design, rng, n).then(|| vec![n])
+    } else if cfg.enable_combine && roll < 0.875 {
+        separate(model, design, rng, cfg.l_e)
+    } else if cfg.enable_combine {
+        combine(model, design, rng, cfg.n_c)
+    } else {
+        // Combine/separate disabled: fall back to a folding move.
+        coarse(design, rng, n).then(|| vec![n])
+    }
+}
+
+/// Grow a node's kernel capacity to cover a layer's kernel.
+fn ensure_kernel(node: &mut CompNode, kind: &LayerKind) {
+    if let LayerKind::Conv3d { kernel, .. }
+    | LayerKind::Pool3d { kernel, .. } = kind
+    {
+        for d in 0..3 {
+            node.max_kernel[d] = node.max_kernel[d].max(kernel[d]);
+        }
+    }
+}
+
+/// Shrink a node's kernel capacity to exactly cover its mapped layers
+/// (called after separation — losing the 7x7 stem lets the node drop
+/// back to 3-deep line buffers).
+fn fit_kernel(model: &ModelGraph, design: &mut Design, n: usize) {
+    if !matches!(design.nodes[n].kind, NodeKind::Conv | NodeKind::Pool) {
+        return;
+    }
+    let mut k = [1usize; 3];
+    for l in design.layers_of(n) {
+        if let LayerKind::Conv3d { kernel, .. }
+        | LayerKind::Pool3d { kernel, .. } = &model.layers[l].kind
+        {
+            for d in 0..3 {
+                k[d] = k[d].max(kernel[d]);
+            }
+        }
+    }
+    design.nodes[n].max_kernel = k;
+    refix_folding(&mut design.nodes[n]);
+}
+
+/// Fuse every eligible Activation/Scale layer into its producer
+/// (applied once at initialisation when fusion is enabled).
+pub fn fuse_all(model: &ModelGraph, design: &mut Design) {
+    for (l, layer) in model.layers.iter().enumerate() {
+        if !matches!(layer.kind,
+                     LayerKind::Activation(_) | LayerKind::Scale) {
+            continue;
+        }
+        let Some(&src) = layer.inputs.first() else { continue };
+        let producer_ok = matches!(
+            model.layers[src].kind,
+            LayerKind::Conv3d { .. }
+                | LayerKind::Fc { .. }
+                | LayerKind::Eltwise { .. }
+                | LayerKind::Scale
+        );
+        if producer_ok {
+            design.mapping[l] = MapTarget::Fused;
+        }
+    }
+}
+
+/// Shrink the node with the largest non-DSP footprint one notch —
+/// used by the warm start until the design fits the device.
+pub fn shrink_largest(model: &ModelGraph, design: &mut Design,
+                      rm: &ResourceModel) {
+    let used = used_nodes(design);
+    let heaviest = used
+        .iter()
+        .copied()
+        .max_by(|&a, &b| {
+            let ra = rm.node_resources(&design.nodes[a]);
+            let rb = rm.node_resources(&design.nodes[b]);
+            (ra.bram + ra.lut / 100.0)
+                .total_cmp(&(rb.bram + rb.lut / 100.0))
+        });
+    let Some(n) = heaviest else { return };
+    let node = &mut design.nodes[n];
+    // Step down the dominant dimension.
+    if node.max_in.c > 1 && node.max_in.c >= node.max_in.w {
+        let fs = factors_below(node.max_in.c);
+        node.max_in.c = fs;
+        if !matches!(node.kind, NodeKind::Conv | NodeKind::Fc) {
+            node.max_filters = node.max_in.c;
+        }
+    } else if node.max_in.w > 1 {
+        node.max_in.w = node.max_in.w.div_ceil(2);
+    } else if node.max_in.d > 1 {
+        node.max_in.d = node.max_in.d.div_ceil(2);
+    } else if node.max_filters > 1 {
+        node.max_filters = factors_below(node.max_filters);
+    } else if node.coarse_in > 1 || node.coarse_out > 1 || node.fine > 1 {
+        node.coarse_in = 1;
+        node.coarse_out = 1;
+        node.fine = 1;
+    } else if node.max_in.h > 1 {
+        // Last resort: the paper keeps H at the max, but feasibility
+        // wins over the heuristic.
+        node.max_in.h = node.max_in.h.div_ceil(2);
+    }
+    refix_folding(node);
+    let _ = model;
+}
+
+/// Largest proper divisor step-down helper: next value below `x`
+/// halving-ish while keeping "nice" channel counts.
+fn factors_below(x: usize) -> usize {
+    (x / 2).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn moves_preserve_validity() {
+        let m = zoo::r2plus1d_18();
+        let mut d = Design::initial(&m);
+        let mut rng = Rng::new(42);
+        let cfg = OptCfg::default();
+        let mut applied = 0;
+        for _ in 0..500 {
+            let mut cand = d.clone();
+            if random_move(&m, &mut cand, &mut rng, &cfg).is_some()
+                && cand.validate(&m).is_ok()
+            {
+                d = cand;
+                applied += 1;
+            }
+        }
+        assert!(applied > 300, "only {applied} moves applied");
+        assert_eq!(d.validate(&m), Ok(()));
+    }
+
+    #[test]
+    fn separate_then_combine_roundtrip_validity() {
+        let m = zoo::c3d();
+        let mut d = Design::initial(&m);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            separate(&m, &mut d, &mut rng, 2);
+            assert_eq!(d.validate(&m), Ok(()));
+        }
+        for _ in 0..50 {
+            combine(&m, &mut d, &mut rng, 2);
+            assert_eq!(d.validate(&m), Ok(()));
+        }
+        d.compact();
+        assert_eq!(d.validate(&m), Ok(()));
+    }
+
+    #[test]
+    fn fuse_all_fuses_relus() {
+        let m = zoo::c3d();
+        let mut d = Design::initial(&m);
+        fuse_all(&m, &mut d);
+        let fused = d
+            .mapping
+            .iter()
+            .filter(|m| matches!(m, MapTarget::Fused))
+            .count();
+        // 8 conv relus + 2 fc relus + softmax (producer fc8) = 11.
+        assert_eq!(fused, 11);
+        assert_eq!(d.validate(&m), Ok(()));
+    }
+
+    #[test]
+    fn shrink_reduces_footprint() {
+        let m = zoo::c3d();
+        let mut d = Design::initial(&m);
+        let rm = ResourceModel::fit(1, 100);
+        let before = rm.design_resources(&d);
+        for _ in 0..10 {
+            shrink_largest(&m, &mut d, &rm);
+        }
+        let after = rm.design_resources(&d);
+        assert!(after.bram < before.bram || after.lut < before.lut);
+        assert_eq!(d.validate(&m), Ok(()));
+    }
+
+    #[test]
+    fn reshape_keeps_h_at_max() {
+        let m = zoo::c3d();
+        let mut d = Design::initial(&m);
+        let mut rng = Rng::new(5);
+        let conv = d
+            .nodes
+            .iter()
+            .position(|n| n.kind == NodeKind::Conv)
+            .unwrap();
+        for _ in 0..20 {
+            reshape(&m, &mut d, &mut rng, conv);
+            assert_eq!(d.nodes[conv].max_in.h, 112);
+            assert_eq!(d.validate(&m), Ok(()));
+        }
+    }
+}

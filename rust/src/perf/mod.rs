@@ -1,0 +1,262 @@
+//! Performance model (§IV-A): per-invocation latency under the DMA
+//! bandwidth roofline.
+//!
+//! Everything is in *cycles* and *words/cycle* (16-bit words). The
+//! pure-compute latencies `L_n(Γ)` assume unlimited bandwidth; the
+//! roofline of Eq. (1) then caps the streaming rates by the DMA
+//! bandwidth, which reproduces the paper's behaviour: convolutions are
+//! compute-bound, activations/eltwise are memory-bound (the reason the
+//! fusion optimisation pays — §VII-A1).
+
+use crate::device::Device;
+use crate::sdf::{Invocation, NodeKind};
+
+/// Bandwidth environment for the latency model.
+#[derive(Debug, Clone, Copy)]
+pub struct BwEnv {
+    /// `B_DMA^in` — words/cycle the read DMA sustains.
+    pub bw_in: f64,
+    /// `B_DMA^out` — words/cycle the write DMA sustains.
+    pub bw_out: f64,
+}
+
+impl BwEnv {
+    pub fn of_device(dev: &Device) -> BwEnv {
+        BwEnv {
+            bw_in: dev.bw_in_words_per_cycle(),
+            bw_out: dev.bw_out_words_per_cycle(),
+        }
+    }
+}
+
+/// Pure-compute latency `L_n(Γ)` in cycles (unlimited bandwidth).
+pub fn compute_latency(kind: NodeKind, inv: &Invocation) -> f64 {
+    match kind {
+        NodeKind::Conv => {
+            // L = |S_out| * F * |K| * (C/Gr) / (c_out * c_in * f)
+            // == MACs / DSPs.
+            inv.macs() as f64
+                / (inv.coarse_in * inv.coarse_out * inv.fine) as f64
+        }
+        NodeKind::Fc => {
+            // L = C * F / (c_in * c_out).
+            (inv.tile_in.c * inv.tile_out.c) as f64
+                / (inv.coarse_in * inv.coarse_out) as f64
+        }
+        // L = |S_in| / c for pool/act/eltwise (both operands stream
+        // through the same c lanes) and gap.
+        NodeKind::Pool | NodeKind::Act | NodeKind::Eltwise
+        | NodeKind::Gap => {
+            inv.tile_in.elems() as f64 / inv.coarse_in as f64
+        }
+    }
+}
+
+/// Streaming rates of the invocation (words/cycle/stream): in, out,
+/// weight parameters, partial sums.
+#[derive(Debug, Clone, Copy)]
+pub struct Rates {
+    pub r_in: f64,
+    pub r_out: f64,
+    pub r_param: f64,
+    pub r_psum: f64,
+}
+
+pub fn rates(kind: NodeKind, inv: &Invocation) -> Rates {
+    let l = compute_latency(kind, inv).max(1.0);
+    let s_in = inv.tile_in.elems() as f64 * inv.n_inputs as f64;
+    let s_out = inv.tile_out.elems() as f64;
+    let r_in = s_in / (l * inv.coarse_in as f64);
+    let r_out = s_out / (l * inv.coarse_out as f64);
+    let (r_param, r_psum) = match kind {
+        NodeKind::Conv | NodeKind::Fc => {
+            let w = inv.weight_words() as f64;
+            let folds =
+                (inv.coarse_in * inv.coarse_out * inv.fine) as f64;
+            let r_param = w / (l * folds);
+            let r_psum = if inv.psum { r_out } else { 0.0 };
+            (r_param, r_psum)
+        }
+        _ => (0.0, 0.0),
+    };
+    Rates { r_in, r_out, r_param, r_psum }
+}
+
+/// Constrained bandwidths `B_n^in/out(Γ)` (words/cycle).
+pub fn constrained_bw(kind: NodeKind, inv: &Invocation, env: &BwEnv)
+    -> (f64, f64) {
+    let r = rates(kind, inv);
+    let demand_in = match kind {
+        NodeKind::Conv | NodeKind::Fc => {
+            r.r_in * inv.coarse_in as f64
+                + r.r_psum * inv.coarse_out as f64
+                + r.r_param
+                    * (inv.coarse_in * inv.coarse_out * inv.fine) as f64
+        }
+        _ => r.r_in * inv.coarse_in as f64,
+    };
+    let demand_out = r.r_out * inv.coarse_out as f64;
+    (demand_in.min(env.bw_in), demand_out.min(env.bw_out))
+}
+
+/// Total invocation latency `L~_n(Γ)` — Eq. (1): the slower of
+/// draining the input at `B_in` and filling the output at `B_out`.
+pub fn latency(kind: NodeKind, inv: &Invocation, env: &BwEnv) -> f64 {
+    let (b_in, b_out) = constrained_bw(kind, inv, env);
+    let s_in = inv.tile_in.elems() as f64 * inv.n_inputs as f64
+        + if inv.psum { inv.tile_out.elems() as f64 } else { 0.0 }
+        + match kind {
+            NodeKind::Conv | NodeKind::Fc => inv.weight_words() as f64,
+            _ => 0.0,
+        };
+    let s_out = inv.tile_out.elems() as f64;
+    (s_in / b_in.max(1e-12)).max(s_out / b_out.max(1e-12))
+}
+
+/// Is the invocation memory-bound (roofline hit the DMA cap)?
+pub fn memory_bound(kind: NodeKind, inv: &Invocation, env: &BwEnv) -> bool {
+    latency(kind, inv, env) > compute_latency(kind, inv) * 1.001
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layer::Shape;
+
+    fn conv_inv(c: usize, f: usize, ci: usize, co: usize, fine: usize)
+        -> Invocation {
+        Invocation {
+            layer: 0,
+            node: 0,
+            tile_in: Shape::new(8, 16, 16, c),
+            tile_out: Shape::new(8, 16, 16, f),
+            kernel: [3; 3],
+            groups: 1,
+            coarse_in: ci,
+            coarse_out: co,
+            fine,
+            psum: false,
+            n_inputs: 1,
+        }
+    }
+
+    fn wide_env() -> BwEnv {
+        BwEnv { bw_in: 1e9, bw_out: 1e9 }
+    }
+
+    #[test]
+    fn conv_latency_is_macs_over_dsps() {
+        let inv = conv_inv(16, 32, 4, 8, 3);
+        let l = compute_latency(NodeKind::Conv, &inv);
+        let macs = (8 * 16 * 16 * 32 * 27 * 16) as f64;
+        assert!((l - macs / 96.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn more_parallelism_is_faster() {
+        let slow = compute_latency(NodeKind::Conv, &conv_inv(16, 32, 1, 1, 1));
+        let fast = compute_latency(NodeKind::Conv, &conv_inv(16, 32, 4, 4, 9));
+        assert!((slow / fast - 144.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unlimited_bw_matches_compute_for_conv() {
+        let inv = conv_inv(16, 32, 2, 2, 1);
+        let env = wide_env();
+        let total = latency(NodeKind::Conv, &inv, &env);
+        let compute = compute_latency(NodeKind::Conv, &inv);
+        // Roofline with unlimited DMA reduces to compute latency.
+        assert!((total - compute).abs() / compute < 1e-6);
+        assert!(!memory_bound(NodeKind::Conv, &inv, &env));
+    }
+
+    #[test]
+    fn activation_is_memory_bound_on_real_device() {
+        // Act node with high stream parallelism wants more words/cycle
+        // than the DMA gives -> memory bound (the §VII-A1 observation).
+        let inv = Invocation {
+            layer: 0,
+            node: 0,
+            tile_in: Shape::new(8, 56, 56, 64),
+            tile_out: Shape::new(8, 56, 56, 64),
+            kernel: [1; 3],
+            groups: 1,
+            coarse_in: 64,
+            coarse_out: 64,
+            fine: 1,
+            psum: false,
+            n_inputs: 1,
+        };
+        let env = BwEnv { bw_in: 24.0, bw_out: 24.0 };
+        assert!(memory_bound(NodeKind::Act, &inv, &env));
+        // Latency degrades to |S|/B_dma.
+        let l = latency(NodeKind::Act, &inv, &env);
+        let expect = (8 * 56 * 56 * 64) as f64 / 24.0;
+        assert!((l - expect).abs() / expect < 1e-6);
+    }
+
+    #[test]
+    fn psum_adds_input_traffic() {
+        // Highly parallel node + narrow DMA -> memory bound; streaming
+        // the partial sums back in must then lengthen the invocation.
+        let mut inv = conv_inv(16, 32, 16, 32, 27);
+        let env = BwEnv { bw_in: 4.0, bw_out: 1e9 };
+        let base = latency(NodeKind::Conv, &inv, &env);
+        assert!(memory_bound(NodeKind::Conv, &inv, &env));
+        inv.psum = true;
+        let with_psum = latency(NodeKind::Conv, &inv, &env);
+        assert!(with_psum > base, "psum {with_psum} <= base {base}");
+    }
+
+    #[test]
+    fn psum_noop_when_compute_bound() {
+        // With modest parallelism the node is compute bound and the
+        // psum stream hides under the compute latency.
+        let mut inv = conv_inv(16, 32, 2, 2, 1);
+        let env = BwEnv { bw_in: 4.0, bw_out: 1e9 };
+        let base = latency(NodeKind::Conv, &inv, &env);
+        inv.psum = true;
+        let with_psum = latency(NodeKind::Conv, &inv, &env);
+        assert!((with_psum - base).abs() / base < 1e-9);
+    }
+
+    #[test]
+    fn eltwise_two_operands_double_traffic() {
+        let mk = |n_inputs| Invocation {
+            layer: 0,
+            node: 0,
+            tile_in: Shape::new(4, 8, 8, 16),
+            tile_out: Shape::new(4, 8, 8, 16),
+            kernel: [1; 3],
+            groups: 1,
+            coarse_in: 16,
+            coarse_out: 16,
+            fine: 1,
+            psum: false,
+            n_inputs,
+        };
+        let env = BwEnv { bw_in: 2.0, bw_out: 1e9 };
+        let one = latency(NodeKind::Eltwise, &mk(1), &env);
+        let two = latency(NodeKind::Eltwise, &mk(2), &env);
+        assert!((two / one - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fc_latency() {
+        let inv = Invocation {
+            layer: 0,
+            node: 0,
+            tile_in: Shape::flat(4096),
+            tile_out: Shape::flat(4096),
+            kernel: [1; 3],
+            groups: 1,
+            coarse_in: 8,
+            coarse_out: 8,
+            fine: 1,
+            psum: false,
+            n_inputs: 1,
+        };
+        let l = compute_latency(NodeKind::Fc, &inv);
+        assert!((l - (4096.0 * 4096.0 / 64.0)).abs() < 1e-6);
+    }
+}

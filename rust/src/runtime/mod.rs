@@ -1,0 +1,285 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts`) and executes them from the Rust
+//! hot path. Python never runs at serving time.
+//!
+//! Interchange is HLO *text*: `HloModuleProto::from_text_file`
+//! reassigns instruction ids, which sidesteps the 64-bit-id protos
+//! jax >= 0.5 emits that xla_extension 0.5.1 rejects (see
+//! /opt/xla-example/README.md and DESIGN.md §8).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// One compiled artifact.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shape: Vec<usize>,
+}
+
+/// Layer entry from the AOT manifest (execution chain metadata).
+#[derive(Debug, Clone)]
+pub struct LayerEntry {
+    pub name: String,
+    pub kind: String,
+    pub artifact: String,
+    pub pad: [usize; 3],
+    pub weights: Vec<String>,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+}
+
+/// The loaded runtime: PJRT client + compiled executables + weights.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    artifacts: BTreeMap<String, Artifact>,
+    pub layers: Vec<LayerEntry>,
+    pub weights: BTreeMap<String, Tensor>,
+    pub input_shape: Vec<usize>,
+    pub ref_weight_order: Vec<String>,
+    pub dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.json`, compile
+    /// them once on the CPU PJRT client, and read the weight binaries.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run \
+                                      `make artifacts` first"))?;
+        let manifest = Json::parse(&text)
+            .map_err(|e| anyhow!("manifest parse: {e}"))?;
+
+        let client = xla::PjRtClient::cpu()?;
+        let mut artifacts = BTreeMap::new();
+        let arts = manifest
+            .get("artifacts")
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let Json::Obj(map) = arts else {
+            return Err(anyhow!("artifacts not an object"));
+        };
+        for (tag, meta) in map {
+            let file = meta
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{tag}: missing file"))?;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().unwrap(),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            let input_shapes = meta
+                .get("input_shapes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{tag}: missing input_shapes"))?
+                .iter()
+                .map(|s| s.usize_arr().unwrap_or_default())
+                .collect();
+            let output_shape = meta
+                .get("output_shape")
+                .and_then(Json::usize_arr)
+                .unwrap_or_default();
+            artifacts.insert(
+                tag.clone(),
+                Artifact { exe, input_shapes, output_shape },
+            );
+        }
+
+        // Weight binaries (raw little-endian f32, streamed to the
+        // accelerator like the paper's off-chip weight DMA).
+        let mut weights = BTreeMap::new();
+        if let Some(Json::Obj(wmap)) = manifest.get("weights") {
+            for (key, meta) in wmap {
+                let file = meta
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{key}: missing file"))?;
+                let shape = meta
+                    .get("shape")
+                    .and_then(Json::usize_arr)
+                    .ok_or_else(|| anyhow!("{key}: missing shape"))?;
+                let bytes = std::fs::read(dir.join(file))?;
+                if bytes.len() % 4 != 0 {
+                    return Err(anyhow!("{key}: truncated weight file"));
+                }
+                let data: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                weights.insert(key.clone(), Tensor::from_vec(&shape, data));
+            }
+        }
+
+        let layers = manifest
+            .get("layers")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(|l| {
+                let pad = l
+                    .get("pad")
+                    .and_then(Json::usize_arr)
+                    .unwrap_or_else(|| vec![0, 0, 0]);
+                LayerEntry {
+                    name: l.get("name").and_then(Json::as_str)
+                        .unwrap_or("").to_string(),
+                    kind: l.get("kind").and_then(Json::as_str)
+                        .unwrap_or("").to_string(),
+                    artifact: l.get("artifact").and_then(Json::as_str)
+                        .unwrap_or("").to_string(),
+                    pad: [pad[0], pad[1], pad[2]],
+                    weights: l
+                        .get("weights")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|w| w.as_str().map(String::from))
+                        .collect(),
+                    in_shape: l.get("in_shape").and_then(Json::usize_arr)
+                        .unwrap_or_default(),
+                    out_shape: l.get("out_shape").and_then(Json::usize_arr)
+                        .unwrap_or_default(),
+                }
+            })
+            .collect();
+
+        let input_shape = manifest
+            .get("input_shape")
+            .and_then(Json::usize_arr)
+            .ok_or_else(|| anyhow!("manifest missing input_shape"))?;
+        let ref_weight_order = manifest
+            .get("ref_weight_order")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|w| w.as_str().map(String::from))
+            .collect();
+
+        Ok(Runtime {
+            client,
+            artifacts,
+            layers,
+            weights,
+            input_shape,
+            ref_weight_order,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn has_artifact(&self, tag: &str) -> bool {
+        self.artifacts.contains_key(tag)
+    }
+
+    pub fn artifact_tags(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute an artifact with the given inputs. Inputs are validated
+    /// against the manifest shapes (catching schedule/tile mismatches
+    /// before PJRT does).
+    pub fn execute(&self, tag: &str, inputs: &[&Tensor]) -> Result<Tensor> {
+        let art = self
+            .artifacts
+            .get(tag)
+            .ok_or_else(|| anyhow!("unknown artifact {tag}"))?;
+        if inputs.len() != art.input_shapes.len() {
+            return Err(anyhow!(
+                "{tag}: expected {} inputs, got {}",
+                art.input_shapes.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, want)) in
+            inputs.iter().zip(&art.input_shapes).enumerate() {
+            if &t.shape != want {
+                return Err(anyhow!(
+                    "{tag}: input {i} shape {:?} != expected {:?}",
+                    t.shape, want
+                ));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> =
+                    t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data).reshape(&dims)
+            })
+            .collect::<Result<_, _>>()?;
+        let result = art.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        Ok(Tensor::from_vec(&art.output_shape, values))
+    }
+
+    /// Execute the golden whole-model reference (`c3d_tiny_ref`).
+    pub fn execute_reference(&self, clip: &Tensor) -> Result<Tensor> {
+        let mut inputs: Vec<&Tensor> = vec![clip];
+        for key in &self.ref_weight_order {
+            inputs.push(
+                self.weights
+                    .get(key)
+                    .ok_or_else(|| anyhow!("missing weight {key}"))?,
+            );
+        }
+        self.execute("c3d_tiny_ref", &inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<Runtime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn loads_all_artifacts() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.has_artifact("c3d_tiny_ref"));
+        assert!(rt.has_artifact("layer_conv1"));
+        assert!(rt.has_artifact("layer_conv2_tile"));
+        assert_eq!(rt.layers.len(), 8);
+        assert_eq!(rt.input_shape, vec![8, 32, 32, 3]);
+        assert_eq!(rt.weights.len(), 8); // 3 conv + 1 fc, w+b each
+    }
+
+    #[test]
+    fn reference_runs_and_is_deterministic() {
+        let Some(rt) = runtime() else { return };
+        let clip = Tensor::random(&rt.input_shape.clone(), 42);
+        let a = rt.execute_reference(&clip).unwrap();
+        let b = rt.execute_reference(&clip).unwrap();
+        assert_eq!(a.shape, vec![101]);
+        assert_eq!(a, b);
+        assert!(a.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn rejects_wrong_shapes() {
+        let Some(rt) = runtime() else { return };
+        let bad = Tensor::zeros(&[1, 2, 3]);
+        assert!(rt.execute("layer_conv1", &[&bad]).is_err());
+        assert!(rt.execute("no_such", &[&bad]).is_err());
+    }
+}

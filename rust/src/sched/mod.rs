@@ -1,0 +1,425 @@
+//! Scheduler — Algorithm 1: tile every execution node over its
+//! computation node, choosing runtime parameters Γ per invocation.
+//!
+//! Two forms are produced from the same tiling rules:
+//!
+//! * `grouped_invocations` — distinct Γ values with multiplicities
+//!   (interior tiles are identical, edges differ), used by the SA
+//!   optimiser's latency objective. At most 2 sizes per tiled
+//!   dimension means ≤ 32 distinct Γ per layer — evaluation is O(1)
+//!   in feature-map size.
+//! * `build_schedule` — the fully expanded `Φ_G` in NHWDC order, used
+//!   by the cycle-approximate simulator and the serving coordinator.
+//!
+//! With `runtime_params = false` the baseline behaviour of §III-C is
+//! modelled: every invocation pads to the node's compile-time maximum
+//! (dims *and* kernel), performing the redundant operations the
+//! runtime-parameterized hardware avoids (the 18x ablation effect).
+
+use crate::model::layer::{LayerKind, Shape};
+use crate::model::ModelGraph;
+use crate::perf::{self, BwEnv};
+use crate::sdf::{CompNode, Design, Invocation, MapTarget, NodeKind};
+use crate::util::math::{ceil_div, max_factor_leq};
+
+/// Scheduling configuration (the ablation toggles of §VII-A1).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedCfg {
+    /// Runtime-parameterized computation nodes (§III-C, Fig 3). Off =
+    /// padded execution at the node's compile-time maximum.
+    pub runtime_params: bool,
+}
+
+impl Default for SchedCfg {
+    fn default() -> Self {
+        SchedCfg { runtime_params: true }
+    }
+}
+
+/// Tile size options along one dimension: `floor(L/N)` full tiles of
+/// size N plus an optional edge remainder.
+fn dim_tiles(layer_dim: usize, node_dim: usize) -> Vec<(usize, u64)> {
+    let node_dim = node_dim.max(1);
+    let full = layer_dim / node_dim;
+    let rem = layer_dim - full * node_dim;
+    let mut v = Vec::with_capacity(2);
+    if full > 0 {
+        v.push((node_dim, full as u64));
+    }
+    if rem > 0 {
+        v.push((rem, 1));
+    }
+    v
+}
+
+/// Effective (kernel, stride, groups, n_inputs) of a layer.
+fn layer_geometry(kind: &LayerKind) -> ([usize; 3], [usize; 3], usize, usize) {
+    match kind {
+        LayerKind::Conv3d { kernel, stride, groups, .. } => {
+            (*kernel, *stride, *groups, 1)
+        }
+        LayerKind::Pool3d { kernel, stride, .. } => (*kernel, *stride, 1, 1),
+        LayerKind::Eltwise { broadcast, .. } => {
+            ([1; 3], [1; 3], 1, if *broadcast { 1 } else { 2 })
+        }
+        _ => ([1; 3], [1; 3], 1, 1),
+    }
+}
+
+/// Output tile dims for an input tile under (kernel-preserving)
+/// same-padding semantics: `ceil(tile / stride)` — exact for the
+/// stride-1 same-padded and stride==kernel pooling cases that dominate
+/// the evaluated models.
+fn out_dim(tile: usize, stride: usize) -> usize {
+    ceil_div(tile, stride.max(1))
+}
+
+/// Grouped Γ for one execution node on its computation node:
+/// `(invocation, multiplicity)` pairs (Algorithm 1, lines 4-16).
+pub fn grouped_invocations(model: &ModelGraph, design: &Design,
+                           layer_idx: usize, cfg: &SchedCfg)
+    -> Vec<(Invocation, u64)> {
+    let MapTarget::Node(node_idx) = design.mapping[layer_idx] else {
+        return Vec::new(); // fused layers cost nothing
+    };
+    let node = &design.nodes[node_idx];
+    let layer = &model.layers[layer_idx];
+    let (kernel, stride, groups, n_inputs) = layer_geometry(&layer.kind);
+
+    // FC flattens the producer feature-map onto the channel dim.
+    let (in_shape, filters) = match &layer.kind {
+        LayerKind::Fc { filters } => {
+            (Shape::flat(layer.in_shape.elems()), *filters)
+        }
+        LayerKind::Conv3d { filters, .. } => (layer.in_shape, *filters),
+        _ => (layer.in_shape, layer.in_shape.c),
+    };
+
+    let is_convlike =
+        matches!(node.kind, NodeKind::Conv | NodeKind::Fc);
+
+    let d_t = dim_tiles(in_shape.d, node.max_in.d);
+    let h_t = dim_tiles(in_shape.h, node.max_in.h);
+    let w_t = dim_tiles(in_shape.w, node.max_in.w);
+    let c_t = dim_tiles(in_shape.c, node.max_in.c);
+    let f_t = if is_convlike {
+        dim_tiles(filters, node.max_filters)
+    } else {
+        vec![(filters.min(node.max_in.c), 1)]
+    };
+    let c_folds = ceil_div(in_shape.c, node.max_in.c.max(1));
+
+    let mut out = Vec::new();
+    for &(td, nd) in &d_t {
+        for &(th, nh) in &h_t {
+            for &(tw, nw) in &w_t {
+                for &(tc, nc) in &c_t {
+                    for &(tf, nf) in &f_t {
+                        let mult = nd * nh * nw * nc
+                            * if is_convlike { nf } else { 1 };
+                        let inv = make_invocation(
+                            layer_idx, node_idx, node,
+                            Shape::new(td, th, tw, tc), tf, kernel,
+                            stride, groups, n_inputs,
+                            c_folds > 1 && is_convlike
+                                && !matches!(layer.kind,
+                                             LayerKind::Conv3d { groups: g, .. } if g > 1),
+                            cfg,
+                        );
+                        out.push((inv, mult));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn make_invocation(layer: usize, node_idx: usize, node: &CompNode,
+                   tile: Shape, tile_f: usize, kernel: [usize; 3],
+                   stride: [usize; 3], groups: usize, n_inputs: usize,
+                   psum: bool, cfg: &SchedCfg) -> Invocation {
+    if cfg.runtime_params {
+        // Runtime-parameterized node: exact tile dims and kernel; the
+        // coarse factors are chosen as max{factors Ĉ} within the
+        // node's compile-time stream counts (Algorithm 1, lines 9-10).
+        let groups_t = groups.min(tile.c).max(1);
+        let coarse_in = max_factor_leq(tile.c.max(1), node.coarse_in);
+        let (coarse_out, fine) = match node.kind {
+            NodeKind::Conv => (
+                max_factor_leq(tile_f.max(1), node.coarse_out),
+                max_factor_leq(kernel.iter().product::<usize>(),
+                               node.fine),
+            ),
+            NodeKind::Fc => {
+                (max_factor_leq(tile_f.max(1), node.coarse_out), 1)
+            }
+            _ => (coarse_in, 1),
+        };
+        let tile_out = match node.kind {
+            NodeKind::Conv => Shape::new(
+                out_dim(tile.d, stride[0]),
+                out_dim(tile.h, stride[1]),
+                out_dim(tile.w, stride[2]),
+                tile_f,
+            ),
+            NodeKind::Fc => Shape::flat(tile_f),
+            NodeKind::Gap => Shape::flat(tile.c),
+            NodeKind::Pool => Shape::new(
+                out_dim(tile.d, stride[0]),
+                out_dim(tile.h, stride[1]),
+                out_dim(tile.w, stride[2]),
+                tile.c,
+            ),
+            _ => tile,
+        };
+        Invocation {
+            layer,
+            node: node_idx,
+            tile_in: tile,
+            tile_out,
+            kernel,
+            groups: groups_t,
+            coarse_in,
+            coarse_out,
+            fine,
+            psum,
+            n_inputs,
+        }
+    } else {
+        // Baseline: padded execution at compile-time maxima. The node
+        // streams its full S_n with kernel K_n; redundant operations
+        // included (§VII-A1 "runtime reconfiguration" ablation).
+        let tile_in = node.max_in;
+        let tile_f_max = node.max_filters;
+        let kernel = match node.kind {
+            NodeKind::Conv | NodeKind::Pool => node.max_kernel,
+            _ => [1; 3],
+        };
+        let tile_out = match node.kind {
+            NodeKind::Conv => Shape::new(
+                out_dim(tile_in.d, stride[0]),
+                out_dim(tile_in.h, stride[1]),
+                out_dim(tile_in.w, stride[2]),
+                tile_f_max,
+            ),
+            NodeKind::Fc => Shape::flat(tile_f_max),
+            NodeKind::Gap => Shape::flat(tile_in.c),
+            NodeKind::Pool => Shape::new(
+                out_dim(tile_in.d, stride[0]),
+                out_dim(tile_in.h, stride[1]),
+                out_dim(tile_in.w, stride[2]),
+                tile_in.c,
+            ),
+            _ => tile_in,
+        };
+        Invocation {
+            layer,
+            node: node_idx,
+            tile_in,
+            tile_out,
+            kernel,
+            groups: 1,
+            coarse_in: node.coarse_in,
+            coarse_out: match node.kind {
+                NodeKind::Conv | NodeKind::Fc => node.coarse_out,
+                _ => node.coarse_in,
+            },
+            fine: node.fine,
+            psum,
+            n_inputs,
+        }
+    }
+}
+
+/// Latency of one execution node across all its invocations (cycles).
+pub fn layer_latency(model: &ModelGraph, design: &Design, layer: usize,
+                     env: &BwEnv, cfg: &SchedCfg) -> f64 {
+    let kind = match design.mapping[layer] {
+        MapTarget::Node(n) => design.nodes[n].kind,
+        MapTarget::Fused => return 0.0,
+    };
+    grouped_invocations(model, design, layer, cfg)
+        .iter()
+        .map(|(inv, mult)| perf::latency(kind, inv, env) * *mult as f64)
+        .sum()
+}
+
+/// Total design latency `L_total(G)` — Eq. (2) — in cycles.
+pub fn total_latency_cycles(model: &ModelGraph, design: &Design,
+                            env: &BwEnv, cfg: &SchedCfg) -> f64 {
+    (0..model.layers.len())
+        .map(|l| layer_latency(model, design, l, env, cfg))
+        .sum()
+}
+
+/// The fully expanded schedule `Φ_G` in model (NHWDC) order.
+pub fn build_schedule(model: &ModelGraph, design: &Design, cfg: &SchedCfg)
+    -> Vec<Invocation> {
+    let mut phi = Vec::new();
+    for l in 0..model.layers.len() {
+        for (inv, mult) in grouped_invocations(model, design, l, cfg) {
+            for _ in 0..mult {
+                phi.push(inv.clone());
+            }
+        }
+    }
+    phi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn env() -> BwEnv {
+        BwEnv { bw_in: 24.0, bw_out: 24.0 }
+    }
+
+    #[test]
+    fn dim_tiles_cover_exactly() {
+        for layer_dim in 1..40usize {
+            for node_dim in 1..20usize {
+                let tiles = dim_tiles(layer_dim, node_dim);
+                let covered: u64 = tiles
+                    .iter()
+                    .map(|&(sz, n)| sz as u64 * n)
+                    .sum();
+                assert_eq!(covered, layer_dim as u64,
+                           "dims {layer_dim}/{node_dim}");
+                assert!(tiles.iter().all(|&(sz, _)| sz <= node_dim));
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_covers_every_layer_once() {
+        let m = zoo::c3d_tiny();
+        let d = Design::initial(&m);
+        let cfg = SchedCfg::default();
+        let phi = build_schedule(&m, &d, &cfg);
+        // Warm-start nodes cover each layer's full dims in one or few
+        // invocations; every non-fused layer appears at least once.
+        for l in 0..m.layers.len() {
+            assert!(phi.iter().any(|inv| inv.layer == l), "layer {l}");
+        }
+    }
+
+    #[test]
+    fn grouped_matches_expanded_latency() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        // Shrink the conv node to force real tiling.
+        let conv = d
+            .nodes
+            .iter_mut()
+            .find(|n| n.kind == NodeKind::Conv)
+            .unwrap();
+        conv.max_in = Shape::new(4, 32, 12, 8);
+        conv.max_filters = 16;
+        let cfg = SchedCfg::default();
+        let env = env();
+        let total = total_latency_cycles(&m, &d, &env, &cfg);
+        let expanded: f64 = build_schedule(&m, &d, &cfg)
+            .iter()
+            .map(|inv| {
+                let MapTarget::Node(n) = d.mapping[inv.layer] else {
+                    unreachable!()
+                };
+                perf::latency(d.nodes[n].kind, inv, &env)
+            })
+            .sum();
+        assert!((total - expanded).abs() / total < 1e-9);
+    }
+
+    #[test]
+    fn tiles_respect_node_limits() {
+        let m = zoo::c3d();
+        let mut d = Design::initial(&m);
+        let conv = d
+            .nodes
+            .iter_mut()
+            .find(|n| n.kind == NodeKind::Conv)
+            .unwrap();
+        conv.max_in = Shape::new(8, 112, 28, 64);
+        conv.max_filters = 128;
+        let cfg = SchedCfg::default();
+        for l in 0..m.layers.len() {
+            for (inv, _) in grouped_invocations(&m, &d, l, &cfg) {
+                let MapTarget::Node(n) = d.mapping[l] else { continue };
+                let node = &d.nodes[n];
+                assert!(inv.tile_in.d <= node.max_in.d);
+                assert!(inv.tile_in.h <= node.max_in.h);
+                assert!(inv.tile_in.w <= node.max_in.w);
+                assert!(inv.tile_in.c <= node.max_in.c);
+                // Scheduled streams divide the tile channels
+                // (constraint 3 of §V-B).
+                assert_eq!(inv.tile_in.c % inv.coarse_in, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn runtime_params_never_slower() {
+        // Padded execution performs a superset of the work.
+        let m = zoo::c3d_tiny();
+        let d = Design::initial(&m);
+        let env = env();
+        let rt = total_latency_cycles(&m, &d, &env,
+                                      &SchedCfg { runtime_params: true });
+        let padded = total_latency_cycles(&m, &d, &env,
+                                          &SchedCfg { runtime_params: false });
+        assert!(rt <= padded * 1.0001, "rt={rt} padded={padded}");
+    }
+
+    #[test]
+    fn fused_layers_cost_nothing() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        let cfg = SchedCfg::default();
+        let env = env();
+        let before = total_latency_cycles(&m, &d, &env, &cfg);
+        let mut act_lat = 0.0;
+        for (l, layer) in m.layers.iter().enumerate() {
+            if matches!(layer.kind, LayerKind::Activation(_)) {
+                act_lat += layer_latency(&m, &d, l, &env, &cfg);
+                d.mapping[l] = MapTarget::Fused;
+            }
+        }
+        assert!(act_lat > 0.0);
+        let after = total_latency_cycles(&m, &d, &env, &cfg);
+        assert!((before - after - act_lat).abs() / before < 1e-9);
+    }
+
+    #[test]
+    fn total_macs_covered_by_schedule() {
+        // The schedule's conv/fc invocations must perform at least the
+        // model's MAC count (more when padded).
+        let m = zoo::c3d_tiny();
+        let d = Design::initial(&m);
+        let cfg = SchedCfg::default();
+        let phi = build_schedule(&m, &d, &cfg);
+        let sched_macs: u64 = phi
+            .iter()
+            .filter(|inv| {
+                let MapTarget::Node(n) = d.mapping[inv.layer] else {
+                    return false;
+                };
+                matches!(d.nodes[n].kind, NodeKind::Conv | NodeKind::Fc)
+            })
+            .map(|inv| match d.nodes
+                [match d.mapping[inv.layer] {
+                    MapTarget::Node(n) => n,
+                    _ => unreachable!(),
+                }]
+            .kind
+            {
+                NodeKind::Fc => (inv.tile_in.c * inv.tile_out.c) as u64,
+                _ => inv.macs(),
+            })
+            .sum();
+        assert!(sched_macs >= m.total_macs(),
+                "sched {sched_macs} < model {}", m.total_macs());
+    }
+}

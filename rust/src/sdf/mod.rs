@@ -1,0 +1,557 @@
+//! Synchronous Data-Flow layer: computation (hardware) nodes, the
+//! hardware graph `G`, the execution mapping `E : G -> P(M)`, and the
+//! runtime parameter tuples Γ (§III).
+//!
+//! A `Design` is one point in the search space: a set of computation
+//! nodes with compile-time parameters (Table I) plus the mapping from
+//! every model execution node onto a computation node (or into its
+//! producer, when the activation-fusion optimisation applies).
+
+use crate::model::layer::{LayerKind, Shape};
+use crate::model::ModelGraph;
+
+/// Building-block type of a computation node. Execution nodes may only
+/// map onto a node of their own type (§V-C4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NodeKind {
+    Conv,
+    Pool,
+    Act,
+    Eltwise,
+    Gap,
+    Fc,
+}
+
+impl NodeKind {
+    pub fn of_layer(kind: &LayerKind) -> NodeKind {
+        match kind {
+            LayerKind::Conv3d { .. } => NodeKind::Conv,
+            LayerKind::Pool3d { .. } => NodeKind::Pool,
+            LayerKind::Activation(_) => NodeKind::Act,
+            LayerKind::Eltwise { .. } | LayerKind::Scale
+            | LayerKind::Concat => NodeKind::Eltwise,
+            LayerKind::GlobalAvgPool => NodeKind::Gap,
+            LayerKind::Fc { .. } => NodeKind::Fc,
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            NodeKind::Conv => "conv",
+            NodeKind::Pool => "pool",
+            NodeKind::Act => "act",
+            NodeKind::Eltwise => "eltwise",
+            NodeKind::Gap => "gap",
+            NodeKind::Fc => "fc",
+        }
+    }
+}
+
+/// A computation node `n` of the hardware graph `G` with its
+/// compile-time parameters (Table I).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompNode {
+    pub kind: NodeKind,
+    /// Maximum supported input feature-map tile `S_n^in`;
+    /// `max_in.c` is the channel capacity `C_n`.
+    pub max_in: Shape,
+    /// `F_n` — filter capacity (conv/fc only; mirrors `max_in.c`
+    /// otherwise).
+    pub max_filters: usize,
+    /// `K_n` — maximum kernel extent (D, H, W); conv/pool only.
+    pub max_kernel: [usize; 3],
+    /// `c_n^in` — parallel streams in (must divide `max_in.c`).
+    pub coarse_in: usize,
+    /// `c_n^out` — parallel streams out (must divide `max_filters`).
+    pub coarse_out: usize,
+    /// `f_n` — vector dot-product folding (must divide `|K_n|`).
+    pub fine: usize,
+}
+
+impl CompNode {
+    /// DSPs consumed (§IV-B): only Conv and FC use DSPs.
+    pub fn dsp(&self) -> f64 {
+        match self.kind {
+            NodeKind::Conv => {
+                (self.coarse_in * self.coarse_out * self.fine) as f64
+            }
+            NodeKind::Fc => (self.coarse_in * self.coarse_out) as f64,
+            _ => 0.0,
+        }
+    }
+}
+
+/// Where an execution node runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapTarget {
+    /// Index into `Design::nodes`.
+    Node(usize),
+    /// Fused into its producer (activation-fusion optimisation,
+    /// §VII-A1) — costs nothing on the schedule.
+    Fused,
+}
+
+/// One point of the design space: hardware graph + execution mapping.
+#[derive(Debug, Clone)]
+pub struct Design {
+    pub nodes: Vec<CompNode>,
+    /// `mapping[l]` — the computation node executing model layer `l`.
+    pub mapping: Vec<MapTarget>,
+}
+
+impl Design {
+    /// The initial design of §V-C4: execution nodes combined onto one
+    /// computation node per (type, kernel-class), sized to the
+    /// *maximum* requirement of its mapped layers (the "warm start" —
+    /// feasible w.r.t. schedulability, minimal parallelism).
+    ///
+    /// Grouping by kernel class (not type alone) keeps a lone 7x7
+    /// stem from forcing 7-deep line buffers onto the node that
+    /// executes every 3x3x3 layer — the runtime kernel crossbar
+    /// bypasses *down* from the compile-time maximum, never up.
+    pub fn initial(model: &ModelGraph) -> Design {
+        let mut nodes: Vec<CompNode> = Vec::new();
+        let mut node_of: Vec<((NodeKind, [usize; 3]), usize)> = Vec::new();
+        let mut mapping = Vec::with_capacity(model.layers.len());
+        for layer in &model.layers {
+            let kind = NodeKind::of_layer(&layer.kind);
+            let kclass = layer_kernel(&layer.kind).unwrap_or([1; 3]);
+            let key = (kind, kclass);
+            let idx = match node_of.iter().find(|(k, _)| *k == key) {
+                Some(&(_, i)) => i,
+                None => {
+                    nodes.push(CompNode {
+                        kind,
+                        max_in: Shape::new(1, 1, 1, 1),
+                        max_filters: 1,
+                        max_kernel: [1; 3],
+                        coarse_in: 1,
+                        coarse_out: 1,
+                        fine: 1,
+                    });
+                    node_of.push((key, nodes.len() - 1));
+                    nodes.len() - 1
+                }
+            };
+            grow_node_for_layer(&mut nodes[idx], layer);
+            mapping.push(MapTarget::Node(idx));
+        }
+        Design { nodes, mapping }
+    }
+
+    /// The pre-combination mapping of §V-C4: one unique computation
+    /// node per execution node. This is the §VII-A1 ablation baseline
+    /// (with the combination transform disabled there is nothing to
+    /// share, so runtime parameterisation is moot: every node exactly
+    /// fits its layer).
+    pub fn initial_per_layer(model: &ModelGraph) -> Design {
+        let mut nodes = Vec::with_capacity(model.layers.len());
+        let mut mapping = Vec::with_capacity(model.layers.len());
+        for layer in &model.layers {
+            let mut node = CompNode {
+                kind: NodeKind::of_layer(&layer.kind),
+                max_in: Shape::new(1, 1, 1, 1),
+                max_filters: 1,
+                max_kernel: [1; 3],
+                coarse_in: 1,
+                coarse_out: 1,
+                fine: 1,
+            };
+            grow_node_for_layer(&mut node, layer);
+            nodes.push(node);
+            mapping.push(MapTarget::Node(nodes.len() - 1));
+        }
+        Design { nodes, mapping }
+    }
+
+    /// Layers mapped to node `n` — the inverse mapping `E(n)`.
+    pub fn layers_of(&self, n: usize) -> Vec<usize> {
+        self.mapping
+            .iter()
+            .enumerate()
+            .filter_map(|(l, m)| match m {
+                MapTarget::Node(i) if *i == n => Some(l),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Validate structural invariants: disjoint mapping is implied by
+    /// the `Vec` representation; check node indices, kind agreement,
+    /// fusion legality, and compile-time parameter divisibility.
+    pub fn validate(&self, model: &ModelGraph) -> Result<(), String> {
+        if self.mapping.len() != model.layers.len() {
+            return Err("mapping arity mismatch".into());
+        }
+        for (l, m) in self.mapping.iter().enumerate() {
+            let layer = &model.layers[l];
+            match m {
+                MapTarget::Node(i) => {
+                    let node = self
+                        .nodes
+                        .get(*i)
+                        .ok_or(format!("layer {l}: bad node index"))?;
+                    if node.kind != NodeKind::of_layer(&layer.kind) {
+                        return Err(format!(
+                            "layer {l} ({}) mapped to {:?} node",
+                            layer.name, node.kind
+                        ));
+                    }
+                }
+                MapTarget::Fused => {
+                    if !matches!(layer.kind,
+                                 LayerKind::Activation(_) | LayerKind::Scale)
+                    {
+                        return Err(format!(
+                            "layer {l} ({}) cannot fuse: not activation",
+                            layer.name
+                        ));
+                    }
+                    let Some(&src) = layer.inputs.first() else {
+                        return Err(format!("layer {l}: fused model input"));
+                    };
+                    let pk = &model.layers[src].kind;
+                    let fusable = matches!(
+                        pk,
+                        LayerKind::Conv3d { .. }
+                            | LayerKind::Fc { .. }
+                            | LayerKind::Eltwise { .. }
+                            | LayerKind::Scale
+                    );
+                    if !fusable || self.mapping[src] == MapTarget::Fused
+                        && !matches!(pk, LayerKind::Scale | LayerKind::Eltwise {..})
+                    {
+                        // A fused producer chain is fine as long as the
+                        // chain bottoms out in a compute layer.
+                    }
+                    if !fusable {
+                        return Err(format!(
+                            "layer {l} ({}) fused into non-compute producer",
+                            layer.name
+                        ));
+                    }
+                }
+            }
+        }
+        for (i, node) in self.nodes.iter().enumerate() {
+            if node.max_in.c % node.coarse_in != 0 {
+                return Err(format!("node {i}: c_in !| C_n"));
+            }
+            if node.max_filters % node.coarse_out != 0 {
+                return Err(format!("node {i}: c_out !| F_n"));
+            }
+            let k: usize = node.max_kernel.iter().product();
+            if k % node.fine != 0 {
+                return Err(format!("node {i}: f !| |K_n|"));
+            }
+        }
+        // Every node must be able to *schedule* its layers: kernel
+        // coverage (runtime-parameterized nodes bypass down, never up).
+        for (l, m) in self.mapping.iter().enumerate() {
+            if let MapTarget::Node(i) = m {
+                let node = &self.nodes[*i];
+                if let Some(k) = layer_kernel(&model.layers[l].kind) {
+                    for d in 0..3 {
+                        if k[d] > node.max_kernel[d] {
+                            return Err(format!(
+                                "layer {l}: kernel exceeds node {i}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Constraint check restricted to `nodes` (the SA hot path: a move
+    /// touches one or two nodes, and the untouched remainder of the
+    /// design was valid before the move). Checks the same §V-B
+    /// invariants as `validate` for the touched subset.
+    pub fn validate_nodes(&self, model: &ModelGraph, nodes: &[usize])
+        -> Result<(), String> {
+        for &i in nodes {
+            let Some(node) = self.nodes.get(i) else {
+                return Err(format!("bad node index {i}"));
+            };
+            if node.max_in.c % node.coarse_in != 0 {
+                return Err(format!("node {i}: c_in !| C_n"));
+            }
+            if node.max_filters % node.coarse_out != 0 {
+                return Err(format!("node {i}: c_out !| F_n"));
+            }
+            let k: usize = node.max_kernel.iter().product();
+            if k % node.fine != 0 {
+                return Err(format!("node {i}: f !| |K_n|"));
+            }
+        }
+        for (l, m) in self.mapping.iter().enumerate() {
+            if let MapTarget::Node(i) = m {
+                if !nodes.contains(i) {
+                    continue;
+                }
+                let node = &self.nodes[*i];
+                if node.kind != NodeKind::of_layer(&model.layers[l].kind) {
+                    return Err(format!("layer {l}: kind mismatch"));
+                }
+                if let Some(k) = layer_kernel(&model.layers[l].kind) {
+                    for d in 0..3 {
+                        if k[d] > node.max_kernel[d] {
+                            return Err(format!(
+                                "layer {l}: kernel exceeds node {i}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of *used* computation nodes (some may lose all layers
+    /// after combine moves; they are garbage-collected by `compact`).
+    pub fn used_nodes(&self) -> usize {
+        let mut used = vec![false; self.nodes.len()];
+        for m in &self.mapping {
+            if let MapTarget::Node(i) = m {
+                used[*i] = true;
+            }
+        }
+        used.iter().filter(|&&u| u).count()
+    }
+
+    /// Drop unused nodes and remap indices.
+    pub fn compact(&mut self) {
+        let mut used = vec![false; self.nodes.len()];
+        for m in &self.mapping {
+            if let MapTarget::Node(i) = m {
+                used[*i] = true;
+            }
+        }
+        let mut remap = vec![usize::MAX; self.nodes.len()];
+        let mut nodes = Vec::new();
+        for (i, node) in self.nodes.iter().enumerate() {
+            if used[i] {
+                remap[i] = nodes.len();
+                nodes.push(node.clone());
+            }
+        }
+        for m in &mut self.mapping {
+            if let MapTarget::Node(i) = m {
+                *i = remap[*i];
+            }
+        }
+        self.nodes = nodes;
+    }
+}
+
+/// Kernel extent of a layer, if it has one.
+pub fn layer_kernel(kind: &LayerKind) -> Option<[usize; 3]> {
+    match kind {
+        LayerKind::Conv3d { kernel, .. }
+        | LayerKind::Pool3d { kernel, .. } => Some(*kernel),
+        _ => None,
+    }
+}
+
+/// Grow a node's compile-time parameters so `layer` becomes
+/// schedulable on it (used by the warm start and the combine move).
+pub fn grow_node_for_layer(node: &mut CompNode,
+                           layer: &crate::model::Layer) {
+    let s = layer.in_shape;
+    node.max_in.d = node.max_in.d.max(s.d);
+    node.max_in.h = node.max_in.h.max(s.h);
+    node.max_in.w = node.max_in.w.max(s.w);
+    node.max_in.c = node.max_in.c.max(s.c);
+    match &layer.kind {
+        LayerKind::Conv3d { filters, kernel, .. } => {
+            node.max_filters = node.max_filters.max(*filters);
+            for d in 0..3 {
+                node.max_kernel[d] = node.max_kernel[d].max(kernel[d]);
+            }
+        }
+        LayerKind::Fc { filters } => {
+            node.max_in.c = node.max_in.c.max(s.elems());
+            node.max_filters = node.max_filters.max(*filters);
+        }
+        LayerKind::Pool3d { kernel, .. } => {
+            for d in 0..3 {
+                node.max_kernel[d] = node.max_kernel[d].max(kernel[d]);
+            }
+            node.max_filters = node.max_in.c;
+        }
+        _ => {
+            node.max_filters = node.max_in.c;
+        }
+    }
+    // Keep divisibility invariants after growth.
+    if node.max_in.c % node.coarse_in != 0 {
+        node.coarse_in = 1;
+    }
+    if node.max_filters % node.coarse_out != 0 {
+        node.coarse_out = 1;
+    }
+    let k: usize = node.max_kernel.iter().product();
+    if k % node.fine != 0 {
+        node.fine = 1;
+    }
+}
+
+/// The runtime parameter tuple Γ for one invocation of a computation
+/// node — one schedule entry (Algorithm 1 output).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Invocation {
+    pub layer: usize,
+    pub node: usize,
+    /// Input tile `Ŝ^in` (D, H, W, C); `tile_in.c` is `Ĉ`.
+    pub tile_in: Shape,
+    /// Output tile `Ŝ^out`; `tile_out.c` is `F̂` for conv/fc.
+    pub tile_out: Shape,
+    /// Runtime kernel `K̂` (conv/pool; `[1,1,1]` otherwise).
+    pub kernel: [usize; 3],
+    /// Channel groups of the executing layer (depthwise support).
+    pub groups: usize,
+    /// Scheduled stream counts `ĉ^in`, `ĉ^out` and folding `f̂`.
+    pub coarse_in: usize,
+    pub coarse_out: usize,
+    pub fine: usize,
+    /// Partial sums must round-trip off-chip (input channel dim is
+    /// folded over multiple invocations).
+    pub psum: bool,
+    /// Number of input operands (eltwise = 2).
+    pub n_inputs: usize,
+}
+
+impl Invocation {
+    /// MACs performed by this invocation (conv/fc).
+    pub fn macs(&self) -> u64 {
+        (self.tile_out.voxels() * self.tile_out.c
+            * self.kernel.iter().product::<usize>()
+            * (self.tile_in.c / self.groups).max(1)) as u64
+    }
+
+    /// Weight words streamed for this invocation (conv/fc).
+    pub fn weight_words(&self) -> u64 {
+        (self.kernel.iter().product::<usize>()
+            * (self.tile_in.c / self.groups).max(1)
+            * self.tile_out.c) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn initial_design_one_node_per_type_and_kernel() {
+        let m = zoo::c3d();
+        let d = Design::initial(&m);
+        assert_eq!(d.validate(&m), Ok(()));
+        // C3D: conv[3,3,3], pool[1,2,2], pool[2,2,2], act, fc -> 5.
+        assert_eq!(d.nodes.len(), 5);
+        assert_eq!(
+            d.nodes.iter().filter(|n| n.kind == NodeKind::Pool).count(),
+            2
+        );
+        // Every layer mapped, none fused initially.
+        assert!(d.mapping.iter().all(|m| matches!(m, MapTarget::Node(_))));
+    }
+
+    #[test]
+    fn initial_design_covers_max_dims() {
+        let m = zoo::c3d();
+        let d = Design::initial(&m);
+        let conv = d
+            .nodes
+            .iter()
+            .find(|n| n.kind == NodeKind::Conv)
+            .unwrap();
+        // conv1a input is the largest conv input: 16x112x112x3, but
+        // channel capacity grows to the largest conv Cin = 512.
+        assert_eq!(conv.max_in.h, 112);
+        assert_eq!(conv.max_in.c, 512);
+        assert_eq!(conv.max_filters, 512);
+        assert_eq!(conv.max_kernel, [3, 3, 3]);
+        // FC capacity: fc6 input 8192.
+        let fc = d.nodes.iter().find(|n| n.kind == NodeKind::Fc).unwrap();
+        assert_eq!(fc.max_in.c, 8192);
+        assert_eq!(fc.max_filters, 4096);
+    }
+
+    #[test]
+    fn mapping_is_disjoint_and_total() {
+        // E(n) partitions M (§V-A): by construction each layer has
+        // exactly one target; verify layers_of() sets are disjoint.
+        let m = zoo::r2plus1d_18();
+        let d = Design::initial(&m);
+        let mut seen = vec![false; m.layers.len()];
+        for n in 0..d.nodes.len() {
+            for l in d.layers_of(n) {
+                assert!(!seen[l], "layer {l} mapped twice");
+                seen[l] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn validate_rejects_kind_mismatch() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        // Map a conv layer onto the pool node.
+        let pool_node = d
+            .nodes
+            .iter()
+            .position(|n| n.kind == NodeKind::Pool)
+            .unwrap();
+        d.mapping[0] = MapTarget::Node(pool_node); // layer 0 is conv1
+        assert!(d.validate(&m).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_divisibility() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        d.nodes[0].coarse_in = 7; // 512 % 7 != 0 (or whatever C_n is)
+        if d.nodes[0].max_in.c % 7 != 0 {
+            assert!(d.validate(&m).is_err());
+        }
+    }
+
+    #[test]
+    fn compact_removes_orphans() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        // Move every act layer onto a new node, orphaning nothing;
+        // then fuse them all, orphaning the act node.
+        for (l, layer) in m.layers.iter().enumerate() {
+            if matches!(layer.kind, LayerKind::Activation(_)) {
+                d.mapping[l] = MapTarget::Fused;
+            }
+        }
+        let before = d.nodes.len();
+        d.compact();
+        assert_eq!(d.nodes.len(), before - 1);
+        assert_eq!(d.validate(&m), Ok(()));
+    }
+
+    #[test]
+    fn invocation_macs() {
+        let inv = Invocation {
+            layer: 0,
+            node: 0,
+            tile_in: Shape::new(4, 8, 8, 16),
+            tile_out: Shape::new(4, 8, 8, 32),
+            kernel: [3; 3],
+            groups: 1,
+            coarse_in: 4,
+            coarse_out: 4,
+            fine: 1,
+            psum: false,
+            n_inputs: 1,
+        };
+        assert_eq!(inv.macs(), (4 * 8 * 8 * 32 * 27 * 16) as u64);
+        assert_eq!(inv.weight_words(), (27 * 16 * 32) as u64);
+    }
+}

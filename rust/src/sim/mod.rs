@@ -1,0 +1,248 @@
+//! Cycle-approximate accelerator simulator — the on-board-measurement
+//! stand-in (DESIGN.md §3).
+//!
+//! Executes the expanded schedule Φ_G invocation-by-invocation and
+//! accounts for the effects the analytic model of §IV-A neglects —
+//! §VI attributes the prediction/measurement divergence to "the DMA
+//! introducing a delay between bursts due to memory access cycles":
+//!
+//! * DMA burst gaps: transfers happen in fixed-length bursts; each
+//!   burst re-pays the DRAM access latency.
+//! * Crossbar reconfiguration + runtime-parameter update per
+//!   invocation (double-buffered, <100 B — §IV-A says negligible, we
+//!   charge a small constant).
+//! * Pipeline fill: the sliding-window line buffers must prime before
+//!   the first output emerges.
+//! * A small deterministic per-invocation arbitration jitter (seeded;
+//!   DRAM refresh / AXI arbitration).
+//!
+//! The same module carries the power/energy model used by Table VI.
+
+pub mod trace;
+
+use crate::device::Device;
+use crate::model::ModelGraph;
+use crate::perf::{self, BwEnv};
+use crate::sched::{self, SchedCfg};
+use crate::sdf::{Design, Invocation, MapTarget, NodeKind};
+use crate::util::rng::Rng;
+
+/// DMA/board timing parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SimCfg {
+    /// Words per DMA burst.
+    pub burst_words: usize,
+    /// Cycles of DRAM access latency paid per burst.
+    pub burst_gap: f64,
+    /// Cycles to reconfigure crossbar + runtime parameters.
+    pub reconfig_cycles: f64,
+    /// Relative std-dev of the arbitration jitter.
+    pub jitter: f64,
+    pub seed: u64,
+}
+
+impl Default for SimCfg {
+    fn default() -> Self {
+        // AXI DMAs keep several bursts outstanding, so only a small
+        // residual stall per burst is exposed (row activations,
+        // refresh collisions) — calibrated so an optimised C3D design
+        // diverges from the analytic model by the paper's ~5-10%
+        // (Fig 6 reports 6.64% MAPE over the conv layers).
+        SimCfg {
+            burst_words: 512,
+            burst_gap: 1.6,
+            reconfig_cycles: 32.0,
+            jitter: 0.015,
+            seed: 0x51A1,
+        }
+    }
+}
+
+/// Simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Total "measured" latency in cycles.
+    pub cycles: f64,
+    /// Per-layer measured cycles (Fig 6's measurement column).
+    pub per_layer: Vec<f64>,
+    /// Total words moved across the DMA pair.
+    pub words_moved: f64,
+    /// Number of invocations executed.
+    pub invocations: usize,
+}
+
+impl SimReport {
+    pub fn ms(&self, dev: &Device) -> f64 {
+        self.cycles / dev.cycles_per_ms()
+    }
+}
+
+/// Words streamed in/out by one invocation (feature-maps + weights +
+/// partial sums).
+fn invocation_words(kind: NodeKind, inv: &Invocation) -> (f64, f64) {
+    let mut w_in = inv.tile_in.elems() as f64 * inv.n_inputs as f64;
+    if matches!(kind, NodeKind::Conv | NodeKind::Fc) {
+        w_in += inv.weight_words() as f64;
+        if inv.psum {
+            w_in += inv.tile_out.elems() as f64;
+        }
+    }
+    (w_in, inv.tile_out.elems() as f64)
+}
+
+/// Pipeline fill cycles: the line buffers hold (K_h - 1) rows plus a
+/// partial row before the window generator produces its first output.
+fn pipeline_fill(kind: NodeKind, inv: &Invocation) -> f64 {
+    match kind {
+        NodeKind::Conv | NodeKind::Pool => {
+            let rows = (inv.kernel[1].saturating_sub(1)) as f64;
+            let row_len =
+                (inv.tile_in.w * inv.tile_in.c / inv.coarse_in.max(1)) as f64;
+            rows * row_len
+        }
+        _ => 8.0,
+    }
+}
+
+/// Simulate one invocation; returns measured cycles. Pipeline fill is
+/// *not* charged here: consecutive invocations of a layer overlap
+/// through the double-buffered runtime parameters, so the line-buffer
+/// priming cost appears once per layer (see `simulate`).
+pub fn simulate_invocation(kind: NodeKind, inv: &Invocation, env: &BwEnv,
+                           cfg: &SimCfg, rng: &mut Rng) -> f64 {
+    let ideal = perf::latency(kind, inv, env);
+    let (w_in, w_out) = invocation_words(kind, inv);
+    let bursts =
+        (w_in / cfg.burst_words as f64).ceil()
+            + (w_out / cfg.burst_words as f64).ceil();
+    let overhead = bursts * cfg.burst_gap + cfg.reconfig_cycles;
+    let jitter = 1.0 + cfg.jitter * rng.normal();
+    (ideal + overhead) * jitter.max(0.5)
+}
+
+/// Execute the whole schedule on the simulated accelerator.
+pub fn simulate(model: &ModelGraph, design: &Design, dev: &Device,
+                scfg: &SchedCfg, cfg: &SimCfg) -> SimReport {
+    let env = BwEnv::of_device(dev);
+    let mut rng = Rng::new(cfg.seed);
+    let mut per_layer = vec![0.0; model.layers.len()];
+    let mut words = 0.0;
+    let mut n = 0usize;
+    for l in 0..model.layers.len() {
+        let MapTarget::Node(node) = design.mapping[l] else { continue };
+        let kind = design.nodes[node].kind;
+        let mut first = true;
+        for (inv, mult) in sched::grouped_invocations(model, design, l,
+                                                      scfg) {
+            if first {
+                per_layer[l] += pipeline_fill(kind, &inv);
+                first = false;
+            }
+            // Identical interior tiles behave identically up to
+            // jitter; simulate one and scale, folding the jitter of
+            // the whole group into one draw (equivalent in
+            // expectation, ~sqrt(mult) tighter in variance — the
+            // aggregation the measurement also performs).
+            let cyc = simulate_invocation(kind, &inv, &env, cfg, &mut rng);
+            let (wi, wo) = invocation_words(kind, &inv);
+            per_layer[l] += cyc * mult as f64;
+            words += (wi + wo) * mult as f64;
+            n += mult as usize;
+        }
+    }
+    SimReport {
+        cycles: per_layer.iter().sum(),
+        per_layer,
+        words_moved: words,
+        invocations: n,
+    }
+}
+
+/// Board power model (Table VI): static + dynamic per active resource
+/// + DMA/DDR activity. Calibrated to the paper's ZCU106 measurement
+/// (9.44 W for the C3D design).
+pub fn power_watts(dev: &Device, dsp: f64, bram: f64,
+                   avg_bw_words_per_cycle: f64) -> f64 {
+    let f_ghz = dev.clock_mhz / 1e3;
+    let static_w = 2.8;
+    let dsp_w = 1.25e-3 * dsp * f_ghz / 0.2;
+    let bram_w = 1.8e-3 * bram * f_ghz / 0.2;
+    let ddr_w = 0.04 * avg_bw_words_per_cycle;
+    static_w + dsp_w + bram_w + ddr_w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device;
+    use crate::model::zoo;
+    use crate::optim::{self, OptCfg};
+    use crate::resource::ResourceModel;
+    use crate::sched::total_latency_cycles;
+
+    #[test]
+    fn measured_exceeds_predicted_slightly() {
+        // The simulator adds only overheads, so measured >= predicted,
+        // and for a production-size design the divergence stays in the
+        // paper's range (Fig 6: conv-layer MAPE 6.64%; our tolerance
+        // <25%). C3D-tiny is intentionally excluded: its invocations
+        // are so small that fixed overheads dominate.
+        let m = zoo::c3d();
+        let dev = device::by_name("zcu102").unwrap();
+        let rm = ResourceModel::fit(1, 120);
+        let r = optim::optimize(&m, &dev, &rm, OptCfg::fast(3)).unwrap();
+        let scfg = SchedCfg::default();
+        let env = BwEnv::of_device(&dev);
+        let predicted = total_latency_cycles(&m, &r.design, &env, &scfg);
+        let sim = simulate(&m, &r.design, &dev, &scfg, &SimCfg::default());
+        assert!(sim.cycles > predicted,
+                "sim {} <= predicted {predicted}", sim.cycles);
+        let err = (sim.cycles - predicted) / predicted * 100.0;
+        assert!(err < 25.0, "divergence {err:.1}% too large");
+    }
+
+    #[test]
+    fn deterministic() {
+        let m = zoo::c3d_tiny();
+        let dev = device::by_name("zcu102").unwrap();
+        let d = crate::sdf::Design::initial(&m);
+        let scfg = SchedCfg::default();
+        let a = simulate(&m, &d, &dev, &scfg, &SimCfg::default());
+        let b = simulate(&m, &d, &dev, &scfg, &SimCfg::default());
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.invocations, b.invocations);
+    }
+
+    #[test]
+    fn per_layer_sums_to_total() {
+        let m = zoo::c3d_tiny();
+        let dev = device::by_name("zcu102").unwrap();
+        let d = crate::sdf::Design::initial(&m);
+        let scfg = SchedCfg::default();
+        let r = simulate(&m, &d, &dev, &scfg, &SimCfg::default());
+        let s: f64 = r.per_layer.iter().sum();
+        assert!((s - r.cycles).abs() < 1e-6);
+        assert!(r.words_moved > 0.0);
+    }
+
+    #[test]
+    fn power_in_paper_range() {
+        // ZCU106 C3D design: the paper reports 9.44 W.
+        let dev = device::by_name("zcu106").unwrap();
+        let p = power_watts(&dev, 1650.0, 1000.0, 20.0);
+        assert!(p > 6.0 && p < 13.0, "power {p:.2} W");
+    }
+
+    #[test]
+    fn burst_overhead_scales_with_words() {
+        let m = zoo::c3d_tiny();
+        let dev = device::by_name("zcu102").unwrap();
+        let d = crate::sdf::Design::initial(&m);
+        let scfg = SchedCfg::default();
+        let tight = SimCfg { burst_words: 64, ..SimCfg::default() };
+        let loose = SimCfg { burst_words: 1024, ..SimCfg::default() };
+        let a = simulate(&m, &d, &dev, &scfg, &tight);
+        let b = simulate(&m, &d, &dev, &scfg, &loose);
+        assert!(a.cycles > b.cycles);
+    }
+}

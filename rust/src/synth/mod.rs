@@ -1,0 +1,281 @@
+//! Synthesis simulator — the Vivado stand-in (DESIGN.md §3).
+//!
+//! Provides "ground-truth" resource usage for hardware modules at two
+//! stages, reproducing the error *structure* the paper reports in
+//! Tables II/III:
+//!
+//! * `synth` — post-synthesis numbers. DSP/BRAM are the analytic
+//!   models exactly (resource-type annotations pin them); LUT/FF are a
+//!   per-type cost function with mild non-linearity and seeded
+//!   log-normal noise (synthesis non-determinism). The §IV-B
+//!   regression is *fitted on these*.
+//! * `impl_` — post-implementation numbers: logic optimisation trims
+//!   LUTs (~5-10%) and inter-module buffering adds FFs (~6-12%) —
+//!   the two effects §VI names for the over/under-prediction signs.
+//!
+//! Everything is deterministic in (module parameters, seed): the same
+//! design always "synthesises" to the same numbers.
+
+use crate::device::Resources;
+use crate::model::layer::Shape;
+use crate::resource;
+use crate::sdf::{CompNode, NodeKind};
+use crate::util::math::factors;
+use crate::util::rng::Rng;
+
+/// Two-stage synthesis outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthResult {
+    /// Post-synthesis (regression training target).
+    pub synth: Resources,
+    /// Post-implementation ("actual" in Tables II/III).
+    pub impl_: Resources,
+}
+
+/// Stable 64-bit hash of the module parameters, mixed with the seed —
+/// the per-module synthesis noise source.
+fn param_hash(node: &CompNode, seed: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+    let mut mix = |x: usize| {
+        h ^= x as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    };
+    mix(match node.kind {
+        NodeKind::Conv => 1,
+        NodeKind::Pool => 2,
+        NodeKind::Act => 3,
+        NodeKind::Eltwise => 4,
+        NodeKind::Gap => 5,
+        NodeKind::Fc => 6,
+    });
+    mix(node.max_in.d);
+    mix(node.max_in.h);
+    mix(node.max_in.w);
+    mix(node.max_in.c);
+    mix(node.max_filters);
+    mix(node.max_kernel[0]);
+    mix(node.max_kernel[1]);
+    mix(node.max_kernel[2]);
+    mix(node.coarse_in);
+    mix(node.coarse_out);
+    mix(node.fine);
+    h
+}
+
+/// Per-type LUT/FF base cost curves (16-bit fixed-point datapaths):
+/// calibrated so an optimised C3D design lands in the Table II range
+/// (conv ~150K LUT at ~2.3K DSPs, pool ~20K, FC ~11K, ReLU ~1K).
+fn lut_ff_truth(node: &CompNode, rng: &mut Rng) -> (f64, f64) {
+    let mults = node.dsp();
+    let k: usize = node.max_kernel.iter().product();
+    let taps = (k * node.coarse_in) as f64;
+    let streams = (node.coarse_in + node.coarse_out) as f64;
+    let cap = (node.max_in.elems() as f64).max(1.0).ln();
+    let (base_l, base_f) = match node.kind {
+        NodeKind::Conv => (2_800.0, 3_200.0),
+        NodeKind::Pool => (1_400.0, 1_100.0),
+        NodeKind::Act => (420.0, 520.0),
+        NodeKind::Eltwise => (600.0, 700.0),
+        NodeKind::Gap => (700.0, 900.0),
+        NodeKind::Fc => (1_500.0, 2_400.0),
+    };
+    // Linear core + a mild super-linear routing/mux term the linear
+    // regression cannot capture (part of the paper's residual error).
+    let lut = base_l
+        + 52.0 * mults
+        + 11.0 * taps
+        + 190.0 * streams
+        + 55.0 * cap
+        + 0.9 * mults * (streams.max(2.0)).log2();
+    let ff = base_f
+        + 58.0 * mults
+        + 7.5 * taps
+        + 230.0 * streams
+        + 75.0 * cap
+        + 0.5 * taps * (streams.max(2.0)).log2();
+    // Synthesis noise: log-normal ~6% LUT, ~4% FF.
+    let lut = lut * (0.06 * rng.normal()).exp();
+    let ff = ff * (0.04 * rng.normal()).exp();
+    (lut, ff)
+}
+
+/// Synthesise one module. Deterministic in (node, seed).
+pub fn synthesize(node: &CompNode, seed: u64) -> SynthResult {
+    let mut rng = Rng::new(param_hash(node, seed));
+    let (lut, ff) = lut_ff_truth(node, &mut rng);
+    let synth = Resources {
+        dsp: node.dsp(),
+        bram: resource::node_bram(node),
+        lut,
+        ff,
+    };
+    // Implementation effects (§VI): logic optimisation reduces LUTs;
+    // inter-module buffering (neglected by the model) adds FFs.
+    let logic_opt = 0.05 + 0.05 * rng.uniform();
+    let buffering = 0.06 + 0.06 * rng.uniform();
+    let impl_ = Resources {
+        dsp: synth.dsp,
+        bram: synth.bram,
+        lut: synth.lut * (1.0 - logic_opt),
+        ff: synth.ff * (1.0 + buffering),
+    };
+    SynthResult { synth, impl_ }
+}
+
+/// Synthesise a whole design (per-node results + DMA/crossbar rows,
+/// which the paper reports without prediction error columns).
+pub fn synthesize_design(nodes: &[&CompNode], seed: u64)
+    -> Vec<SynthResult> {
+    nodes.iter().map(|n| synthesize(n, seed)).collect()
+}
+
+/// Random module generator for the regression data set: parameter
+/// distributions span what the optimiser explores (§IV-B's 5000
+/// synthesised modules).
+pub fn sample_modules(kind: NodeKind, n: usize, seed: u64)
+    -> Vec<(CompNode, SynthResult)> {
+    let mut rng = Rng::new(seed ^ 0x5A17);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = *rng.choose(&[8usize, 16, 32, 64, 128, 256, 512]);
+        let f = *rng.choose(&[16usize, 32, 64, 128, 256, 512]);
+        let k = match kind {
+            NodeKind::Conv | NodeKind::Pool => {
+                *rng.choose(&[[1, 1, 1], [1, 3, 3], [3, 1, 1], [3, 3, 3],
+                              [5, 5, 5], [1, 7, 7]])
+            }
+            _ => [1, 1, 1],
+        };
+        // Stream counts restricted to the DSP-feasible region real
+        // designs live in (a few thousand DSPs at most) — the paper's
+        // 5000 modules are synthesisable configurations, not the whole
+        // combinatorial space.
+        let feasible = |xs: Vec<usize>, cap: usize| -> Vec<usize> {
+            let v: Vec<usize> =
+                xs.into_iter().filter(|&x| x <= cap).collect();
+            if v.is_empty() { vec![1] } else { v }
+        };
+        let ci = *rng.choose(&feasible(factors(c), 64));
+        let co = *rng.choose(&feasible(factors(f), 64));
+        let kk: usize = k.iter().product();
+        let fine_opts: Vec<usize> = factors(kk)
+            .into_iter()
+            .filter(|&fi| ci * co * fi <= 4096)
+            .collect();
+        let fine = *rng.choose(if fine_opts.is_empty() {
+            &[1][..]
+        } else {
+            &fine_opts[..]
+        });
+        let node = CompNode {
+            kind,
+            max_in: Shape::new(
+                *rng.choose(&[2usize, 4, 8, 16]),
+                *rng.choose(&[14usize, 28, 56, 112]),
+                *rng.choose(&[7usize, 14, 28, 56]),
+                c,
+            ),
+            max_filters: match kind {
+                NodeKind::Conv | NodeKind::Fc => f,
+                _ => c,
+            },
+            max_kernel: k,
+            coarse_in: ci,
+            coarse_out: match kind {
+                NodeKind::Conv | NodeKind::Fc => co,
+                _ => ci,
+            },
+            fine,
+        };
+        let r = synthesize(&node, seed);
+        out.push((node, r));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a_node() -> CompNode {
+        CompNode {
+            kind: NodeKind::Conv,
+            max_in: Shape::new(16, 112, 28, 64),
+            max_filters: 128,
+            max_kernel: [3; 3],
+            coarse_in: 8,
+            coarse_out: 8,
+            fine: 9,
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = synthesize(&a_node(), 7);
+        let b = synthesize(&a_node(), 7);
+        assert_eq!(a.synth.lut, b.synth.lut);
+        assert_eq!(a.impl_.ff, b.impl_.ff);
+    }
+
+    #[test]
+    fn different_params_differ() {
+        let mut n2 = a_node();
+        n2.coarse_in = 16;
+        let a = synthesize(&a_node(), 7);
+        let b = synthesize(&n2, 7);
+        assert_ne!(a.synth.lut, b.synth.lut);
+    }
+
+    #[test]
+    fn dsp_bram_exact_through_both_stages() {
+        let r = synthesize(&a_node(), 3);
+        assert_eq!(r.synth.dsp, 576.0);
+        assert_eq!(r.impl_.dsp, r.synth.dsp);
+        assert_eq!(r.impl_.bram, r.synth.bram);
+        assert_eq!(r.synth.bram, resource::node_bram(&a_node()));
+    }
+
+    #[test]
+    fn impl_signs_match_paper() {
+        // Logic opt: impl LUT < synth LUT. Buffering: impl FF > synth.
+        for seed in 0..20u64 {
+            let mut n = a_node();
+            n.coarse_in = [1, 2, 4, 8][seed as usize % 4];
+            let r = synthesize(&n, seed);
+            assert!(r.impl_.lut < r.synth.lut);
+            assert!(r.impl_.ff > r.synth.ff);
+        }
+    }
+
+    #[test]
+    fn sample_modules_are_valid() {
+        for kind in [NodeKind::Conv, NodeKind::Pool, NodeKind::Fc] {
+            for (node, r) in sample_modules(kind, 50, 11) {
+                assert_eq!(node.max_in.c % node.coarse_in, 0);
+                assert_eq!(node.max_filters % node.coarse_out, 0);
+                let kk: usize = node.max_kernel.iter().product();
+                assert_eq!(kk % node.fine, 0);
+                assert!(r.synth.lut > 0.0);
+                assert!(r.synth.ff > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_lut_scale_matches_table2() {
+        // A ~2.3K-DSP conv node should synthesise in the 100-200K LUT
+        // range (Table II: 138-151K).
+        let node = CompNode {
+            kind: NodeKind::Conv,
+            max_in: Shape::new(16, 112, 28, 64),
+            max_filters: 512,
+            max_kernel: [3; 3],
+            coarse_in: 16,
+            coarse_out: 16,
+            fine: 9,
+        };
+        let r = synthesize(&node, 0);
+        assert!(r.synth.lut > 90_000.0 && r.synth.lut < 250_000.0,
+                "lut {}", r.synth.lut);
+    }
+}

@@ -1,0 +1,206 @@
+//! Minimal dense f32 tensor for the coordinator's host-side data
+//! movement: padding (the line-buffer/DMA behaviour of the paper's
+//! hardware), halo slicing for tiled invocations, and concatenation of
+//! tile outputs. Row-major, channels-last — identical to the L1
+//! kernels' layout.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Deterministic synthetic clip data in [-1, 1).
+    pub fn random(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| (rng.uniform() * 2.0 - 1.0) as f32)
+                         .collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Zero-pad a rank-4 `(D, H, W, C)` tensor symmetrically on the
+    /// three spatio-temporal dims (what the DMA does before streaming
+    /// a conv tile).
+    pub fn pad3d(&self, pad: [usize; 3]) -> Tensor {
+        assert_eq!(self.shape.len(), 4, "pad3d needs rank 4");
+        let [pd, ph, pw] = pad;
+        let (d, h, w, c) =
+            (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        let mut out =
+            Tensor::zeros(&[d + 2 * pd, h + 2 * ph, w + 2 * pw, c]);
+        let os = out.strides();
+        let is = self.strides();
+        for dd in 0..d {
+            for hh in 0..h {
+                let dst = (dd + pd) * os[0] + (hh + ph) * os[1]
+                    + pw * os[2];
+                let src = dd * is[0] + hh * is[1];
+                out.data[dst..dst + w * c]
+                    .copy_from_slice(&self.data[src..src + w * c]);
+            }
+        }
+        out
+    }
+
+    /// Slice `[lo, hi)` along `axis` (halo extraction for tiles).
+    pub fn slice_axis(&self, axis: usize, lo: usize, hi: usize) -> Tensor {
+        assert!(axis < self.shape.len() && lo < hi
+                && hi <= self.shape[axis]);
+        let mut out_shape = self.shape.clone();
+        out_shape[axis] = hi - lo;
+        let mut out = Tensor::zeros(&out_shape);
+        let outer: usize = self.shape[..axis].iter().product();
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let n = self.shape[axis];
+        for o in 0..outer {
+            let src_base = o * n * inner + lo * inner;
+            let dst_base = o * (hi - lo) * inner;
+            out.data[dst_base..dst_base + (hi - lo) * inner]
+                .copy_from_slice(
+                    &self.data[src_base..src_base + (hi - lo) * inner]);
+        }
+        out
+    }
+
+    /// Concatenate along `axis` (stitching tile outputs).
+    pub fn concat(parts: &[Tensor], axis: usize) -> Tensor {
+        assert!(!parts.is_empty());
+        let mut out_shape = parts[0].shape.clone();
+        out_shape[axis] = parts.iter().map(|p| p.shape[axis]).sum();
+        for p in parts {
+            assert_eq!(p.shape.len(), out_shape.len());
+            for (i, (&a, &b)) in
+                p.shape.iter().zip(&out_shape).enumerate() {
+                assert!(i == axis || a == b, "concat shape mismatch");
+            }
+        }
+        let mut out = Tensor::zeros(&out_shape);
+        let outer: usize = out_shape[..axis].iter().product();
+        let inner: usize = out_shape[axis + 1..].iter().product();
+        let total_ax = out_shape[axis];
+        let mut off = 0usize;
+        for p in parts {
+            let pax = p.shape[axis];
+            for o in 0..outer {
+                let src = o * pax * inner;
+                let dst = o * total_ax * inner + off * inner;
+                out.data[dst..dst + pax * inner]
+                    .copy_from_slice(&p.data[src..src + pax * inner]);
+            }
+            off += pax;
+        }
+        out
+    }
+
+    /// Maximum absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Index of the maximum element (classification argmax).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad3d_places_data_centrally() {
+        let mut t = Tensor::zeros(&[1, 2, 2, 1]);
+        t.data = vec![1.0, 2.0, 3.0, 4.0];
+        let p = t.pad3d([1, 1, 1]);
+        assert_eq!(p.shape, vec![3, 4, 4, 1]);
+        // Center of the middle depth slice holds the original data.
+        let s = p.strides();
+        assert_eq!(p.data[s[0] + s[1] + s[2]], 1.0);
+        assert_eq!(p.data[s[0] + s[1] + 2 * s[2]], 2.0);
+        assert_eq!(p.data[s[0] + 2 * s[1] + s[2]], 3.0);
+        assert_eq!(p.data[s[0] + 2 * s[1] + 2 * s[2]], 4.0);
+        // Border is zero.
+        assert_eq!(p.data[0], 0.0);
+        let sum: f32 = p.data.iter().sum();
+        assert_eq!(sum, 10.0);
+    }
+
+    #[test]
+    fn slice_concat_roundtrip() {
+        let t = Tensor::random(&[4, 6, 5, 3], 9);
+        for axis in 0..4 {
+            let n = t.shape[axis];
+            let a = t.slice_axis(axis, 0, n / 2);
+            let b = t.slice_axis(axis, n / 2, n);
+            let r = Tensor::concat(&[a, b], axis);
+            assert_eq!(r, t, "axis {axis}");
+        }
+    }
+
+    #[test]
+    fn slice_with_halo_overlap() {
+        let t = Tensor::random(&[2, 10, 4, 2], 3);
+        let t0 = t.slice_axis(1, 0, 6);
+        let t1 = t.slice_axis(1, 4, 10);
+        // Overlapping rows agree.
+        assert_eq!(t0.slice_axis(1, 4, 6), t1.slice_axis(1, 0, 2));
+    }
+
+    #[test]
+    fn argmax_and_diff() {
+        let a = Tensor::from_vec(&[4], vec![0.0, 3.0, 2.0, 1.0]);
+        assert_eq!(a.argmax(), 1);
+        let b = Tensor::from_vec(&[4], vec![0.0, 3.5, 2.0, 1.0]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        assert_eq!(Tensor::random(&[8], 1), Tensor::random(&[8], 1));
+        assert_ne!(Tensor::random(&[8], 1), Tensor::random(&[8], 2));
+    }
+}

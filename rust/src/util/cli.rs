@@ -1,0 +1,116 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports the toolflow's launcher grammar:
+//! `harflow3d <command> [positional ...] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (program name excluded).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                args.command = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or boolean `--flag`.
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_command_and_positional() {
+        let a = parse(&["optimize", "c3d", "zcu102"]);
+        assert_eq!(a.command, "optimize");
+        assert_eq!(a.positional, vec!["c3d", "zcu102"]);
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = parse(&["report", "table5", "--seed", "7", "--fast",
+                        "--out=x.json"]);
+        assert_eq!(a.command, "report");
+        assert_eq!(a.opt_u64("seed", 0), 7);
+        assert!(a.flag("fast"));
+        assert_eq!(a.opt("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["run"]);
+        assert_eq!(a.opt_usize("iters", 10), 10);
+        assert_eq!(a.opt_or("device", "zcu102"), "zcu102");
+        assert!(!a.flag("fast"));
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse(&[]);
+        assert_eq!(a.command, "");
+    }
+}

@@ -1,0 +1,126 @@
+//! Integer helpers used across the performance/resource models and the
+//! scheduler: divisor enumeration (the folding constraints of §V-C are
+//! all "x must be a factor of y"), ceiling division, products.
+
+/// Ceiling division for positive integers.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// All divisors of `n` in increasing order. `factors(0)` is empty.
+pub fn factors(n: usize) -> Vec<usize> {
+    if n == 0 {
+        return vec![];
+    }
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            small.push(i);
+            if i != n / i {
+                large.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Largest divisor of `n` that is `<= cap` (cap >= 1). This is the
+/// scheduler's "c = max{factors Ĉ}" rule constrained by the node's
+/// compile-time stream count.
+pub fn max_factor_leq(n: usize, cap: usize) -> usize {
+    debug_assert!(n > 0 && cap > 0);
+    if cap >= n {
+        return n;
+    }
+    // Scan downwards from cap; the distance to the nearest divisor is
+    // small for the channel counts CNNs use.
+    let mut d = cap;
+    while n % d != 0 {
+        d -= 1;
+    }
+    d
+}
+
+/// Product of a slice.
+pub fn product(xs: &[usize]) -> usize {
+    xs.iter().product()
+}
+
+/// Greatest common divisor.
+pub fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 { a } else { gcd(b, a % b) }
+}
+
+/// Least common multiple.
+pub fn lcm(a: usize, b: usize) -> usize {
+    if a == 0 || b == 0 { 0 } else { a / gcd(a, b) * b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 8), 1);
+        assert_eq!(ceil_div(0, 8), 0);
+    }
+
+    #[test]
+    fn factors_basic() {
+        assert_eq!(factors(1), vec![1]);
+        assert_eq!(factors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(factors(64), vec![1, 2, 4, 8, 16, 32, 64]);
+        assert_eq!(factors(97), vec![1, 97]); // prime
+        assert!(factors(0).is_empty());
+    }
+
+    #[test]
+    fn factors_sorted_and_divide() {
+        for n in 1..200 {
+            let fs = factors(n);
+            assert!(fs.windows(2).all(|w| w[0] < w[1]));
+            assert!(fs.iter().all(|f| n % f == 0));
+            assert_eq!(fs.first(), Some(&1));
+            assert_eq!(fs.last(), Some(&n));
+        }
+    }
+
+    #[test]
+    fn max_factor_leq_basic() {
+        assert_eq!(max_factor_leq(64, 16), 16);
+        assert_eq!(max_factor_leq(64, 15), 8);
+        assert_eq!(max_factor_leq(101, 50), 1); // prime > cap
+        assert_eq!(max_factor_leq(12, 100), 12);
+        assert_eq!(max_factor_leq(7, 7), 7);
+    }
+
+    #[test]
+    fn max_factor_is_factor_and_max() {
+        for n in 1..100usize {
+            for cap in 1..40usize {
+                let f = max_factor_leq(n, cap);
+                assert_eq!(n % f, 0);
+                assert!(f <= cap || f == n);
+                for g in (f + 1)..=cap.min(n) {
+                    assert_ne!(n % g, 0, "n={n} cap={cap}: missed {g}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gcd_lcm() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(gcd(7, 0), 7);
+    }
+}

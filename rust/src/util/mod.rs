@@ -1,0 +1,13 @@
+//! Self-contained substrates the toolflow depends on.
+//!
+//! The build environment is fully offline (DESIGN.md §8): only the
+//! `xla`/`anyhow`/`thiserror` crates are available, so the PRNG, JSON
+//! codec, CLI parser, statistics and table formatting the toolflow
+//! needs are implemented here from scratch.
+
+pub mod cli;
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,167 @@
+//! Statistics used by the model-validation experiments (§VI): MAPE and
+//! standard deviation over predicted/measured pairs (Table III, Fig 6),
+//! plus a tiny ordinary-least-squares solver for the LUT/FF regression
+//! models of §IV-B (no linear-algebra crate offline).
+
+/// Absolute percentage error: `|pred - meas| / meas * 100` (paper §VI).
+pub fn ape(predicted: f64, measured: f64) -> f64 {
+    if measured == 0.0 {
+        if predicted == 0.0 { 0.0 } else { 100.0 }
+    } else {
+        (predicted - measured).abs() / measured.abs() * 100.0
+    }
+}
+
+/// Mean absolute percentage error over pairs.
+pub fn mape(pairs: &[(f64, f64)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    pairs.iter().map(|&(p, m)| ape(p, m)).sum::<f64>() / pairs.len() as f64
+}
+
+/// Population standard deviation of the APEs (Table III's sigma).
+pub fn ape_std(pairs: &[(f64, f64)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    let apes: Vec<f64> = pairs.iter().map(|&(p, m)| ape(p, m)).collect();
+    std_dev(&apes)
+}
+
+/// Arithmetic mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Ordinary least squares: solve `min ||X beta - y||` via the normal
+/// equations with Gaussian elimination + partial pivoting and a small
+/// ridge term for rank safety. `x` is row-major, `n_features` columns.
+pub fn least_squares(x: &[Vec<f64>], y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    assert!(!x.is_empty());
+    let k = x[0].len();
+    // Normal equations: (X'X + eps I) beta = X'y.
+    let mut xtx = vec![vec![0.0f64; k]; k];
+    let mut xty = vec![0.0f64; k];
+    for (row, &yy) in x.iter().zip(y) {
+        assert_eq!(row.len(), k);
+        for i in 0..k {
+            xty[i] += row[i] * yy;
+            for j in 0..k {
+                xtx[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    let ridge = 1e-9 * (0..k).map(|i| xtx[i][i]).sum::<f64>().max(1.0);
+    for (i, row) in xtx.iter_mut().enumerate() {
+        row[i] += ridge;
+        let _ = i;
+    }
+    solve(xtx, xty)
+}
+
+/// Solve `a x = b` by Gaussian elimination with partial pivoting.
+pub fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // Pivot.
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        if d.abs() < 1e-300 {
+            continue; // singular column; leave zero
+        }
+        for r in (col + 1)..n {
+            let f = a[r][col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for c in (col + 1)..n {
+            acc -= a[col][c] * x[c];
+        }
+        x[col] = if a[col][col].abs() < 1e-300 {
+            0.0
+        } else {
+            acc / a[col][col]
+        };
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ape_basic() {
+        assert!((ape(110.0, 100.0) - 10.0).abs() < 1e-12);
+        assert!((ape(90.0, 100.0) - 10.0).abs() < 1e-12);
+        assert_eq!(ape(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn mape_of_exact_is_zero() {
+        assert_eq!(mape(&[(1.0, 1.0), (5.0, 5.0)]), 0.0);
+    }
+
+    #[test]
+    fn std_dev_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn least_squares_recovers_line() {
+        // y = 3 + 2a - b
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for a in 0..10 {
+            for b in 0..10 {
+                x.push(vec![1.0, a as f64, b as f64]);
+                y.push(3.0 + 2.0 * a as f64 - b as f64);
+            }
+        }
+        let beta = least_squares(&x, &y);
+        assert!((beta[0] - 3.0).abs() < 1e-6, "{beta:?}");
+        assert!((beta[1] - 2.0).abs() < 1e-6);
+        assert!((beta[2] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn solve_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let x = solve(a, vec![3.0, 4.0]);
+        assert_eq!(x, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn solve_with_pivoting() {
+        // Requires a row swap to avoid dividing by ~0.
+        let a = vec![vec![1e-12, 1.0], vec![1.0, 1.0]];
+        let x = solve(a, vec![1.0, 2.0]);
+        assert!((x[0] - 1.0).abs() < 1e-6, "{x:?}");
+        assert!((x[1] - 1.0).abs() < 1e-6);
+    }
+}

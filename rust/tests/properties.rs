@@ -1,0 +1,266 @@
+//! Property-based tests over the toolflow's core invariants.
+//!
+//! proptest is unavailable offline (DESIGN.md §3), so properties are
+//! checked over seeded randomized inputs from `util::rng` — hundreds
+//! of cases per property, deterministic for a given build.
+
+use harflow3d::device;
+use harflow3d::model::graph::{GraphBuilder, INPUT};
+use harflow3d::model::layer::{ActKind, LayerKind, PoolOp, Shape};
+use harflow3d::model::{onnx, zoo, ModelGraph};
+use harflow3d::optim::{transforms, OptCfg};
+use harflow3d::perf::{self, BwEnv};
+use harflow3d::sched::{self, SchedCfg};
+use harflow3d::sdf::{Design, Invocation, MapTarget, NodeKind};
+use harflow3d::util::json::Json;
+use harflow3d::util::math::{factors, max_factor_leq};
+use harflow3d::util::rng::Rng;
+
+/// Random small conv-net generator.
+fn random_model(rng: &mut Rng) -> ModelGraph {
+    let d = 2 + rng.below(7);
+    let h = 4 + rng.below(29);
+    let c0 = 1 + rng.below(8);
+    let mut b = GraphBuilder::new("rand", Shape::new(d, h, h, c0));
+    let mut x = INPUT;
+    let n_layers = 1 + rng.below(6);
+    for i in 0..n_layers {
+        match rng.below(4) {
+            0 => {
+                let f = *rng.choose(&[4usize, 8, 12, 16, 24]);
+                let k = *rng.choose(&[1usize, 3]);
+                let s = b.out_shape(x);
+                let kd = k.min(s.d);
+                x = b.conv(&format!("c{i}"), x, f, [kd, k, k], [1, 1, 1],
+                           [kd / 2, k / 2, k / 2], 1);
+            }
+            1 => {
+                let s = b.out_shape(x);
+                if s.d >= 2 && s.h >= 2 && s.w >= 2 {
+                    x = b.pool(&format!("p{i}"), x, PoolOp::Max,
+                               [2, 2, 2], [2, 2, 2], [0; 3]);
+                }
+            }
+            2 => x = b.act(&format!("a{i}"), x, ActKind::Relu),
+            _ => x = b.scale(&format!("s{i}"), x),
+        }
+    }
+    let g = b.gap("gap", x);
+    b.fc("fc", g, 10);
+    b.finish(10)
+}
+
+#[test]
+fn prop_random_models_validate_and_schedule() {
+    let mut rng = Rng::new(0xABCD);
+    for case in 0..200 {
+        let m = random_model(&mut rng);
+        assert_eq!(m.validate(), Ok(()), "case {case}");
+        let d = Design::initial(&m);
+        assert_eq!(d.validate(&m), Ok(()), "case {case}");
+        let phi = sched::build_schedule(&m, &d, &SchedCfg::default());
+        // Every layer appears; tiles within node limits.
+        for l in 0..m.layers.len() {
+            assert!(phi.iter().any(|inv| inv.layer == l),
+                    "case {case}: layer {l} unscheduled");
+        }
+    }
+}
+
+#[test]
+fn prop_onnx_roundtrip_preserves_everything() {
+    let mut rng = Rng::new(0x1234);
+    for case in 0..100 {
+        let m = random_model(&mut rng);
+        let j = onnx::to_json(&m);
+        let m2 = onnx::from_json(&j)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(m.num_layers(), m2.num_layers());
+        assert_eq!(m.total_macs(), m2.total_macs());
+        assert_eq!(m.total_params(), m2.total_params());
+        // Idempotent serialisation.
+        assert_eq!(j.to_string(), onnx::to_json(&m2).to_string());
+        // And parseable by the JSON codec after printing.
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}
+
+#[test]
+fn prop_tile_schedule_covers_exact_volume() {
+    // The schedule's input tiles of each layer must cover exactly the
+    // layer's input volume (no element processed twice or dropped) in
+    // runtime-parameterized mode.
+    let mut rng = Rng::new(0x77);
+    let cfg = SchedCfg::default();
+    for case in 0..150 {
+        let m = random_model(&mut rng);
+        let mut d = Design::initial(&m);
+        // Random node shrinkage to force tiling.
+        for node in &mut d.nodes {
+            if rng.below(2) == 0 && node.max_in.c > 1 {
+                node.max_in.c = *rng.choose(&factors(node.max_in.c));
+            }
+            if rng.below(2) == 0 {
+                node.max_in.w = 1 + rng.below(node.max_in.w);
+            }
+            node.coarse_in = max_factor_leq(node.max_in.c,
+                                            node.coarse_in);
+            node.coarse_out = match node.kind {
+                NodeKind::Conv | NodeKind::Fc => max_factor_leq(
+                    node.max_filters, node.coarse_out),
+                _ => node.coarse_in,
+            };
+        }
+        if d.validate(&m).is_err() {
+            continue;
+        }
+        for (l, layer) in m.layers.iter().enumerate() {
+            let in_elems: u64 = match layer.kind {
+                LayerKind::Fc { .. } => layer.in_shape.elems() as u64,
+                _ => layer.in_shape.elems() as u64,
+            };
+            let covered: u64 = sched::grouped_invocations(&m, &d, l, &cfg)
+                .iter()
+                .map(|(inv, mult)| inv.tile_in.elems() as u64 * mult)
+                .sum();
+            assert_eq!(covered, in_elems,
+                       "case {case} layer {l} ({})", layer.name);
+        }
+    }
+}
+
+#[test]
+fn prop_latency_monotone_in_parallelism() {
+    // More coarse/fine parallelism never increases compute latency.
+    let mut rng = Rng::new(0x99);
+    for _ in 0..300 {
+        let c = *rng.choose(&[4usize, 8, 16, 32, 64]);
+        let f = *rng.choose(&[8usize, 16, 32, 64]);
+        let tile_d = 2 + rng.below(4);
+        let mk = |ci: usize, co: usize, fine: usize| Invocation {
+            layer: 0,
+            node: 0,
+            tile_in: Shape::new(tile_d, 8, 8, c),
+            tile_out: Shape::new(2, 8, 8, f),
+            kernel: [3; 3],
+            groups: 1,
+            coarse_in: ci,
+            coarse_out: co,
+            fine,
+            psum: false,
+            n_inputs: 1,
+        };
+        let fs = factors(c);
+        let i = rng.below(fs.len());
+        let j = i + rng.below(fs.len() - i);
+        let slow = perf::compute_latency(NodeKind::Conv, &mk(fs[i], 1, 1));
+        let fast = perf::compute_latency(NodeKind::Conv, &mk(fs[j], 1, 1));
+        assert!(fast <= slow + 1e-9, "ci {} vs {}", fs[i], fs[j]);
+    }
+}
+
+#[test]
+fn prop_roofline_never_below_compute() {
+    // Eq (1): bandwidth-capped latency >= pure compute latency.
+    let mut rng = Rng::new(0x55);
+    for _ in 0..300 {
+        let c = *rng.choose(&[2usize, 4, 8, 16]);
+        let f = *rng.choose(&[4usize, 8, 16]);
+        let inv = Invocation {
+            layer: 0,
+            node: 0,
+            tile_in: Shape::new(1 + rng.below(6), 1 + rng.below(12),
+                                1 + rng.below(12), c),
+            tile_out: Shape::new(1 + rng.below(6), 1 + rng.below(12),
+                                 1 + rng.below(12), f),
+            kernel: [1 + 2 * rng.below(2), 3, 3],
+            groups: 1,
+            coarse_in: *rng.choose(&factors(c)),
+            coarse_out: *rng.choose(&factors(f)),
+            fine: 1 + rng.below(3),
+            psum: rng.below(2) == 1,
+            n_inputs: 1,
+        };
+        let env = BwEnv {
+            bw_in: 1.0 + rng.uniform() * 50.0,
+            bw_out: 1.0 + rng.uniform() * 50.0,
+        };
+        for kind in [NodeKind::Conv, NodeKind::Pool, NodeKind::Act] {
+            let total = perf::latency(kind, &inv, &env);
+            let compute = perf::compute_latency(kind, &inv);
+            assert!(total >= compute * 0.999,
+                    "{kind:?}: roofline {total} < compute {compute}");
+        }
+    }
+}
+
+#[test]
+fn prop_moves_never_break_mapping_partition() {
+    // Any sequence of random transforms keeps E a partition of M and
+    // keeps the design valid after compaction.
+    let mut rng = Rng::new(0xF00D);
+    let cfg = OptCfg::default();
+    for case in 0..30 {
+        let m = if case % 2 == 0 { zoo::c3d_tiny() } else {
+            random_model(&mut rng)
+        };
+        let mut d = Design::initial(&m);
+        for _ in 0..200 {
+            let mut cand = d.clone();
+            if transforms::random_move(&m, &mut cand, &mut rng, &cfg)
+                .is_some()
+                && cand.validate(&m).is_ok()
+            {
+                d = cand;
+            }
+        }
+        d.compact();
+        assert_eq!(d.validate(&m), Ok(()), "case {case}");
+        // Partition: every layer exactly one target.
+        let mut count = 0;
+        for n in 0..d.nodes.len() {
+            count += d.layers_of(n).len();
+        }
+        let fused = d
+            .mapping
+            .iter()
+            .filter(|t| matches!(t, MapTarget::Fused))
+            .count();
+        assert_eq!(count + fused, m.num_layers(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_padded_execution_never_faster() {
+    // For identical designs, the non-runtime (padded) schedule costs
+    // at least as much as the runtime-parameterized one.
+    let mut rng = Rng::new(0xAA);
+    let dev = device::by_name("zcu102").unwrap();
+    let env = BwEnv::of_device(&dev);
+    for case in 0..60 {
+        let m = random_model(&mut rng);
+        let d = Design::initial(&m);
+        let rt = sched::total_latency_cycles(
+            &m, &d, &env, &SchedCfg { runtime_params: true });
+        let padded = sched::total_latency_cycles(
+            &m, &d, &env, &SchedCfg { runtime_params: false });
+        assert!(rt <= padded * 1.0001,
+                "case {case}: rt {rt} > padded {padded}");
+    }
+}
+
+#[test]
+fn prop_factors_and_max_factor_consistent() {
+    let mut rng = Rng::new(0x31);
+    for _ in 0..2000 {
+        let n = 1 + rng.below(4096);
+        let cap = 1 + rng.below(256);
+        let f = max_factor_leq(n, cap);
+        assert_eq!(n % f, 0);
+        assert!(f <= cap.max(n));
+        let fs = factors(n);
+        assert!(fs.contains(&f));
+        // No larger factor under the cap.
+        assert!(!fs.iter().any(|&g| g > f && g <= cap));
+    }
+}

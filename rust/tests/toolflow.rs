@@ -1,0 +1,187 @@
+//! Integration tests: the whole toolflow through the public API —
+//! parse → optimise → schedule → simulate → report — plus the §V-B
+//! constraint suite on optimiser outputs.
+
+use harflow3d::device;
+use harflow3d::model::{onnx, zoo, LayerKind};
+use harflow3d::optim::{self, OptCfg};
+use harflow3d::perf::BwEnv;
+use harflow3d::report::{self, ReportCfg};
+use harflow3d::resource::ResourceModel;
+use harflow3d::sched::{self, SchedCfg};
+use harflow3d::sdf::{MapTarget, NodeKind};
+use harflow3d::sim::{self, SimCfg};
+use harflow3d::util::json::Json;
+
+fn rm() -> ResourceModel {
+    ResourceModel::fit(2, 150)
+}
+
+fn fast_cfg() -> ReportCfg {
+    ReportCfg { seed: 3, n_seeds: 2, fast: true }
+}
+
+#[test]
+fn full_pipeline_c3d() {
+    let m = zoo::c3d();
+    let dev = device::by_name("zcu102").unwrap();
+    let rm = rm();
+    let r = optim::optimize_multi(&m, &dev, &rm, OptCfg::fast(1), 2)
+        .unwrap();
+
+    // Constraint 1+2: resources within the device.
+    assert!(r.resources.fits(&dev.avail));
+    // Constraint 3: stream counts divide node channel capacities.
+    for node in &r.design.nodes {
+        assert_eq!(node.max_in.c % node.coarse_in, 0);
+        assert_eq!(node.max_filters % node.coarse_out, 0);
+    }
+    // Constraint 4: every scheduled Γ within its node's maxima.
+    let scfg = SchedCfg::default();
+    for inv in sched::build_schedule(&m, &r.design, &scfg) {
+        let node = &r.design.nodes[inv.node];
+        assert!(inv.tile_in.d <= node.max_in.d);
+        assert!(inv.tile_in.h <= node.max_in.h);
+        assert!(inv.tile_in.w <= node.max_in.w);
+        assert!(inv.tile_in.c <= node.max_in.c);
+        for d in 0..3 {
+            assert!(inv.kernel[d] <= node.max_kernel[d]);
+        }
+    }
+    // Simulation agrees with the analytic model to within the DMA
+    // overheads (<25%).
+    let srep = sim::simulate(&m, &r.design, &dev, &scfg,
+                             &SimCfg::default());
+    let env = BwEnv::of_device(&dev);
+    let pred = sched::total_latency_cycles(&m, &r.design, &env, &scfg);
+    assert!(srep.cycles >= pred);
+    assert!(srep.cycles < pred * 1.25,
+            "sim {} vs pred {pred}", srep.cycles);
+}
+
+#[test]
+fn onnx_file_round_trip_optimizes() {
+    let m = zoo::c3d_tiny();
+    let text = onnx::to_json(&m).to_string();
+    let parsed = onnx::from_json(&Json::parse(&text).unwrap()).unwrap();
+    let dev = device::by_name("zc706").unwrap();
+    let rm = rm();
+    let a = optim::optimize(&m, &dev, &rm, OptCfg::fast(9)).unwrap();
+    let b = optim::optimize(&parsed, &dev, &rm, OptCfg::fast(9)).unwrap();
+    // Same graph, same seed -> identical DSE outcome.
+    assert_eq!(a.latency_cycles, b.latency_cycles);
+}
+
+#[test]
+fn every_board_can_host_c3d_tiny() {
+    let m = zoo::c3d_tiny();
+    let rm = rm();
+    for dev in device::all_devices() {
+        let r = optim::optimize(&m, &dev, &rm, OptCfg::fast(5))
+            .unwrap_or_else(|e| panic!("{}: {e}", dev.name));
+        assert!(r.latency_ms > 0.0);
+        assert!(r.resources.fits(&dev.avail), "{}", dev.name);
+    }
+}
+
+#[test]
+fn fused_activations_have_no_schedule_entries() {
+    let m = zoo::c3d();
+    let dev = device::by_name("zcu102").unwrap();
+    let rm = rm();
+    let r = optim::optimize(&m, &dev, &rm, OptCfg::fast(2)).unwrap();
+    let fused: Vec<usize> = r
+        .design
+        .mapping
+        .iter()
+        .enumerate()
+        .filter_map(|(l, t)| (*t == MapTarget::Fused).then_some(l))
+        .collect();
+    assert!(!fused.is_empty(), "fusion should fuse C3D's ReLUs");
+    let phi = sched::build_schedule(&m, &r.design, &SchedCfg::default());
+    for l in fused {
+        assert!(phi.iter().all(|inv| inv.layer != l));
+        assert!(matches!(m.layers[l].kind,
+                         LayerKind::Activation(_) | LayerKind::Scale));
+    }
+}
+
+#[test]
+fn report_table3_matches_paper_shape() {
+    let s = report::table3_stats(&fast_cfg());
+    // DSP/BRAM analytic models are exact (paper: 0.0 / 0.35).
+    assert!(s.dsp.0 < 0.01, "DSP MAPE {}", s.dsp.0);
+    assert!(s.bram.0 < 1.0, "BRAM MAPE {}", s.bram.0);
+    // LUT/FF regressions land in the paper's error regime (~7-9%).
+    assert!(s.lut.0 > 1.0 && s.lut.0 < 20.0, "LUT MAPE {}", s.lut.0);
+    assert!(s.ff.0 > 1.0 && s.ff.0 < 20.0, "FF MAPE {}", s.ff.0);
+}
+
+#[test]
+fn report_table4_renders_all_models() {
+    let out = report::table4(&fast_cfg());
+    for name in zoo::EVALUATED {
+        assert!(out.contains(name), "missing {name} in:\n{out}");
+    }
+}
+
+#[test]
+fn report_fig6_error_small() {
+    let data = report::fig6_data(&fast_cfg());
+    assert_eq!(data.len(), 8, "C3D has 8 conv layers");
+    let pairs: Vec<(f64, f64)> =
+        data.iter().map(|(_, p, m)| (*p, *m)).collect();
+    let mape = harflow3d::util::stats::mape(&pairs);
+    // Paper: 6.64% MAPE. Allow CI slack on the fast configs.
+    assert!(mape < 20.0, "Fig 6 MAPE {mape:.1}%");
+}
+
+#[test]
+fn ablation_ordering_matches_paper() {
+    // Direction of every §VII-A1 step: each optimisation must not
+    // hurt, and runtime reconfiguration must dominate.
+    let a = report::ablation_data(&ReportCfg {
+        seed: 5,
+        n_seeds: 2,
+        fast: true,
+    });
+    assert!(a.combine_ms <= a.baseline_ms * 1.05,
+            "combine {} vs baseline {}", a.combine_ms, a.baseline_ms);
+    assert!(a.fusion_ms <= a.combine_ms * 1.05,
+            "fusion {} vs combine {}", a.fusion_ms, a.combine_ms);
+    assert!(a.runtime_ms < a.fusion_ms / 2.0,
+            "runtime {} vs fusion {}", a.runtime_ms, a.fusion_ms);
+    let total = a.baseline_ms / a.runtime_ms;
+    assert!(total > 3.0, "total ablation speedup only {total:.2}x");
+}
+
+#[test]
+fn x3d_least_dsp_efficient_c3d_most() {
+    // Table V's qualitative shape: C3D has the highest Op/DSP/cycle of
+    // the five models, X3D-M the lowest (depthwise starves the array).
+    let rm = rm();
+    let dev = device::by_name("zcu102").unwrap();
+    let eff = |name: &str| {
+        let m = zoo::by_name(name).unwrap();
+        let r = optim::optimize_multi(&m, &dev, &rm, OptCfg::fast(7), 2)
+            .unwrap();
+        let gops = m.total_macs() as f64 / 1e9 / (r.latency_ms / 1e3);
+        gops * 1e9 / (r.resources.dsp * dev.clock_mhz * 1e6)
+    };
+    let c3d = eff("c3d");
+    let x3d = eff("x3d_m");
+    assert!(c3d > 2.0 * x3d, "c3d {c3d:.3} vs x3d {x3d:.3}");
+}
+
+#[test]
+fn node_kinds_partition_layers() {
+    // E maps every layer to a node of its own type; schedule entries
+    // agree with the node kind.
+    let m = zoo::x3d_m();
+    let d = harflow3d::sdf::Design::initial(&m);
+    for (l, t) in d.mapping.iter().enumerate() {
+        let MapTarget::Node(n) = t else { continue };
+        assert_eq!(d.nodes[*n].kind,
+                   NodeKind::of_layer(&m.layers[l].kind));
+    }
+}
