@@ -2,6 +2,11 @@
 //! DESIGN.md §3). Each bench target uses `harness = false` and calls
 //! `bench` / `bench_n` here: warmup, N timed iterations, min/mean
 //! reported. `--quick` (or BENCH_QUICK=1) trims iterations for CI.
+//!
+//! `bench_rec` additionally returns a [`BenchResult`]; `write_summary`
+//! serialises a slice of them as one JSON line per bench (see
+//! benches/README.md), so the perf trajectory is machine-readable
+//! across PRs (BENCH_hotpath.json).
 
 use std::time::Instant;
 
@@ -10,10 +15,55 @@ pub fn quick() -> bool {
         || std::env::var("BENCH_QUICK").is_ok()
 }
 
+/// One bench measurement, exportable as a single JSON line.
 #[allow(dead_code)]
-/// Time `f` over `iters` iterations (after one warmup) and print a
-/// criterion-ish line. Returns mean seconds.
-pub fn bench_n<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    /// DSE throughput (SA benches only): candidate states evaluated
+    /// per second of annealing.
+    pub states_per_sec: Option<f64>,
+}
+
+#[allow(dead_code)]
+impl BenchResult {
+    /// `{"name":…,"iters":…,"ns_per_iter":…,"ns_per_iter_min":…}` with
+    /// an optional `"states_per_sec"` — names are harness-controlled
+    /// and contain no characters needing JSON escaping.
+    pub fn json_line(&self) -> String {
+        let mut s = format!(
+            "{{\"name\":\"{}\",\"iters\":{},\"ns_per_iter\":{:.1},\
+             \"ns_per_iter_min\":{:.1}",
+            self.name, self.iters, self.mean_s * 1e9, self.min_s * 1e9,
+        );
+        if let Some(sps) = self.states_per_sec {
+            s.push_str(&format!(",\"states_per_sec\":{sps:.1}"));
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// Write one JSON line per bench (JSON-lines, stable key order).
+#[allow(dead_code)]
+pub fn write_summary(path: &str, results: &[BenchResult]) {
+    let body: String = results
+        .iter()
+        .map(|r| r.json_line() + "\n")
+        .collect();
+    match std::fs::write(path, &body) {
+        Ok(()) => println!("wrote {path} ({} benches)", results.len()),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+#[allow(dead_code)]
+/// Time `f` over `iters` iterations (after one warmup), print a
+/// criterion-ish line, and return the measurement.
+pub fn bench_rec<F: FnMut()>(name: &str, iters: usize, mut f: F)
+    -> BenchResult {
     f(); // warmup
     let mut times = Vec::with_capacity(iters);
     for _ in 0..iters {
@@ -25,7 +75,20 @@ pub fn bench_n<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
     println!("bench {name:<40} iters {iters:>3}  min {:>10.3} ms  \
               mean {:>10.3} ms", min * 1e3, mean * 1e3);
-    mean
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        min_s: min,
+        states_per_sec: None,
+    }
+}
+
+#[allow(dead_code)]
+/// Time `f` over `iters` iterations (after one warmup) and print a
+/// criterion-ish line. Returns mean seconds.
+pub fn bench_n<F: FnMut()>(name: &str, iters: usize, f: F) -> f64 {
+    bench_rec(name, iters, f).mean_s
 }
 
 #[allow(dead_code)]

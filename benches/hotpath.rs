@@ -2,7 +2,11 @@
 //! EXPERIMENTS.md): SA move throughput, schedule evaluation, the
 //! cycle simulator, and the JSON substrate.
 //!
-//! `cargo bench --bench hotpath`
+//! `cargo bench --bench hotpath` — prints one human line and one JSON
+//! line per bench, and writes the set to `BENCH_hotpath.json` (one
+//! JSON object per line) so the perf trajectory is comparable across
+//! PRs. For the SA bench the summary also carries `states_per_sec`,
+//! the DSE throughput that gates scaling to X3D-M-sized models.
 
 mod common;
 
@@ -19,6 +23,7 @@ use harflow3d::util::json::Json;
 fn main() {
     let quick = common::quick();
     let k = if quick { 1 } else { 5 };
+    let mut results = Vec::new();
 
     // Latency evaluation of a full design (the SA inner loop's cost).
     let m = zoo::x3d_m();
@@ -26,36 +31,49 @@ fn main() {
     let env = BwEnv::of_device(&dev);
     let d = Design::initial(&m);
     let scfg = SchedCfg::default();
-    common::bench_n("sched/total_latency x3d_m (396 layers)", 20 * k,
-                    || {
-        std::hint::black_box(sched::total_latency_cycles(&m, &d, &env,
-                                                         &scfg));
-    });
+    results.push(common::bench_rec(
+        "sched/total_latency x3d_m (396 layers)", 20 * k, || {
+            std::hint::black_box(sched::total_latency_cycles(&m, &d, &env,
+                                                             &scfg));
+        }));
 
     // Full SA run (fast preset) — states/second is the DSE throughput.
+    // The run is deterministic for the seed, so the iteration count
+    // captured during the timed runs is the per-run state count.
     let rm = ResourceModel::default_fit();
     let c3d = zoo::c3d();
-    common::bench_n("optim/SA c3d fast preset", 3 * k, || {
-        std::hint::black_box(
-            optim::optimize(&c3d, &dev, &rm, OptCfg::fast(1)).unwrap());
+    let sa_states = std::cell::Cell::new(0usize);
+    let mut sa = common::bench_rec("optim/SA c3d fast preset", 3 * k, || {
+        let r = optim::optimize(&c3d, &dev, &rm, OptCfg::fast(1)).unwrap();
+        sa_states.set(r.iterations);
+        std::hint::black_box(&r);
     });
+    sa.states_per_sec = Some(sa_states.get() as f64 / sa.mean_s);
+    results.push(sa);
 
     // Cycle-approximate simulation of a schedule.
     let dd = Design::initial(&c3d);
-    common::bench_n("sim/simulate c3d initial design", 10 * k, || {
-        std::hint::black_box(sim::simulate(&c3d, &dd, &dev, &scfg,
-                                           &SimCfg::default()));
-    });
+    results.push(common::bench_rec(
+        "sim/simulate c3d initial design", 10 * k, || {
+            std::hint::black_box(sim::simulate(&c3d, &dd, &dev, &scfg,
+                                               &SimCfg::default()));
+        }));
 
     // Resource-model fit (startup cost) and evaluation.
-    common::bench_n("resource/fit 833 modules x 6 types", 3 * k, || {
-        std::hint::black_box(ResourceModel::default_fit());
-    });
+    results.push(common::bench_rec(
+        "resource/fit 833 modules x 6 types", 3 * k, || {
+            std::hint::black_box(ResourceModel::default_fit());
+        }));
 
     // ONNX-JSON parse of the largest model.
     let text = onnx::to_json(&m).to_string();
-    common::bench_n("onnx/parse x3d_m json", 10 * k, || {
+    results.push(common::bench_rec("onnx/parse x3d_m json", 10 * k, || {
         let j = Json::parse(&text).unwrap();
         std::hint::black_box(onnx::from_json(&j).unwrap());
-    });
+    }));
+
+    for r in &results {
+        println!("{}", r.json_line());
+    }
+    common::write_summary("BENCH_hotpath.json", &results);
 }

@@ -6,9 +6,18 @@
 //! Activation fusion (§VII-A1) is applied at initialisation when
 //! enabled. Every candidate is validated against the §V-B constraints
 //! (resources within the device, folding divisibility, schedulable
-//! parameters) before evaluation; latency evaluation is *incremental*:
-//! a move touches one or two nodes, so only the layers mapped to those
-//! nodes are re-scheduled.
+//! parameters) before evaluation.
+//!
+//! The engine is *zero-clone and fully incremental*: moves mutate one
+//! working design in place and are rolled back from an [`UndoLog`] on
+//! rejection; per-node resources are cached and delta-repriced
+//! ([`NodeResCache`]); the dirty layer set comes from a node→layers
+//! reverse index ([`MappingIndex`]); and per-layer latencies are
+//! memoised on the (layer, node parameters) pair ([`LatencyMemo`]).
+//! Every cached quantity is bit-exact against from-scratch
+//! recomputation, so results are identical to the naive engine — just
+//! without the O(design) clone + full resource sweep per candidate
+//! that used to dominate DSE states/second.
 
 pub mod transforms;
 
@@ -16,9 +25,9 @@ use crate::device::{Device, Resources};
 use crate::model::layer::LayerKind;
 use crate::model::ModelGraph;
 use crate::perf::BwEnv;
-use crate::resource::ResourceModel;
-use crate::sched::{self, SchedCfg};
-use crate::sdf::{Design, MapTarget};
+use crate::resource::{NodeResCache, ResourceModel};
+use crate::sched::{self, LatencyMemo, SchedCfg};
+use crate::sdf::{Design, MapTarget, UndoLog};
 use crate::util::rng::Rng;
 
 /// Optimiser configuration — the paper's SA hyper-parameters
@@ -86,35 +95,219 @@ pub struct OptResult {
 }
 
 /// Incremental latency state: per-layer latencies + total.
-struct LatencyState {
-    per_layer: Vec<f64>,
-    total: f64,
+#[derive(Debug, Clone)]
+pub struct LatencyState {
+    pub per_layer: Vec<f64>,
+    pub total: f64,
 }
 
 impl LatencyState {
-    fn full(model: &ModelGraph, design: &Design, env: &BwEnv,
-            cfg: &SchedCfg) -> LatencyState {
+    pub fn full(model: &ModelGraph, design: &Design, env: &BwEnv,
+                cfg: &SchedCfg) -> LatencyState {
         let per_layer: Vec<f64> = (0..model.layers.len())
             .map(|l| sched::layer_latency(model, design, l, env, cfg))
             .collect();
         let total = per_layer.iter().sum();
         LatencyState { per_layer, total }
     }
+}
 
-    /// Recompute only the layers mapped to `nodes`.
-    fn update(&mut self, model: &ModelGraph, design: &Design, env: &BwEnv,
-              cfg: &SchedCfg, nodes: &[usize]) {
+/// Node → mapped-layers reverse index (the inverse mapping `E(n)` for
+/// every node at once). The old `LatencyState::update` found a move's
+/// dirty layers by scanning the whole mapping with `nodes.contains(i)`
+/// — O(L·T) per candidate, ruinous at X3D-M scale (396 layers); the
+/// index makes it O(|dirty|). Updated incrementally from each move's
+/// [`UndoLog`] mapping edits, with an exact inverse for rejection.
+#[derive(Debug, Clone)]
+pub struct MappingIndex {
+    layers: Vec<Vec<usize>>,
+}
+
+impl MappingIndex {
+    pub fn new(design: &Design) -> MappingIndex {
+        let mut layers = vec![Vec::new(); design.nodes.len()];
         for (l, m) in design.mapping.iter().enumerate() {
-            let dirty = match m {
-                MapTarget::Node(i) => nodes.contains(i),
-                MapTarget::Fused => false,
-            };
-            if dirty {
-                let new = sched::layer_latency(model, design, l, env, cfg);
-                self.total += new - self.per_layer[l];
-                self.per_layer[l] = new;
+            if let MapTarget::Node(i) = m {
+                layers[*i].push(l);
             }
         }
+        MappingIndex { layers }
+    }
+
+    /// Layers currently mapped to node `n` (unsorted).
+    pub fn layers_of(&self, n: usize) -> &[usize] {
+        &self.layers[n]
+    }
+
+    pub fn is_used(&self, n: usize) -> bool {
+        n < self.layers.len() && !self.layers[n].is_empty()
+    }
+
+    /// Fold a move's mapping edits in: each edited layer is moved from
+    /// its pre-move node list to its current (post-move) one. `design`
+    /// must be in the post-move state.
+    pub fn apply(&mut self, design: &Design,
+                 edits: &[(usize, MapTarget)]) {
+        if design.nodes.len() > self.layers.len() {
+            self.layers.resize(design.nodes.len(), Vec::new());
+        }
+        for &(l, old) in edits {
+            let new = design.mapping[l];
+            if old == new {
+                continue;
+            }
+            if let MapTarget::Node(i) = old {
+                let v = &mut self.layers[i];
+                if let Some(p) = v.iter().position(|&x| x == l) {
+                    v.swap_remove(p);
+                }
+            }
+            if let MapTarget::Node(i) = new {
+                self.layers[i].push(l);
+            }
+        }
+    }
+
+    /// Exact inverse of [`MappingIndex::apply`]. Must run while
+    /// `design` is still in the post-move state (before
+    /// `UndoLog::undo`), because the current mapping tells us where
+    /// each edited layer has to be removed from.
+    pub fn rollback(&mut self, design: &Design,
+                    edits: &[(usize, MapTarget)], old_nodes_len: usize) {
+        for &(l, old) in edits {
+            let new = design.mapping[l];
+            if old == new {
+                continue;
+            }
+            if let MapTarget::Node(i) = new {
+                let v = &mut self.layers[i];
+                if let Some(p) = v.iter().position(|&x| x == l) {
+                    v.swap_remove(p);
+                }
+            }
+            if let MapTarget::Node(i) = old {
+                self.layers[i].push(l);
+            }
+        }
+        self.layers.truncate(old_nodes_len);
+    }
+}
+
+/// The zero-clone candidate evaluator behind `Optimizer::run`.
+///
+/// One working `Design` is mutated in place by
+/// `transforms::random_move_logged`; this struct prices the mutated
+/// state *incrementally* — per-node resources through a
+/// [`NodeResCache`] delta reprice, per-layer latencies through the
+/// [`MappingIndex`] dirty set and the [`LatencyMemo`] — and can
+/// restore every piece of derived state exactly when the move is
+/// rejected. All cached quantities are bit-identical to from-scratch
+/// recomputation (the equivalence property test in
+/// `rust/tests/incremental.rs` drives exactly that invariant), so the
+/// accepted-move sequence matches the historical clone-per-candidate
+/// engine for any seed.
+pub struct IncrementalEval {
+    pub lat: LatencyState,
+    pub index: MappingIndex,
+    pub cache: NodeResCache,
+    pub memo: LatencyMemo,
+    /// Scratch: dirty layer set of the current move (sorted ascending
+    /// so the f64 accumulation order matches a full-mapping scan).
+    dirty: Vec<usize>,
+    /// Scratch: (layer, pre-move latency) pairs for rejection.
+    lat_saved: Vec<(usize, f64)>,
+    lat_total_saved: f64,
+    lat_dirty: bool,
+}
+
+impl IncrementalEval {
+    pub fn new(model: &ModelGraph, design: &Design, rm: &ResourceModel,
+               env: &BwEnv, scfg: &SchedCfg) -> IncrementalEval {
+        let mut memo = LatencyMemo::new();
+        let per_layer: Vec<f64> = (0..model.layers.len())
+            .map(|l| memo.layer_latency(model, design, l, env, scfg))
+            .collect();
+        let total = per_layer.iter().sum();
+        IncrementalEval {
+            lat: LatencyState { per_layer, total },
+            index: MappingIndex::new(design),
+            cache: NodeResCache::new(rm, design),
+            memo,
+            dirty: Vec::new(),
+            lat_saved: Vec::new(),
+            lat_total_saved: 0.0,
+            lat_dirty: false,
+        }
+    }
+
+    /// Total `R_total` of the current state from the cache.
+    pub fn resources(&self) -> Resources {
+        let index = &self.index;
+        self.cache.total(|i| index.is_used(i))
+    }
+
+    /// Step 1 after a logged move: fold the mapping edits into the
+    /// reverse index, delta-reprice the touched nodes, and return the
+    /// candidate's `R_total` (for the §V-B resource constraint).
+    pub fn price_move(&mut self, design: &Design, rm: &ResourceModel,
+                      log: &UndoLog, touched: &[usize]) -> Resources {
+        self.index.apply(design, log.mapping_edits());
+        self.cache.reprice(rm, design, touched);
+        self.lat_dirty = false;
+        self.resources()
+    }
+
+    /// Step 2 (feasible candidates only): re-evaluate the layers
+    /// mapped to the touched nodes and return the candidate's total
+    /// latency. The previous per-layer values are kept for `reject`.
+    pub fn eval_latency(&mut self, model: &ModelGraph, design: &Design,
+                        env: &BwEnv, scfg: &SchedCfg,
+                        touched: &[usize]) -> f64 {
+        self.dirty.clear();
+        for &n in touched {
+            self.dirty.extend_from_slice(self.index.layers_of(n));
+        }
+        self.dirty.sort_unstable();
+        // A duplicate node index in `touched` would list its layers
+        // twice; the second pass would snapshot already-updated values
+        // and break `reject` (same contract as NodeResCache::reprice).
+        self.dirty.dedup();
+        self.lat_total_saved = self.lat.total;
+        self.lat_saved.clear();
+        for i in 0..self.dirty.len() {
+            let l = self.dirty[i];
+            let new = self.memo.layer_latency(model, design, l, env, scfg);
+            self.lat_saved.push((l, self.lat.per_layer[l]));
+            self.lat.total += new - self.lat.per_layer[l];
+            self.lat.per_layer[l] = new;
+        }
+        self.lat_dirty = true;
+        self.lat.total
+    }
+
+    /// Accept the current candidate: speculative cache entries become
+    /// permanent; the design stays as mutated.
+    pub fn commit(&mut self) {
+        self.cache.commit();
+        self.lat_dirty = false;
+    }
+
+    /// Reject the current candidate: restores latency state, resource
+    /// cache, and reverse index, then rolls the design itself back via
+    /// the undo log. Only valid after `price_move` (with or without a
+    /// subsequent `eval_latency`).
+    pub fn reject(&mut self, design: &mut Design, log: &mut UndoLog) {
+        if self.lat_dirty {
+            for &(l, old) in &self.lat_saved {
+                self.lat.per_layer[l] = old;
+            }
+            self.lat.total = self.lat_total_saved;
+            self.lat_dirty = false;
+        }
+        self.cache.rollback();
+        self.index.rollback(design, log.mapping_edits(),
+                            log.old_nodes_len());
+        log.undo(design);
     }
 }
 
@@ -193,15 +386,23 @@ impl<'a> Optimizer<'a> {
         Ok(design)
     }
 
-    /// Run Algorithm 2.
+    /// Run Algorithm 2 — zero-clone: one working design is mutated in
+    /// place per proposed move and rolled back from the [`UndoLog`] on
+    /// rejection; `Design::clone` only happens when a new best is
+    /// found. Candidate costs come from the [`IncrementalEval`]
+    /// caches, which are exact, so the accepted-move sequence for a
+    /// given seed is identical to the clone-per-candidate engine this
+    /// replaces.
     pub fn run(&self) -> Result<OptResult, String> {
         let env = BwEnv::of_device(self.device);
         let scfg = self.sched_cfg();
         let mut rng = Rng::new(self.cfg.seed);
         let mut design = self.warm_start()?;
-        let mut lat = LatencyState::full(self.model, &design, &env, &scfg);
+        let mut ev = IncrementalEval::new(self.model, &design, self.rm,
+                                          &env, &scfg);
+        let mut log = UndoLog::new();
         let mut best = design.clone();
-        let mut best_lat = lat.total;
+        let mut best_lat = ev.lat.total;
         let mut history = Vec::new();
         let mut accepted = Vec::new();
         let mut tau = self.cfg.tau_start;
@@ -213,29 +414,31 @@ impl<'a> Optimizer<'a> {
         while tau > self.cfg.tau_min {
             for _ in 0..self.cfg.iters_per_temp {
                 iter += 1;
-                let prev_total = lat.total;
-                let mut cand = design.clone();
-                let touched = transforms::random_move(
-                    self.model, &mut cand, &mut rng, &self.cfg);
-                let Some(touched) = touched else { continue };
+                let prev_total = ev.lat.total;
+                log.begin(&design);
+                let touched = transforms::random_move_logged(
+                    self.model, &mut design, &mut rng, &self.cfg,
+                    &mut log);
+                let Some(touched) = touched else {
+                    log.undo(&mut design); // no-op move: nothing logged
+                    continue;
+                };
                 // Constraint check (§V-B): structure + resources. Only
                 // the touched nodes can have changed (the full
                 // `validate` runs in debug builds and on the result).
-                if cand.validate_nodes(self.model, &touched).is_err() {
+                if design.validate_nodes(self.model, &touched).is_err() {
+                    log.undo(&mut design);
                     continue;
                 }
-                debug_assert_eq!(cand.validate(self.model), Ok(()));
-                let cand_res = self.rm.design_resources(&cand);
+                debug_assert_eq!(design.validate(self.model), Ok(()));
+                let cand_res =
+                    ev.price_move(&design, self.rm, &log, &touched);
                 if !cand_res.fits(&self.device.avail) {
+                    ev.reject(&mut design, &mut log);
                     continue;
                 }
-                let mut cand_lat = LatencyState {
-                    per_layer: lat.per_layer.clone(),
-                    total: lat.total,
-                };
-                cand_lat.update(self.model, &cand, &env, &scfg, &touched);
-                // Fused layers may have been (un)changed by the move.
-                let new_total = cand_lat.total;
+                let new_total = ev.eval_latency(self.model, &design,
+                                                &env, &scfg, &touched);
 
                 let accept = if new_total < prev_total {
                     true
@@ -247,16 +450,17 @@ impl<'a> Optimizer<'a> {
                     rng.uniform() < (-delta / tau.max(1e-12)).exp()
                 };
                 if accept {
-                    design = cand;
-                    lat = cand_lat;
+                    ev.commit();
                     accepted_moves += 1;
                     accepted.push((cand_res.dsp,
-                                   lat.total / cycles_per_ms));
-                    if lat.total < best_lat {
-                        best_lat = lat.total;
+                                   ev.lat.total / cycles_per_ms));
+                    if ev.lat.total < best_lat {
+                        best_lat = ev.lat.total;
                         best = design.clone();
                         history.push((iter, best_lat / cycles_per_ms));
                     }
+                } else {
+                    ev.reject(&mut design, &mut log);
                 }
             }
             tau *= self.cfg.cooling;
@@ -285,6 +489,13 @@ pub fn optimize(model: &ModelGraph, device: &Device, rm: &ResourceModel,
 /// Best-of-N restarts (SA is stochastic; the toolflow launches a small
 /// portfolio of annealing runs in parallel threads and keeps the best
 /// design — restarts are embarrassingly parallel).
+///
+/// Reproducibility contract: worker `i` anneals with the derived seed
+/// `cfg.seed + i * 0x9E37` and each run is deterministic for its seed
+/// (see `deterministic_for_seed`), so the whole portfolio — and
+/// therefore the reported best design — is reproducible bit-for-bit
+/// regardless of thread scheduling. Ties on latency resolve to the
+/// lowest worker index.
 pub fn optimize_multi(model: &ModelGraph, device: &Device,
                       rm: &ResourceModel, cfg: OptCfg, n_seeds: u64)
     -> Result<OptResult, String> {

@@ -3,7 +3,7 @@
 use crate::model::layer::LayerKind;
 use crate::model::ModelGraph;
 use crate::resource::ResourceModel;
-use crate::sdf::{CompNode, Design, MapTarget, NodeKind};
+use crate::sdf::{CompNode, Design, MapTarget, NodeKind, UndoLog};
 use crate::util::math::{factors, max_factor_leq};
 use crate::util::rng::Rng;
 
@@ -186,8 +186,9 @@ pub fn fine(design: &mut Design, rng: &mut Rng, n: usize) -> bool {
 
 /// §V-C4 — Separate: detach `L_e` execution nodes onto fresh
 /// computation nodes (one per type among the selected layers).
+/// Mutations are recorded in `log` so the move can be rolled back.
 pub fn separate(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
-                l_e: usize) -> Option<Vec<usize>> {
+                l_e: usize, log: &mut UndoLog) -> Option<Vec<usize>> {
     let mapped: Vec<usize> = design
         .mapping
         .iter()
@@ -227,7 +228,9 @@ pub fn separate(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
         };
         ensure_kernel(&mut design.nodes[new_idx], &model.layers[l].kind);
         refix_folding(&mut design.nodes[new_idx]);
+        log.save_mapping(design, l);
         design.mapping[l] = MapTarget::Node(new_idx);
+        log.save_node(design, old);
         touched.push(old);
         touched.push(new_idx);
     }
@@ -245,8 +248,9 @@ pub fn separate(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
 }
 
 /// §V-C4 — Combine: merge `N_c` computation nodes of one type.
+/// Mutations are recorded in `log` so the move can be rolled back.
 pub fn combine(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
-               n_c: usize) -> Option<Vec<usize>> {
+               n_c: usize, log: &mut UndoLog) -> Option<Vec<usize>> {
     let used = used_nodes(design);
     // Types with at least two used nodes.
     let mut by_kind: Vec<(NodeKind, Vec<usize>)> = Vec::new();
@@ -270,8 +274,10 @@ pub fn combine(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
         chosen.remove(i);
     }
     let target = chosen[0];
+    log.save_node(design, target);
     for &src in &chosen[1..] {
         for l in design.layers_of(src) {
+            log.save_mapping(design, l);
             design.mapping[l] = MapTarget::Node(target);
         }
     }
@@ -306,11 +312,17 @@ pub fn fit_dims_to_max(model: &ModelGraph, design: &mut Design, n: usize) {
     refix_folding(node);
 }
 
-/// Apply one random transformation; returns the touched node indices
-/// (whose mapped layers need re-scheduling), or None if the move was a
-/// no-op.
-pub fn random_move(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
-                   cfg: &OptCfg) -> Option<Vec<usize>> {
+/// Apply one random transformation in place, recording every mutation
+/// in `log` (call `log.begin(design)` first). Returns the touched node
+/// indices (whose mapped layers need re-scheduling), or None if the
+/// move was a no-op — in which case nothing was mutated.
+///
+/// The RNG consumption is identical for every dispatch path whether or
+/// not the caller later undoes the move, which is what keeps SA runs
+/// bit-identical to the historical clone-per-candidate engine.
+pub fn random_move_logged(model: &ModelGraph, design: &mut Design,
+                          rng: &mut Rng, cfg: &OptCfg,
+                          log: &mut UndoLog) -> Option<Vec<usize>> {
     let used = used_nodes(design);
     if used.is_empty() {
         return None;
@@ -322,37 +334,56 @@ pub fn random_move(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
         // feature-map reshaping is unavailable, and combination /
         // separation must re-size nodes to the max of their layers.
         let touched = if roll < 0.45 {
+            log.save_node(design, n);
             coarse(design, rng, n).then(|| vec![n])
         } else if roll < 0.60 {
+            log.save_node(design, n);
             fine(design, rng, n).then(|| vec![n])
         } else if cfg.enable_combine && roll < 0.80 {
-            separate(model, design, rng, cfg.l_e)
+            separate(model, design, rng, cfg.l_e, log)
         } else if cfg.enable_combine {
-            combine(model, design, rng, cfg.n_c)
+            combine(model, design, rng, cfg.n_c, log)
         } else {
+            log.save_node(design, n);
             coarse(design, rng, n).then(|| vec![n])
         };
         if let Some(ts) = &touched {
             for &t in ts {
+                log.save_node(design, t);
                 fit_dims_to_max(model, design, t);
             }
         }
         return touched;
     }
     if roll < 0.30 {
+        log.save_node(design, n);
         reshape(model, design, rng, n).then(|| vec![n])
     } else if roll < 0.60 {
+        log.save_node(design, n);
         coarse(design, rng, n).then(|| vec![n])
     } else if roll < 0.75 {
+        log.save_node(design, n);
         fine(design, rng, n).then(|| vec![n])
     } else if cfg.enable_combine && roll < 0.875 {
-        separate(model, design, rng, cfg.l_e)
+        separate(model, design, rng, cfg.l_e, log)
     } else if cfg.enable_combine {
-        combine(model, design, rng, cfg.n_c)
+        combine(model, design, rng, cfg.n_c, log)
     } else {
         // Combine/separate disabled: fall back to a folding move.
+        log.save_node(design, n);
         coarse(design, rng, n).then(|| vec![n])
     }
+}
+
+/// Apply one random transformation; returns the touched node indices
+/// (whose mapped layers need re-scheduling), or None if the move was a
+/// no-op. Convenience wrapper over [`random_move_logged`] for callers
+/// that never roll back (tests, one-shot design surgery).
+pub fn random_move(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
+                   cfg: &OptCfg) -> Option<Vec<usize>> {
+    let mut log = UndoLog::new();
+    log.begin(design);
+    random_move_logged(model, design, rng, cfg, &mut log)
 }
 
 /// Grow a node's kernel capacity to cover a layer's kernel.
@@ -487,16 +518,55 @@ mod tests {
         let m = zoo::c3d();
         let mut d = Design::initial(&m);
         let mut rng = Rng::new(1);
+        let mut log = UndoLog::new();
         for _ in 0..50 {
-            separate(&m, &mut d, &mut rng, 2);
+            log.begin(&d);
+            separate(&m, &mut d, &mut rng, 2, &mut log);
             assert_eq!(d.validate(&m), Ok(()));
         }
         for _ in 0..50 {
-            combine(&m, &mut d, &mut rng, 2);
+            log.begin(&d);
+            combine(&m, &mut d, &mut rng, 2, &mut log);
             assert_eq!(d.validate(&m), Ok(()));
         }
         d.compact();
         assert_eq!(d.validate(&m), Ok(()));
+    }
+
+    #[test]
+    fn logged_moves_undo_exactly() {
+        // Every §V-C move must be fully reversible from its undo log:
+        // nodes, node count, and mapping all restored bit-for-bit.
+        let m = zoo::r2plus1d_18();
+        let mut d = Design::initial(&m);
+        let mut rng = Rng::new(0xBEEF);
+        let cfg = OptCfg::default();
+        let mut log = UndoLog::new();
+        let mut applied = 0;
+        for step in 0..400 {
+            let before = d.clone();
+            log.begin(&d);
+            let moved =
+                random_move_logged(&m, &mut d, &mut rng, &cfg, &mut log);
+            if moved.is_some() {
+                applied += 1;
+            }
+            // Undo every move (applied or no-op) and compare.
+            log.undo(&mut d);
+            assert_eq!(d.nodes, before.nodes, "step {step}");
+            assert_eq!(d.mapping, before.mapping, "step {step}");
+            // Re-apply some moves so later steps see varied designs.
+            if step % 3 == 0 {
+                log.begin(&d);
+                if random_move_logged(&m, &mut d, &mut rng, &cfg,
+                                      &mut log).is_none()
+                    || d.validate(&m).is_err()
+                {
+                    log.undo(&mut d);
+                }
+            }
+        }
+        assert!(applied > 200, "only {applied} moves applied");
     }
 
     #[test]

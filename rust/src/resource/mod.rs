@@ -144,9 +144,10 @@ impl ResourceModel {
 
     /// `R_total` — Eq. at end of §IV-B: nodes + DMA + crossbar.
     ///
-    /// Single pass over the mapping (O(L + N)) — this sits on the SA
-    /// constraint-check hot path (EXPERIMENTS.md §Perf), so the
-    /// per-node `layers_of` scan (O(N*L)) is avoided.
+    /// Full sweep: prices every used node. The SA engine instead keeps
+    /// a [`NodeResCache`] and reprices only the 1–2 nodes a move
+    /// touches; this entry point remains for one-shot costing (warm
+    /// start, reports, final results) and as the cache's oracle.
     pub fn design_resources(&self, design: &Design) -> Resources {
         let mut used = vec![false; design.nodes.len()];
         for m in &design.mapping {
@@ -160,6 +161,90 @@ impl ResourceModel {
             if *u {
                 n_used += 1;
                 total = total.add(&self.node_resources(node));
+            }
+        }
+        total.add(&dma_resources()).add(&xbar_resources(n_used))
+    }
+}
+
+/// Per-node resource cache for the SA hot path.
+///
+/// `design_resources` reprices *every* node per candidate; a §V-C move
+/// touches at most a couple, so the cache keeps one priced
+/// [`Resources`] per computation node and supports a speculative
+/// `reprice` (with `rollback` on move rejection). [`NodeResCache::total`]
+/// accumulates the cached entries in node-index order — the same
+/// order `design_resources` uses — then adds the DMA and crossbar
+/// overheads, so cached totals are bit-identical to a full sweep.
+#[derive(Debug, Clone)]
+pub struct NodeResCache {
+    res: Vec<Resources>,
+    saved: Vec<(usize, Resources)>,
+    old_len: usize,
+}
+
+impl NodeResCache {
+    /// Price every node of the starting design.
+    pub fn new(rm: &ResourceModel, design: &Design) -> NodeResCache {
+        NodeResCache {
+            res: design
+                .nodes
+                .iter()
+                .map(|n| rm.node_resources(n))
+                .collect(),
+            saved: Vec::new(),
+            old_len: design.nodes.len(),
+        }
+    }
+
+    /// Speculatively reprice `touched` nodes of the post-move design.
+    /// Overwritten entries are saved until `commit` or `rollback`;
+    /// nodes the move appended are priced fresh and dropped again on
+    /// `rollback`.
+    pub fn reprice(&mut self, rm: &ResourceModel, design: &Design,
+                   touched: &[usize]) {
+        self.saved.clear();
+        self.old_len = self.res.len();
+        if design.nodes.len() > self.res.len() {
+            self.res.resize(design.nodes.len(), Resources::ZERO);
+        }
+        for &i in touched {
+            // First save wins: a duplicate index must not snapshot the
+            // already-repriced value.
+            if i < self.old_len
+                && !self.saved.iter().any(|&(j, _)| j == i)
+            {
+                self.saved.push((i, self.res[i]));
+            }
+            self.res[i] = rm.node_resources(&design.nodes[i]);
+        }
+    }
+
+    /// Keep the speculative entries (move accepted).
+    pub fn commit(&mut self) {
+        self.saved.clear();
+        self.old_len = self.res.len();
+    }
+
+    /// Restore the pre-`reprice` entries (move rejected).
+    pub fn rollback(&mut self) {
+        for &(i, r) in &self.saved {
+            self.res[i] = r;
+        }
+        self.res.truncate(self.old_len);
+        self.saved.clear();
+    }
+
+    /// `R_total` over the used-node subset, from cached per-node
+    /// prices — bit-identical to `design_resources` on the same
+    /// design.
+    pub fn total(&self, is_used: impl Fn(usize) -> bool) -> Resources {
+        let mut total = Resources::ZERO;
+        let mut n_used = 0;
+        for (i, r) in self.res.iter().enumerate() {
+            if is_used(i) {
+                n_used += 1;
+                total = total.add(r);
             }
         }
         total.add(&dma_resources()).add(&xbar_resources(n_used))
@@ -259,6 +344,42 @@ mod tests {
         assert!(total.lut > node_sum); // + DMA + xbar
         assert!(total.dsp > 0.0);
         assert!(total.bram >= 51.0);
+    }
+
+    #[test]
+    fn node_res_cache_matches_full_sweep_bitwise() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        let rm = ResourceModel::fit(1, 100);
+        let mut cache = NodeResCache::new(&rm, &d);
+        let used = |d: &Design| {
+            let mut u = vec![false; d.nodes.len()];
+            for t in &d.mapping {
+                if let crate::sdf::MapTarget::Node(i) = t {
+                    u[*i] = true;
+                }
+            }
+            u
+        };
+        let assert_same = |a: Resources, b: Resources| {
+            assert_eq!(a.dsp.to_bits(), b.dsp.to_bits());
+            assert_eq!(a.bram.to_bits(), b.bram.to_bits());
+            assert_eq!(a.lut.to_bits(), b.lut.to_bits());
+            assert_eq!(a.ff.to_bits(), b.ff.to_bits());
+        };
+        let u = used(&d);
+        assert_same(cache.total(|i| u[i]), rm.design_resources(&d));
+
+        // Speculative reprice of a mutated node matches a full sweep;
+        // rollback restores the original totals exactly.
+        let before = cache.total(|i| u[i]);
+        d.nodes[0].coarse_in = d.nodes[0].max_in.c;
+        cache.reprice(&rm, &d, &[0]);
+        assert_same(cache.total(|i| u[i]), rm.design_resources(&d));
+        d.nodes[0].coarse_in = 1;
+        cache.rollback();
+        assert_same(cache.total(|i| u[i]), before);
+        assert_same(cache.total(|i| u[i]), rm.design_resources(&d));
     }
 
     #[test]

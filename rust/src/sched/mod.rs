@@ -16,6 +16,8 @@
 //! (dims *and* kernel), performing the redundant operations the
 //! runtime-parameterized hardware avoids (the 18x ablation effect).
 
+use std::collections::HashMap;
+
 use crate::model::layer::{LayerKind, Shape};
 use crate::model::ModelGraph;
 use crate::perf::{self, BwEnv};
@@ -37,19 +39,39 @@ impl Default for SchedCfg {
 }
 
 /// Tile size options along one dimension: `floor(L/N)` full tiles of
-/// size N plus an optional edge remainder.
-fn dim_tiles(layer_dim: usize, node_dim: usize) -> Vec<(usize, u64)> {
+/// size N plus an optional edge remainder. At most two entries, held
+/// inline — the tiling sits on the SA inner loop, where five heap
+/// `Vec`s per layer per candidate dominated the evaluation cost.
+#[derive(Debug, Clone, Copy)]
+struct DimTiles {
+    buf: [(usize, u64); 2],
+    len: usize,
+}
+
+impl DimTiles {
+    fn single(size: usize) -> DimTiles {
+        DimTiles { buf: [(size, 1), (0, 0)], len: 1 }
+    }
+
+    fn as_slice(&self) -> &[(usize, u64)] {
+        &self.buf[..self.len]
+    }
+}
+
+fn dim_tiles(layer_dim: usize, node_dim: usize) -> DimTiles {
     let node_dim = node_dim.max(1);
     let full = layer_dim / node_dim;
     let rem = layer_dim - full * node_dim;
-    let mut v = Vec::with_capacity(2);
+    let mut t = DimTiles { buf: [(0, 0); 2], len: 0 };
     if full > 0 {
-        v.push((node_dim, full as u64));
+        t.buf[t.len] = (node_dim, full as u64);
+        t.len += 1;
     }
     if rem > 0 {
-        v.push((rem, 1));
+        t.buf[t.len] = (rem, 1);
+        t.len += 1;
     }
-    v
+    t
 }
 
 /// Effective (kernel, stride, groups, n_inputs) of a layer.
@@ -74,13 +96,16 @@ fn out_dim(tile: usize, stride: usize) -> usize {
     ceil_div(tile, stride.max(1))
 }
 
-/// Grouped Γ for one execution node on its computation node:
-/// `(invocation, multiplicity)` pairs (Algorithm 1, lines 4-16).
-pub fn grouped_invocations(model: &ModelGraph, design: &Design,
-                           layer_idx: usize, cfg: &SchedCfg)
-    -> Vec<(Invocation, u64)> {
+/// Visit every grouped Γ of one execution node on its computation node
+/// — `(invocation, multiplicity)` pairs (Algorithm 1, lines 4-16) —
+/// without materialising a `Vec`. This is the SA latency hot path;
+/// `grouped_invocations` is the collecting wrapper for callers that
+/// need the list.
+pub fn for_each_invocation<F: FnMut(&Invocation, u64)>(
+    model: &ModelGraph, design: &Design, layer_idx: usize,
+    cfg: &SchedCfg, mut f: F) {
     let MapTarget::Node(node_idx) = design.mapping[layer_idx] else {
-        return Vec::new(); // fused layers cost nothing
+        return; // fused layers cost nothing
     };
     let node = &design.nodes[node_idx];
     let layer = &model.layers[layer_idx];
@@ -105,33 +130,41 @@ pub fn grouped_invocations(model: &ModelGraph, design: &Design,
     let f_t = if is_convlike {
         dim_tiles(filters, node.max_filters)
     } else {
-        vec![(filters.min(node.max_in.c), 1)]
+        DimTiles::single(filters.min(node.max_in.c))
     };
     let c_folds = ceil_div(in_shape.c, node.max_in.c.max(1));
+    let psum = c_folds > 1 && is_convlike
+        && !matches!(layer.kind,
+                     LayerKind::Conv3d { groups: g, .. } if g > 1);
 
-    let mut out = Vec::new();
-    for &(td, nd) in &d_t {
-        for &(th, nh) in &h_t {
-            for &(tw, nw) in &w_t {
-                for &(tc, nc) in &c_t {
-                    for &(tf, nf) in &f_t {
+    for &(td, nd) in d_t.as_slice() {
+        for &(th, nh) in h_t.as_slice() {
+            for &(tw, nw) in w_t.as_slice() {
+                for &(tc, nc) in c_t.as_slice() {
+                    for &(tf, nf) in f_t.as_slice() {
                         let mult = nd * nh * nw * nc
                             * if is_convlike { nf } else { 1 };
                         let inv = make_invocation(
                             layer_idx, node_idx, node,
                             Shape::new(td, th, tw, tc), tf, kernel,
-                            stride, groups, n_inputs,
-                            c_folds > 1 && is_convlike
-                                && !matches!(layer.kind,
-                                             LayerKind::Conv3d { groups: g, .. } if g > 1),
-                            cfg,
+                            stride, groups, n_inputs, psum, cfg,
                         );
-                        out.push((inv, mult));
+                        f(&inv, mult);
                     }
                 }
             }
         }
     }
+}
+
+/// Grouped Γ for one execution node on its computation node:
+/// `(invocation, multiplicity)` pairs (Algorithm 1, lines 4-16).
+pub fn grouped_invocations(model: &ModelGraph, design: &Design,
+                           layer_idx: usize, cfg: &SchedCfg)
+    -> Vec<(Invocation, u64)> {
+    let mut out = Vec::new();
+    for_each_invocation(model, design, layer_idx, cfg,
+                        |inv, mult| out.push((inv.clone(), mult)));
     out
 }
 
@@ -234,16 +267,59 @@ fn make_invocation(layer: usize, node_idx: usize, node: &CompNode,
 }
 
 /// Latency of one execution node across all its invocations (cycles).
+/// Allocation-free: the grouped Γ are folded as they are produced, in
+/// the same order `grouped_invocations` lists them.
 pub fn layer_latency(model: &ModelGraph, design: &Design, layer: usize,
                      env: &BwEnv, cfg: &SchedCfg) -> f64 {
     let kind = match design.mapping[layer] {
         MapTarget::Node(n) => design.nodes[n].kind,
         MapTarget::Fused => return 0.0,
     };
-    grouped_invocations(model, design, layer, cfg)
-        .iter()
-        .map(|(inv, mult)| perf::latency(kind, inv, env) * *mult as f64)
-        .sum()
+    let mut total = 0.0;
+    for_each_invocation(model, design, layer, cfg, |inv, mult| {
+        total += perf::latency(kind, inv, env) * mult as f64;
+    });
+    total
+}
+
+/// Memoised [`layer_latency`] for the SA engine: keyed on the pair
+/// `(layer, node parameter tuple)`. A layer's latency is a pure
+/// function of its own geometry (fixed per run) and the parameters of
+/// the computation node it maps to — SA revisits the same node
+/// configurations constantly (every rejected move restores one), so
+/// the hit rate climbs towards 100% as the annealing cools.
+///
+/// Values are the bit-exact results of `layer_latency`, so memoised
+/// runs are indistinguishable from recomputing ones.
+#[derive(Debug, Default)]
+pub struct LatencyMemo {
+    map: HashMap<(usize, CompNode), f64>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl LatencyMemo {
+    pub fn new() -> LatencyMemo {
+        LatencyMemo::default()
+    }
+
+    pub fn layer_latency(&mut self, model: &ModelGraph, design: &Design,
+                         layer: usize, env: &BwEnv, cfg: &SchedCfg)
+        -> f64 {
+        let node_idx = match design.mapping[layer] {
+            MapTarget::Node(n) => n,
+            MapTarget::Fused => return 0.0,
+        };
+        let key = (layer, design.nodes[node_idx]);
+        if let Some(&lat) = self.map.get(&key) {
+            self.hits += 1;
+            return lat;
+        }
+        self.misses += 1;
+        let lat = layer_latency(model, design, layer, env, cfg);
+        self.map.insert(key, lat);
+        lat
+    }
 }
 
 /// Total design latency `L_total(G)` — Eq. (2) — in cycles.
@@ -283,14 +359,49 @@ mod tests {
             for node_dim in 1..20usize {
                 let tiles = dim_tiles(layer_dim, node_dim);
                 let covered: u64 = tiles
+                    .as_slice()
                     .iter()
                     .map(|&(sz, n)| sz as u64 * n)
                     .sum();
                 assert_eq!(covered, layer_dim as u64,
                            "dims {layer_dim}/{node_dim}");
-                assert!(tiles.iter().all(|&(sz, _)| sz <= node_dim));
+                assert!(tiles
+                    .as_slice()
+                    .iter()
+                    .all(|&(sz, _)| sz <= node_dim));
             }
         }
+    }
+
+    #[test]
+    fn latency_memo_matches_direct_eval() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        let cfg = SchedCfg::default();
+        let env = env();
+        let mut memo = LatencyMemo::new();
+        for l in 0..m.layers.len() {
+            let direct = layer_latency(&m, &d, l, &env, &cfg);
+            let first = memo.layer_latency(&m, &d, l, &env, &cfg);
+            let second = memo.layer_latency(&m, &d, l, &env, &cfg);
+            assert_eq!(direct.to_bits(), first.to_bits(), "layer {l}");
+            assert_eq!(direct.to_bits(), second.to_bits(), "layer {l}");
+        }
+        assert_eq!(memo.hits, m.layers.len() as u64);
+        // A changed node parameter must miss, not alias the old entry.
+        let conv = d
+            .nodes
+            .iter()
+            .position(|n| n.kind == NodeKind::Conv)
+            .unwrap();
+        let misses_before = memo.misses;
+        d.nodes[conv].coarse_in = d.nodes[conv].max_in.c;
+        let l_conv = d.mapping.iter().position(
+            |t| matches!(t, MapTarget::Node(n) if *n == conv)).unwrap();
+        let fresh = memo.layer_latency(&m, &d, l_conv, &env, &cfg);
+        assert_eq!(fresh.to_bits(),
+                   layer_latency(&m, &d, l_conv, &env, &cfg).to_bits());
+        assert_eq!(memo.misses, misses_before + 1);
     }
 
     #[test]

@@ -49,7 +49,11 @@ impl NodeKind {
 
 /// A computation node `n` of the hardware graph `G` with its
 /// compile-time parameters (Table I).
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Copy + Eq + Hash` because the node's parameter tuple *is* its
+/// identity for the SA engine's caches: the latency memo keys on
+/// `(layer, CompNode)` and the undo log snapshots whole nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CompNode {
     pub kind: NodeKind,
     /// Maximum supported input feature-map tile `S_n^in`;
@@ -345,6 +349,80 @@ impl Design {
     }
 }
 
+/// Undo record for one SA move (§V-C transforms applied in place).
+///
+/// The clone-per-candidate engine copied the whole `Design` (nodes +
+/// mapping) for every proposed move; a move only ever touches 1–2
+/// nodes and a handful of mapping entries, so the undo log records
+/// exactly those: pre-move snapshots of mutated nodes, pre-move
+/// mapping targets of remapped layers, and the node count (separation
+/// pushes fresh nodes, which `undo` truncates away). `undo` restores
+/// the design bit-for-bit, which is what keeps the in-place engine's
+/// accepted-move sequence identical to the clone-based one.
+#[derive(Debug, Default)]
+pub struct UndoLog {
+    old_nodes_len: usize,
+    nodes: Vec<(usize, CompNode)>,
+    mapping: Vec<(usize, MapTarget)>,
+}
+
+impl UndoLog {
+    pub fn new() -> UndoLog {
+        UndoLog::default()
+    }
+
+    /// Start recording a move against the current design state.
+    pub fn begin(&mut self, design: &Design) {
+        self.old_nodes_len = design.nodes.len();
+        self.nodes.clear();
+        self.mapping.clear();
+    }
+
+    /// Snapshot node `i` before mutating it. First write wins, so the
+    /// snapshot is always the pre-move state; nodes pushed after
+    /// `begin` need no snapshot (undo truncates them).
+    pub fn save_node(&mut self, design: &Design, i: usize) {
+        if i >= self.old_nodes_len
+            || self.nodes.iter().any(|&(j, _)| j == i)
+        {
+            return;
+        }
+        self.nodes.push((i, design.nodes[i]));
+    }
+
+    /// Snapshot layer `l`'s mapping target before reassigning it.
+    pub fn save_mapping(&mut self, design: &Design, l: usize) {
+        if self.mapping.iter().any(|&(j, _)| j == l) {
+            return;
+        }
+        self.mapping.push((l, design.mapping[l]));
+    }
+
+    /// Pre-move mapping targets of every remapped layer (each layer at
+    /// most once) — consumed by the optimiser's reverse index.
+    pub fn mapping_edits(&self) -> &[(usize, MapTarget)] {
+        &self.mapping
+    }
+
+    /// Node count at `begin` time.
+    pub fn old_nodes_len(&self) -> usize {
+        self.old_nodes_len
+    }
+
+    /// Roll the design back to its state at `begin`, clearing the log.
+    pub fn undo(&mut self, design: &mut Design) {
+        for &(l, m) in &self.mapping {
+            design.mapping[l] = m;
+        }
+        for &(i, node) in &self.nodes {
+            design.nodes[i] = node;
+        }
+        design.nodes.truncate(self.old_nodes_len);
+        self.nodes.clear();
+        self.mapping.clear();
+    }
+}
+
 /// Kernel extent of a layer, if it has one.
 pub fn layer_kernel(kind: &LayerKind) -> Option<[usize; 3]> {
     match kind {
@@ -534,6 +612,28 @@ mod tests {
         d.compact();
         assert_eq!(d.nodes.len(), before - 1);
         assert_eq!(d.validate(&m), Ok(()));
+    }
+
+    #[test]
+    fn undo_log_restores_design_exactly() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        let reference = d.clone();
+        let mut log = UndoLog::new();
+        log.begin(&d);
+        // Mutate a node, remap a layer onto a fresh node, push a node.
+        log.save_node(&d, 0);
+        d.nodes[0].coarse_in = d.nodes[0].max_in.c;
+        d.nodes.push(d.nodes[0]);
+        let new_idx = d.nodes.len() - 1;
+        log.save_mapping(&d, 0);
+        d.mapping[0] = MapTarget::Node(new_idx);
+        // Double-save must keep the original snapshot.
+        log.save_node(&d, 0);
+        log.save_mapping(&d, 0);
+        log.undo(&mut d);
+        assert_eq!(d.nodes, reference.nodes);
+        assert_eq!(d.mapping, reference.mapping);
     }
 
     #[test]

@@ -1,0 +1,211 @@
+//! Equivalence properties of the zero-clone incremental SA engine.
+//!
+//! Two invariants pin the engine to the historical clone-per-candidate
+//! implementation it replaced:
+//!
+//! 1. *State equivalence*: after any sequence of applied/undone moves,
+//!    the incremental `LatencyState` and cached node resources match a
+//!    from-scratch recomputation — per-layer latencies and resource
+//!    totals bit-for-bit, the accumulated latency total to 1e-9
+//!    relative (float addition order is the only difference).
+//! 2. *Trace equivalence*: a verbatim reimplementation of the old
+//!    clone-based Algorithm-2 loop produces the same accepted-move
+//!    sequence, history, and final latency as `optim::optimize` for
+//!    the same seed.
+
+use harflow3d::device::{self, Device};
+use harflow3d::model::{zoo, ModelGraph};
+use harflow3d::optim::{self, transforms, IncrementalEval, LatencyState,
+                       OptCfg, Optimizer};
+use harflow3d::perf::BwEnv;
+use harflow3d::resource::ResourceModel;
+use harflow3d::sched::{self, SchedCfg};
+use harflow3d::sdf::{Design, MapTarget, UndoLog};
+use harflow3d::util::rng::Rng;
+
+fn assert_resources_bitwise(a: harflow3d::device::Resources,
+                            b: harflow3d::device::Resources, ctx: &str) {
+    assert_eq!(a.dsp.to_bits(), b.dsp.to_bits(), "dsp {ctx}");
+    assert_eq!(a.bram.to_bits(), b.bram.to_bits(), "bram {ctx}");
+    assert_eq!(a.lut.to_bits(), b.lut.to_bits(), "lut {ctx}");
+    assert_eq!(a.ff.to_bits(), b.ff.to_bits(), "ff {ctx}");
+}
+
+/// Apply/undo N random moves and compare the incremental evaluator
+/// against from-scratch recomputation at every step.
+fn drive_and_check(model: &ModelGraph, seed: u64, steps: usize,
+                   runtime_params: bool) {
+    let dev = device::by_name("zcu102").unwrap();
+    let rm = ResourceModel::fit(3, 120);
+    let env = BwEnv::of_device(&dev);
+    let scfg = SchedCfg { runtime_params };
+    let cfg = OptCfg { runtime_params, ..OptCfg::fast(seed) };
+    let mut design = Design::initial(model);
+    let mut ev = IncrementalEval::new(model, &design, &rm, &env, &scfg);
+    let mut rng = Rng::new(seed);
+    let mut log = UndoLog::new();
+    let (mut committed, mut rejected) = (0usize, 0usize);
+
+    for step in 0..steps {
+        let before = design.clone();
+        log.begin(&design);
+        let touched = transforms::random_move_logged(
+            model, &mut design, &mut rng, &cfg, &mut log);
+        let Some(touched) = touched else {
+            log.undo(&mut design);
+            continue;
+        };
+        if design.validate_nodes(model, &touched).is_err() {
+            log.undo(&mut design);
+            assert_eq!(design.nodes, before.nodes, "step {step}");
+            assert_eq!(design.mapping, before.mapping, "step {step}");
+            continue;
+        }
+        ev.price_move(&design, &rm, &log, &touched);
+        ev.eval_latency(model, &design, &env, &scfg, &touched);
+        if rng.uniform() < 0.5 {
+            ev.commit();
+            committed += 1;
+        } else {
+            ev.reject(&mut design, &mut log);
+            rejected += 1;
+            assert_eq!(design.nodes, before.nodes, "step {step}");
+            assert_eq!(design.mapping, before.mapping, "step {step}");
+        }
+
+        // From-scratch oracles against the incremental state.
+        let full = LatencyState::full(model, &design, &env, &scfg);
+        for l in 0..model.layers.len() {
+            assert_eq!(ev.lat.per_layer[l].to_bits(),
+                       full.per_layer[l].to_bits(),
+                       "step {step} layer {l}");
+        }
+        let rel = (ev.lat.total - full.total).abs()
+            / full.total.max(1.0);
+        assert!(rel < 1e-9, "step {step}: incremental total {} vs \
+                 full {}", ev.lat.total, full.total);
+        assert_resources_bitwise(ev.resources(),
+                                 rm.design_resources(&design),
+                                 &format!("step {step}"));
+    }
+    assert!(committed > steps / 10, "only {committed} commits");
+    assert!(rejected > steps / 10, "only {rejected} rejects");
+}
+
+#[test]
+fn incremental_state_matches_full_recompute_runtime() {
+    drive_and_check(&zoo::c3d_tiny(), 0x51EE, 400, true);
+}
+
+#[test]
+fn incremental_state_matches_full_recompute_padded() {
+    drive_and_check(&zoo::c3d_tiny(), 0x7A55, 300, false);
+}
+
+#[test]
+fn incremental_state_matches_full_recompute_r2plus1d() {
+    drive_and_check(&zoo::r2plus1d_18(), 0xD15C, 150, true);
+}
+
+/// The clone-per-candidate Algorithm-2 loop this PR replaced, kept
+/// verbatim as the reference trace generator. Dirty layers are found
+/// with the old full-mapping `nodes.contains` scan and resources with
+/// the full `design_resources` sweep.
+fn reference_run(model: &ModelGraph, dev: &Device, rm: &ResourceModel,
+                 cfg: &OptCfg)
+    -> (f64, usize, usize, Vec<(usize, f64)>, Vec<(f64, f64)>) {
+    let env = BwEnv::of_device(dev);
+    let scfg = SchedCfg { runtime_params: cfg.runtime_params };
+    let mut rng = Rng::new(cfg.seed);
+    let opt = Optimizer::new(model, dev, rm, cfg.clone());
+    let mut design = opt.warm_start().unwrap();
+    let mut lat = LatencyState::full(model, &design, &env, &scfg);
+    let mut best_lat = lat.total;
+    let mut history = Vec::new();
+    let mut accepted = Vec::new();
+    let mut tau = cfg.tau_start;
+    let mut iter = 0usize;
+    let mut accepted_moves = 0usize;
+    let cycles_per_ms = dev.cycles_per_ms();
+    history.push((0, best_lat / cycles_per_ms));
+
+    while tau > cfg.tau_min {
+        for _ in 0..cfg.iters_per_temp {
+            iter += 1;
+            let prev_total = lat.total;
+            let mut cand = design.clone();
+            let touched =
+                transforms::random_move(model, &mut cand, &mut rng, cfg);
+            let Some(touched) = touched else { continue };
+            if cand.validate_nodes(model, &touched).is_err() {
+                continue;
+            }
+            let cand_res = rm.design_resources(&cand);
+            if !cand_res.fits(&dev.avail) {
+                continue;
+            }
+            let mut cand_lat = LatencyState {
+                per_layer: lat.per_layer.clone(),
+                total: lat.total,
+            };
+            for (l, m) in cand.mapping.iter().enumerate() {
+                let dirty = match m {
+                    MapTarget::Node(i) => touched.contains(i),
+                    MapTarget::Fused => false,
+                };
+                if dirty {
+                    let new =
+                        sched::layer_latency(model, &cand, l, &env, &scfg);
+                    cand_lat.total += new - cand_lat.per_layer[l];
+                    cand_lat.per_layer[l] = new;
+                }
+            }
+            let new_total = cand_lat.total;
+            let accept = if new_total < prev_total {
+                true
+            } else {
+                let delta = (new_total - prev_total) / prev_total.max(1.0);
+                rng.uniform() < (-delta / tau.max(1e-12)).exp()
+            };
+            if accept {
+                design = cand;
+                lat = cand_lat;
+                accepted_moves += 1;
+                accepted.push((cand_res.dsp, lat.total / cycles_per_ms));
+                if lat.total < best_lat {
+                    best_lat = lat.total;
+                    history.push((iter, best_lat / cycles_per_ms));
+                }
+            }
+        }
+        tau *= cfg.cooling;
+    }
+    (best_lat, accepted_moves, iter, history, accepted)
+}
+
+#[test]
+fn engine_trace_matches_clone_based_reference() {
+    let m = zoo::c3d_tiny();
+    let dev = device::by_name("zcu102").unwrap();
+    let rm = ResourceModel::fit(1, 120);
+    for seed in [3u64, 7, 11] {
+        let cfg = OptCfg::fast(seed);
+        let (ref_lat, ref_acc, ref_iters, ref_history, ref_accepted) =
+            reference_run(&m, &dev, &rm, &cfg);
+        let r = optim::optimize(&m, &dev, &rm, cfg).unwrap();
+        assert_eq!(r.latency_cycles.to_bits(), ref_lat.to_bits(),
+                   "seed {seed}");
+        assert_eq!(r.accepted_moves, ref_acc, "seed {seed}");
+        assert_eq!(r.iterations, ref_iters, "seed {seed}");
+        assert_eq!(r.history.len(), ref_history.len(), "seed {seed}");
+        for (a, b) in r.history.iter().zip(&ref_history) {
+            assert_eq!(a.0, b.0, "seed {seed}");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "seed {seed}");
+        }
+        assert_eq!(r.accepted.len(), ref_accepted.len(), "seed {seed}");
+        for (a, b) in r.accepted.iter().zip(&ref_accepted) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "seed {seed}");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Minimal offline stand-in for the `anyhow` crate — just enough
+//! surface for this workspace (`anyhow!`, `Error`, `Result`,
+//! `Context`). The build environment has no crates.io access
+//! (DESIGN.md §3), so the error type is a plain message string; the
+//! call sites only ever format and propagate.
+
+use std::fmt;
+
+/// String-backed error value. Like the real `anyhow::Error`, this type
+/// deliberately does NOT implement `std::error::Error`, which is what
+/// allows the blanket `From<E: std::error::Error>` conversion below to
+/// coexist with the reflexive `From<Error> for Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error while propagating it.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a literal (with inline captures), a
+/// displayable value, or a format string with arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn macro_forms() {
+        let name = "x";
+        let a: Error = anyhow!("plain");
+        let b: Error = anyhow!("cap {name}");
+        let c: Error = anyhow!("{} and {}", 1, 2);
+        let d: Error = anyhow!(String::from("owned"));
+        assert_eq!(a.to_string(), "plain");
+        assert_eq!(b.to_string(), "cap x");
+        assert_eq!(c.to_string(), "1 and 2");
+        assert_eq!(d.to_string(), "owned");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r: std::result::Result<(), &str> = Err("inner");
+        let e = r.with_context(|| format!("n={}", 3)).unwrap_err();
+        assert_eq!(e.to_string(), "n=3: inner");
+    }
+}
