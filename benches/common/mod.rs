@@ -23,15 +23,20 @@ pub struct BenchResult {
     pub mean_s: f64,
     pub min_s: f64,
     /// DSE throughput (SA benches only): candidate states evaluated
-    /// per second of annealing.
+    /// per second of annealing. For multi-chain benches this is the
+    /// *aggregate* across all chains.
     pub states_per_sec: Option<f64>,
+    /// SA chain count (multi-chain DSE benches only) — lets the CI
+    /// regression gate compare like-for-like rows across commits.
+    pub chains: Option<usize>,
 }
 
 #[allow(dead_code)]
 impl BenchResult {
     /// `{"name":…,"iters":…,"ns_per_iter":…,"ns_per_iter_min":…}` with
-    /// an optional `"states_per_sec"` — names are harness-controlled
-    /// and contain no characters needing JSON escaping.
+    /// optional `"states_per_sec"` / `"chains"` — names are
+    /// harness-controlled and contain no characters needing JSON
+    /// escaping.
     pub fn json_line(&self) -> String {
         let mut s = format!(
             "{{\"name\":\"{}\",\"iters\":{},\"ns_per_iter\":{:.1},\
@@ -40,6 +45,9 @@ impl BenchResult {
         );
         if let Some(sps) = self.states_per_sec {
             s.push_str(&format!(",\"states_per_sec\":{sps:.1}"));
+        }
+        if let Some(k) = self.chains {
+            s.push_str(&format!(",\"chains\":{k}"));
         }
         s.push('}');
         s
@@ -81,6 +89,7 @@ pub fn bench_rec<F: FnMut()>(name: &str, iters: usize, mut f: F)
         mean_s: mean,
         min_s: min,
         states_per_sec: None,
+        chains: None,
     }
 }
 

@@ -5,14 +5,17 @@
 //! `cargo bench --bench hotpath` — prints one human line and one JSON
 //! line per bench, and writes the set to `BENCH_hotpath.json` (one
 //! JSON object per line) so the perf trajectory is comparable across
-//! PRs. For the SA bench the summary also carries `states_per_sec`,
-//! the DSE throughput that gates scaling to X3D-M-sized models.
+//! PRs. For the SA benches the summary also carries `states_per_sec`,
+//! the DSE throughput that gates scaling to X3D-M-sized models; the
+//! `optim/parallel SA` rows add a `chains` dimension with the
+//! aggregate multi-chain throughput (K=1 is the parallel engine's
+//! zero-overhead check against the sequential row).
 
 mod common;
 
 use harflow3d::device;
 use harflow3d::model::{onnx, zoo};
-use harflow3d::optim::{self, OptCfg};
+use harflow3d::optim::{self, parallel, OptCfg};
 use harflow3d::perf::BwEnv;
 use harflow3d::resource::ResourceModel;
 use harflow3d::sched::{self, SchedCfg};
@@ -50,6 +53,28 @@ fn main() {
     });
     sa.states_per_sec = Some(sa_states.get() as f64 / sa.mean_s);
     results.push(sa);
+
+    // Multi-chain DSE (chains dimension): aggregate states/second
+    // across K concurrent chains. K=1 doubles as the parallel-engine
+    // overhead check (it is bit-identical to the sequential run);
+    // K>1 rows show the wall-clock scaling the `sweep`/`--chains`
+    // paths deliver. Iteration counts are summed over chains by the
+    // engine, so states_per_sec is the aggregate throughput.
+    let chain_ks: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    for &kc in chain_ks {
+        let par = parallel::ParCfg { chains: kc, exchange_every: 32 };
+        let states = std::cell::Cell::new(0usize);
+        let mut b = common::bench_rec(
+            &format!("optim/parallel SA c3d K={kc}"), 2 * k, || {
+                let r = parallel::optimize_parallel(
+                    &c3d, &dev, &rm, OptCfg::fast(1), &par).unwrap();
+                states.set(r.iterations);
+                std::hint::black_box(&r);
+            });
+        b.states_per_sec = Some(states.get() as f64 / b.mean_s);
+        b.chains = Some(kc);
+        results.push(b);
+    }
 
     // Cycle-approximate simulation of a schedule.
     let dd = Design::initial(&c3d);

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for CI.
+
+Compares the fresh quick-mode hotpath bench output
+(``BENCH_hotpath.json``, JSON-lines) against the committed baseline
+(``benches/BENCH_hotpath.baseline.json``) and fails when any
+``states_per_sec`` row drops by more than ``--max-drop`` (default 20%).
+
+Rows are matched by ``name`` (the multi-chain rows embed their chain
+count in the name, so K=1/K=2/... compare like-for-like). Rows present
+in only one of the two files are reported but never fail the gate —
+new benches must be able to land before a baseline exists for them.
+
+Bootstrap: when the baseline file is missing entirely the gate passes
+and prints the fresh rows; commit the uploaded ``BENCH_hotpath.json``
+artifact of a trusted run as the baseline to arm the gate. Re-baseline
+the same way after intentional perf-relevant changes.
+
+Additionally (warning only, CI noise makes it unsuitable as a hard
+gate): if both a K=1 and a K>1 multi-chain row are present in the
+fresh output, aggregate multi-chain throughput below the single-chain
+row is flagged.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path):
+    rows = {}
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            rows[rec["name"]] = rec
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline",
+                    default="benches/BENCH_hotpath.baseline.json")
+    ap.add_argument("--fresh", default="BENCH_hotpath.json")
+    ap.add_argument("--max-drop", type=float, default=0.20,
+                    help="maximum tolerated relative states_per_sec "
+                         "drop (0.20 = 20%%)")
+    args = ap.parse_args()
+
+    try:
+        fresh = load_rows(args.fresh)
+    except OSError as e:
+        print(f"FAIL: cannot read fresh bench output: {e}")
+        return 1
+
+    # Scaling sanity (warning only): K>1 aggregate vs K=1.
+    by_chains = {rec.get("chains"): rec for rec in fresh.values()
+                 if rec.get("chains")
+                 and rec.get("states_per_sec") is not None}
+    if 1 in by_chains and by_chains[1]["states_per_sec"] > 0:
+        base_sps = by_chains[1]["states_per_sec"]
+        for k, rec in sorted(by_chains.items()):
+            if k == 1:
+                continue
+            ratio = rec["states_per_sec"] / base_sps
+            note = "" if ratio >= 1.0 else "  (WARNING: below 1-chain)"
+            print(f"scaling: K={k} aggregate {rec['states_per_sec']:.0f}"
+                  f" states/s = {ratio:.2f}x of K=1{note}")
+
+    try:
+        baseline = load_rows(args.baseline)
+    except OSError:
+        print(f"no committed baseline at {args.baseline}; gate passes "
+              f"(bootstrap). Fresh states_per_sec rows:")
+        for name, rec in sorted(fresh.items()):
+            if rec.get("states_per_sec"):
+                print(f"  {name}: {rec['states_per_sec']:.0f}")
+        return 0
+
+    failures = []
+    for name, base in sorted(baseline.items()):
+        sps_base = base.get("states_per_sec")
+        # A zero/absent baseline cannot be compared against (and a
+        # committed 0 would be a broken baseline, not a reference).
+        if sps_base is None or sps_base <= 0:
+            continue
+        cur = fresh.get(name)
+        if cur is None or cur.get("states_per_sec") is None:
+            print(f"note: baseline row '{name}' missing from fresh "
+                  f"output (not gated)")
+            continue
+        # A fresh 0 is a total collapse and must gate (drop == 100%),
+        # so only `None` counts as missing above.
+        sps = cur["states_per_sec"]
+        drop = 1.0 - sps / sps_base
+        status = "FAIL" if drop > args.max_drop else "ok"
+        print(f"{status}: {name}: {sps:.0f} vs baseline "
+              f"{sps_base:.0f} states/s ({-drop:+.1%})")
+        if drop > args.max_drop:
+            failures.append(name)
+
+    for name in sorted(set(fresh) - set(baseline)):
+        if fresh[name].get("states_per_sec") is not None:
+            print(f"note: new bench row '{name}' has no baseline yet")
+
+    if failures:
+        print(f"bench regression gate FAILED for: {', '.join(failures)}")
+        return 1
+    print("bench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,14 +2,22 @@
 //!
 //! ```text
 //! harflow3d optimize <model> <device> [--seeds N] [--seed S] [--fast]
+//!                    [--chains K [--exchange-every T]]
 //! harflow3d schedule <model> <device> [--fast]        dump Φ_G summary
 //! harflow3d simulate <model> <device> [--fast]        cycle-approx run
+//! harflow3d sweep [--models a,b] [--devices x,y] [--chains K]
+//!                 [--jobs J] [--seed S] [--fast]      model x device DSE
 //! harflow3d report <table2|table3|table4|table5|table6|
 //!                   fig1|fig4|fig6|fig7|fig8|ablation|all> [--fast]
 //! harflow3d serve [--clips N] [--tiled] [--no-verify]  e2e PJRT serving
 //! harflow3d export <model> <out.json>                  ONNX-JSON export
 //! harflow3d devices | models                           list targets
 //! ```
+//!
+//! `--chains K` swaps the best-of-N seed portfolio for the parallel
+//! multi-chain engine: K annealing chains on K threads with periodic
+//! best-design exchange, reproducible for a fixed `--seed` (K = 1 is
+//! bit-identical to the sequential engine).
 
 use anyhow::{anyhow, Result};
 
@@ -32,16 +40,30 @@ fn opt_cfg(args: &Args) -> OptCfg {
     }
 }
 
-fn load_model(name: &str) -> Result<harflow3d::model::ModelGraph> {
-    if let Some(m) = zoo::by_name(name) {
-        return Ok(m);
+/// DSE dispatch: `--chains K` selects the parallel multi-chain engine,
+/// otherwise the best-of-`--seeds` restart portfolio runs.
+fn run_dse(args: &Args, m: &harflow3d::model::ModelGraph,
+           dev: &harflow3d::device::Device, rm: &ResourceModel)
+    -> Result<harflow3d::optim::OptResult> {
+    let chains = args.opt_usize("chains", 0);
+    if chains > 0 {
+        let par = harflow3d::optim::parallel::ParCfg {
+            chains,
+            exchange_every: args.opt_usize("exchange-every", 32),
+        };
+        harflow3d::optim::parallel::optimize_parallel(
+            m, dev, rm, opt_cfg(args), &par)
+            .map_err(|e| anyhow!(e))
+    } else {
+        let n_seeds = args.opt_u64("seeds", 6);
+        optim::optimize_multi(m, dev, rm, opt_cfg(args), n_seeds)
+            .map_err(|e| anyhow!(e))
     }
-    // Fall back to an ONNX-JSON file path.
-    let text = std::fs::read_to_string(name)
-        .map_err(|e| anyhow!("unknown model {name} ({e})"))?;
-    let j = harflow3d::util::json::Json::parse(&text)
-        .map_err(|e| anyhow!("{name}: {e}"))?;
-    onnx::from_json(&j).map_err(|e| anyhow!("{name}: {e}"))
+}
+
+fn load_model(name: &str) -> Result<harflow3d::model::ModelGraph> {
+    // Zoo name or ONNX-JSON file path — shared with `report::sweep`.
+    harflow3d::model::load(name).map_err(|e| anyhow!(e))
 }
 
 fn main() -> Result<()> {
@@ -58,10 +80,7 @@ fn main() -> Result<()> {
             let dev = device::by_name(dev_name)
                 .ok_or(anyhow!("unknown device {dev_name}"))?;
             let rm = ResourceModel::default_fit();
-            let n_seeds = args.opt_u64("seeds", 6);
-            let r = optim::optimize_multi(&m, &dev, &rm, opt_cfg(&args),
-                                          n_seeds)
-                .map_err(|e| anyhow!(e))?;
+            let r = run_dse(&args, &m, &dev, &rm)?;
             let gops = m.total_macs() as f64 / 1e9 / (r.latency_ms / 1e3);
             println!(
                 "{} @ {}: latency {:.2} ms/clip | {:.1} GOps/s | \
@@ -123,6 +142,29 @@ fn main() -> Result<()> {
                 _ => {}
             }
         }
+        "sweep" => {
+            let csv = |key: &str, default: &str| -> Vec<String> {
+                args.opt_or(key, default)
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            };
+            let default_models = zoo::EVALUATED.join(",");
+            let jobs_default = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            let cfg = report::SweepCfg {
+                models: csv("models", &default_models),
+                devices: csv("devices", "zcu102,vc709"),
+                opt: opt_cfg(&args),
+                chains: args.opt_usize("chains", 1),
+                exchange_every: args.opt_usize("exchange-every", 32),
+                jobs: args.opt_usize("jobs", jobs_default),
+            };
+            let out = report::sweep(&cfg).map_err(|e| anyhow!(e))?;
+            println!("{out}");
+        }
         "report" => {
             let which = args
                 .positional
@@ -174,9 +216,7 @@ fn main() -> Result<()> {
             let dev = device::by_name(dev_name)
                 .ok_or(anyhow!("unknown device {dev_name}"))?;
             let rm = ResourceModel::default_fit();
-            let r = optim::optimize_multi(&m, &dev, &rm, opt_cfg(&args),
-                                          args.opt_u64("seeds", 6))
-                .map_err(|e| anyhow!(e))?;
+            let r = run_dse(&args, &m, &dev, &rm)?;
             let project = harflow3d::codegen::generate(&m, &r.design);
             let out = std::path::PathBuf::from(
                 args.opt_or("out", "generated"));
@@ -226,8 +266,8 @@ fn main() -> Result<()> {
             let m = zoo::c3d_tiny();
             let d = sdf::Design::initial(&m);
             d.validate(&m).map_err(|e| anyhow!(e))?;
-            println!("harflow3d: use optimize/schedule/simulate/report/\
-                      serve/export/devices/models (see README)");
+            println!("harflow3d: use optimize/schedule/simulate/sweep/\
+                      report/serve/export/devices/models (see README)");
         }
         other => return Err(anyhow!("unknown command {other}")),
     }

@@ -4,7 +4,9 @@ use super::layer::{ActKind, EltOp, Layer, LayerKind, PoolOp, Shape};
 
 /// A 3D-CNN model as a directed acyclic graph of execution nodes,
 /// stored in topological order (every layer's inputs precede it).
-#[derive(Debug, Clone)]
+/// Structural equality (`PartialEq`) compares every layer field — the
+/// parse↔serialise round-trip property in `model/onnx.rs` pins on it.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModelGraph {
     pub name: String,
     pub input_shape: Shape,

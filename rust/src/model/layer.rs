@@ -106,7 +106,7 @@ impl LayerKind {
 }
 
 /// An execution node `l` of the model graph `M`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Layer {
     pub name: String,
     pub kind: LayerKind,

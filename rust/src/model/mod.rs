@@ -14,3 +14,16 @@ pub mod zoo;
 
 pub use graph::{GraphBuilder, ModelGraph};
 pub use layer::{ActKind, EltOp, Layer, LayerKind, PoolOp, Shape};
+
+/// Resolve a model reference the way every CLI surface does: a zoo
+/// name first, else a path to an ONNX-JSON file.
+pub fn load(name: &str) -> Result<ModelGraph, String> {
+    if let Some(m) = zoo::by_name(name) {
+        return Ok(m);
+    }
+    let text = std::fs::read_to_string(name)
+        .map_err(|e| format!("unknown model {name} ({e})"))?;
+    let j = crate::util::json::Json::parse(&text)
+        .map_err(|e| format!("{name}: {e}"))?;
+    onnx::from_json(&j).map_err(|e| format!("{name}: {e}"))
+}

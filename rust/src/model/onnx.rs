@@ -122,6 +122,32 @@ pub fn from_json(j: &Json) -> Result<ModelGraph, String> {
             }
             Ok([v[0], v[1], v[2]])
         };
+        // Padding: our own exports carry the IR's symmetric per-dim
+        // triple; ONNX exporters emit the 6-entry begin/end form
+        // `[d0,h0,w0,d1,h1,w1]`. Accept both, requiring begin == end
+        // (the IR models symmetric padding only — Table I's asymmetric
+        // split matters for HDL generation, not modelling).
+        let pads = || -> Result<[usize; 3], String> {
+            let v = n
+                .get("pads")
+                .and_then(Json::usize_arr)
+                .ok_or(format!("{nname}: missing pads"))?;
+            match v.len() {
+                3 => Ok([v[0], v[1], v[2]]),
+                6 => {
+                    for d in 0..3 {
+                        if v[d] != v[d + 3] {
+                            return Err(format!(
+                                "{nname}: asymmetric pads {:?} \
+                                 unsupported (begin != end)", v));
+                        }
+                    }
+                    Ok([v[0], v[1], v[2]])
+                }
+                _ => Err(format!("{nname}: pads must have 3 or 6 \
+                                  entries")),
+            }
+        };
         match op {
             "Conv" => {
                 let filters = n
@@ -131,12 +157,12 @@ pub fn from_json(j: &Json) -> Result<ModelGraph, String> {
                 let groups =
                     n.get("group").and_then(Json::as_usize).unwrap_or(1);
                 b.conv(&nname, from, filters, triple("kernel_shape")?,
-                       triple("strides")?, triple("pads")?, groups);
+                       triple("strides")?, pads()?, groups);
             }
             "MaxPool" | "AveragePool" => {
                 let pop = if op == "MaxPool" { PoolOp::Max } else { PoolOp::Avg };
                 b.pool(&nname, from, pop, triple("kernel_shape")?,
-                       triple("strides")?, triple("pads")?);
+                       triple("strides")?, pads()?);
             }
             "Relu" => {
                 b.act(&nname, from, ActKind::Relu);
@@ -193,17 +219,53 @@ mod tests {
 
     #[test]
     fn roundtrip_all_zoo_models() {
-        for name in zoo::EVALUATED.iter().chain(["c3d_tiny"].iter()) {
+        // Strict structural round-trip: parse(to_json(g)) == g for
+        // every zoo graph, field by field — any dropped or defaulted
+        // attribute (Conv group, pads, eltwise broadcast, pool op, ...)
+        // fails here even when MACs/params happen to agree.
+        for name in zoo::EVALUATED
+            .iter()
+            .chain(["c3d_tiny", "e3d", "i3d"].iter())
+        {
             let g = zoo::by_name(name).unwrap();
             let j = to_json(&g);
             let g2 = from_json(&j).unwrap_or_else(|e| panic!("{name}: {e}"));
-            assert_eq!(g.num_layers(), g2.num_layers(), "{name}");
-            assert_eq!(g.total_macs(), g2.total_macs(), "{name}");
-            assert_eq!(g.total_params(), g2.total_params(), "{name}");
+            for (i, (a, b)) in
+                g.layers.iter().zip(&g2.layers).enumerate()
+            {
+                assert_eq!(a, b, "{name} layer {i} ({})", a.name);
+            }
+            assert_eq!(g, g2, "{name}");
             // Text stability through a second roundtrip.
             let j2 = to_json(&g2);
             assert_eq!(j.to_string(), j2.to_string(), "{name}");
         }
+    }
+
+    #[test]
+    fn accepts_onnx_six_entry_pads() {
+        // Real ONNX exporters write begin/end pads; symmetric 6-entry
+        // pads must parse to the same graph as the 3-entry triple.
+        let base = r#"{"name":"x","input_shape":[4,8,8,3],"nodes":
+            [{"name":"c","op":"Conv","inputs":[],"filters":8,
+              "kernel_shape":[3,3,3],"strides":[1,2,2],
+              "pads":PADS,"group":1}]}"#;
+        let sym = from_json(
+            &Json::parse(&base.replace("PADS", "[1,1,1]")).unwrap())
+            .unwrap();
+        let six = from_json(
+            &Json::parse(&base.replace("PADS", "[1,1,1,1,1,1]")).unwrap())
+            .unwrap();
+        assert_eq!(sym, six);
+        // Asymmetric pads are out of the IR's modelling scope: reject
+        // loudly rather than silently dropping the end padding.
+        let asym = from_json(
+            &Json::parse(&base.replace("PADS", "[1,1,1,0,1,1]")).unwrap());
+        assert!(asym.is_err());
+        // Malformed arity still rejected.
+        let bad = from_json(
+            &Json::parse(&base.replace("PADS", "[1,1]")).unwrap());
+        assert!(bad.is_err());
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //! without the O(design) clone + full resource sweep per candidate
 //! that used to dominate DSE states/second.
 
+pub mod parallel;
 pub mod transforms;
 
 use crate::device::{Device, Resources};
@@ -223,7 +224,19 @@ pub struct IncrementalEval {
 impl IncrementalEval {
     pub fn new(model: &ModelGraph, design: &Design, rm: &ResourceModel,
                env: &BwEnv, scfg: &SchedCfg) -> IncrementalEval {
-        let mut memo = LatencyMemo::new();
+        Self::with_memo(model, design, rm, env, scfg,
+                        LatencyMemo::new())
+    }
+
+    /// Like [`IncrementalEval::new`] but seeded with an existing
+    /// latency memo. Memo entries are keyed on `(layer, node
+    /// parameters)` and are valid for any design of the same model and
+    /// environment, so a chain that swaps designs (best-so-far
+    /// exchange) keeps its warm cache instead of re-deriving every
+    /// per-layer latency.
+    pub fn with_memo(model: &ModelGraph, design: &Design,
+                     rm: &ResourceModel, env: &BwEnv, scfg: &SchedCfg,
+                     mut memo: LatencyMemo) -> IncrementalEval {
         let per_layer: Vec<f64> = (0..model.layers.len())
             .map(|l| memo.layer_latency(model, design, l, env, scfg))
             .collect();
@@ -393,81 +406,205 @@ impl<'a> Optimizer<'a> {
     /// caches, which are exact, so the accepted-move sequence for a
     /// given seed is identical to the clone-per-candidate engine this
     /// replaces.
+    ///
+    /// Implemented as a single [`Chain`] driven to completion — the
+    /// multi-chain engine (`optim::parallel`) runs K of these
+    /// concurrently with periodic best exchange, and chain stream 0 is
+    /// bit-identical to this sequential path by construction.
     pub fn run(&self) -> Result<OptResult, String> {
-        let env = BwEnv::of_device(self.device);
-        let scfg = self.sched_cfg();
-        let mut rng = Rng::new(self.cfg.seed);
-        let mut design = self.warm_start()?;
-        let mut ev = IncrementalEval::new(self.model, &design, self.rm,
-                                          &env, &scfg);
-        let mut log = UndoLog::new();
-        let mut best = design.clone();
-        let mut best_lat = ev.lat.total;
-        let mut history = Vec::new();
-        let mut accepted = Vec::new();
-        let mut tau = self.cfg.tau_start;
-        let mut iter = 0usize;
-        let mut accepted_moves = 0usize;
-        let cycles_per_ms = self.device.cycles_per_ms();
-        history.push((0, best_lat / cycles_per_ms));
-
-        while tau > self.cfg.tau_min {
-            for _ in 0..self.cfg.iters_per_temp {
-                iter += 1;
-                let prev_total = ev.lat.total;
-                log.begin(&design);
-                let touched = transforms::random_move_logged(
-                    self.model, &mut design, &mut rng, &self.cfg,
-                    &mut log);
-                let Some(touched) = touched else {
-                    log.undo(&mut design); // no-op move: nothing logged
-                    continue;
-                };
-                // Constraint check (§V-B): structure + resources. Only
-                // the touched nodes can have changed (the full
-                // `validate` runs in debug builds and on the result).
-                if design.validate_nodes(self.model, &touched).is_err() {
-                    log.undo(&mut design);
-                    continue;
-                }
-                debug_assert_eq!(design.validate(self.model), Ok(()));
-                let cand_res =
-                    ev.price_move(&design, self.rm, &log, &touched);
-                if !cand_res.fits(&self.device.avail) {
-                    ev.reject(&mut design, &mut log);
-                    continue;
-                }
-                let new_total = ev.eval_latency(self.model, &design,
-                                                &env, &scfg, &touched);
-
-                let accept = if new_total < prev_total {
-                    true
-                } else {
-                    // Relative-delta Metropolis rule (Algorithm 2's
-                    // psi, normalised so tau is unitless).
-                    let delta = (new_total - prev_total)
-                        / prev_total.max(1.0);
-                    rng.uniform() < (-delta / tau.max(1e-12)).exp()
-                };
-                if accept {
-                    ev.commit();
-                    accepted_moves += 1;
-                    accepted.push((cand_res.dsp,
-                                   ev.lat.total / cycles_per_ms));
-                    if ev.lat.total < best_lat {
-                        best_lat = ev.lat.total;
-                        best = design.clone();
-                        history.push((iter, best_lat / cycles_per_ms));
-                    }
-                } else {
-                    ev.reject(&mut design, &mut log);
-                }
-            }
-            tau *= self.cfg.cooling;
+        let mut chain = Chain::new(self, 0)?;
+        while !chain.done() {
+            chain.step_temp();
         }
+        Ok(chain.finish())
+    }
+}
+
+/// One annealing chain: the complete per-chain state of Algorithm 2 —
+/// working design, [`IncrementalEval`] caches (`NodeResCache`,
+/// `LatencyMemo`, `MappingIndex`), undo log, RNG stream, temperature,
+/// and best-so-far traces. `Optimizer::run` drives exactly one chain;
+/// `optim::parallel` owns K of them, one per thread, and exchanges
+/// best designs between temperature rounds. Every piece of cached
+/// state lives inside the chain, so chains share nothing mutable and
+/// are `Send` across worker threads.
+pub struct Chain<'a> {
+    model: &'a ModelGraph,
+    device: &'a Device,
+    rm: &'a ResourceModel,
+    cfg: OptCfg,
+    env: BwEnv,
+    scfg: SchedCfg,
+    design: Design,
+    ev: IncrementalEval,
+    log: UndoLog,
+    rng: Rng,
+    best: Design,
+    best_lat: f64,
+    history: Vec<(usize, f64)>,
+    accepted: Vec<(f64, f64)>,
+    tau: f64,
+    iter: usize,
+    accepted_moves: usize,
+    cycles_per_ms: f64,
+}
+
+impl<'a> Chain<'a> {
+    /// Warm-start a chain on RNG stream `stream` of the optimiser's
+    /// seed (stream 0 == the base seed, pinning sequential
+    /// equivalence). All chains of one run start from the same
+    /// (deterministic) warm design and diverge only through their RNG
+    /// streams.
+    pub fn new(opt: &Optimizer<'a>, stream: u64)
+        -> Result<Chain<'a>, String> {
+        let env = BwEnv::of_device(opt.device);
+        let scfg = opt.sched_cfg();
+        let design = opt.warm_start()?;
+        let ev = IncrementalEval::new(opt.model, &design, opt.rm, &env,
+                                      &scfg);
+        let best = design.clone();
+        let best_lat = ev.lat.total;
+        let cycles_per_ms = opt.device.cycles_per_ms();
+        Ok(Chain {
+            model: opt.model,
+            device: opt.device,
+            rm: opt.rm,
+            cfg: opt.cfg.clone(),
+            env,
+            scfg,
+            design,
+            ev,
+            log: UndoLog::new(),
+            rng: Rng::stream(opt.cfg.seed, stream),
+            best,
+            best_lat,
+            history: vec![(0, best_lat / cycles_per_ms)],
+            accepted: Vec::new(),
+            tau: opt.cfg.tau_start,
+            iter: 0,
+            accepted_moves: 0,
+            cycles_per_ms,
+        })
+    }
+
+    /// Annealing complete (temperature at/below the floor)?
+    pub fn done(&self) -> bool {
+        self.tau <= self.cfg.tau_min
+    }
+
+    /// Latency of the current working design (cycles).
+    pub fn current_latency(&self) -> f64 {
+        self.ev.lat.total
+    }
+
+    /// Best latency found by this chain so far (cycles).
+    pub fn best_latency(&self) -> f64 {
+        self.best_lat
+    }
+
+    /// One temperature step: `iters_per_temp` proposed moves, then
+    /// cool. No-op once `done()`.
+    pub fn step_temp(&mut self) {
+        if self.done() {
+            return;
+        }
+        for _ in 0..self.cfg.iters_per_temp {
+            self.iter += 1;
+            let prev_total = self.ev.lat.total;
+            self.log.begin(&self.design);
+            let touched = transforms::random_move_logged(
+                self.model, &mut self.design, &mut self.rng, &self.cfg,
+                &mut self.log);
+            let Some(touched) = touched else {
+                self.log.undo(&mut self.design); // no-op: nothing logged
+                continue;
+            };
+            // Constraint check (§V-B): structure + resources. Only
+            // the touched nodes can have changed (the full
+            // `validate` runs in debug builds and on the result).
+            if self.design.validate_nodes(self.model, &touched).is_err() {
+                self.log.undo(&mut self.design);
+                continue;
+            }
+            debug_assert_eq!(self.design.validate(self.model), Ok(()));
+            let cand_res = self.ev.price_move(&self.design, self.rm,
+                                              &self.log, &touched);
+            if !cand_res.fits(&self.device.avail) {
+                self.ev.reject(&mut self.design, &mut self.log);
+                continue;
+            }
+            let new_total = self.ev.eval_latency(
+                self.model, &self.design, &self.env, &self.scfg,
+                &touched);
+
+            let accept = if new_total < prev_total {
+                true
+            } else {
+                // Relative-delta Metropolis rule (Algorithm 2's
+                // psi, normalised so tau is unitless).
+                let delta =
+                    (new_total - prev_total) / prev_total.max(1.0);
+                self.rng.uniform()
+                    < (-delta / self.tau.max(1e-12)).exp()
+            };
+            if accept {
+                self.ev.commit();
+                self.accepted_moves += 1;
+                self.accepted.push((cand_res.dsp,
+                                    self.ev.lat.total
+                                        / self.cycles_per_ms));
+                if self.ev.lat.total < self.best_lat {
+                    self.best_lat = self.ev.lat.total;
+                    self.best = self.design.clone();
+                    self.history.push((self.iter,
+                                       self.best_lat
+                                           / self.cycles_per_ms));
+                }
+            } else {
+                self.ev.reject(&mut self.design, &mut self.log);
+            }
+        }
+        self.tau *= self.cfg.cooling;
+    }
+
+    /// Adopt another chain's best design as this chain's working
+    /// design (best-so-far exchange). `latency` is the donor's
+    /// recorded best latency for `design` and is used verbatim for the
+    /// best-so-far bookkeeping — the locally rebuilt evaluator sums
+    /// per-layer latencies in a different order than the donor's
+    /// incremental accumulation, and an ulp-level mismatch must not
+    /// decide whether the adoption counts as a new best. The latency
+    /// memo survives the swap (entries are design-independent); the
+    /// RNG stream and temperature schedule are untouched, so
+    /// multi-chain runs stay deterministic regardless of thread
+    /// scheduling.
+    pub fn adopt(&mut self, design: &Design, latency: f64) {
+        self.design = design.clone();
+        let memo = std::mem::take(&mut self.ev.memo);
+        self.ev = IncrementalEval::with_memo(
+            self.model, &self.design, self.rm, &self.env, &self.scfg,
+            memo);
+        self.log = UndoLog::new();
+        if latency < self.best_lat {
+            self.best_lat = latency;
+            self.best = self.design.clone();
+            self.history.push((self.iter,
+                               self.best_lat / self.cycles_per_ms));
+        }
+    }
+
+    /// Snapshot of this chain's best design (uncompacted).
+    pub fn best_design(&self) -> &Design {
+        &self.best
+    }
+
+    /// Consume the chain into its [`OptResult`].
+    pub fn finish(self) -> OptResult {
+        let Chain { rm, mut best, best_lat, history, accepted, iter,
+                    accepted_moves, cycles_per_ms, .. } = self;
         best.compact();
-        let resources = self.rm.design_resources(&best);
-        Ok(OptResult {
+        let resources = rm.design_resources(&best);
+        OptResult {
             latency_cycles: best_lat,
             latency_ms: best_lat / cycles_per_ms,
             design: best,
@@ -476,7 +613,7 @@ impl<'a> Optimizer<'a> {
             accepted,
             iterations: iter,
             accepted_moves,
-        })
+        }
     }
 }
 

@@ -1,0 +1,226 @@
+//! Parallel multi-chain DSE engine: K independent simulated-annealing
+//! [`Chain`]s on `std::thread`, with periodic best-so-far exchange.
+//!
+//! The paper's practical bottleneck (shared with fpgaHART and FMM-X3D)
+//! is DSE wall-time across (model, device) pairs; a single chain is
+//! already zero-clone and incremental, so the remaining lever is
+//! running many chains concurrently. Each chain owns its complete
+//! mutable state (design, resource cache, latency memo, reverse index,
+//! RNG) — see [`Chain`] — so chains share nothing and scale across
+//! cores.
+//!
+//! Determinism contract:
+//! * chain `i` anneals on RNG stream `i` of the configured seed
+//!   (`util::rng::stream_seed`; stream 0 *is* the seed);
+//! * chains synchronise at fixed temperature-step barriers, and the
+//!   exchange applied at a barrier depends only on chain states —
+//!   never on thread scheduling;
+//! * therefore a K-chain run is reproducible bit-for-bit, and a
+//!   1-chain run (no exchanges) is bit-identical to the sequential
+//!   `Optimizer::run` (pinned by `rust/tests/parallel.rs`).
+
+use crate::device::Device;
+use crate::model::ModelGraph;
+use crate::resource::ResourceModel;
+
+use super::{Chain, OptCfg, OptResult, Optimizer};
+
+/// Multi-chain engine configuration.
+#[derive(Debug, Clone)]
+pub struct ParCfg {
+    /// Number of concurrent SA chains (1 = sequential engine).
+    pub chains: usize,
+    /// Temperature steps each chain runs between exchange barriers.
+    pub exchange_every: usize,
+}
+
+impl Default for ParCfg {
+    fn default() -> Self {
+        ParCfg { chains: 4, exchange_every: 32 }
+    }
+}
+
+/// Deterministic best-so-far exchange at a barrier: the globally best
+/// chain (lowest best latency, ties to the lowest chain index) donates
+/// its best design to every chain whose *current* design is worse.
+fn exchange(chains: &mut [Chain]) {
+    let Some(donor) = chains
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.best_latency().total_cmp(&b.1.best_latency()))
+        .map(|(i, _)| i)
+    else {
+        return;
+    };
+    let best = chains[donor].best_design().clone();
+    let best_lat = chains[donor].best_latency();
+    for (i, chain) in chains.iter_mut().enumerate() {
+        if i != donor && best_lat < chain.current_latency() {
+            chain.adopt(&best, best_lat);
+        }
+    }
+}
+
+/// Merge finished chains into one [`OptResult`]: the best chain's
+/// design and latency, a globally monotone best-so-far history, the
+/// union of the pareto clouds, and aggregate iteration counts (the
+/// multi-chain `states_per_sec` numerator).
+fn merge(results: Vec<OptResult>) -> OptResult {
+    let best_idx = results
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.latency_cycles.total_cmp(&b.1.latency_cycles))
+        .map(|(i, _)| i)
+        .expect("at least one chain");
+
+    let mut events: Vec<(usize, f64)> = Vec::new();
+    let mut accepted = Vec::new();
+    let mut iterations = 0usize;
+    let mut accepted_moves = 0usize;
+    for r in &results {
+        events.extend_from_slice(&r.history);
+        accepted.extend_from_slice(&r.accepted);
+        iterations += r.iterations;
+        accepted_moves += r.accepted_moves;
+    }
+    // Global best-so-far trace: sort by iteration (largest latency
+    // first within a tie so the running minimum keeps the best), then
+    // keep strictly improving points. Fully deterministic.
+    events.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.total_cmp(&a.1)));
+    let mut history = Vec::new();
+    let mut best_ms = f64::INFINITY;
+    for (it, ms) in events {
+        if ms < best_ms {
+            best_ms = ms;
+            history.push((it, ms));
+        }
+    }
+
+    let best = &results[best_idx];
+    OptResult {
+        design: best.design.clone(),
+        latency_cycles: best.latency_cycles,
+        latency_ms: best.latency_ms,
+        resources: best.resources,
+        history,
+        accepted,
+        iterations,
+        accepted_moves,
+    }
+}
+
+/// Optimise `model` for `device` with `par.chains` concurrent SA
+/// chains. One chain degenerates to the sequential engine
+/// (bit-identical results); K chains run on K `std::thread`s,
+/// exchanging best designs every `par.exchange_every` temperature
+/// steps, and return the merged result.
+pub fn optimize_parallel(model: &ModelGraph, device: &Device,
+                         rm: &ResourceModel, cfg: OptCfg, par: &ParCfg)
+    -> Result<OptResult, String> {
+    let k = par.chains.max(1);
+    let opt = Optimizer::new(model, device, rm, cfg);
+    if k == 1 {
+        // One chain IS the sequential engine — delegating makes the
+        // bit-identity contract true by construction.
+        return opt.run();
+    }
+    let mut chains = (0..k as u64)
+        .map(|i| Chain::new(&opt, i))
+        .collect::<Result<Vec<_>, _>>()?;
+
+    let rounds = par.exchange_every.max(1);
+    while chains.iter().any(|c| !c.done()) {
+        std::thread::scope(|scope| {
+            for chain in chains.iter_mut() {
+                scope.spawn(move || {
+                    for _ in 0..rounds {
+                        if chain.done() {
+                            break;
+                        }
+                        chain.step_temp();
+                    }
+                });
+            }
+        });
+        // Exchanging after the final round would be wasted work:
+        // chains share one temperature schedule, so they all finish
+        // together, and merge() already selects the global best.
+        if chains.iter().any(|c| !c.done()) {
+            exchange(&mut chains);
+        }
+    }
+
+    Ok(merge(chains.into_iter().map(Chain::finish).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device;
+    use crate::model::zoo;
+    use crate::optim;
+
+    #[test]
+    fn one_chain_matches_sequential_bitwise() {
+        let m = zoo::c3d_tiny();
+        let dev = device::by_name("zcu102").unwrap();
+        let rm = ResourceModel::fit(1, 120);
+        let cfg = OptCfg::fast(7);
+        let seq = optim::optimize(&m, &dev, &rm, cfg.clone()).unwrap();
+        let par = optimize_parallel(&m, &dev, &rm, cfg,
+                                    &ParCfg { chains: 1,
+                                              exchange_every: 4 })
+            .unwrap();
+        assert_eq!(seq.latency_cycles.to_bits(),
+                   par.latency_cycles.to_bits());
+        assert_eq!(seq.iterations, par.iterations);
+        assert_eq!(seq.accepted_moves, par.accepted_moves);
+    }
+
+    #[test]
+    fn exchange_propagates_best_design() {
+        let m = zoo::c3d_tiny();
+        let dev = device::by_name("zcu102").unwrap();
+        let rm = ResourceModel::fit(1, 120);
+        let opt = Optimizer::new(&m, &dev, &rm, OptCfg::fast(3));
+        let mut chains = vec![
+            Chain::new(&opt, 0).unwrap(),
+            Chain::new(&opt, 1).unwrap(),
+        ];
+        // Anneal chain 0 to completion so it holds an improved best;
+        // chain 1 stays at the (shared) warm start.
+        while !chains[0].done() {
+            chains[0].step_temp();
+        }
+        let donor_best = chains[0].best_latency();
+        assert!(donor_best <= chains[1].current_latency());
+        exchange(&mut chains);
+        // Post-exchange, chain 1's best can be no worse than the
+        // donor's (it either adopted the design or already matched it).
+        assert!(chains[1].best_latency() <= donor_best);
+    }
+
+    #[test]
+    fn merged_history_is_monotone() {
+        let a = vec![(0usize, 10.0), (4, 8.0), (9, 5.0)];
+        let b = vec![(0usize, 10.0), (2, 9.0), (9, 4.0), (12, 3.0)];
+        let mk = |history: Vec<(usize, f64)>| OptResult {
+            design: crate::sdf::Design::initial(&zoo::c3d_tiny()),
+            latency_cycles: history.last().unwrap().1,
+            latency_ms: history.last().unwrap().1,
+            resources: crate::device::Resources::ZERO,
+            history,
+            accepted: vec![],
+            iterations: 20,
+            accepted_moves: 5,
+        };
+        let merged = merge(vec![mk(a), mk(b)]);
+        assert_eq!(merged.iterations, 40);
+        assert!(merged
+            .history
+            .windows(2)
+            .all(|w| w[1].1 < w[0].1 && w[1].0 >= w[0].0));
+        assert_eq!(merged.history.first(), Some(&(0usize, 10.0)));
+        assert_eq!(merged.history.last(), Some(&(12usize, 3.0)));
+    }
+}

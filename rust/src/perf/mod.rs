@@ -64,7 +64,7 @@ pub struct Rates {
 
 pub fn rates(kind: NodeKind, inv: &Invocation) -> Rates {
     let l = compute_latency(kind, inv).max(1.0);
-    let s_in = inv.tile_in.elems() as f64 * inv.n_inputs as f64;
+    let s_in = inv.in_words();
     let s_out = inv.tile_out.elems() as f64;
     let r_in = s_in / (l * inv.coarse_in as f64);
     let r_out = s_out / (l * inv.coarse_out as f64);
@@ -103,7 +103,7 @@ pub fn constrained_bw(kind: NodeKind, inv: &Invocation, env: &BwEnv)
 /// draining the input at `B_in` and filling the output at `B_out`.
 pub fn latency(kind: NodeKind, inv: &Invocation, env: &BwEnv) -> f64 {
     let (b_in, b_out) = constrained_bw(kind, inv, env);
-    let s_in = inv.tile_in.elems() as f64 * inv.n_inputs as f64
+    let s_in = inv.in_words()
         + if inv.psum { inv.tile_out.elems() as f64 } else { 0.0 }
         + match kind {
             NodeKind::Conv | NodeKind::Fc => inv.weight_words() as f64,
@@ -137,6 +137,7 @@ mod tests {
             fine,
             psum: false,
             n_inputs: 1,
+            extra_in_words: 0,
         }
     }
 
@@ -186,6 +187,7 @@ mod tests {
             fine: 1,
             psum: false,
             n_inputs: 1,
+            extra_in_words: 0,
         };
         let env = BwEnv { bw_in: 24.0, bw_out: 24.0 };
         assert!(memory_bound(NodeKind::Act, &inv, &env));
@@ -234,11 +236,42 @@ mod tests {
             fine: 1,
             psum: false,
             n_inputs,
+            extra_in_words: 0,
         };
         let env = BwEnv { bw_in: 2.0, bw_out: 1e9 };
         let one = latency(NodeKind::Eltwise, &mk(1), &env);
         let two = latency(NodeKind::Eltwise, &mk(2), &env);
         assert!((two / one - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn broadcast_eltwise_charges_channel_vector() {
+        // Memory-bound broadcast eltwise: one full operand plus a
+        // per-channel vector. Latency must sit strictly between the
+        // one-operand and two-operand cases, at exactly
+        // (|S| + C) / B_in.
+        let mk = |n_inputs: usize, extra: u64| Invocation {
+            layer: 0,
+            node: 0,
+            tile_in: Shape::new(4, 8, 8, 16),
+            tile_out: Shape::new(4, 8, 8, 16),
+            kernel: [1; 3],
+            groups: 1,
+            coarse_in: 16,
+            coarse_out: 16,
+            fine: 1,
+            psum: false,
+            n_inputs,
+            extra_in_words: extra,
+        };
+        let env = BwEnv { bw_in: 2.0, bw_out: 1e9 };
+        let one = latency(NodeKind::Eltwise, &mk(1, 0), &env);
+        let bcast = latency(NodeKind::Eltwise, &mk(1, 16), &env);
+        let two = latency(NodeKind::Eltwise, &mk(2, 0), &env);
+        assert!(one < bcast && bcast < two,
+                "one {one} bcast {bcast} two {two}");
+        let expect = ((4 * 8 * 8 * 16) + 16) as f64 / 2.0;
+        assert!((bcast - expect).abs() / expect < 1e-9);
     }
 
     #[test]
@@ -255,6 +288,7 @@ mod tests {
             fine: 1,
             psum: false,
             n_inputs: 1,
+            extra_in_words: 0,
         };
         let l = compute_latency(NodeKind::Fc, &inv);
         assert!((l - (4096.0 * 4096.0 / 64.0)).abs() < 1e-6);

@@ -576,6 +576,127 @@ pub fn ext(cfg: &ReportCfg) -> String {
             t.render())
 }
 
+// ------------------------------------------------------------------------
+// Sweep — the paper's Tables III-V scenario matrix in one command:
+// every requested model × device pair through the DSE, fanned across a
+// thread pool, each point optionally running the multi-chain engine.
+// ------------------------------------------------------------------------
+
+/// Sweep configuration: which models × devices, how parallel.
+#[derive(Debug, Clone)]
+pub struct SweepCfg {
+    pub models: Vec<String>,
+    pub devices: Vec<String>,
+    pub opt: OptCfg,
+    /// SA chains per design point (1 = the sequential engine).
+    pub chains: usize,
+    /// Temperature steps between chain exchanges.
+    pub exchange_every: usize,
+    /// Concurrent design points (thread-pool width).
+    pub jobs: usize,
+}
+
+/// Run the sweep and render a table, one row per (model, device) pair
+/// in request order. Points are independent, so they are pulled from a
+/// shared queue by `jobs` worker threads; each point is itself
+/// deterministic for the seed (the multi-chain engine included), so
+/// the rendered table does not depend on scheduling. A point that
+/// fails (e.g. a model that cannot fit a device) reports its error in
+/// its row instead of aborting the sweep.
+pub fn sweep(cfg: &SweepCfg) -> Result<String, String> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+
+    let mut pairs: Vec<(String, String)> = Vec::new();
+    for m in &cfg.models {
+        for d in &cfg.devices {
+            pairs.push((m.clone(), d.clone()));
+        }
+    }
+    if pairs.is_empty() {
+        return Err("sweep: no (model, device) pairs".into());
+    }
+    let rm = ResourceModel::default_fit();
+    let n = pairs.len();
+    // Per point: the DSE outcome plus its GOps/s (computed worker-side
+    // so file-loaded models need not be re-parsed for rendering).
+    let results: Mutex<Vec<Option<Result<(OptResult, f64), String>>>> =
+        Mutex::new(vec![None; n]);
+    let next = AtomicUsize::new(0);
+    let workers = cfg.jobs.max(1).min(n);
+    let t0 = std::time::Instant::now();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let (mname, dname) = &pairs[i];
+                let out = (|| {
+                    let model = crate::model::load(mname)?;
+                    let dev = device::by_name(dname)
+                        .ok_or(format!("unknown device {dname}"))?;
+                    let par = optim::parallel::ParCfg {
+                        chains: cfg.chains,
+                        exchange_every: cfg.exchange_every,
+                    };
+                    let r = optim::parallel::optimize_parallel(
+                        &model, &dev, &rm, cfg.opt.clone(), &par)?;
+                    let g = gops(&model, r.latency_ms);
+                    Ok((r, g))
+                })();
+                results.lock().unwrap()[i] = Some(out);
+            });
+        }
+    });
+
+    let elapsed = t0.elapsed().as_secs_f64();
+    let results = results.into_inner().map_err(|_| "sweep poisoned")?;
+    let mut t = Table::new(&format!(
+        "Sweep — {} models x {} devices, {} chain(s)/point, {} worker(s)",
+        cfg.models.len(), cfg.devices.len(), cfg.chains.max(1), workers,
+    ))
+    .header(&["Model", "Device", "Lat/clip (ms)", "GOps/s",
+              "GOps/s/DSP", "DSP %", "SA states"]);
+    let mut total_states = 0usize;
+    for (i, (mname, dname)) in pairs.iter().enumerate() {
+        match &results[i] {
+            Some(Ok((r, g))) => {
+                let dev = device::by_name(dname).expect("checked above");
+                let g = *g;
+                total_states += r.iterations;
+                t.row(vec![
+                    mname.clone(),
+                    dname.clone(),
+                    num(r.latency_ms, 2),
+                    num(g, 2),
+                    num(g / r.resources.dsp, 3),
+                    num(100.0 * r.resources.dsp / dev.avail.dsp, 1),
+                    format!("{}", r.iterations),
+                ]);
+            }
+            Some(Err(e)) => {
+                t.row(vec![mname.clone(), dname.clone(),
+                           format!("error: {e}"), "-".into(), "-".into(),
+                           "-".into(), "-".into()]);
+            }
+            None => {
+                t.row(vec![mname.clone(), dname.clone(),
+                           "error: not scheduled".into(), "-".into(),
+                           "-".into(), "-".into(), "-".into()]);
+            }
+        }
+    }
+    Ok(format!(
+        "{}sweep: {} points in {:.1}s, {} SA states total \
+         ({:.0} states/s aggregate)\n",
+        t.render(), n, elapsed, total_states,
+        total_states as f64 / elapsed.max(1e-9),
+    ))
+}
+
 /// Run every report in paper order.
 pub fn all(cfg: &ReportCfg) -> String {
     let mut out = String::new();

@@ -5,8 +5,8 @@
 //!
 //! * `grouped_invocations` — distinct Γ values with multiplicities
 //!   (interior tiles are identical, edges differ), used by the SA
-//!   optimiser's latency objective. At most 2 sizes per tiled
-//!   dimension means ≤ 32 distinct Γ per layer — evaluation is O(1)
+//!   optimiser's latency objective. A handful of (tile, output-count)
+//!   groups per tiled dimension keeps the distinct Γ per layer O(1)
 //!   in feature-map size.
 //! * `build_schedule` — the fully expanded `Φ_G` in NHWDC order, used
 //!   by the cycle-approximate simulator and the serving coordinator.
@@ -74,25 +74,108 @@ fn dim_tiles(layer_dim: usize, node_dim: usize) -> DimTiles {
     t
 }
 
-/// Effective (kernel, stride, groups, n_inputs) of a layer.
-fn layer_geometry(kind: &LayerKind) -> ([usize; 3], [usize; 3], usize, usize) {
-    match kind {
-        LayerKind::Conv3d { kernel, stride, groups, .. } => {
-            (*kernel, *stride, *groups, 1)
+/// Tile groups along one strided spatial dimension:
+/// `(input size, output count, multiplicity)`. Unlike [`DimTiles`],
+/// equal-sized input tiles can carry *different* output counts when
+/// the tile boundary is not aligned to the stride grid, so up to a
+/// handful of groups exist per dimension (still O(1), held inline).
+#[derive(Debug, Clone, Copy)]
+struct SpatialTiles {
+    buf: [(usize, usize, u64); 8],
+    len: usize,
+}
+
+impl SpatialTiles {
+    fn as_slice(&self) -> &[(usize, usize, u64)] {
+        &self.buf[..self.len]
+    }
+
+    fn push(&mut self, size: usize, out: usize) {
+        for e in &mut self.buf[..self.len] {
+            if e.0 == size && e.1 == out {
+                e.2 += 1;
+                return;
+            }
         }
-        LayerKind::Pool3d { kernel, stride, .. } => (*kernel, *stride, 1, 1),
-        LayerKind::Eltwise { broadcast, .. } => {
-            ([1; 3], [1; 3], 1, if *broadcast { 1 } else { 2 })
+        // ≤ 6 distinct (size, out) pairs can occur (two floor/ceil
+        // interior counts, one stride-clamped edge, one empty group,
+        // the final tile, the remainder); the assert documents it and
+        // the merge keeps release builds safe regardless.
+        debug_assert!(self.len < self.buf.len(), "spatial group overflow");
+        if self.len == self.buf.len() {
+            self.buf[self.len - 1].2 += 1;
+            return;
         }
-        _ => ([1; 3], [1; 3], 1, 1),
+        self.buf[self.len] = (size, out, 1);
+        self.len += 1;
     }
 }
 
-/// Output tile dims for an input tile under (kernel-preserving)
-/// same-padding semantics: `ceil(tile / stride)` — exact for the
-/// stride-1 same-padded and stride==kernel pooling cases that dominate
-/// the evaluated models.
-fn out_dim(tile: usize, stride: usize) -> usize {
+/// Tile one strided spatial dimension, distributing the layer's *true*
+/// output count over the tiles. Output `j` anchors at input offset
+/// `j*stride` on the global grid, so the tile `[a, a+t)` produces the
+/// `ceil((a+t)/s) - ceil(a/s)` outputs anchored inside it; the final
+/// tile absorbs any residual outputs whose windows hang into the right
+/// padding. Group output counts therefore sum exactly to `out_total`.
+///
+/// This replaces the old per-tile `ceil(tile/stride)` rule, which was
+/// only exact for stride-1 same-padded and stride==kernel tilings and
+/// over-counted the outputs of edge/remainder tiles of strided layers
+/// (stride-2 convs in X3D, R(2+1)D and SlowOnly), inflating both the
+/// modelled output traffic and the MAC count of those tiles.
+fn spatial_tiles(layer_dim: usize, node_dim: usize, stride: usize,
+                 out_total: usize) -> SpatialTiles {
+    let node_dim = node_dim.max(1);
+    let stride = stride.max(1);
+    let mut t = SpatialTiles { buf: [(0, 0, 0); 8], len: 0 };
+    let mut remaining = out_total;
+    let mut a = 0usize;
+    while a < layer_dim {
+        let size = node_dim.min(layer_dim - a);
+        let cnt = if a + size >= layer_dim {
+            remaining
+        } else {
+            let anchors =
+                ceil_div(a + size, stride) - ceil_div(a, stride);
+            anchors.min(remaining)
+        };
+        remaining -= cnt;
+        t.push(size, cnt);
+        a += size;
+    }
+    t
+}
+
+/// Effective (kernel, stride, groups, n_inputs, broadcast words per
+/// channel) of a layer. `n_inputs` counts full-tile operands only; the
+/// last element charges broadcast-reduced side inputs — the per-channel
+/// vector operand of a broadcast eltwise (1 word/channel) and the
+/// gamma/beta pair of a Scale layer (2 words/channel).
+fn layer_geometry(kind: &LayerKind)
+    -> ([usize; 3], [usize; 3], usize, usize, usize) {
+    match kind {
+        LayerKind::Conv3d { kernel, stride, groups, .. } => {
+            (*kernel, *stride, *groups, 1, 0)
+        }
+        LayerKind::Pool3d { kernel, stride, .. } => {
+            (*kernel, *stride, 1, 1, 0)
+        }
+        LayerKind::Eltwise { broadcast, .. } => {
+            if *broadcast {
+                ([1; 3], [1; 3], 1, 1, 1)
+            } else {
+                ([1; 3], [1; 3], 1, 2, 0)
+            }
+        }
+        LayerKind::Scale => ([1; 3], [1; 3], 1, 1, 2),
+        _ => ([1; 3], [1; 3], 1, 1, 0),
+    }
+}
+
+/// Output dims of a *padded* execution: the non-runtime hardware emits
+/// `ceil(S_n/stride)` positions per invocation regardless of the real
+/// window count (redundant operations included — §VII-A1).
+fn out_dim_padded(tile: usize, stride: usize) -> usize {
     ceil_div(tile, stride.max(1))
 }
 
@@ -109,7 +192,8 @@ pub fn for_each_invocation<F: FnMut(&Invocation, u64)>(
     };
     let node = &design.nodes[node_idx];
     let layer = &model.layers[layer_idx];
-    let (kernel, stride, groups, n_inputs) = layer_geometry(&layer.kind);
+    let (kernel, stride, groups, n_inputs, bcast) =
+        layer_geometry(&layer.kind);
 
     // FC flattens the producer feature-map onto the channel dim.
     let (in_shape, filters) = match &layer.kind {
@@ -123,9 +207,21 @@ pub fn for_each_invocation<F: FnMut(&Invocation, u64)>(
     let is_convlike =
         matches!(node.kind, NodeKind::Conv | NodeKind::Fc);
 
-    let d_t = dim_tiles(in_shape.d, node.max_in.d);
-    let h_t = dim_tiles(in_shape.h, node.max_in.h);
-    let w_t = dim_tiles(in_shape.w, node.max_in.w);
+    // True spatial output dims to distribute over the tiles. Only
+    // conv/pool change spatial dims; every other kind maps tiles 1:1.
+    let out_sp = match &layer.kind {
+        LayerKind::Conv3d { .. } | LayerKind::Pool3d { .. } => [
+            layer.out_shape.d, layer.out_shape.h, layer.out_shape.w,
+        ],
+        _ => [in_shape.d, in_shape.h, in_shape.w],
+    };
+
+    let d_t = spatial_tiles(in_shape.d, node.max_in.d, stride[0],
+                            out_sp[0]);
+    let h_t = spatial_tiles(in_shape.h, node.max_in.h, stride[1],
+                            out_sp[1]);
+    let w_t = spatial_tiles(in_shape.w, node.max_in.w, stride[2],
+                            out_sp[2]);
     let c_t = dim_tiles(in_shape.c, node.max_in.c);
     let f_t = if is_convlike {
         dim_tiles(filters, node.max_filters)
@@ -137,17 +233,18 @@ pub fn for_each_invocation<F: FnMut(&Invocation, u64)>(
         && !matches!(layer.kind,
                      LayerKind::Conv3d { groups: g, .. } if g > 1);
 
-    for &(td, nd) in d_t.as_slice() {
-        for &(th, nh) in h_t.as_slice() {
-            for &(tw, nw) in w_t.as_slice() {
+    for &(td, od, nd) in d_t.as_slice() {
+        for &(th, oh, nh) in h_t.as_slice() {
+            for &(tw, ow, nw) in w_t.as_slice() {
                 for &(tc, nc) in c_t.as_slice() {
                     for &(tf, nf) in f_t.as_slice() {
                         let mult = nd * nh * nw * nc
                             * if is_convlike { nf } else { 1 };
                         let inv = make_invocation(
                             layer_idx, node_idx, node,
-                            Shape::new(td, th, tw, tc), tf, kernel,
-                            stride, groups, n_inputs, psum, cfg,
+                            Shape::new(td, th, tw, tc), [od, oh, ow],
+                            tf, kernel, stride, groups, n_inputs, bcast,
+                            psum, cfg,
                         );
                         f(&inv, mult);
                     }
@@ -170,9 +267,10 @@ pub fn grouped_invocations(model: &ModelGraph, design: &Design,
 
 #[allow(clippy::too_many_arguments)]
 fn make_invocation(layer: usize, node_idx: usize, node: &CompNode,
-                   tile: Shape, tile_f: usize, kernel: [usize; 3],
-                   stride: [usize; 3], groups: usize, n_inputs: usize,
-                   psum: bool, cfg: &SchedCfg) -> Invocation {
+                   tile: Shape, out_sp: [usize; 3], tile_f: usize,
+                   kernel: [usize; 3], stride: [usize; 3], groups: usize,
+                   n_inputs: usize, bcast: usize, psum: bool,
+                   cfg: &SchedCfg) -> Invocation {
     if cfg.runtime_params {
         // Runtime-parameterized node: exact tile dims and kernel; the
         // coarse factors are chosen as max{factors Ĉ} within the
@@ -191,20 +289,14 @@ fn make_invocation(layer: usize, node_idx: usize, node: &CompNode,
             _ => (coarse_in, 1),
         };
         let tile_out = match node.kind {
-            NodeKind::Conv => Shape::new(
-                out_dim(tile.d, stride[0]),
-                out_dim(tile.h, stride[1]),
-                out_dim(tile.w, stride[2]),
-                tile_f,
-            ),
+            NodeKind::Conv => {
+                Shape::new(out_sp[0], out_sp[1], out_sp[2], tile_f)
+            }
             NodeKind::Fc => Shape::flat(tile_f),
             NodeKind::Gap => Shape::flat(tile.c),
-            NodeKind::Pool => Shape::new(
-                out_dim(tile.d, stride[0]),
-                out_dim(tile.h, stride[1]),
-                out_dim(tile.w, stride[2]),
-                tile.c,
-            ),
+            NodeKind::Pool => {
+                Shape::new(out_sp[0], out_sp[1], out_sp[2], tile.c)
+            }
             _ => tile,
         };
         Invocation {
@@ -219,6 +311,7 @@ fn make_invocation(layer: usize, node_idx: usize, node: &CompNode,
             fine,
             psum,
             n_inputs,
+            extra_in_words: (bcast * tile.c) as u64,
         }
     } else {
         // Baseline: padded execution at compile-time maxima. The node
@@ -232,17 +325,17 @@ fn make_invocation(layer: usize, node_idx: usize, node: &CompNode,
         };
         let tile_out = match node.kind {
             NodeKind::Conv => Shape::new(
-                out_dim(tile_in.d, stride[0]),
-                out_dim(tile_in.h, stride[1]),
-                out_dim(tile_in.w, stride[2]),
+                out_dim_padded(tile_in.d, stride[0]),
+                out_dim_padded(tile_in.h, stride[1]),
+                out_dim_padded(tile_in.w, stride[2]),
                 tile_f_max,
             ),
             NodeKind::Fc => Shape::flat(tile_f_max),
             NodeKind::Gap => Shape::flat(tile_in.c),
             NodeKind::Pool => Shape::new(
-                out_dim(tile_in.d, stride[0]),
-                out_dim(tile_in.h, stride[1]),
-                out_dim(tile_in.w, stride[2]),
+                out_dim_padded(tile_in.d, stride[0]),
+                out_dim_padded(tile_in.h, stride[1]),
+                out_dim_padded(tile_in.w, stride[2]),
                 tile_in.c,
             ),
             _ => tile_in,
@@ -262,6 +355,7 @@ fn make_invocation(layer: usize, node_idx: usize, node: &CompNode,
             fine: node.fine,
             psum,
             n_inputs,
+            extra_in_words: (bcast * tile_in.c) as u64,
         }
     }
 }
@@ -299,6 +393,14 @@ pub struct LatencyMemo {
 }
 
 impl LatencyMemo {
+    /// Entry cap: long annealing runs on big models (X3D-M: 396
+    /// layers, millions of proposals) would otherwise grow the map
+    /// without bound — multiplied by K chains per point and the sweep
+    /// thread pool. On overflow the map is simply cleared (generation
+    /// eviction): values are bit-exact recomputations, so eviction
+    /// affects throughput only, never results.
+    const MAX_ENTRIES: usize = 1 << 20;
+
     pub fn new() -> LatencyMemo {
         LatencyMemo::default()
     }
@@ -317,6 +419,9 @@ impl LatencyMemo {
         }
         self.misses += 1;
         let lat = layer_latency(model, design, layer, env, cfg);
+        if self.map.len() >= Self::MAX_ENTRIES {
+            self.map.clear();
+        }
         self.map.insert(key, lat);
         lat
     }
@@ -370,6 +475,107 @@ mod tests {
                     .iter()
                     .all(|&(sz, _)| sz <= node_dim));
             }
+        }
+    }
+
+    #[test]
+    fn spatial_tiles_cover_input_and_output_exactly() {
+        // Across strides, kernels and paddings: the input sizes must
+        // partition the layer dim and the output counts must sum to
+        // the layer's true output dim — including unaligned stride-2
+        // remainder tiles, which the old ceil(tile/stride) rule
+        // over-counted.
+        for layer_dim in 1..40usize {
+            for node_dim in 1..20usize {
+                for stride in 1..4usize {
+                    for (k, p) in [(1, 0), (2, 0), (3, 1), (7, 3)] {
+                        if k > layer_dim {
+                            continue;
+                        }
+                        let out = (layer_dim + 2 * p - k) / stride + 1;
+                        let t = spatial_tiles(layer_dim, node_dim,
+                                              stride, out);
+                        let (mut cov_in, mut cov_out) = (0u64, 0u64);
+                        for &(sz, o, n) in t.as_slice() {
+                            assert!(sz <= node_dim);
+                            cov_in += sz as u64 * n;
+                            cov_out += o as u64 * n;
+                        }
+                        let ctx = format!(
+                            "L={layer_dim} N={node_dim} s={stride} \
+                             k={k} p={p}");
+                        assert_eq!(cov_in, layer_dim as u64, "{ctx}");
+                        assert_eq!(cov_out, out as u64, "{ctx}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stride2_remainder_tiles_not_overcounted() {
+        // W=15 conv, stride 2, k=3, p=1 -> true out W is 8. Tiled at
+        // node width 7 the tiles are [0,7) [7,14) [14,15); the old
+        // ceil(tile/stride) rule counted 4+4+1 = 9 output columns.
+        use crate::model::graph::{GraphBuilder, INPUT};
+        let mut b = GraphBuilder::new("s2", Shape::new(4, 15, 15, 8));
+        b.conv("c", INPUT, 8, [3; 3], [1, 2, 2], [1; 3], 1);
+        let m = b.finish(0);
+        assert_eq!(m.layers[0].out_shape, Shape::new(4, 8, 8, 8));
+        let mut d = Design::initial(&m);
+        let conv = d
+            .nodes
+            .iter_mut()
+            .find(|n| n.kind == NodeKind::Conv)
+            .unwrap();
+        conv.max_in.w = 7; // forces the unaligned remainder tiling
+        let cfg = SchedCfg::default();
+        let out_voxels: u64 = grouped_invocations(&m, &d, 0, &cfg)
+            .iter()
+            .map(|(inv, mult)| inv.tile_out.voxels() as u64 * mult)
+            .sum();
+        assert_eq!(out_voxels, (4 * 8 * 8) as u64);
+        // And the scheduled MACs match the model exactly (no folding
+        // in this design, so equality — not just >=).
+        let macs: u64 = grouped_invocations(&m, &d, 0, &cfg)
+            .iter()
+            .map(|(inv, mult)| inv.macs() * mult)
+            .sum();
+        assert_eq!(macs, m.total_macs());
+    }
+
+    #[test]
+    fn broadcast_eltwise_charges_reduced_second_operand() {
+        // A broadcast eltwise streams one full tile plus a per-channel
+        // vector; a non-broadcast one streams two full tiles.
+        use crate::model::graph::{GraphBuilder, INPUT};
+        use crate::model::layer::EltOp;
+        let build = |broadcast: bool| {
+            let mut b =
+                GraphBuilder::new("e", Shape::new(2, 4, 4, 16));
+            let c1 = b.conv("c1", INPUT, 16, [1; 3], [1; 3], [0; 3], 1);
+            let c2 = b.conv("c2", c1, 16, [1; 3], [1; 3], [0; 3], 1);
+            let e = b.eltwise("add", c2, c1, EltOp::Add, broadcast);
+            let _ = e;
+            b.finish(0)
+        };
+        let cfg = SchedCfg::default();
+        for (broadcast, want_extra, want_n) in
+            [(true, 16u64, 1usize), (false, 0, 2)]
+        {
+            let m = build(broadcast);
+            let d = Design::initial(&m);
+            let invs = grouped_invocations(&m, &d, 2, &cfg);
+            assert!(!invs.is_empty());
+            for (inv, _) in &invs {
+                assert_eq!(inv.n_inputs, want_n, "bcast={broadcast}");
+                assert_eq!(inv.extra_in_words, want_extra,
+                           "bcast={broadcast}");
+            }
+            // in_words: full tile(s) + the broadcast vector.
+            let full = (2 * 4 * 4 * 16) as f64;
+            let want = full * want_n as f64 + want_extra as f64;
+            assert_eq!(invs[0].0.in_words(), want, "bcast={broadcast}");
         }
     }
 

@@ -496,11 +496,24 @@ pub struct Invocation {
     /// Partial sums must round-trip off-chip (input channel dim is
     /// folded over multiple invocations).
     pub psum: bool,
-    /// Number of input operands (eltwise = 2).
+    /// Number of full-tile input operands (non-broadcast eltwise = 2).
     pub n_inputs: usize,
+    /// Extra input words beyond the full-tile operands: the
+    /// broadcast-reduced second operand of a broadcast eltwise (one
+    /// per-channel word per tile channel) or the gamma/beta vectors of
+    /// a Scale layer (two per channel). Zero for everything else.
+    pub extra_in_words: u64,
 }
 
 impl Invocation {
+    /// Input feature-map words streamed by this invocation: every
+    /// full-tile operand plus the broadcast-reduced extras. Weights and
+    /// partial sums are accounted separately by the callers.
+    pub fn in_words(&self) -> f64 {
+        self.tile_in.elems() as f64 * self.n_inputs as f64
+            + self.extra_in_words as f64
+    }
+
     /// MACs performed by this invocation (conv/fc).
     pub fn macs(&self) -> u64 {
         (self.tile_out.voxels() * self.tile_out.c
@@ -650,8 +663,10 @@ mod tests {
             fine: 1,
             psum: false,
             n_inputs: 1,
+            extra_in_words: 0,
         };
         assert_eq!(inv.macs(), (4 * 8 * 8 * 32 * 27 * 16) as u64);
         assert_eq!(inv.weight_words(), (27 * 16 * 32) as u64);
+        assert_eq!(inv.in_words(), (4 * 8 * 8 * 16) as f64);
     }
 }

@@ -77,10 +77,10 @@ impl SimReport {
     }
 }
 
-/// Words streamed in/out by one invocation (feature-maps + weights +
-/// partial sums).
+/// Words streamed in/out by one invocation (feature-maps incl.
+/// broadcast operands + weights + partial sums).
 fn invocation_words(kind: NodeKind, inv: &Invocation) -> (f64, f64) {
-    let mut w_in = inv.tile_in.elems() as f64 * inv.n_inputs as f64;
+    let mut w_in = inv.in_words();
     if matches!(kind, NodeKind::Conv | NodeKind::Fc) {
         w_in += inv.weight_words() as f64;
         if inv.psum {
@@ -211,6 +211,68 @@ mod tests {
         let b = simulate(&m, &d, &dev, &scfg, &SimCfg::default());
         assert_eq!(a.cycles, b.cycles);
         assert_eq!(a.invocations, b.invocations);
+    }
+
+    #[test]
+    fn same_seed_reproduces_different_seed_diverges() {
+        // SimCfg.seed pins the arbitration jitter: equal seeds must
+        // reproduce cycle totals bit-for-bit, different seeds (with
+        // jitter on) must not.
+        let m = zoo::c3d_tiny();
+        let dev = device::by_name("zcu102").unwrap();
+        let d = crate::sdf::Design::initial(&m);
+        let scfg = SchedCfg::default();
+        let cfg_a = SimCfg { seed: 0xABCD, ..SimCfg::default() };
+        let a1 = simulate(&m, &d, &dev, &scfg, &cfg_a);
+        let a2 = simulate(&m, &d, &dev, &scfg, &cfg_a);
+        assert_eq!(a1.cycles.to_bits(), a2.cycles.to_bits());
+        for (x, y) in a1.per_layer.iter().zip(&a2.per_layer) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a1.words_moved.to_bits(), a2.words_moved.to_bits());
+        let b = simulate(&m, &d, &dev, &scfg,
+                         &SimCfg { seed: 0xDCBA, ..SimCfg::default() });
+        assert_ne!(a1.cycles.to_bits(), b.cycles.to_bits());
+    }
+
+    #[test]
+    fn jitter_zero_matches_deterministic_sum_of_parts() {
+        // With jitter = 0 the simulator is exactly the sum of its
+        // parts: per layer, one pipeline fill plus (ideal latency +
+        // burst gaps + reconfiguration) per invocation.
+        let m = zoo::c3d_tiny();
+        let dev = device::by_name("zcu102").unwrap();
+        let d = crate::sdf::Design::initial(&m);
+        let scfg = SchedCfg::default();
+        let cfg = SimCfg { jitter: 0.0, ..SimCfg::default() };
+        let env = BwEnv::of_device(&dev);
+        let rep = simulate(&m, &d, &dev, &scfg, &cfg);
+        for l in 0..m.layers.len() {
+            let crate::sdf::MapTarget::Node(node) = d.mapping[l] else {
+                continue;
+            };
+            let kind = d.nodes[node].kind;
+            let mut expect = 0.0;
+            let mut first = true;
+            for (inv, mult) in
+                sched::grouped_invocations(&m, &d, l, &scfg)
+            {
+                if first {
+                    expect += pipeline_fill(kind, &inv);
+                    first = false;
+                }
+                let ideal = perf::latency(kind, &inv, &env);
+                let (w_in, w_out) = invocation_words(kind, &inv);
+                let bursts = (w_in / cfg.burst_words as f64).ceil()
+                    + (w_out / cfg.burst_words as f64).ceil();
+                let per = ideal + bursts * cfg.burst_gap
+                    + cfg.reconfig_cycles;
+                expect += per * mult as f64;
+            }
+            let got = rep.per_layer[l];
+            assert!((got - expect).abs() <= 1e-9 * expect.max(1.0),
+                    "layer {l}: sim {got} vs deterministic {expect}");
+        }
     }
 
     #[test]

@@ -62,8 +62,7 @@ pub fn trace(model: &ModelGraph, design: &Design, dev: &Device,
             for _ in 0..mult {
                 let cyc = super::simulate_invocation(kind, &inv, &env,
                                                      cfg, &mut rng);
-                let mut w_in = inv.tile_in.elems() as f64
-                    * inv.n_inputs as f64;
+                let mut w_in = inv.in_words();
                 if matches!(kind, NodeKind::Conv | NodeKind::Fc) {
                     w_in += inv.weight_words() as f64;
                     if inv.psum {

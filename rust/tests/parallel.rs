@@ -1,0 +1,124 @@
+//! Contracts of the parallel multi-chain DSE engine (`optim::parallel`):
+//!
+//! 1. *Sequential equivalence*: a 1-chain parallel run is bit-identical
+//!    to `optim::optimize` — same best latency, iteration/accept
+//!    counts, history, and pareto cloud for any seed (chain stream 0
+//!    uses the base seed, and no exchange barriers fire).
+//! 2. *Reproducibility*: a K-chain run is deterministic for a fixed
+//!    seed regardless of thread scheduling — chains only interact at
+//!    fixed temperature barriers via a deterministic exchange rule.
+//! 3. *Validity*: merged results validate, fit the device, and carry a
+//!    monotone global best-so-far history and aggregate counters.
+
+use harflow3d::device;
+use harflow3d::model::zoo;
+use harflow3d::optim::parallel::{optimize_parallel, ParCfg};
+use harflow3d::optim::{self, OptCfg};
+use harflow3d::report::{self, SweepCfg};
+use harflow3d::resource::ResourceModel;
+
+fn rm() -> ResourceModel {
+    ResourceModel::fit(1, 120)
+}
+
+#[test]
+fn one_chain_bit_identical_to_sequential_engine() {
+    let m = zoo::c3d_tiny();
+    let dev = device::by_name("zcu102").unwrap();
+    let rm = rm();
+    for seed in [3u64, 7, 11] {
+        let cfg = OptCfg::fast(seed);
+        let seq = optim::optimize(&m, &dev, &rm, cfg.clone()).unwrap();
+        let par = optimize_parallel(&m, &dev, &rm, cfg,
+                                    &ParCfg { chains: 1,
+                                              exchange_every: 8 })
+            .unwrap();
+        assert_eq!(seq.latency_cycles.to_bits(),
+                   par.latency_cycles.to_bits(), "seed {seed}");
+        assert_eq!(seq.latency_ms.to_bits(), par.latency_ms.to_bits(),
+                   "seed {seed}");
+        assert_eq!(seq.iterations, par.iterations, "seed {seed}");
+        assert_eq!(seq.accepted_moves, par.accepted_moves,
+                   "seed {seed}");
+        assert_eq!(seq.history.len(), par.history.len(), "seed {seed}");
+        for (a, b) in seq.history.iter().zip(&par.history) {
+            assert_eq!(a.0, b.0, "seed {seed}");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "seed {seed}");
+        }
+        assert_eq!(seq.accepted.len(), par.accepted.len(), "seed {seed}");
+        for (a, b) in seq.accepted.iter().zip(&par.accepted) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits(), "seed {seed}");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "seed {seed}");
+        }
+        assert_eq!(seq.design.nodes, par.design.nodes, "seed {seed}");
+        assert_eq!(seq.design.mapping, par.design.mapping, "seed {seed}");
+    }
+}
+
+#[test]
+fn multi_chain_runs_reproduce_for_fixed_seed() {
+    let m = zoo::c3d_tiny();
+    let dev = device::by_name("zcu102").unwrap();
+    let rm = rm();
+    let par = ParCfg { chains: 3, exchange_every: 4 };
+    let a = optimize_parallel(&m, &dev, &rm, OptCfg::fast(5), &par)
+        .unwrap();
+    let b = optimize_parallel(&m, &dev, &rm, OptCfg::fast(5), &par)
+        .unwrap();
+    assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits());
+    assert_eq!(a.iterations, b.iterations);
+    assert_eq!(a.accepted_moves, b.accepted_moves);
+    assert_eq!(a.history.len(), b.history.len());
+    for (x, y) in a.history.iter().zip(&b.history) {
+        assert_eq!(x.0, y.0);
+        assert_eq!(x.1.to_bits(), y.1.to_bits());
+    }
+    assert_eq!(a.design.nodes, b.design.nodes);
+    assert_eq!(a.design.mapping, b.design.mapping);
+}
+
+#[test]
+fn multi_chain_result_valid_and_aggregated() {
+    let m = zoo::c3d_tiny();
+    let dev = device::by_name("zcu102").unwrap();
+    let rm = rm();
+    let k = 3;
+    let r = optimize_parallel(&m, &dev, &rm, OptCfg::fast(9),
+                              &ParCfg { chains: k, exchange_every: 16 })
+        .unwrap();
+    assert_eq!(r.design.validate(&m), Ok(()));
+    assert!(r.resources.fits(&dev.avail));
+    assert!(r.latency_ms > 0.0);
+    // Aggregate counters: K chains each run the full schedule, so the
+    // iteration count is K times a single chain's.
+    let single = optim::optimize(&m, &dev, &rm, OptCfg::fast(9)).unwrap();
+    assert_eq!(r.iterations, k * single.iterations);
+    // Global history is monotone in both coordinates.
+    assert!(r
+        .history
+        .windows(2)
+        .all(|w| w[1].1 < w[0].1 && w[1].0 >= w[0].0));
+    // Every chain starts from the shared warm design, so the merged
+    // best is at least as good as the warm start (history's origin).
+    let warm_cycles =
+        r.history.first().unwrap().1 * dev.cycles_per_ms();
+    assert!(r.latency_cycles <= warm_cycles * (1.0 + 1e-9),
+            "best {} vs warm start {warm_cycles}", r.latency_cycles);
+}
+
+#[test]
+fn sweep_renders_all_requested_points() {
+    let cfg = SweepCfg {
+        models: vec!["c3d_tiny".into(), "nosuchmodel".into()],
+        devices: vec!["zc706".into()],
+        opt: OptCfg::fast(3),
+        chains: 2,
+        exchange_every: 8,
+        jobs: 2,
+    };
+    let out = report::sweep(&cfg).unwrap();
+    assert!(out.contains("c3d_tiny"), "{out}");
+    // Unknown models report an error row instead of sinking the sweep.
+    assert!(out.contains("error: unknown model nosuchmodel"), "{out}");
+    assert!(out.contains("states/s aggregate"), "{out}");
+}

@@ -75,7 +75,8 @@ fn prop_onnx_roundtrip_preserves_everything() {
         let j = onnx::to_json(&m);
         let m2 = onnx::from_json(&j)
             .unwrap_or_else(|e| panic!("case {case}: {e}"));
-        assert_eq!(m.num_layers(), m2.num_layers());
+        // Strict structural equality, not just aggregate agreement.
+        assert_eq!(m, m2, "case {case}");
         assert_eq!(m.total_macs(), m2.total_macs());
         assert_eq!(m.total_params(), m2.total_params());
         // Idempotent serialisation.
@@ -149,6 +150,7 @@ fn prop_latency_monotone_in_parallelism() {
             fine,
             psum: false,
             n_inputs: 1,
+            extra_in_words: 0,
         };
         let fs = factors(c);
         let i = rng.below(fs.len());
@@ -180,6 +182,7 @@ fn prop_roofline_never_below_compute() {
             fine: 1 + rng.below(3),
             psum: rng.below(2) == 1,
             n_inputs: 1,
+            extra_in_words: 0,
         };
         let env = BwEnv {
             bw_in: 1.0 + rng.uniform() * 50.0,
