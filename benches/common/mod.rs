@@ -29,6 +29,12 @@ pub struct BenchResult {
     /// SA chain count (multi-chain DSE benches only) — lets the CI
     /// regression gate compare like-for-like rows across commits.
     pub chains: Option<usize>,
+    /// Fleet-simulator throughput (fleet benches only): simulator
+    /// events processed per second of wall clock.
+    pub events_per_sec: Option<f64>,
+    /// Simulated p99 request latency (fleet benches only, ms) — a
+    /// correctness-trajectory marker next to the throughput number.
+    pub p99_ms: Option<f64>,
 }
 
 #[allow(dead_code)]
@@ -48,6 +54,12 @@ impl BenchResult {
         }
         if let Some(k) = self.chains {
             s.push_str(&format!(",\"chains\":{k}"));
+        }
+        if let Some(eps) = self.events_per_sec {
+            s.push_str(&format!(",\"events_per_sec\":{eps:.1}"));
+        }
+        if let Some(p99) = self.p99_ms {
+            s.push_str(&format!(",\"p99_ms\":{p99:.4}"));
         }
         s.push('}');
         s
@@ -90,6 +102,8 @@ pub fn bench_rec<F: FnMut()>(name: &str, iters: usize, mut f: F)
         min_s: min,
         states_per_sec: None,
         chains: None,
+        events_per_sec: None,
+        p99_ms: None,
     }
 }
 

@@ -1,0 +1,110 @@
+//! Fleet-serving benchmarks: event-driven simulator throughput
+//! (events/sec) and capacity-planner end-to-end time on canned
+//! serving profiles (no DSE in the loop — the simulator itself is the
+//! subject).
+//!
+//! `cargo bench --bench fleet` writes `BENCH_fleet.json` (JSON-lines):
+//! each simulator row carries `events_per_sec` — the number the CI
+//! regression gate watches — plus the simulated `p99_ms` as a
+//! correctness-trajectory marker (a p99 shift without a code reason is
+//! a modelling regression even when throughput holds).
+
+mod common;
+
+use std::cell::Cell;
+
+use harflow3d::fleet::{self, arrivals, planner, BoardSpec, FleetCfg,
+                       Policy, ProfileMatrix, QueueDiscipline,
+                       ServiceProfile};
+
+/// Canned profile grid: `n_models` designs on one device, 8/12 ms
+/// service, 25 ms design switch — C3D-tiny-scale numbers.
+fn canned_matrix(n_models: usize) -> ProfileMatrix {
+    let models = (0..n_models).map(|i| format!("m{i}")).collect();
+    let mut mx = ProfileMatrix::new(models, vec!["dev".into()]);
+    for m in 0..n_models {
+        mx.set(m, 0, ServiceProfile {
+            service_ms: if m % 2 == 0 { 8.0 } else { 12.0 },
+            reconfig_ms: 25.0,
+        });
+    }
+    mx
+}
+
+fn main() {
+    let quick = common::quick();
+    let n_req = if quick { 20_000 } else { 100_000 };
+    let iters = if quick { 2 } else { 5 };
+    let mut results = Vec::new();
+
+    // (name, models, boards, policy, mean effective cost ms). The last
+    // term sets the arrival rate for ~85% utilization: 10 ms mean
+    // service, plus — for least-loaded with 2 models, which ignores
+    // design affinity — the ~12.5 ms expected reconfiguration half the
+    // requests pay (25 ms switch x P(mismatch)~0.5). Without the
+    // derating that scenario saturates and its p99 becomes a
+    // run-length artifact instead of a queueing marker. SLO-aware
+    // keeps designs resident, so it stays at the plain service cost.
+    let scenarios: &[(&str, usize, usize, Policy, f64)] = &[
+        ("fleet/sim 8 boards round-robin 1 model", 1, 8,
+         Policy::RoundRobin, 10.0),
+        ("fleet/sim 8 boards slo-aware 2 models", 2, 8, Policy::SloAware,
+         10.0),
+        ("fleet/sim 32 boards least-loaded 2 models", 2, 32,
+         Policy::LeastLoaded, 22.5),
+    ];
+    for &(name, n_models, n_boards, policy, cost_ms) in scenarios {
+        let mx = canned_matrix(n_models);
+        // ~85% fleet utilization — deep enough queues that the heap
+        // and dispatch paths do real work, but stable.
+        let rate = 0.85 * n_boards as f64 / (cost_ms * 1e-3);
+        let arr = arrivals::poisson(n_req, rate, n_models, 7);
+        let cfg = FleetCfg {
+            boards: (0..n_boards)
+                .map(|i| BoardSpec { device: 0, preload: i % n_models })
+                .collect(),
+            policy,
+            queue: QueueDiscipline::Fifo,
+            slo_ms: 60.0,
+        };
+        let events = Cell::new(0usize);
+        let p99 = Cell::new(0.0f64);
+        let mut b = common::bench_rec(name, iters, || {
+            let met = fleet::simulate_fleet(&mx, &cfg, &arr);
+            events.set(met.events);
+            p99.set(met.p99_ms);
+            std::hint::black_box(&met);
+        });
+        b.events_per_sec = Some(events.get() as f64 / b.mean_s);
+        b.p99_ms = Some(p99.get());
+        results.push(b);
+    }
+
+    // Planner end-to-end: board-count search + certification sims.
+    let mx = canned_matrix(2);
+    let pcfg = planner::PlanCfg {
+        rate_rps: 900.0,
+        slo_ms: 60.0,
+        policy: Policy::SloAware,
+        queue: QueueDiscipline::Fifo,
+        requests: if quick { 2_000 } else { 10_000 },
+        max_boards: 64,
+        seed: 7,
+    };
+    let p99 = Cell::new(0.0f64);
+    let mut b = common::bench_rec("fleet/planner 2 models 900 rps",
+                                  iters, || {
+        let v = planner::plan(&mx, &pcfg);
+        if let planner::Verdict::Feasible(plan) = &v {
+            p99.set(plan.metrics.p99_ms);
+        }
+        std::hint::black_box(&v);
+    });
+    b.p99_ms = Some(p99.get());
+    results.push(b);
+
+    for r in &results {
+        println!("{}", r.json_line());
+    }
+    common::write_summary("BENCH_fleet.json", &results);
+}

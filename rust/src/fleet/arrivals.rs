@@ -1,0 +1,163 @@
+//! Clip arrival processes for the fleet simulator.
+//!
+//! Two sources, both producing a time-sorted `Vec<Request>`:
+//!
+//! * [`poisson`] — a seeded Poisson process at a target rate, the
+//!   open-loop traffic model capacity planning assumes. Inter-arrival
+//!   times and model picks draw from *separate* RNG streams
+//!   (`util::rng::stream_seed`), so adding a model to the mix does not
+//!   perturb the arrival-time sequence.
+//! * [`from_trace`] — a recorded trace, one request per line, for
+//!   replaying production traffic shapes the Poisson model misses
+//!   (bursts, diurnal ramps).
+
+use crate::util::rng::Rng;
+
+use super::Request;
+
+/// RNG stream indices (offsets on the base seed) — fixed so the same
+/// seed always reproduces the same arrival process.
+const STREAM_INTERARRIVAL: u64 = 1;
+const STREAM_MODEL_PICK: u64 = 2;
+
+/// `n` Poisson arrivals at `rate_rps` requests/second, uniformly mixed
+/// over `n_models` models. Times are in ms starting just after 0.
+pub fn poisson(n: usize, rate_rps: f64, n_models: usize, seed: u64)
+    -> Vec<Request> {
+    assert!(rate_rps > 0.0, "arrival rate must be positive");
+    assert!(n_models > 0, "need at least one model");
+    let mut t_rng = Rng::stream(seed, STREAM_INTERARRIVAL);
+    let mut m_rng = Rng::stream(seed, STREAM_MODEL_PICK);
+    let mut t_ms = 0.0f64;
+    (0..n)
+        .map(|id| {
+            t_ms += t_rng.exponential(rate_rps) * 1e3;
+            let model =
+                if n_models == 1 { 0 } else { m_rng.below(n_models) };
+            Request { id, model, arrival_ms: t_ms }
+        })
+        .collect()
+}
+
+/// Parse a trace: one request per line, `<t_ms> [model]`, where
+/// `model` is a model name (resolved against `models`) or a row
+/// index, defaulting to model 0. Blank lines and `#` comments are
+/// skipped. Out-of-order timestamps are accepted and sorted; ids are
+/// assigned in final time order.
+pub fn from_trace(text: &str, models: &[String])
+    -> Result<Vec<Request>, String> {
+    let mut reqs: Vec<(f64, usize)> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let t_str = parts.next().expect("non-empty trimmed line");
+        let t_ms: f64 = t_str.parse().map_err(|_| {
+            format!("trace line {}: bad timestamp {t_str:?}",
+                    lineno + 1)
+        })?;
+        if !t_ms.is_finite() || t_ms < 0.0 {
+            return Err(format!(
+                "trace line {}: timestamp must be finite and >= 0",
+                lineno + 1));
+        }
+        let model = match parts.next() {
+            None => 0,
+            Some(tag) => match models.iter().position(|m| m == tag) {
+                Some(i) => i,
+                None => tag.parse::<usize>().ok()
+                    .filter(|&i| i < models.len())
+                    .ok_or(format!(
+                        "trace line {}: unknown model {tag:?} \
+                         (known: {})",
+                        lineno + 1, models.join(", ")))?,
+            },
+        };
+        if let Some(extra) = parts.next() {
+            return Err(format!(
+                "trace line {}: unexpected trailing field {extra:?}",
+                lineno + 1));
+        }
+        reqs.push((t_ms, model));
+    }
+    reqs.sort_by(|a, b| a.0.total_cmp(&b.0));
+    Ok(reqs
+        .into_iter()
+        .enumerate()
+        .map(|(id, (t, m))| Request { id, model: m, arrival_ms: t })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_sorted_and_reproducible() {
+        let a = poisson(500, 100.0, 3, 42);
+        let b = poisson(500, 100.0, 3, 42);
+        assert_eq!(a.len(), 500);
+        assert!(a.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ms.to_bits(), y.arrival_ms.to_bits());
+            assert_eq!(x.model, y.model);
+        }
+        let c = poisson(500, 100.0, 3, 43);
+        assert_ne!(a[0].arrival_ms.to_bits(), c[0].arrival_ms.to_bits());
+    }
+
+    #[test]
+    fn poisson_rate_within_tolerance() {
+        // 20k arrivals at 250 req/s: the mean inter-arrival time is
+        // 4 ms within a few percent (law of large numbers).
+        let n = 20_000;
+        let arr = poisson(n, 250.0, 1, 7);
+        let mean_gap = arr.last().unwrap().arrival_ms / n as f64;
+        assert!((mean_gap - 4.0).abs() < 0.2,
+                "mean inter-arrival {mean_gap} ms, expected ~4 ms");
+        assert!(arr.iter().all(|r| r.model == 0));
+    }
+
+    #[test]
+    fn model_mix_decoupled_from_times() {
+        // Same seed, different model counts: arrival *times* are
+        // bit-identical (separate streams), only the mix changes.
+        let a = poisson(100, 50.0, 1, 9);
+        let b = poisson(100, 50.0, 4, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_ms.to_bits(), y.arrival_ms.to_bits());
+        }
+        assert!(b.iter().any(|r| r.model > 0));
+    }
+
+    #[test]
+    fn trace_parses_names_indices_comments() {
+        let models = vec!["c3d".to_string(), "x3d_m".to_string()];
+        let text = "# warmup\n0.5 c3d\n\n2.0 1\n1.25\n";
+        let reqs = from_trace(text, &models).unwrap();
+        assert_eq!(reqs.len(), 3);
+        // Sorted by time, ids in final order.
+        assert_eq!(reqs[0].arrival_ms, 0.5);
+        assert_eq!(reqs[0].model, 0);
+        assert_eq!(reqs[1].arrival_ms, 1.25);
+        assert_eq!(reqs[1].model, 0, "model defaults to row 0");
+        assert_eq!(reqs[2].arrival_ms, 2.0);
+        assert_eq!(reqs[2].model, 1);
+        assert_eq!(reqs.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn trace_rejects_garbage() {
+        let models = vec!["c3d".to_string()];
+        assert!(from_trace("abc", &models).is_err());
+        assert!(from_trace("1.0 nosuchmodel", &models).is_err());
+        assert!(from_trace("1.0 5", &models).is_err(),
+                "model index out of range");
+        assert!(from_trace("-1.0", &models).is_err());
+        assert!(from_trace("1.0 c3d extra", &models).is_err());
+        assert!(from_trace("", &models).unwrap().is_empty());
+    }
+}

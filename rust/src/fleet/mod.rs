@@ -1,0 +1,735 @@
+//! Fleet serving — the serving-scale axis on top of the per-design
+//! toolflow (ROADMAP north star: heavy HAR traffic, not single clips).
+//!
+//! HARFLOW3D (§V) optimises one design for one clip's latency; serving
+//! millions of users adds the dimensions the throughput-oriented
+//! siblings (fpgaHART, FPGA-QHAR) optimise for: queueing, dispatch,
+//! and fleet sizing. This module provides
+//!
+//! * a **deterministic event-driven simulator** over a fleet of FPGA
+//!   boards, each serving one loaded design at a time with a per-board
+//!   FIFO or priority queue, charging `sim::DesignLatencyProfile`
+//!   service latency per clip and the design-switch (reconfiguration)
+//!   cost when a board changes design — arrivals come from a seeded
+//!   Poisson process ([`arrivals::poisson`]) or a trace file
+//!   ([`arrivals::from_trace`]), and every tie is broken by sequence
+//!   number so a seed pins the run bit-for-bit;
+//! * an **SLO-driven capacity planner** ([`planner::plan`]) that
+//!   consumes `report::sweep` design points and searches board counts
+//!   × design assignments for the cheapest fleet meeting a p99 SLO at
+//!   a target arrival rate.
+
+pub mod arrivals;
+pub mod planner;
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::util::stats::percentile_sorted;
+
+// ------------------------------------------------------------------------
+// Profiles: what the simulator charges per request
+// ------------------------------------------------------------------------
+
+/// Per (model, device) serving numbers — a lean projection of
+/// [`crate::sim::DesignLatencyProfile`] (which carries names and
+/// provenance; the inner loop only needs the two latencies).
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceProfile {
+    /// Per-clip service latency (ms) of the optimised design.
+    pub service_ms: f64,
+    /// Cost (ms) of loading this design onto a board that currently
+    /// holds a different one.
+    pub reconfig_ms: f64,
+}
+
+/// The model × device profile grid the simulator and planner consume.
+/// `None` marks an infeasible design point (model does not fit the
+/// device); `costs[d]` is the relative board cost of device `d`.
+#[derive(Debug, Clone)]
+pub struct ProfileMatrix {
+    pub models: Vec<String>,
+    pub devices: Vec<String>,
+    /// Relative board cost per device (see [`planner::board_cost`]).
+    pub costs: Vec<f64>,
+    grid: Vec<Vec<Option<ServiceProfile>>>,
+}
+
+impl ProfileMatrix {
+    /// Empty grid (all points infeasible, unit costs).
+    pub fn new(models: Vec<String>, devices: Vec<String>)
+        -> ProfileMatrix {
+        let grid = vec![vec![None; devices.len()]; models.len()];
+        let costs = vec![1.0; devices.len()];
+        ProfileMatrix { models, devices, costs, grid }
+    }
+
+    pub fn set(&mut self, model: usize, device: usize, p: ServiceProfile) {
+        self.grid[model][device] = Some(p);
+    }
+
+    pub fn get(&self, model: usize, device: usize)
+        -> Option<ServiceProfile> {
+        self.grid[model][device]
+    }
+
+    pub fn model_index(&self, name: &str) -> Option<usize> {
+        self.models.iter().position(|m| m == name)
+    }
+
+    pub fn device_index(&self, name: &str) -> Option<usize> {
+        self.devices.iter().position(|d| d == name)
+    }
+}
+
+// ------------------------------------------------------------------------
+// Requests, boards, policies
+// ------------------------------------------------------------------------
+
+/// One inference request: a clip of `model` arriving at `arrival_ms`.
+#[derive(Debug, Clone, Copy)]
+pub struct Request {
+    pub id: usize,
+    /// Row into the [`ProfileMatrix`].
+    pub model: usize,
+    pub arrival_ms: f64,
+}
+
+/// One board of the fleet: a device instance with an initially loaded
+/// design (set by the planner / CLI, so a warm fleet pays no switch on
+/// its first matching request).
+#[derive(Debug, Clone, Copy)]
+pub struct BoardSpec {
+    /// Column into the [`ProfileMatrix`].
+    pub device: usize,
+    /// Initially loaded design (model row).
+    pub preload: usize,
+}
+
+/// Which board a new arrival is queued on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Arrival `i` goes to board `i mod fleet size`.
+    RoundRobin,
+    /// Fewest requests queued + in service; ties to the lowest index.
+    LeastLoaded,
+    /// Earliest estimated completion, accounting for the board's
+    /// backlog and the design-switch cost a mismatched board would
+    /// pay — the policy that keeps designs resident where possible.
+    SloAware,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "rr" | "round-robin" => Some(Policy::RoundRobin),
+            "ll" | "least-loaded" => Some(Policy::LeastLoaded),
+            "slo" | "slo-aware" => Some(Policy::SloAware),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "round-robin",
+            Policy::LeastLoaded => "least-loaded",
+            Policy::SloAware => "slo-aware",
+        }
+    }
+}
+
+/// Per-board queue discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueDiscipline {
+    /// Arrival order.
+    Fifo,
+    /// Cheapest work first (shortest service + switch on this board;
+    /// ties to the earlier arrival) — trades a long clip's tail for
+    /// the short clips' percentiles.
+    Priority,
+}
+
+impl QueueDiscipline {
+    pub fn parse(s: &str) -> Option<QueueDiscipline> {
+        match s {
+            "fifo" => Some(QueueDiscipline::Fifo),
+            "priority" | "sjf" => Some(QueueDiscipline::Priority),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueueDiscipline::Fifo => "fifo",
+            QueueDiscipline::Priority => "priority",
+        }
+    }
+}
+
+/// Fleet composition + serving policy for one simulation run.
+#[derive(Debug, Clone)]
+pub struct FleetCfg {
+    pub boards: Vec<BoardSpec>,
+    pub policy: Policy,
+    pub queue: QueueDiscipline,
+    /// The latency objective (ms); violations are counted per request.
+    pub slo_ms: f64,
+}
+
+// ------------------------------------------------------------------------
+// Metrics
+// ------------------------------------------------------------------------
+
+/// Per-board outcome of a simulation run.
+#[derive(Debug, Clone)]
+pub struct BoardReport {
+    pub device: usize,
+    pub completed: usize,
+    pub switches: usize,
+    pub busy_ms: f64,
+    /// busy time / makespan.
+    pub utilization: f64,
+}
+
+/// Fleet-level outcome of a simulation run. All fields are
+/// deterministic functions of (profiles, cfg, arrivals) — no wall
+/// clock anywhere — so a fixed seed reproduces them bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    pub completed: usize,
+    /// Requests no board could serve (their model fits no board's
+    /// device) — always 0 for planner-built fleets.
+    pub dropped: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+    /// Completed requests per second of simulated time.
+    pub throughput_rps: f64,
+    /// Last completion time (simulated ms; arrivals start near 0).
+    pub makespan_ms: f64,
+    pub slo_ms: f64,
+    pub slo_violations: usize,
+    pub switches: usize,
+    /// Simulator events processed (arrivals + completions) — the
+    /// bench's events/sec numerator.
+    pub events: usize,
+    pub boards: Vec<BoardReport>,
+}
+
+impl FleetMetrics {
+    pub fn mean_utilization(&self) -> f64 {
+        if self.boards.is_empty() {
+            return 0.0;
+        }
+        self.boards.iter().map(|b| b.utilization).sum::<f64>()
+            / self.boards.len() as f64
+    }
+
+    pub fn slo_met(&self) -> bool {
+        self.p99_ms <= self.slo_ms
+    }
+}
+
+// ------------------------------------------------------------------------
+// Event-driven simulator
+// ------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum EventKind {
+    /// Index into the arrivals slice.
+    Arrival(usize),
+    /// Board finished its in-service request.
+    Done(usize),
+}
+
+/// Heap event. Ordered so `BinaryHeap::pop` yields the *earliest*
+/// time; equal times break by insertion sequence, which makes the
+/// event order — and therefore the whole run — independent of float
+/// coincidences and fully deterministic.
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    t_ms: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // Reversed: the max-heap pops the minimum (time, seq).
+        o.t_ms.total_cmp(&self.t_ms).then_with(|| o.seq.cmp(&self.seq))
+    }
+}
+
+/// Live board state during a run.
+struct BoardState {
+    device: usize,
+    /// Currently loaded design (model row).
+    loaded: usize,
+    /// Design loaded once the whole queue has drained — the backlog
+    /// estimator's switch-cost anchor.
+    tail_model: usize,
+    queue: VecDeque<Request>,
+    in_service: Option<Request>,
+    free_at_ms: f64,
+    /// Estimated queued work (service + expected switches), ms.
+    backlog_ms: f64,
+    busy_ms: f64,
+    completed: usize,
+    switches: usize,
+}
+
+impl BoardState {
+    /// Cost of serving `model` right after `prev` on this board.
+    fn cost_after(&self, profiles: &ProfileMatrix, prev: usize,
+                  model: usize) -> Option<f64> {
+        let p = profiles.get(model, self.device)?;
+        let switch = if prev == model { 0.0 } else { p.reconfig_ms };
+        Some(p.service_ms + switch)
+    }
+}
+
+/// Run the fleet through a sorted arrival stream. Panics if `arrivals`
+/// is not sorted by `arrival_ms` (the arrival constructors guarantee
+/// it) or the fleet is empty.
+pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
+                      arrivals: &[Request]) -> FleetMetrics {
+    assert!(!cfg.boards.is_empty(), "fleet has no boards");
+    debug_assert!(arrivals.windows(2)
+                      .all(|w| w[0].arrival_ms <= w[1].arrival_ms),
+                  "arrivals must be time-sorted");
+
+    let mut boards: Vec<BoardState> = cfg
+        .boards
+        .iter()
+        .map(|b| BoardState {
+            device: b.device,
+            loaded: b.preload,
+            tail_model: b.preload,
+            queue: VecDeque::new(),
+            in_service: None,
+            free_at_ms: 0.0,
+            backlog_ms: 0.0,
+            busy_ms: 0.0,
+            completed: 0,
+            switches: 0,
+        })
+        .collect();
+
+    let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(
+        arrivals.len() + boards.len());
+    let mut seq = 0u64;
+    for (i, r) in arrivals.iter().enumerate() {
+        heap.push(Event { t_ms: r.arrival_ms, seq, kind: EventKind::Arrival(i) });
+        seq += 1;
+    }
+
+    let mut latencies: Vec<f64> = Vec::with_capacity(arrivals.len());
+    let mut dropped = 0usize;
+    let mut events = 0usize;
+    let mut rr_next = 0usize;
+    let mut makespan_ms = 0.0f64;
+
+    while let Some(ev) = heap.pop() {
+        events += 1;
+        let now = ev.t_ms;
+        match ev.kind {
+            EventKind::Arrival(i) => {
+                let req = arrivals[i];
+                let Some(b) = dispatch(profiles, &boards, cfg.policy,
+                                       &mut rr_next, &req, now)
+                else {
+                    dropped += 1;
+                    continue;
+                };
+                let board = &mut boards[b];
+                let est = board
+                    .cost_after(profiles, board.tail_model, req.model)
+                    .expect("dispatch returned a capable board");
+                board.backlog_ms += est;
+                board.tail_model = req.model;
+                board.queue.push_back(req);
+                if board.in_service.is_none() {
+                    start_next(profiles, board, cfg.queue, now, &mut heap,
+                               &mut seq, b);
+                }
+            }
+            EventKind::Done(b) => {
+                let board = &mut boards[b];
+                let req = board
+                    .in_service
+                    .take()
+                    .expect("completion without in-service request");
+                board.completed += 1;
+                latencies.push(now - req.arrival_ms);
+                makespan_ms = makespan_ms.max(now);
+                if !board.queue.is_empty() {
+                    start_next(profiles, board, cfg.queue, now, &mut heap,
+                               &mut seq, b);
+                }
+            }
+        }
+    }
+
+    let slo_violations =
+        latencies.iter().filter(|&&l| l > cfg.slo_ms).count();
+    let mean_ms = crate::util::stats::mean(&latencies);
+    // One sort serves every percentile and the max (metrics are on the
+    // benched path — events/sec should measure the simulator, not
+    // repeated bookkeeping sorts).
+    let mut sorted = latencies;
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let board_reports: Vec<BoardReport> = boards
+        .iter()
+        .map(|b| BoardReport {
+            device: b.device,
+            completed: b.completed,
+            switches: b.switches,
+            busy_ms: b.busy_ms,
+            utilization: if makespan_ms > 0.0 {
+                b.busy_ms / makespan_ms
+            } else {
+                0.0
+            },
+        })
+        .collect();
+    FleetMetrics {
+        completed: sorted.len(),
+        dropped,
+        p50_ms: percentile_sorted(&sorted, 50.0),
+        p95_ms: percentile_sorted(&sorted, 95.0),
+        p99_ms: percentile_sorted(&sorted, 99.0),
+        mean_ms,
+        max_ms: sorted.last().copied().unwrap_or(0.0),
+        throughput_rps: if makespan_ms > 0.0 {
+            sorted.len() as f64 / (makespan_ms / 1e3)
+        } else {
+            0.0
+        },
+        makespan_ms,
+        slo_ms: cfg.slo_ms,
+        slo_violations,
+        switches: boards.iter().map(|b| b.switches).sum(),
+        events,
+        boards: board_reports,
+    }
+}
+
+/// Choose a board for `req` under `policy`. Boards whose device has no
+/// feasible design for the request's model are skipped; `None` means
+/// no board can serve it (the request is dropped and counted).
+fn dispatch(profiles: &ProfileMatrix, boards: &[BoardState],
+            policy: Policy, rr_next: &mut usize, req: &Request,
+            now: f64) -> Option<usize> {
+    let capable =
+        |b: &BoardState| profiles.get(req.model, b.device).is_some();
+    match policy {
+        Policy::RoundRobin => {
+            // Advance the cursor past incapable boards (bounded by the
+            // fleet size); the cursor moves exactly one capable board
+            // per arrival, so the rotation stays fair.
+            for _ in 0..boards.len() {
+                let b = *rr_next % boards.len();
+                *rr_next = (*rr_next + 1) % boards.len();
+                if capable(&boards[b]) {
+                    return Some(b);
+                }
+            }
+            None
+        }
+        Policy::LeastLoaded => boards
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| capable(b))
+            .min_by_key(|(i, b)| {
+                (b.queue.len() + b.in_service.is_some() as usize, *i)
+            })
+            .map(|(i, _)| i),
+        Policy::SloAware => {
+            // Earliest estimated completion of this request: current
+            // service tail + queued backlog + its own (service +
+            // switch-if-mismatched) cost. The backlog term is an
+            // estimate under priority reordering, exact under FIFO.
+            let mut best: Option<(f64, usize)> = None;
+            for (i, b) in boards.iter().enumerate() {
+                let Some(own) =
+                    b.cost_after(profiles, b.tail_model, req.model)
+                else {
+                    continue;
+                };
+                let start = if b.in_service.is_some() {
+                    b.free_at_ms.max(now)
+                } else {
+                    now
+                };
+                let est = start + b.backlog_ms + own;
+                let better = match best {
+                    None => true,
+                    Some((e, _)) => est < e,
+                };
+                if better {
+                    best = Some((est, i));
+                }
+            }
+            best.map(|(_, i)| i)
+        }
+    }
+}
+
+/// Pop the next request off `board`'s queue per the discipline and put
+/// it in service at time `now`, scheduling its completion event.
+fn start_next(profiles: &ProfileMatrix, board: &mut BoardState,
+              queue: QueueDiscipline, now: f64,
+              heap: &mut BinaryHeap<Event>, seq: &mut u64,
+              board_idx: usize) {
+    let pick = match queue {
+        QueueDiscipline::Fifo => 0,
+        QueueDiscipline::Priority => {
+            // Cheapest (service + switch) first; ties to the earlier
+            // arrival (queue order). Queues are short, so the linear
+            // scan is cheaper and more deterministic than a heap.
+            let mut best = 0usize;
+            let mut best_cost = f64::INFINITY;
+            for (i, r) in board.queue.iter().enumerate() {
+                let c = board
+                    .cost_after(profiles, board.loaded, r.model)
+                    .expect("queued request must be servable");
+                if c < best_cost {
+                    best_cost = c;
+                    best = i;
+                }
+            }
+            best
+        }
+    };
+    let req = board.queue.remove(pick).expect("queue checked non-empty");
+    let p = profiles
+        .get(req.model, board.device)
+        .expect("queued request must be servable");
+    let switch = if board.loaded == req.model {
+        0.0
+    } else {
+        board.switches += 1;
+        board.loaded = req.model;
+        p.reconfig_ms
+    };
+    let cost = switch + p.service_ms;
+    // Keep the backlog estimator in sync: remove this request's
+    // estimated contribution. Priority reordering can make realised
+    // switches diverge from the enqueue-time estimates, so an empty
+    // queue resets the estimator exactly instead of carrying a
+    // residue that would bias SLO-aware dispatch against this board.
+    if board.queue.is_empty() {
+        board.backlog_ms = 0.0;
+        board.tail_model = req.model;
+    } else {
+        board.backlog_ms = (board.backlog_ms - cost).max(0.0);
+    }
+    board.busy_ms += cost;
+    board.free_at_ms = now + cost;
+    board.in_service = Some(req);
+    heap.push(Event {
+        t_ms: now + cost,
+        seq: *seq,
+        kind: EventKind::Done(board_idx),
+    });
+    *seq += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matrix1(service_ms: f64, reconfig_ms: f64) -> ProfileMatrix {
+        let mut m = ProfileMatrix::new(vec!["a".into()],
+                                       vec!["dev".into()]);
+        m.set(0, 0, ServiceProfile { service_ms, reconfig_ms });
+        m
+    }
+
+    fn fleet(n: usize) -> FleetCfg {
+        FleetCfg {
+            boards: (0..n)
+                .map(|_| BoardSpec { device: 0, preload: 0 })
+                .collect(),
+            policy: Policy::LeastLoaded,
+            queue: QueueDiscipline::Fifo,
+            slo_ms: 100.0,
+        }
+    }
+
+    #[test]
+    fn empty_arrivals_yield_zero_metrics() {
+        let m = matrix1(10.0, 5.0);
+        let met = simulate_fleet(&m, &fleet(2), &[]);
+        assert_eq!(met.completed, 0);
+        assert_eq!(met.events, 0);
+        assert_eq!(met.p99_ms, 0.0);
+        assert_eq!(met.throughput_rps, 0.0);
+    }
+
+    #[test]
+    fn back_to_back_requests_queue_fifo() {
+        // 3 requests at t=0 on one board, 10 ms each: latencies are
+        // exactly 10, 20, 30 ms, utilization 1.0.
+        let m = matrix1(10.0, 5.0);
+        let arr: Vec<Request> = (0..3)
+            .map(|id| Request { id, model: 0, arrival_ms: 0.0 })
+            .collect();
+        let met = simulate_fleet(&m, &fleet(1), &arr);
+        assert_eq!(met.completed, 3);
+        assert_eq!(met.max_ms, 30.0);
+        assert_eq!(met.p50_ms, 20.0);
+        assert_eq!(met.makespan_ms, 30.0);
+        assert_eq!(met.boards[0].utilization, 1.0);
+        assert_eq!(met.switches, 0);
+        // 2 events per request: arrival + completion.
+        assert_eq!(met.events, 6);
+    }
+
+    #[test]
+    fn least_loaded_spreads_simultaneous_arrivals() {
+        let m = matrix1(10.0, 5.0);
+        let arr: Vec<Request> = (0..4)
+            .map(|id| Request { id, model: 0, arrival_ms: 0.0 })
+            .collect();
+        let met = simulate_fleet(&m, &fleet(4), &arr);
+        assert_eq!(met.completed, 4);
+        assert_eq!(met.max_ms, 10.0, "each board takes one request");
+        for b in &met.boards {
+            assert_eq!(b.completed, 1);
+        }
+    }
+
+    #[test]
+    fn model_switch_charged_once_until_next_change() {
+        // Two models on one board: a→b→b charges one switch, and the
+        // b requests after the first pay no reconfiguration.
+        let mut m = ProfileMatrix::new(vec!["a".into(), "b".into()],
+                                       vec!["dev".into()]);
+        m.set(0, 0, ServiceProfile { service_ms: 10.0, reconfig_ms: 7.0 });
+        m.set(1, 0, ServiceProfile { service_ms: 10.0, reconfig_ms: 7.0 });
+        let mut cfg = fleet(1);
+        cfg.boards[0].preload = 0;
+        let arr = vec![
+            Request { id: 0, model: 0, arrival_ms: 0.0 },
+            Request { id: 1, model: 1, arrival_ms: 0.0 },
+            Request { id: 2, model: 1, arrival_ms: 0.0 },
+        ];
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.switches, 1);
+        // 10 + (7 + 10) + 10 of busy time, ending at t = 37.
+        assert_eq!(met.makespan_ms, 37.0);
+        assert_eq!(met.max_ms, 37.0);
+    }
+
+    #[test]
+    fn priority_queue_serves_cheapest_first() {
+        // Board busy with a long job; a long and a short job queue up.
+        // Priority serves the short one first, FIFO the long one.
+        let mut m = ProfileMatrix::new(vec!["long".into(), "short".into()],
+                                       vec!["dev".into()]);
+        m.set(0, 0, ServiceProfile { service_ms: 20.0, reconfig_ms: 0.0 });
+        m.set(1, 0, ServiceProfile { service_ms: 2.0, reconfig_ms: 0.0 });
+        let arr = vec![
+            Request { id: 0, model: 0, arrival_ms: 0.0 },
+            Request { id: 1, model: 0, arrival_ms: 1.0 },
+            Request { id: 2, model: 1, arrival_ms: 2.0 },
+        ];
+        let mut cfg = fleet(1);
+        cfg.queue = QueueDiscipline::Fifo;
+        let fifo = simulate_fleet(&m, &cfg, &arr);
+        cfg.queue = QueueDiscipline::Priority;
+        let prio = simulate_fleet(&m, &cfg, &arr);
+        // FIFO: short waits for both longs (20 + 20 + 2 - 2 = 40 ms).
+        // Priority: short runs right after the first long (20 ms).
+        assert_eq!(fifo.max_ms, 40.0);
+        assert!(prio.mean_ms < fifo.mean_ms,
+                "priority {} vs fifo {}", prio.mean_ms, fifo.mean_ms);
+        assert_eq!(prio.completed, 3);
+    }
+
+    #[test]
+    fn slo_aware_keeps_designs_resident() {
+        // Two boards preloaded a/b; alternating idle-time arrivals.
+        // SLO-aware routes each model to its resident board (0
+        // switches); round-robin alternates and pays a switch on
+        // every request after the first.
+        let mut m = ProfileMatrix::new(vec!["a".into(), "b".into()],
+                                       vec!["dev".into()]);
+        m.set(0, 0, ServiceProfile { service_ms: 5.0, reconfig_ms: 50.0 });
+        m.set(1, 0, ServiceProfile { service_ms: 5.0, reconfig_ms: 50.0 });
+        // a,a,b,b,… — deliberately misaligned with the board rotation
+        // so round-robin cannot stay resident by accident.
+        let arr: Vec<Request> = (0..8)
+            .map(|id| Request {
+                id,
+                model: (id / 2) % 2,
+                arrival_ms: 100.0 * id as f64,
+            })
+            .collect();
+        let mut cfg = FleetCfg {
+            boards: vec![BoardSpec { device: 0, preload: 0 },
+                         BoardSpec { device: 0, preload: 1 }],
+            policy: Policy::SloAware,
+            queue: QueueDiscipline::Fifo,
+            slo_ms: 100.0,
+        };
+        let slo = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(slo.switches, 0, "resident designs never reload");
+        assert_eq!(slo.p99_ms, 5.0);
+        cfg.policy = Policy::RoundRobin;
+        let rr = simulate_fleet(&m, &cfg, &arr);
+        assert!(rr.switches > 0);
+        assert!(slo.switches <= rr.switches);
+    }
+
+    #[test]
+    fn unservable_requests_are_dropped_and_counted() {
+        let mut m = ProfileMatrix::new(vec!["a".into(), "b".into()],
+                                       vec!["dev".into()]);
+        m.set(0, 0, ServiceProfile { service_ms: 5.0, reconfig_ms: 1.0 });
+        // model "b" has no feasible design anywhere.
+        let arr = vec![
+            Request { id: 0, model: 0, arrival_ms: 0.0 },
+            Request { id: 1, model: 1, arrival_ms: 1.0 },
+        ];
+        for policy in [Policy::RoundRobin, Policy::LeastLoaded,
+                       Policy::SloAware] {
+            let mut cfg = fleet(1);
+            cfg.policy = policy;
+            let met = simulate_fleet(&m, &cfg, &arr);
+            assert_eq!(met.completed, 1, "{policy:?}");
+            assert_eq!(met.dropped, 1, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn policy_and_queue_parse() {
+        assert_eq!(Policy::parse("rr"), Some(Policy::RoundRobin));
+        assert_eq!(Policy::parse("slo-aware"), Some(Policy::SloAware));
+        assert_eq!(Policy::parse("least-loaded"),
+                   Some(Policy::LeastLoaded));
+        assert!(Policy::parse("nope").is_none());
+        assert_eq!(QueueDiscipline::parse("fifo"),
+                   Some(QueueDiscipline::Fifo));
+        assert_eq!(QueueDiscipline::parse("priority"),
+                   Some(QueueDiscipline::Priority));
+        assert!(QueueDiscipline::parse("lifo").is_none());
+    }
+}

@@ -1,0 +1,278 @@
+//! SLO-driven capacity planner: how many boards, running which
+//! designs, serve rate λ within a p99 latency SLO — at the lowest
+//! cost.
+//!
+//! The search walks each candidate device type, starts at the
+//! work-conservation lower bound (`λ · mean service` boards keep
+//! utilization below 1), and grows the fleet until the event-driven
+//! simulator ([`super::simulate_fleet`]) reports the p99 inside the
+//! SLO. Candidate fleets preload designs round-robin over the model
+//! mix so a warm fleet starts resident; the requested dispatch policy
+//! is used for validation, so the plan certifies the policy that will
+//! actually run. Mixed-device fleets are out of scope (one device
+//! type per plan — the ROADMAP lists heterogeneous fleets with the
+//! cross-machine distribution lever).
+
+use super::arrivals;
+use super::{simulate_fleet, BoardSpec, FleetCfg, FleetMetrics, Policy,
+            ProfileMatrix, QueueDiscipline};
+
+/// Planner inputs: the traffic contract and the search bounds.
+#[derive(Debug, Clone)]
+pub struct PlanCfg {
+    /// Target arrival rate (requests/second) across all models.
+    pub rate_rps: f64,
+    /// p99 latency objective (ms).
+    pub slo_ms: f64,
+    pub policy: Policy,
+    pub queue: QueueDiscipline,
+    /// Requests simulated per candidate fleet (the p99 sample size).
+    pub requests: usize,
+    /// Largest fleet considered per device type.
+    pub max_boards: usize,
+    pub seed: u64,
+}
+
+impl Default for PlanCfg {
+    fn default() -> Self {
+        PlanCfg {
+            rate_rps: 100.0,
+            slo_ms: 100.0,
+            policy: Policy::SloAware,
+            queue: QueueDiscipline::Fifo,
+            requests: 2000,
+            max_boards: 64,
+            seed: 0x4A8F,
+        }
+    }
+}
+
+/// A fleet composition the planner certified against the SLO.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    /// Device column of every board (homogeneous fleets: all equal).
+    pub device: usize,
+    pub boards: Vec<BoardSpec>,
+    /// Total relative cost (`boards · ProfileMatrix::costs[device]`).
+    pub cost: f64,
+    /// Metrics of the certifying simulation run.
+    pub metrics: FleetMetrics,
+}
+
+/// Planner outcome: the cheapest certified fleet, or why none exists
+/// within the search bounds.
+#[derive(Debug, Clone)]
+pub enum Verdict {
+    Feasible(FleetPlan),
+    Infeasible {
+        /// One line per rejected device type.
+        reasons: Vec<String>,
+    },
+}
+
+/// Relative board cost from the device's DSP count (board price scales
+/// roughly with logic capacity; zc706's 900 DSPs normalise to 1.0).
+pub fn board_cost(avail_dsp: f64) -> f64 {
+    avail_dsp / 900.0
+}
+
+/// Round-robin preload over the model mix: board `i` starts with
+/// design `i mod n_models`, so every model is resident somewhere as
+/// long as the fleet is at least as large as the mix.
+pub fn preload_round_robin(device: usize, n_boards: usize,
+                           n_models: usize) -> Vec<BoardSpec> {
+    (0..n_boards)
+        .map(|i| BoardSpec { device, preload: i % n_models })
+        .collect()
+}
+
+/// Search the cheapest fleet meeting `cfg.slo_ms` p99 at
+/// `cfg.rate_rps`. Deterministic: every candidate is validated with
+/// the same seeded arrival stream, and ties in cost break toward
+/// fewer boards, then device order.
+pub fn plan(profiles: &ProfileMatrix, cfg: &PlanCfg) -> Verdict {
+    let n_models = profiles.models.len();
+    let mut best: Option<FleetPlan> = None;
+    let mut reasons: Vec<String> = Vec::new();
+
+    for d in 0..profiles.devices.len() {
+        let dname = &profiles.devices[d];
+        // Every model in the mix must have a feasible design here.
+        let mut service: Vec<f64> = Vec::with_capacity(n_models);
+        let mut missing = None;
+        for m in 0..n_models {
+            match profiles.get(m, d) {
+                Some(p) => service.push(p.service_ms),
+                None => {
+                    missing = Some(m);
+                    break;
+                }
+            }
+        }
+        if let Some(m) = missing {
+            reasons.push(format!(
+                "{dname}: no feasible design for model {}",
+                profiles.models[m]));
+            continue;
+        }
+        // A single clip's service latency already floors the p99.
+        let worst = service.iter().cloned().fold(0.0, f64::max);
+        if worst > cfg.slo_ms {
+            reasons.push(format!(
+                "{dname}: service latency {worst:.2} ms exceeds the \
+                 {:.2} ms SLO — no board count can help",
+                cfg.slo_ms));
+            continue;
+        }
+        // Work conservation: λ · E[service] boards is the utilization
+        // = 1 floor under the uniform model mix.
+        let mean_ms =
+            service.iter().sum::<f64>() / service.len().max(1) as f64;
+        let lb = ((cfg.rate_rps * mean_ms / 1e3).ceil() as usize).max(1);
+        if lb > cfg.max_boards {
+            reasons.push(format!(
+                "{dname}: needs >= {lb} boards just to keep up with \
+                 {:.0} req/s (cap {})",
+                cfg.rate_rps, cfg.max_boards));
+            continue;
+        }
+        let arr = arrivals::poisson(cfg.requests, cfg.rate_rps,
+                                    n_models, cfg.seed);
+        let mut certified: Option<(usize, FleetMetrics)> = None;
+        let mut last_p99 = f64::NAN;
+        for n in lb..=cfg.max_boards {
+            let fc = FleetCfg {
+                boards: preload_round_robin(d, n, n_models),
+                policy: cfg.policy,
+                queue: cfg.queue,
+                slo_ms: cfg.slo_ms,
+            };
+            let met = simulate_fleet(profiles, &fc, &arr);
+            last_p99 = met.p99_ms;
+            if met.slo_met() {
+                certified = Some((n, met));
+                break;
+            }
+        }
+        match certified {
+            Some((n, met)) => {
+                let cost = n as f64 * profiles.costs[d];
+                let better = match &best {
+                    None => true,
+                    Some(b) => cost < b.cost,
+                };
+                if better {
+                    best = Some(FleetPlan {
+                        device: d,
+                        boards: preload_round_robin(d, n, n_models),
+                        cost,
+                        metrics: met,
+                    });
+                }
+            }
+            None => reasons.push(format!(
+                "{dname}: p99 {last_p99:.2} ms still above the {:.2} ms \
+                 SLO at the {}-board cap",
+                cfg.slo_ms, cfg.max_boards)),
+        }
+    }
+
+    match best {
+        Some(p) => Verdict::Feasible(p),
+        None => Verdict::Infeasible { reasons },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ServiceProfile;
+    use super::*;
+
+    fn matrix(service_ms: f64) -> ProfileMatrix {
+        let mut m = ProfileMatrix::new(vec!["a".into()],
+                                       vec!["dev".into()]);
+        m.set(0, 0, ServiceProfile { service_ms, reconfig_ms: 2.0 });
+        m
+    }
+
+    #[test]
+    fn plan_scales_boards_to_rate() {
+        // 10 ms service at 150 req/s is 1.5 boards of raw work: the
+        // plan needs at least 2 and must certify the SLO.
+        let m = matrix(10.0);
+        let cfg = PlanCfg {
+            rate_rps: 150.0,
+            slo_ms: 40.0,
+            requests: 1200,
+            ..PlanCfg::default()
+        };
+        match plan(&m, &cfg) {
+            Verdict::Feasible(p) => {
+                assert!(p.boards.len() >= 2, "{} boards", p.boards.len());
+                assert!(p.metrics.p99_ms <= 40.0);
+                assert!(p.cost > 0.0);
+                assert_eq!(p.device, 0);
+            }
+            Verdict::Infeasible { reasons } => {
+                panic!("expected feasible, got {reasons:?}")
+            }
+        }
+    }
+
+    #[test]
+    fn plan_rejects_service_above_slo() {
+        let m = matrix(50.0);
+        let cfg = PlanCfg {
+            rate_rps: 10.0,
+            slo_ms: 20.0,
+            ..PlanCfg::default()
+        };
+        let Verdict::Infeasible { reasons } = plan(&m, &cfg) else {
+            panic!("50 ms service can never meet a 20 ms p99");
+        };
+        assert!(reasons[0].contains("service latency"), "{reasons:?}");
+    }
+
+    #[test]
+    fn plan_respects_board_cap() {
+        let m = matrix(10.0);
+        let cfg = PlanCfg {
+            rate_rps: 10_000.0, // 100 boards of raw work
+            slo_ms: 50.0,
+            max_boards: 8,
+            ..PlanCfg::default()
+        };
+        let Verdict::Infeasible { reasons } = plan(&m, &cfg) else {
+            panic!("cap must make this infeasible");
+        };
+        assert!(reasons[0].contains("boards"), "{reasons:?}");
+    }
+
+    #[test]
+    fn plan_prefers_cheaper_device() {
+        // Two devices serve the load; the slower one costs a third as
+        // much and still meets the relaxed SLO, so it wins.
+        let mut m = ProfileMatrix::new(
+            vec!["a".into()],
+            vec!["big".into(), "small".into()]);
+        m.set(0, 0, ServiceProfile { service_ms: 5.0, reconfig_ms: 1.0 });
+        m.set(0, 1, ServiceProfile { service_ms: 10.0, reconfig_ms: 1.0 });
+        m.costs = vec![3.0, 1.0];
+        let cfg = PlanCfg {
+            rate_rps: 50.0,
+            slo_ms: 80.0,
+            requests: 1000,
+            ..PlanCfg::default()
+        };
+        let Verdict::Feasible(p) = plan(&m, &cfg) else {
+            panic!("feasible on both devices");
+        };
+        assert_eq!(p.device, 1, "cheaper device wins");
+    }
+
+    #[test]
+    fn board_cost_normalises_to_zc706() {
+        assert_eq!(board_cost(900.0), 1.0);
+        assert!(board_cost(2520.0) > board_cost(900.0));
+    }
+}

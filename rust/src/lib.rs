@@ -7,6 +7,7 @@ pub mod baselines;
 pub mod codegen;
 pub mod coordinator;
 pub mod device;
+pub mod fleet;
 pub mod model;
 pub mod optim;
 pub mod perf;

@@ -17,6 +17,7 @@ use crate::resource::ResourceModel;
 use crate::sched::{self, SchedCfg};
 use crate::sim::{self, SimCfg};
 use crate::synth;
+use crate::util::json::Json;
 use crate::util::stats::{ape, ape_std, mape};
 use crate::util::table::{num, Table};
 
@@ -596,14 +597,93 @@ pub struct SweepCfg {
     pub jobs: usize,
 }
 
-/// Run the sweep and render a table, one row per (model, device) pair
-/// in request order. Points are independent, so they are pulled from a
-/// shared queue by `jobs` worker threads; each point is itself
-/// deterministic for the seed (the multi-chain engine included), so
-/// the rendered table does not depend on scheduling. A point that
-/// fails (e.g. a model that cannot fit a device) reports its error in
-/// its row instead of aborting the sweep.
-pub fn sweep(cfg: &SweepCfg) -> Result<String, String> {
+/// One machine-readable design point of the sweep: everything the
+/// capacity planner (`fleet::planner`) and external tooling need —
+/// analytic + simulated latency, the design-switch cost, and the
+/// resource footprint.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub model: String,
+    pub device: String,
+    /// Analytic (predicted) per-clip latency, ms.
+    pub latency_ms: f64,
+    /// Cycle-approximate simulated per-clip latency, ms — the service
+    /// time fleet serving charges per request.
+    pub sim_ms: f64,
+    /// Full design-switch cost, ms (see `sim::DesignLatencyProfile`).
+    pub reconfig_ms: f64,
+    pub gops: f64,
+    pub dsp: f64,
+    pub bram: f64,
+    pub lut: f64,
+    pub ff: f64,
+    pub dsp_pct: f64,
+    pub sa_states: usize,
+}
+
+impl SweepPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("device", Json::Str(self.device.clone())),
+            ("latency_ms", Json::Num(self.latency_ms)),
+            ("sim_ms", Json::Num(self.sim_ms)),
+            ("reconfig_ms", Json::Num(self.reconfig_ms)),
+            ("gops", Json::Num(self.gops)),
+            ("dsp", Json::Num(self.dsp)),
+            ("bram", Json::Num(self.bram)),
+            ("lut", Json::Num(self.lut)),
+            ("ff", Json::Num(self.ff)),
+            ("dsp_pct", Json::Num(self.dsp_pct)),
+            ("sa_states", Json::Num(self.sa_states as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SweepPoint, String> {
+        let s = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or(format!("sweep point: missing string {k:?}"))
+        };
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or(format!("sweep point: missing number {k:?}"))
+        };
+        Ok(SweepPoint {
+            model: s("model")?,
+            device: s("device")?,
+            latency_ms: f("latency_ms")?,
+            sim_ms: f("sim_ms")?,
+            reconfig_ms: f("reconfig_ms")?,
+            gops: f("gops")?,
+            dsp: f("dsp")?,
+            bram: f("bram")?,
+            lut: f("lut")?,
+            ff: f("ff")?,
+            dsp_pct: f("dsp_pct")?,
+            sa_states: f("sa_states")? as usize,
+        })
+    }
+}
+
+/// One sweep row: the requested pair and its outcome (an error row —
+/// e.g. a model that cannot fit a device — does not sink the sweep).
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub model: String,
+    pub device: String,
+    pub point: Result<SweepPoint, String>,
+}
+
+/// Run the sweep: every (model, device) pair through the DSE (+ one
+/// cycle-simulator pass for the serving profile), in request order.
+/// Points are independent, so they are pulled from a shared queue by
+/// `jobs` worker threads; each point is itself deterministic for the
+/// seed (the multi-chain engine included), so the results do not
+/// depend on scheduling.
+pub fn sweep_points(cfg: &SweepCfg) -> Result<Vec<SweepRow>, String> {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Mutex;
 
@@ -618,13 +698,10 @@ pub fn sweep(cfg: &SweepCfg) -> Result<String, String> {
     }
     let rm = ResourceModel::default_fit();
     let n = pairs.len();
-    // Per point: the DSE outcome plus its GOps/s (computed worker-side
-    // so file-loaded models need not be re-parsed for rendering).
-    let results: Mutex<Vec<Option<Result<(OptResult, f64), String>>>> =
+    let results: Mutex<Vec<Option<Result<SweepPoint, String>>>> =
         Mutex::new(vec![None; n]);
     let next = AtomicUsize::new(0);
     let workers = cfg.jobs.max(1).min(n);
-    let t0 = std::time::Instant::now();
 
     std::thread::scope(|scope| {
         for _ in 0..workers {
@@ -645,56 +722,168 @@ pub fn sweep(cfg: &SweepCfg) -> Result<String, String> {
                     let r = optim::parallel::optimize_parallel(
                         &model, &dev, &rm, cfg.opt.clone(), &par)?;
                     let g = gops(&model, r.latency_ms);
-                    Ok((r, g))
+                    let prof = sim::design_profile(
+                        &model, &r.design, &dev, &SchedCfg::default(),
+                        &SimCfg::default());
+                    Ok(SweepPoint {
+                        model: mname.clone(),
+                        device: dname.clone(),
+                        latency_ms: r.latency_ms,
+                        sim_ms: prof.service_ms,
+                        reconfig_ms: prof.reconfig_ms,
+                        gops: g,
+                        dsp: r.resources.dsp,
+                        bram: r.resources.bram,
+                        lut: r.resources.lut,
+                        ff: r.resources.ff,
+                        dsp_pct: 100.0 * r.resources.dsp / dev.avail.dsp,
+                        sa_states: r.iterations,
+                    })
                 })();
                 results.lock().unwrap()[i] = Some(out);
             });
         }
     });
 
-    let elapsed = t0.elapsed().as_secs_f64();
     let results = results.into_inner().map_err(|_| "sweep poisoned")?;
+    Ok(pairs
+        .into_iter()
+        .zip(results)
+        .map(|((model, device), point)| SweepRow {
+            model,
+            device,
+            point: point.unwrap_or(Err("not scheduled".into())),
+        })
+        .collect())
+}
+
+/// Render the human table for a set of sweep rows.
+pub fn sweep_table(cfg: &SweepCfg, rows: &[SweepRow], elapsed_s: f64)
+    -> String {
     let mut t = Table::new(&format!(
-        "Sweep — {} models x {} devices, {} chain(s)/point, {} worker(s)",
-        cfg.models.len(), cfg.devices.len(), cfg.chains.max(1), workers,
+        "Sweep — {} models x {} devices, {} chain(s)/point, {} job(s)",
+        cfg.models.len(), cfg.devices.len(), cfg.chains.max(1),
+        cfg.jobs.max(1),
     ))
-    .header(&["Model", "Device", "Lat/clip (ms)", "GOps/s",
+    .header(&["Model", "Device", "Lat/clip (ms)", "Sim (ms)", "GOps/s",
               "GOps/s/DSP", "DSP %", "SA states"]);
     let mut total_states = 0usize;
-    for (i, (mname, dname)) in pairs.iter().enumerate() {
-        match &results[i] {
-            Some(Ok((r, g))) => {
-                let dev = device::by_name(dname).expect("checked above");
-                let g = *g;
-                total_states += r.iterations;
+    for row in rows {
+        match &row.point {
+            Ok(p) => {
+                total_states += p.sa_states;
                 t.row(vec![
-                    mname.clone(),
-                    dname.clone(),
-                    num(r.latency_ms, 2),
-                    num(g, 2),
-                    num(g / r.resources.dsp, 3),
-                    num(100.0 * r.resources.dsp / dev.avail.dsp, 1),
-                    format!("{}", r.iterations),
+                    row.model.clone(),
+                    row.device.clone(),
+                    num(p.latency_ms, 2),
+                    num(p.sim_ms, 2),
+                    num(p.gops, 2),
+                    num(p.gops / p.dsp, 3),
+                    num(p.dsp_pct, 1),
+                    format!("{}", p.sa_states),
                 ]);
             }
-            Some(Err(e)) => {
-                t.row(vec![mname.clone(), dname.clone(),
+            Err(e) => {
+                t.row(vec![row.model.clone(), row.device.clone(),
                            format!("error: {e}"), "-".into(), "-".into(),
-                           "-".into(), "-".into()]);
-            }
-            None => {
-                t.row(vec![mname.clone(), dname.clone(),
-                           "error: not scheduled".into(), "-".into(),
                            "-".into(), "-".into(), "-".into()]);
             }
         }
     }
-    Ok(format!(
+    format!(
         "{}sweep: {} points in {:.1}s, {} SA states total \
          ({:.0} states/s aggregate)\n",
-        t.render(), n, elapsed, total_states,
-        total_states as f64 / elapsed.max(1e-9),
+        t.render(), rows.len(), elapsed_s, total_states,
+        total_states as f64 / elapsed_s.max(1e-9),
+    )
+}
+
+/// JSON-lines serialisation of the sweep (one object per point; error
+/// rows carry an `"error"` field) — the `sweep --out` format the
+/// capacity planner and external tooling consume.
+pub fn sweep_jsonl(rows: &[SweepRow]) -> String {
+    let mut out = String::new();
+    for row in rows {
+        let line = match &row.point {
+            Ok(p) => p.to_json(),
+            Err(e) => Json::obj(vec![
+                ("model", Json::Str(row.model.clone())),
+                ("device", Json::Str(row.device.clone())),
+                ("error", Json::Str(e.clone())),
+            ]),
+        };
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Run the sweep and render the table (the CLI's plain path).
+pub fn sweep(cfg: &SweepCfg) -> Result<String, String> {
+    let t0 = std::time::Instant::now();
+    let rows = sweep_points(cfg)?;
+    Ok(sweep_table(cfg, &rows, t0.elapsed().as_secs_f64()))
+}
+
+// ------------------------------------------------------------------------
+// Fleet — beyond the paper: serving-scale metrics (queueing, dispatch,
+// utilization) over the optimised designs, via `fleet::simulate_fleet`.
+// ------------------------------------------------------------------------
+
+pub fn fleet_rep(cfg: &ReportCfg) -> String {
+    use crate::fleet::{self, arrivals, planner};
+
+    let rm = ResourceModel::default_fit();
+    let m = zoo::c3d();
+    let dev = device::by_name("zcu102").unwrap();
+    let r = cfg.optimize(&m, &dev, &rm);
+    let prof = sim::design_profile(&m, &r.design, &dev,
+                                   &SchedCfg::default(),
+                                   &SimCfg::default());
+    let mut mx = fleet::ProfileMatrix::new(vec![m.name.clone()],
+                                           vec![dev.name.to_string()]);
+    mx.set(0, 0, fleet::ServiceProfile {
+        service_ms: prof.service_ms,
+        reconfig_ms: prof.reconfig_ms,
+    });
+    mx.costs = vec![planner::board_cost(dev.avail.dsp)];
+
+    let boards = 4usize;
+    let cap_rps = boards as f64 / (prof.service_ms / 1e3);
+    let mut t = Table::new(&format!(
+        "Fleet — C3D @ {} x{boards} boards (service {:.2} ms/clip, \
+         switch {:.2} ms)",
+        dev.name, prof.service_ms, prof.reconfig_ms,
     ))
+    .header(&["Policy", "Load", "Rate (r/s)", "p50 (ms)", "p95 (ms)",
+              "p99 (ms)", "Thru (r/s)", "Util %"]);
+    for policy in [fleet::Policy::RoundRobin, fleet::Policy::LeastLoaded,
+                   fleet::Policy::SloAware] {
+        for load in [0.5, 0.8, 0.95] {
+            let rate = load * cap_rps;
+            let arr = arrivals::poisson(1500, rate, 1, cfg.seed);
+            let fc = fleet::FleetCfg {
+                boards: planner::preload_round_robin(0, boards, 1),
+                policy,
+                queue: fleet::QueueDiscipline::Fifo,
+                slo_ms: 4.0 * prof.service_ms,
+            };
+            let met = fleet::simulate_fleet(&mx, &fc, &arr);
+            t.row(vec![
+                policy.name().into(),
+                format!("{:.0}%", load * 100.0),
+                num(rate, 1),
+                num(met.p50_ms, 2),
+                num(met.p95_ms, 2),
+                num(met.p99_ms, 2),
+                num(met.throughput_rps, 1),
+                num(100.0 * met.mean_utilization(), 1),
+            ]);
+        }
+    }
+    format!("{}queueing: percentiles grow with load; SLO-aware \
+             dispatch tracks least-loaded on a single-model fleet\n",
+            t.render())
 }
 
 /// Run every report in paper order.
@@ -739,6 +928,7 @@ pub fn by_name(which: &str, cfg: &ReportCfg) -> Option<String> {
         "fig8" => fig8(cfg),
         "ablation" => ablation(cfg),
         "ext" => ext(cfg),
+        "fleet" => fleet_rep(cfg),
         "all" => all(cfg),
         _ => return None,
     })

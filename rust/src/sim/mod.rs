@@ -158,6 +158,41 @@ pub fn simulate(model: &ModelGraph, design: &Design, dev: &Device,
     }
 }
 
+/// Reusable per-clip serving profile of one optimised design on one
+/// device — the quantity the fleet-serving simulator (`crate::fleet`)
+/// charges per request, derived once here instead of every consumer
+/// re-running the cycle simulator.
+#[derive(Debug, Clone)]
+pub struct DesignLatencyProfile {
+    pub model: String,
+    pub device: String,
+    /// Cycle-approximate per-clip service latency (ms).
+    pub service_ms: f64,
+    /// Full design-switch cost (ms): when a board changes design,
+    /// every invocation's crossbar + runtime parameters are
+    /// re-programmed with no compute to hide behind, i.e.
+    /// `reconfig_cycles` per invocation of the new schedule.
+    pub reconfig_ms: f64,
+    /// Invocation count of the schedule (the switch-cost driver).
+    pub invocations: usize,
+}
+
+/// Profile a design for serving: one simulator pass yields the
+/// per-clip service latency and the design-switch cost.
+pub fn design_profile(model: &ModelGraph, design: &Design, dev: &Device,
+                      scfg: &SchedCfg, cfg: &SimCfg)
+    -> DesignLatencyProfile {
+    let rep = simulate(model, design, dev, scfg, cfg);
+    DesignLatencyProfile {
+        model: model.name.clone(),
+        device: dev.name.to_string(),
+        service_ms: rep.ms(dev),
+        reconfig_ms: rep.invocations as f64 * cfg.reconfig_cycles
+            / dev.cycles_per_ms(),
+        invocations: rep.invocations,
+    }
+}
+
 /// Board power model (Table VI): static + dynamic per active resource
 /// + DMA/DDR activity. Calibrated to the paper's ZCU106 measurement
 /// (9.44 W for the C3D design).
@@ -285,6 +320,28 @@ mod tests {
         let s: f64 = r.per_layer.iter().sum();
         assert!((s - r.cycles).abs() < 1e-6);
         assert!(r.words_moved > 0.0);
+    }
+
+    #[test]
+    fn design_profile_matches_simulate() {
+        // The profile is a pure projection of one simulator pass: the
+        // service latency equals the simulated clip latency bit-for-bit
+        // and the switch cost is reconfig_cycles per invocation.
+        let m = zoo::c3d_tiny();
+        let dev = device::by_name("zcu102").unwrap();
+        let d = crate::sdf::Design::initial(&m);
+        let scfg = SchedCfg::default();
+        let cfg = SimCfg::default();
+        let rep = simulate(&m, &d, &dev, &scfg, &cfg);
+        let p = design_profile(&m, &d, &dev, &scfg, &cfg);
+        assert_eq!(p.service_ms.to_bits(), rep.ms(&dev).to_bits());
+        assert_eq!(p.invocations, rep.invocations);
+        let expect = rep.invocations as f64 * cfg.reconfig_cycles
+            / dev.cycles_per_ms();
+        assert_eq!(p.reconfig_ms.to_bits(), expect.to_bits());
+        assert!(p.reconfig_ms > 0.0 && p.service_ms > 0.0);
+        assert_eq!(p.model, "c3d_tiny");
+        assert_eq!(p.device, "zcu102");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Self-contained substrates the toolflow depends on.
 //!
 //! The build environment is fully offline (DESIGN.md §8): only the
-//! `xla`/`anyhow`/`thiserror` crates are available, so the PRNG, JSON
+//! `xla`/`anyhow` crates are available, so the PRNG, JSON
 //! codec, CLI parser, statistics and table formatting the toolflow
 //! needs are implemented here from scratch.
 

@@ -80,6 +80,16 @@ impl Rng {
         &xs[self.below(xs.len())]
     }
 
+    /// Exponential variate with the given rate (events per unit time)
+    /// via inversion — the inter-arrival time of a Poisson process.
+    /// `rate` must be > 0; the draw is in the same time unit as
+    /// `1/rate` and is strictly positive.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        // 1 - uniform() is in (0, 1], so ln() is finite and <= 0.
+        -(1.0 - self.uniform()).ln() / rate
+    }
+
     /// Standard normal via Box–Muller (one value per call, the pair's
     /// second half discarded — simplicity over throughput here).
     pub fn normal(&mut self) -> f64 {
@@ -177,6 +187,19 @@ mod tests {
         assert_eq!(stream_seed(123, 5), stream_seed(123, 5));
         assert_eq!(stream_seed(123, 0), 123);
         assert_ne!(stream_seed(123, 1), 123);
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        // Mean of Exp(rate) is 1/rate; 100k draws pin it to ~1%.
+        let mut r = Rng::new(11);
+        let rate = 250.0;
+        let n = 100_000;
+        let mean: f64 =
+            (0..n).map(|_| r.exponential(rate)).sum::<f64>() / n as f64;
+        assert!((mean * rate - 1.0).abs() < 0.02, "mean {mean}");
+        let mut r2 = Rng::new(11);
+        assert!(r2.exponential(1.0) > 0.0);
     }
 
     #[test]

@@ -43,6 +43,25 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
+/// Nearest-rank percentile (`p` in [0, 100]) over unsorted samples —
+/// the convention of `coordinator::Metrics::percentile`, shared by the
+/// fleet-serving latency metrics. Returns 0 for an empty slice.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    percentile_sorted(&v, p)
+}
+
+/// [`percentile`] over an already ascending-sorted slice — callers
+/// that need several percentiles sort once and index repeatedly.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p / 100.0).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
 /// Ordinary least squares: solve `min ||X beta - y||` via the normal
 /// equations with Gaussian elimination + partial pivoting and a small
 /// ridge term for rank safety. `x` is row-major, `n_features` columns.
@@ -130,6 +149,20 @@ mod tests {
     fn std_dev_known() {
         let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.5], 99.0), 7.5);
+        let sorted = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile_sorted(&sorted, 50.0),
+                   percentile(&sorted, 50.0));
+        assert_eq!(percentile_sorted(&[], 10.0), 0.0);
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! Fleet-serving integration tests: the simulator against the
+//! single-clip simulator it is built on, seed-reproducibility of the
+//! whole pipeline, arrival statistics, and the capacity planner's
+//! feasible/infeasible verdicts (the ISSUE 3 acceptance pins).
+
+use harflow3d::device;
+use harflow3d::fleet::{self, arrivals, planner, BoardSpec, FleetCfg,
+                       Policy, ProfileMatrix, QueueDiscipline, Request,
+                       ServiceProfile};
+use harflow3d::model::zoo;
+use harflow3d::optim::{self, OptCfg};
+use harflow3d::resource::ResourceModel;
+use harflow3d::sched::SchedCfg;
+use harflow3d::sim::{self, SimCfg};
+
+/// DSE + profile for a small real design point (shared fixture).
+fn c3d_tiny_profile() -> (ProfileMatrix, sim::DesignLatencyProfile) {
+    let m = zoo::c3d_tiny();
+    let dev = device::by_name("zcu102").unwrap();
+    let rm = ResourceModel::fit(2, 150);
+    let r = optim::optimize(&m, &dev, &rm, OptCfg::fast(3)).unwrap();
+    let prof = sim::design_profile(&m, &r.design, &dev,
+                                   &SchedCfg::default(),
+                                   &SimCfg::default());
+    let mut mx = ProfileMatrix::new(vec![prof.model.clone()],
+                                    vec![prof.device.clone()]);
+    mx.set(0, 0, ServiceProfile {
+        service_ms: prof.service_ms,
+        reconfig_ms: prof.reconfig_ms,
+    });
+    (mx, prof)
+}
+
+#[test]
+fn single_request_latency_equals_sim_per_clip_latency() {
+    // One warm board, one request, empty queue: the serving latency is
+    // exactly the per-clip latency the cycle simulator reports —
+    // bit-identical, no queueing or switch cost on top.
+    let (mx, prof) = c3d_tiny_profile();
+    let cfg = FleetCfg {
+        boards: vec![BoardSpec { device: 0, preload: 0 }],
+        policy: Policy::SloAware,
+        queue: QueueDiscipline::Fifo,
+        slo_ms: 1e9,
+    };
+    let arr = vec![Request { id: 0, model: 0, arrival_ms: 5.0 }];
+    let met = fleet::simulate_fleet(&mx, &cfg, &arr);
+    assert_eq!(met.completed, 1);
+    // latency = (5.0 + service) - 5.0 == service exactly in f64 for
+    // this magnitude? Not in general — compare against the same
+    // arithmetic instead of assuming cancellation.
+    let expect = (5.0 + prof.service_ms) - 5.0;
+    assert_eq!(met.p50_ms.to_bits(), expect.to_bits());
+    assert_eq!(met.p99_ms.to_bits(), expect.to_bits());
+    assert!((met.p50_ms - prof.service_ms).abs()
+                <= 1e-12 * prof.service_ms.max(1.0),
+            "fleet {} vs sim {}", met.p50_ms, prof.service_ms);
+    assert_eq!(met.switches, 0, "warm board never reconfigures");
+}
+
+#[test]
+fn same_seed_runs_are_bit_identical() {
+    let (mx, _) = c3d_tiny_profile();
+    let cfg = FleetCfg {
+        boards: (0..3).map(|_| BoardSpec { device: 0, preload: 0 })
+            .collect(),
+        policy: Policy::LeastLoaded,
+        queue: QueueDiscipline::Fifo,
+        slo_ms: 50.0,
+    };
+    let run = |seed: u64| {
+        let arr = arrivals::poisson(800, 400.0, 1, seed);
+        fleet::simulate_fleet(&mx, &cfg, &arr)
+    };
+    let a = run(7);
+    let b = run(7);
+    assert_eq!(a.p50_ms.to_bits(), b.p50_ms.to_bits());
+    assert_eq!(a.p95_ms.to_bits(), b.p95_ms.to_bits());
+    assert_eq!(a.p99_ms.to_bits(), b.p99_ms.to_bits());
+    assert_eq!(a.mean_ms.to_bits(), b.mean_ms.to_bits());
+    assert_eq!(a.throughput_rps.to_bits(), b.throughput_rps.to_bits());
+    assert_eq!(a.makespan_ms.to_bits(), b.makespan_ms.to_bits());
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.switches, b.switches);
+    assert_eq!(a.events, b.events);
+    for (x, y) in a.boards.iter().zip(&b.boards) {
+        assert_eq!(x.utilization.to_bits(), y.utilization.to_bits());
+        assert_eq!(x.completed, y.completed);
+    }
+    // A different seed must actually change the outcome (makespan
+    // tracks the arrival times, which the seed pins).
+    let c = run(8);
+    assert_ne!(a.makespan_ms.to_bits(), c.makespan_ms.to_bits());
+}
+
+#[test]
+fn poisson_stream_matches_configured_rate() {
+    // Jitter-free check at the fleet level: simulated throughput of an
+    // underloaded fleet tracks the configured arrival rate (every
+    // request completes, so completions/sec ~= arrivals/sec).
+    let mut mx = ProfileMatrix::new(vec!["a".into()], vec!["d".into()]);
+    mx.set(0, 0, ServiceProfile { service_ms: 2.0, reconfig_ms: 1.0 });
+    let cfg = FleetCfg {
+        boards: (0..4).map(|_| BoardSpec { device: 0, preload: 0 })
+            .collect(),
+        policy: Policy::LeastLoaded,
+        queue: QueueDiscipline::Fifo,
+        slo_ms: 100.0,
+    };
+    let rate = 500.0;
+    let arr = arrivals::poisson(20_000, rate, 1, 11);
+    let met = fleet::simulate_fleet(&mx, &cfg, &arr);
+    assert_eq!(met.completed, 20_000);
+    assert!((met.throughput_rps - rate).abs() < 0.05 * rate,
+            "throughput {} vs configured rate {rate}",
+            met.throughput_rps);
+    // Mean inter-arrival time within 5% of 1/rate.
+    let mean_gap_ms = arr.last().unwrap().arrival_ms / arr.len() as f64;
+    assert!((mean_gap_ms - 2.0).abs() < 0.1,
+            "mean inter-arrival {mean_gap_ms} ms, expected ~2 ms");
+}
+
+#[test]
+fn utilization_and_percentiles_are_consistent() {
+    let (mx, prof) = c3d_tiny_profile();
+    let boards = 4usize;
+    // ~60% load on the fleet.
+    let rate = 0.6 * boards as f64 / (prof.service_ms / 1e3);
+    let cfg = FleetCfg {
+        boards: (0..boards).map(|_| BoardSpec { device: 0, preload: 0 })
+            .collect(),
+        policy: Policy::SloAware,
+        queue: QueueDiscipline::Fifo,
+        slo_ms: 20.0 * prof.service_ms,
+    };
+    let arr = arrivals::poisson(2_000, rate, 1, 13);
+    let met = fleet::simulate_fleet(&mx, &cfg, &arr);
+    assert_eq!(met.completed + met.dropped, 2_000);
+    assert_eq!(met.dropped, 0);
+    assert!(met.p50_ms <= met.p95_ms && met.p95_ms <= met.p99_ms);
+    assert!(met.p99_ms <= met.max_ms);
+    assert!(met.p50_ms >= prof.service_ms,
+            "latency can never beat the service time");
+    for b in &met.boards {
+        assert!(b.utilization > 0.0 && b.utilization <= 1.0);
+    }
+    let mean_util = met.mean_utilization();
+    assert!(mean_util > 0.3 && mean_util < 0.95,
+            "~60% offered load, got {mean_util}");
+}
+
+#[test]
+fn planner_meets_slo_or_reports_infeasible() {
+    // Acceptance pin: the planner either outputs a composition whose
+    // certifying simulation meets the SLO, or a clear verdict.
+    let (mx, prof) = c3d_tiny_profile();
+    let slo = 4.0 * prof.service_ms;
+    let rate = 2.5 / (prof.service_ms / 1e3); // 2.5 boards of raw work
+    let pcfg = planner::PlanCfg {
+        rate_rps: rate,
+        slo_ms: slo,
+        policy: Policy::SloAware,
+        queue: QueueDiscipline::Fifo,
+        requests: 1_000,
+        max_boards: 32,
+        seed: 7,
+    };
+    match planner::plan(&mx, &pcfg) {
+        planner::Verdict::Feasible(p) => {
+            assert!(p.boards.len() >= 3,
+                    "2.5 boards of work needs >= 3 boards, got {}",
+                    p.boards.len());
+            assert!(p.metrics.p99_ms <= slo);
+            assert!(p.cost > 0.0);
+        }
+        planner::Verdict::Infeasible { reasons } => {
+            panic!("moderate load must be plannable: {reasons:?}")
+        }
+    }
+    // Impossible contract: SLO below the single-clip service latency.
+    let impossible = planner::PlanCfg {
+        slo_ms: 0.5 * prof.service_ms,
+        ..pcfg.clone()
+    };
+    let planner::Verdict::Infeasible { reasons } =
+        planner::plan(&mx, &impossible)
+    else {
+        panic!("sub-service SLO cannot be feasible");
+    };
+    assert!(reasons[0].contains("service latency"), "{reasons:?}");
+}
+
+#[test]
+fn planner_is_deterministic() {
+    let (mx, prof) = c3d_tiny_profile();
+    let pcfg = planner::PlanCfg {
+        rate_rps: 1.8 / (prof.service_ms / 1e3),
+        slo_ms: 5.0 * prof.service_ms,
+        policy: Policy::SloAware,
+        queue: QueueDiscipline::Fifo,
+        requests: 600,
+        max_boards: 16,
+        seed: 21,
+    };
+    let (a, b) = (planner::plan(&mx, &pcfg), planner::plan(&mx, &pcfg));
+    match (a, b) {
+        (planner::Verdict::Feasible(x), planner::Verdict::Feasible(y)) => {
+            assert_eq!(x.boards.len(), y.boards.len());
+            assert_eq!(x.device, y.device);
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+            assert_eq!(x.metrics.p99_ms.to_bits(),
+                       y.metrics.p99_ms.to_bits());
+        }
+        (planner::Verdict::Infeasible { .. },
+         planner::Verdict::Infeasible { .. }) => {}
+        _ => panic!("verdict flipped between identical runs"),
+    }
+}
+
+#[test]
+fn sweep_points_feed_the_fleet_pipeline() {
+    // End-to-end: report::sweep_points -> JSON-lines -> parsed back ->
+    // profile matrix -> simulation, the `sweep --out` + `fleet
+    // --profiles` path, without touching the filesystem.
+    use harflow3d::report::{self, SweepPoint};
+    let cfg = report::SweepCfg {
+        models: vec!["c3d_tiny".into()],
+        devices: vec!["zcu102".into()],
+        opt: OptCfg::fast(3),
+        chains: 1,
+        exchange_every: 32,
+        jobs: 1,
+    };
+    let rows = report::sweep_points(&cfg).unwrap();
+    assert_eq!(rows.len(), 1);
+    let jsonl = report::sweep_jsonl(&rows);
+    let parsed = SweepPoint::from_json(
+        &harflow3d::util::json::Json::parse(jsonl.trim()).unwrap())
+        .unwrap();
+    let orig = rows[0].point.as_ref().unwrap();
+    assert_eq!(parsed.model, "c3d_tiny");
+    assert_eq!(parsed.device, "zcu102");
+    assert_eq!(parsed.sim_ms.to_bits(), orig.sim_ms.to_bits());
+    assert_eq!(parsed.reconfig_ms.to_bits(), orig.reconfig_ms.to_bits());
+    assert!(parsed.sim_ms >= parsed.latency_ms,
+            "simulated latency only adds overheads");
+
+    let mut mx = ProfileMatrix::new(vec![parsed.model.clone()],
+                                    vec![parsed.device.clone()]);
+    mx.set(0, 0, ServiceProfile {
+        service_ms: parsed.sim_ms,
+        reconfig_ms: parsed.reconfig_ms,
+    });
+    let cfg = FleetCfg {
+        boards: planner::preload_round_robin(0, 2, 1),
+        policy: Policy::RoundRobin,
+        queue: QueueDiscipline::Fifo,
+        slo_ms: 10.0 * parsed.sim_ms,
+    };
+    let arr = arrivals::poisson(200, 100.0, 1, 5);
+    let met = fleet::simulate_fleet(&mx, &cfg, &arr);
+    assert_eq!(met.completed, 200);
+    assert!(met.p50_ms >= parsed.sim_ms);
+}
