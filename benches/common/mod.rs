@@ -35,6 +35,10 @@ pub struct BenchResult {
     /// Simulated p99 request latency (fleet benches only, ms) — a
     /// correctness-trajectory marker next to the throughput number.
     pub p99_ms: Option<f64>,
+    /// Clip-batching cap of the scenario (fleet benches only): clips
+    /// per invocation sequence, 1 = batching off. Lets the regression
+    /// gate compare like-for-like rows as the batch dimension grows.
+    pub batch: Option<usize>,
 }
 
 #[allow(dead_code)]
@@ -60,6 +64,9 @@ impl BenchResult {
         }
         if let Some(p99) = self.p99_ms {
             s.push_str(&format!(",\"p99_ms\":{p99:.4}"));
+        }
+        if let Some(b) = self.batch {
+            s.push_str(&format!(",\"batch\":{b}"));
         }
         s.push('}');
         s
@@ -104,6 +111,7 @@ pub fn bench_rec<F: FnMut()>(name: &str, iters: usize, mut f: F)
         chains: None,
         events_per_sec: None,
         p99_ms: None,
+        batch: None,
     }
 }
 

@@ -7,18 +7,21 @@
 //! each simulator row carries `events_per_sec` — the number the CI
 //! regression gate watches — plus the simulated `p99_ms` as a
 //! correctness-trajectory marker (a p99 shift without a code reason is
-//! a modelling regression even when throughput holds).
+//! a modelling regression even when throughput holds) and, on batched
+//! scenarios, the `batch` cap so rows compare like-for-like across
+//! the batching dimension.
 
 mod common;
 
 use std::cell::Cell;
 
-use harflow3d::fleet::{self, arrivals, planner, BoardSpec, FleetCfg,
-                       Policy, ProfileMatrix, QueueDiscipline,
-                       ServiceProfile};
+use harflow3d::fleet::{self, arrivals, planner, BatchCfg, BoardSpec,
+                       FleetCfg, Policy, ProfileMatrix,
+                       QueueDiscipline, ServiceProfile};
 
 /// Canned profile grid: `n_models` designs on one device, 8/12 ms
-/// service, 25 ms design switch — C3D-tiny-scale numbers.
+/// service with a 3 ms pipeline-fill slice, 25 ms design switch —
+/// C3D-tiny-scale numbers.
 fn canned_matrix(n_models: usize) -> ProfileMatrix {
     let models = (0..n_models).map(|i| format!("m{i}")).collect();
     let mut mx = ProfileMatrix::new(models, vec!["dev".into()]);
@@ -26,6 +29,7 @@ fn canned_matrix(n_models: usize) -> ProfileMatrix {
         mx.set(m, 0, ServiceProfile {
             service_ms: if m % 2 == 0 { 8.0 } else { 12.0 },
             reconfig_ms: 25.0,
+            fill_ms: 3.0,
         });
     }
     mx
@@ -37,23 +41,27 @@ fn main() {
     let iters = if quick { 2 } else { 5 };
     let mut results = Vec::new();
 
-    // (name, models, boards, policy, mean effective cost ms). The last
-    // term sets the arrival rate for ~85% utilization: 10 ms mean
-    // service, plus — for least-loaded with 2 models, which ignores
-    // design affinity — the ~12.5 ms expected reconfiguration half the
-    // requests pay (25 ms switch x P(mismatch)~0.5). Without the
-    // derating that scenario saturates and its p99 becomes a
+    // (name, models, boards, policy, batch cap, mean effective cost
+    // ms). The last term sets the arrival rate for ~85% utilization:
+    // 10 ms mean service, plus — for least-loaded with 2 models, which
+    // ignores design affinity — the ~12.5 ms expected reconfiguration
+    // half the requests pay (25 ms switch x P(mismatch)~0.5). Without
+    // the derating that scenario saturates and its p99 becomes a
     // run-length artifact instead of a queueing marker. SLO-aware
     // keeps designs resident, so it stays at the plain service cost.
-    let scenarios: &[(&str, usize, usize, Policy, f64)] = &[
+    // The batch-4 scenario keeps the unbatched rate, so its rows show
+    // the fill amortisation relieving the same offered load.
+    let scenarios: &[(&str, usize, usize, Policy, usize, f64)] = &[
         ("fleet/sim 8 boards round-robin 1 model", 1, 8,
-         Policy::RoundRobin, 10.0),
+         Policy::RoundRobin, 1, 10.0),
         ("fleet/sim 8 boards slo-aware 2 models", 2, 8, Policy::SloAware,
-         10.0),
+         1, 10.0),
         ("fleet/sim 32 boards least-loaded 2 models", 2, 32,
-         Policy::LeastLoaded, 22.5),
+         Policy::LeastLoaded, 1, 22.5),
+        ("fleet/sim 8 boards slo-aware 2 models batch4", 2, 8,
+         Policy::SloAware, 4, 10.0),
     ];
-    for &(name, n_models, n_boards, policy, cost_ms) in scenarios {
+    for &(name, n_models, n_boards, policy, batch, cost_ms) in scenarios {
         let mx = canned_matrix(n_models);
         // ~85% fleet utilization — deep enough queues that the heap
         // and dispatch paths do real work, but stable.
@@ -66,6 +74,7 @@ fn main() {
             policy,
             queue: QueueDiscipline::Fifo,
             slo_ms: 60.0,
+            batch: BatchCfg::new(batch, 0.0),
         };
         let events = Cell::new(0usize);
         let p99 = Cell::new(0.0f64);
@@ -77,31 +86,53 @@ fn main() {
         });
         b.events_per_sec = Some(events.get() as f64 / b.mean_s);
         b.p99_ms = Some(p99.get());
+        b.batch = Some(batch);
         results.push(b);
     }
 
-    // Planner end-to-end: board-count search + certification sims.
-    let mx = canned_matrix(2);
-    let pcfg = planner::PlanCfg {
-        rate_rps: 900.0,
-        slo_ms: 60.0,
-        policy: Policy::SloAware,
-        queue: QueueDiscipline::Fifo,
-        requests: if quick { 2_000 } else { 10_000 },
-        max_boards: 64,
-        seed: 7,
-    };
-    let p99 = Cell::new(0.0f64);
-    let mut b = common::bench_rec("fleet/planner 2 models 900 rps",
-                                  iters, || {
-        let v = planner::plan(&mx, &pcfg);
-        if let planner::Verdict::Feasible(plan) = &v {
-            p99.set(plan.metrics.p99_ms);
-        }
-        std::hint::black_box(&v);
-    });
-    b.p99_ms = Some(p99.get());
-    results.push(b);
+    // Planner end-to-end: board-count search + certification sims,
+    // homogeneous and mixed (two device types: the canned device plus
+    // a half-speed, cheaper sibling).
+    let base = canned_matrix(2);
+    let mut grown = ProfileMatrix::new(
+        base.models.clone(),
+        vec!["dev".into(), "dev-small".into()]);
+    grown.costs = vec![2.0, 1.0];
+    for m in 0..2 {
+        let p = base.get(m, 0).unwrap();
+        grown.set(m, 0, p);
+        grown.set(m, 1, ServiceProfile {
+            service_ms: 2.0 * p.service_ms,
+            reconfig_ms: p.reconfig_ms,
+            fill_ms: 2.0 * p.fill_ms,
+        });
+    }
+    for (name, mixed) in [
+        ("fleet/planner 2 models 900 rps", false),
+        ("fleet/planner 2 models 900 rps mixed", true),
+    ] {
+        let pcfg = planner::PlanCfg {
+            rate_rps: 900.0,
+            slo_ms: 60.0,
+            policy: Policy::SloAware,
+            queue: QueueDiscipline::Fifo,
+            batch: BatchCfg::default(),
+            requests: if quick { 2_000 } else { 10_000 },
+            max_boards: 64,
+            mixed,
+            seed: 7,
+        };
+        let p99 = Cell::new(0.0f64);
+        let mut b = common::bench_rec(name, iters, || {
+            let v = planner::plan(&grown, &pcfg);
+            if let planner::Verdict::Feasible(plan) = &v {
+                p99.set(plan.metrics.p99_ms);
+            }
+            std::hint::black_box(&v);
+        });
+        b.p99_ms = Some(p99.get());
+        results.push(b);
+    }
 
     for r in &results {
         println!("{}", r.json_line());

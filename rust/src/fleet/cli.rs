@@ -1,0 +1,596 @@
+//! The `fleet` CLI subcommand, as a library function so argument
+//! validation and the rendered output are unit-testable (the launcher
+//! in `main.rs` only parses `std::env::args` and prints).
+//!
+//! Grammar (see `main.rs` for the full launcher grammar):
+//!
+//! ```text
+//! fleet [--models a,b] [--devices x,y] [--rate R] [--slo-ms S]
+//!       [--policy rr|least-loaded|slo-aware] [--queue fifo|priority]
+//!       [--batch B] [--max-wait-ms W] [--mixed]
+//!       [--boards N] [--requests N] [--max-boards N] [--seed S]
+//!       [--trace file] [--profiles points.json] [--fast]
+//! ```
+//!
+//! Every option is validated up front with a specific error message —
+//! an unknown model or device name, a non-positive `--rate`/`--slo-ms`,
+//! or `--batch 0` reports what was wrong and what is accepted instead
+//! of panicking or surfacing an index error from deep in the pipeline.
+
+use crate::device;
+use crate::model::zoo;
+use crate::optim::OptCfg;
+use crate::report::{self, SweepPoint};
+use crate::util::cli::{csv_list, Args};
+
+use super::{arrivals, planner, BatchCfg, FleetCfg, FleetMetrics,
+            Policy, ProfileMatrix, QueueDiscipline, ServiceProfile};
+
+/// Validated `fleet` invocation.
+#[derive(Debug, Clone)]
+pub struct FleetArgs {
+    pub models: Vec<String>,
+    pub devices: Vec<String>,
+    /// Whether `--model(s)`/`--device(s)` were given explicitly — an
+    /// explicit list filters a `--profiles` file; the defaults do not.
+    pub models_explicit: bool,
+    pub devices_explicit: bool,
+    pub rate: f64,
+    pub slo_ms: f64,
+    pub seed: u64,
+    pub requests: usize,
+    pub max_boards: usize,
+    /// `--boards N`: simulate a fixed fleet instead of planning.
+    pub fixed_boards: usize,
+    pub policy: Policy,
+    pub queue: QueueDiscipline,
+    pub batch: BatchCfg,
+    /// `--mixed`: let the planner search heterogeneous compositions.
+    pub mixed: bool,
+    pub trace: Option<String>,
+    pub profiles: Option<String>,
+    pub fast: bool,
+    pub chains: usize,
+    pub exchange_every: usize,
+    pub jobs: usize,
+}
+
+/// Thin wrappers over the shared strict parsers (`util::cli`) that
+/// prefix the subcommand name, so every rejection reads
+/// `fleet: --key ...`.
+fn num_opt(args: &Args, key: &str, default: f64) -> Result<f64, String> {
+    args.strict_f64(key, default).map_err(|e| format!("fleet: {e}"))
+}
+
+fn int_opt(args: &Args, key: &str, default: usize)
+    -> Result<usize, String> {
+    args.strict_usize(key, default).map_err(|e| format!("fleet: {e}"))
+}
+
+fn u64_opt(args: &Args, key: &str, default: u64)
+    -> Result<u64, String> {
+    args.strict_u64(key, default).map_err(|e| format!("fleet: {e}"))
+}
+
+impl FleetArgs {
+    /// Parse + validate. Every rejection names the offending value and
+    /// the accepted range, so `fleet --rate 0` or `--device zc999`
+    /// fails fast instead of panicking later.
+    pub fn from_args(args: &Args) -> Result<FleetArgs, String> {
+        let rate = num_opt(args, "rate", 100.0)?;
+        if !(rate > 0.0) || !rate.is_finite() {
+            return Err(format!(
+                "fleet: --rate must be a positive finite number of \
+                 requests/second (got {rate})"));
+        }
+        let slo_ms = num_opt(args, "slo-ms", 100.0)?;
+        if !(slo_ms > 0.0) || !slo_ms.is_finite() {
+            return Err(format!(
+                "fleet: --slo-ms must be a positive finite latency in \
+                 ms (got {slo_ms})"));
+        }
+        let requests = int_opt(args, "requests", 2000)?;
+        if requests == 0 {
+            return Err("fleet: --requests must be >= 1 (the p99 needs \
+                        samples)"
+                .into());
+        }
+        let max_boards = int_opt(args, "max-boards", 64)?;
+        if max_boards == 0 {
+            return Err("fleet: --max-boards must be >= 1".into());
+        }
+        let max_batch = int_opt(args, "batch", 1)?;
+        if max_batch == 0 {
+            return Err("fleet: --batch must be >= 1 clip per \
+                        invocation sequence (1 disables batching)"
+                .into());
+        }
+        let max_wait_ms = num_opt(args, "max-wait-ms", 0.0)?;
+        if !(max_wait_ms >= 0.0) || !max_wait_ms.is_finite() {
+            return Err(format!(
+                "fleet: --max-wait-ms must be a finite hold window \
+                 >= 0 ms (got {max_wait_ms})"));
+        }
+        if max_wait_ms > 0.0 && max_batch <= 1 {
+            return Err("fleet: --max-wait-ms only takes effect with \
+                        --batch >= 2 (an idle board holds the head \
+                        clip waiting for batchmates)"
+                .into());
+        }
+        let policy_s = args.opt_or("policy", "slo-aware");
+        let policy = Policy::parse(policy_s).ok_or(format!(
+            "fleet: unknown --policy {policy_s:?} (accepted: rr, \
+             least-loaded, slo-aware)"))?;
+        let queue_s = args.opt_or("queue", "fifo");
+        let queue = QueueDiscipline::parse(queue_s).ok_or(format!(
+            "fleet: unknown --queue {queue_s:?} (accepted: fifo, \
+             priority)"))?;
+
+        let profiles = args.opt("profiles").map(str::to_string);
+        let models_explicit =
+            args.opt("models").or(args.opt("model")).is_some();
+        let devices_explicit =
+            args.opt("devices").or(args.opt("device")).is_some();
+        let models = csv_list(args, &["models", "model"], "c3d");
+        let devices = csv_list(args, &["devices", "device"], "zcu102");
+        if models.is_empty() {
+            return Err("fleet: --models lists no model names".into());
+        }
+        if devices.is_empty() {
+            return Err("fleet: --devices lists no device names".into());
+        }
+        // Device names always resolve against the board registry (the
+        // planner prices boards by device). Model names must be zoo
+        // models or ONNX-JSON paths when the DSE will run; with
+        // --profiles they only filter the file, whose rows may carry
+        // arbitrary model names.
+        for d in &devices {
+            if device::by_name(d).is_none() {
+                let known: Vec<&str> = device::all_devices()
+                    .iter()
+                    .map(|dv| dv.name)
+                    .collect();
+                return Err(format!(
+                    "fleet: unknown device {d:?} (known: {})",
+                    known.join(", ")));
+            }
+        }
+        if profiles.is_none() {
+            for m in &models {
+                if zoo::by_name(m).is_none()
+                    && !std::path::Path::new(m).exists()
+                {
+                    let known: Vec<&str> = zoo::EVALUATED
+                        .iter()
+                        .copied()
+                        .chain(["c3d_tiny", "e3d", "i3d"])
+                        .collect();
+                    return Err(format!(
+                        "fleet: unknown model {m:?} (known zoo models: \
+                         {}; or pass a path to an ONNX-JSON export)",
+                        known.join(", ")));
+                }
+            }
+        }
+
+        let fixed_boards = int_opt(args, "boards", 0)?;
+        let mixed = args.flag("mixed");
+        if mixed && fixed_boards > 0 {
+            return Err("fleet: --mixed is a planner flag; drop \
+                        --boards N to let the planner choose the \
+                        composition"
+                .into());
+        }
+        // In the DSE path the device count is known right here; fail
+        // before the (expensive) sweep runs. The --profiles path
+        // re-checks after filtering the file, where the count is
+        // actually determined.
+        if fixed_boards > 0 && profiles.is_none() && devices.len() != 1 {
+            return Err(format!(
+                "fleet: --boards needs exactly one device (got {}); \
+                 let the planner pick by omitting --boards",
+                devices.len()));
+        }
+        let trace = args.opt("trace").map(str::to_string);
+        if trace.is_some() && fixed_boards == 0 {
+            return Err("fleet: --trace replays onto a fixed fleet: \
+                        pass --boards N (the planner sizes fleets for \
+                        Poisson traffic at --rate)"
+                .into());
+        }
+
+        let jobs_default = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Ok(FleetArgs {
+            models,
+            devices,
+            models_explicit,
+            devices_explicit,
+            rate,
+            slo_ms,
+            seed: u64_opt(args, "seed", 0x4A8F)?,
+            requests,
+            max_boards,
+            fixed_boards,
+            policy,
+            queue,
+            batch: BatchCfg::new(max_batch, max_wait_ms),
+            mixed,
+            trace,
+            profiles,
+            fast: args.flag("fast"),
+            chains: int_opt(args, "chains", 1)?,
+            exchange_every: int_opt(args, "exchange-every", 32)?,
+            jobs: int_opt(args, "jobs", jobs_default)?,
+        })
+    }
+}
+
+/// Run the `fleet` subcommand and return its rendered output (the
+/// launcher prints it). Deterministic for a fixed seed — no wall
+/// clock enters any printed number.
+pub fn run(args: &Args) -> Result<String, String> {
+    let fa = FleetArgs::from_args(args)?;
+    let mut out = String::new();
+
+    // -- serving profiles: model x device service/switch/fill grid ------
+    let points = load_points(&fa, &mut out)?;
+    if points.is_empty() {
+        // Carry the buffered per-point infeasibility notes into the
+        // error — the caller only prints `out` on success, and a bare
+        // "no feasible points" after a full DSE sweep would hide which
+        // points failed and why.
+        let mut msg = String::from(
+            "fleet: no feasible (model, device) design points to \
+             serve with");
+        if !out.trim().is_empty() {
+            msg.push('\n');
+            msg.push_str(out.trim_end());
+        }
+        return Err(msg);
+    }
+
+    // Model/device axes in first-seen order (both sources are already
+    // restricted to the requested sets: the sweep only ran those, and
+    // the --profiles path filtered the file).
+    let mut models: Vec<String> = Vec::new();
+    let mut devices: Vec<String> = Vec::new();
+    for p in &points {
+        if !models.contains(&p.model) {
+            models.push(p.model.clone());
+        }
+        if !devices.contains(&p.device) {
+            devices.push(p.device.clone());
+        }
+    }
+    let mut matrix = ProfileMatrix::new(models, devices);
+    for (d, dname) in matrix.devices.clone().iter().enumerate() {
+        let dev = device::by_name(dname).ok_or(format!(
+            "fleet: unknown device {dname:?} in profiles file"))?;
+        matrix.costs[d] = planner::board_cost(dev.avail.dsp);
+    }
+    out.push_str(&format!("profiles ({} models x {} devices):\n",
+                          matrix.models.len(), matrix.devices.len()));
+    for p in &points {
+        let m = matrix.model_index(&p.model).expect("built from points");
+        let d = matrix.device_index(&p.device).expect("built from points");
+        matrix.set(m, d, ServiceProfile {
+            service_ms: p.sim_ms,
+            reconfig_ms: p.reconfig_ms,
+            fill_ms: p.fill_ms,
+        });
+        out.push_str(&format!(
+            "  {} @ {}: service {:.2} ms/clip, switch {:.2} ms, fill \
+             {:.2} ms (predicted {:.2} ms, board cost {:.2})\n",
+            p.model, p.device, p.sim_ms, p.reconfig_ms, p.fill_ms,
+            p.latency_ms, matrix.costs[d]));
+    }
+
+    let n_models = matrix.models.len();
+    let arr = if let Some(tr) = &fa.trace {
+        let text = std::fs::read_to_string(tr)
+            .map_err(|e| format!("fleet: cannot read --trace {tr}: {e}"))?;
+        arrivals::from_trace(&text, &matrix.models)?
+    } else {
+        arrivals::poisson(fa.requests, fa.rate, n_models, fa.seed)
+    };
+    if arr.is_empty() {
+        return Err("fleet: empty arrival stream".into());
+    }
+
+    if fa.fixed_boards > 0 {
+        // Fixed-size fleet: simulate it as requested, judge the SLO.
+        if matrix.devices.len() != 1 {
+            return Err(format!(
+                "fleet: --boards needs exactly one device (got {}); \
+                 let the planner pick by omitting --boards",
+                matrix.devices.len()));
+        }
+        let fc = FleetCfg {
+            boards: planner::preload_round_robin(0, fa.fixed_boards,
+                                                 n_models),
+            policy: fa.policy,
+            queue: fa.queue,
+            slo_ms: fa.slo_ms,
+            batch: fa.batch,
+        };
+        let met = super::simulate_fleet(&matrix, &fc, &arr);
+        out.push_str(&metrics_block(&matrix, &met, &fa));
+        out.push_str(&verdict_line(&met, fa.slo_ms));
+    } else {
+        let pcfg = planner::PlanCfg {
+            rate_rps: fa.rate,
+            slo_ms: fa.slo_ms,
+            policy: fa.policy,
+            queue: fa.queue,
+            batch: fa.batch,
+            requests: fa.requests,
+            max_boards: fa.max_boards,
+            mixed: fa.mixed,
+            seed: fa.seed,
+        };
+        match planner::plan(&matrix, &pcfg) {
+            planner::Verdict::Feasible(plan) => {
+                out.push_str(&format!(
+                    "plan: {} ({} boards, cost {:.2}{}) meets p99 <= \
+                     {:.1} ms at {:.0} req/s\n",
+                    plan.describe(&matrix), plan.boards.len(),
+                    plan.cost,
+                    if plan.is_mixed() { ", mixed" } else { "" },
+                    fa.slo_ms, fa.rate));
+                out.push_str(&metrics_block(&matrix, &plan.metrics,
+                                            &fa));
+                out.push_str(&verdict_line(&plan.metrics, fa.slo_ms));
+            }
+            planner::Verdict::Infeasible { reasons } => {
+                out.push_str(&format!(
+                    "plan: INFEASIBLE at {:.0} req/s with p99 <= \
+                     {:.1} ms:\n",
+                    fa.rate, fa.slo_ms));
+                for r in &reasons {
+                    out.push_str(&format!("  {r}\n"));
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Profile grid from a `sweep --out` JSON-lines file (`--profiles`) or
+/// a fresh DSE sweep over the requested models x devices.
+fn load_points(fa: &FleetArgs, out: &mut String)
+    -> Result<Vec<SweepPoint>, String> {
+    if let Some(path) = &fa.profiles {
+        // Rows with an "error" field are skipped; explicit
+        // --model(s)/--device(s) filter the file.
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            format!("fleet: cannot read --profiles {path}: {e}")
+        })?;
+        let mut pts = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let j = crate::util::json::Json::parse(line)
+                .map_err(|e| format!("{path}:{}: {e}", i + 1))?;
+            if j.get("error").is_some() {
+                continue;
+            }
+            let p = SweepPoint::from_json(&j)
+                .map_err(|e| format!("{path}:{}: {e}", i + 1))?;
+            if fa.models_explicit && !fa.models.contains(&p.model) {
+                continue;
+            }
+            if fa.devices_explicit && !fa.devices.contains(&p.device) {
+                continue;
+            }
+            pts.push(p);
+        }
+        return Ok(pts);
+    }
+    let opt = if fa.fast {
+        OptCfg::fast(fa.seed)
+    } else {
+        OptCfg { seed: fa.seed, ..OptCfg::default() }
+    };
+    let cfg = report::SweepCfg {
+        models: fa.models.clone(),
+        devices: fa.devices.clone(),
+        opt,
+        chains: fa.chains,
+        exchange_every: fa.exchange_every,
+        jobs: fa.jobs,
+    };
+    let rows = report::sweep_points(&cfg)?;
+    for row in &rows {
+        if let Err(e) = &row.point {
+            out.push_str(&format!("note: {} @ {}: infeasible ({e})\n",
+                                  row.model, row.device));
+        }
+    }
+    Ok(rows.into_iter().filter_map(|r| r.point.ok()).collect())
+}
+
+/// Deterministic metric block shared by the fixed-fleet and planner
+/// paths.
+fn metrics_block(matrix: &ProfileMatrix, met: &FleetMetrics,
+                 fa: &FleetArgs) -> String {
+    let mut s = String::new();
+    let batch_note = if fa.batch.max_batch > 1 {
+        format!(", batch <= {} wait {:.1} ms", fa.batch.max_batch,
+                fa.batch.max_wait_ms)
+    } else {
+        String::new()
+    };
+    s.push_str(&format!(
+        "fleet sim ({} boards, {}, {} queue, {} requests, seed \
+         {}{batch_note}):\n",
+        met.boards.len(), fa.policy.name(), fa.queue.name(),
+        met.completed + met.dropped, fa.seed));
+    s.push_str(&format!(
+        "  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  mean {:.2} ms  \
+         max {:.2} ms\n",
+        met.p50_ms, met.p95_ms, met.p99_ms, met.mean_ms, met.max_ms));
+    s.push_str(&format!(
+        "  throughput {:.1} req/s | completed {} dropped {} | {} \
+         design switches | {} SLO violations | {} sequences (mean \
+         {:.2} clips)\n",
+        met.throughput_rps, met.completed, met.dropped, met.switches,
+        met.slo_violations, met.batches, met.mean_batch()));
+    for (i, b) in met.boards.iter().enumerate() {
+        s.push_str(&format!(
+            "  board {i:>3} {:>8}: util {:>5.1}%  {:>6} clips  {} \
+             switches\n",
+            matrix.devices[b.device], 100.0 * b.utilization,
+            b.completed, b.switches));
+    }
+    s
+}
+
+fn verdict_line(met: &FleetMetrics, slo_ms: f64) -> String {
+    if met.slo_met() {
+        format!("verdict: SLO met (p99 {:.2} <= {:.1} ms)\n",
+                met.p99_ms, slo_ms)
+    } else {
+        format!("verdict: SLO MISSED (p99 {:.2} > {:.1} ms)\n",
+                met.p99_ms, slo_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Result<FleetArgs, String> {
+        FleetArgs::from_args(&Args::parse(
+            argv.iter().map(|s| s.to_string())))
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        let fa = parse(&["fleet"]).unwrap();
+        assert_eq!(fa.models, vec!["c3d"]);
+        assert_eq!(fa.devices, vec!["zcu102"]);
+        assert_eq!(fa.batch.max_batch, 1);
+        assert!(!fa.mixed);
+        assert_eq!(fa.policy, Policy::SloAware);
+        assert_eq!(fa.queue, QueueDiscipline::Fifo);
+    }
+
+    #[test]
+    fn batch_and_mixed_flags_parse() {
+        let fa = parse(&["fleet", "--batch", "4", "--max-wait-ms",
+                         "2.5", "--mixed", "--devices",
+                         "zcu102,zc706"]).unwrap();
+        assert_eq!(fa.batch.max_batch, 4);
+        assert_eq!(fa.batch.max_wait_ms, 2.5);
+        assert!(fa.mixed);
+        assert_eq!(fa.devices, vec!["zcu102", "zc706"]);
+    }
+
+    #[test]
+    fn rejects_unknown_model_with_known_list() {
+        // Regression: this used to surface as "no feasible design
+        // points" after a full DSE attempt (or worse), not a clear
+        // up-front rejection.
+        let e = parse(&["fleet", "--model", "nosuchnet"]).unwrap_err();
+        assert!(e.contains("unknown model"), "{e}");
+        assert!(e.contains("nosuchnet"), "{e}");
+        assert!(e.contains("c3d"), "lists known models: {e}");
+    }
+
+    #[test]
+    fn rejects_unknown_device_with_known_list() {
+        let e = parse(&["fleet", "--device", "zc9999"]).unwrap_err();
+        assert!(e.contains("unknown device"), "{e}");
+        assert!(e.contains("zc9999"), "{e}");
+        assert!(e.contains("zcu102"), "lists known devices: {e}");
+    }
+
+    #[test]
+    fn rejects_degenerate_traffic_contract() {
+        // Regression: --rate 0 used to reach the arrival constructor's
+        // assert (a panic), and a negative SLO sailed through to a
+        // nonsensical always-missed verdict.
+        for argv in [
+            &["fleet", "--rate", "0"][..],
+            &["fleet", "--rate", "-10"][..],
+            &["fleet", "--rate", "nan"][..],
+            &["fleet", "--slo-ms", "0"][..],
+            &["fleet", "--slo-ms", "-5"][..],
+            &["fleet", "--requests", "0"][..],
+            &["fleet", "--max-boards", "0"][..],
+        ] {
+            let e = parse(argv).unwrap_err();
+            assert!(e.starts_with("fleet:"), "{argv:?} -> {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_numeric_garbage_instead_of_defaulting() {
+        let e = parse(&["fleet", "--rate", "fast"]).unwrap_err();
+        assert!(e.contains("expects a number"), "{e}");
+        let e = parse(&["fleet", "--batch", "two"]).unwrap_err();
+        assert!(e.contains("integer"), "{e}");
+        // A mistyped seed must not silently fall back to the default
+        // (the printed seed would contradict what the user passed).
+        let e = parse(&["fleet", "--seed", "0x7f"]).unwrap_err();
+        assert!(e.contains("--seed"), "{e}");
+    }
+
+    #[test]
+    fn rejects_fixed_fleet_over_multiple_devices_before_the_sweep() {
+        let e = parse(&["fleet", "--boards", "8", "--devices",
+                        "zcu102,zc706"]).unwrap_err();
+        assert!(e.contains("exactly one device"), "{e}");
+        // With --profiles the device set comes from the file, so the
+        // flag combination alone is not rejected up front.
+        assert!(parse(&["fleet", "--boards", "8", "--devices",
+                        "zcu102,zc706", "--profiles", "p.json"])
+            .is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_batch_cfg() {
+        let e = parse(&["fleet", "--batch", "0"]).unwrap_err();
+        assert!(e.contains("--batch"), "{e}");
+        let e = parse(&["fleet", "--max-wait-ms", "-1"]).unwrap_err();
+        assert!(e.contains("--max-wait-ms"), "{e}");
+        // A hold window without a batch cap is silently inert in the
+        // simulator (holds need max_batch > 1), so the flag combo is
+        // rejected like the other contradictory ones.
+        let e = parse(&["fleet", "--max-wait-ms", "5"]).unwrap_err();
+        assert!(e.contains("--batch"), "{e}");
+    }
+
+    #[test]
+    fn rejects_unknown_policy_and_queue() {
+        let e = parse(&["fleet", "--policy", "random"]).unwrap_err();
+        assert!(e.contains("--policy") && e.contains("slo-aware"),
+                "{e}");
+        let e = parse(&["fleet", "--queue", "lifo"]).unwrap_err();
+        assert!(e.contains("--queue") && e.contains("fifo"), "{e}");
+    }
+
+    #[test]
+    fn rejects_contradictory_mode_flags() {
+        let e = parse(&["fleet", "--mixed", "--boards", "4"])
+            .unwrap_err();
+        assert!(e.contains("--mixed"), "{e}");
+        let e = parse(&["fleet", "--trace", "t.txt"]).unwrap_err();
+        assert!(e.contains("--boards"), "{e}");
+    }
+
+    #[test]
+    fn profiles_path_skips_model_name_validation() {
+        // Model names in a profiles file are arbitrary; only device
+        // names must resolve (boards are priced by device).
+        let fa = parse(&["fleet", "--profiles", "points.json",
+                         "--model", "custom_net"]).unwrap();
+        assert_eq!(fa.models, vec!["custom_net"]);
+        assert!(parse(&["fleet", "--profiles", "points.json",
+                        "--device", "zc9999"]).is_err());
+    }
+}

@@ -14,12 +14,18 @@
 //!   Poisson process ([`arrivals::poisson`]) or a trace file
 //!   ([`arrivals::from_trace`]), and every tie is broken by sequence
 //!   number so a seed pins the run bit-for-bit;
+//! * **clip batching** ([`BatchCfg`]): up to `max_batch` queued clips
+//!   of the same model run as one invocation sequence, paying the
+//!   pipeline fill once ([`ServiceProfile::batch_ms`]); an idle board
+//!   may hold the head clip up to `max_wait_ms` for batchmates;
 //! * an **SLO-driven capacity planner** ([`planner::plan`]) that
 //!   consumes `report::sweep` design points and searches board counts
-//!   × design assignments for the cheapest fleet meeting a p99 SLO at
-//!   a target arrival rate.
+//!   × design assignments — homogeneous per device type and, when
+//!   enabled, heterogeneous mixed-device compositions — for the
+//!   cheapest fleet meeting a p99 SLO at a target arrival rate.
 
 pub mod arrivals;
+pub mod cli;
 pub mod planner;
 
 use std::cmp::Ordering;
@@ -41,6 +47,29 @@ pub struct ServiceProfile {
     /// Cost (ms) of loading this design onto a board that currently
     /// holds a different one.
     pub reconfig_ms: f64,
+    /// Pipeline-fill share of `service_ms` (ms): the one-off
+    /// line-buffer priming a batched invocation sequence pays once for
+    /// the whole batch instead of once per clip (see
+    /// `sim::DesignLatencyProfile::fill_ms`). 0 disables amortisation.
+    pub fill_ms: f64,
+}
+
+impl ServiceProfile {
+    /// Service time (ms) of one invocation sequence carrying `clips`
+    /// clips of this design: the first clip pays the full per-clip
+    /// latency, every further clip only the fill-free marginal cost.
+    /// Exactly `service_ms` for `clips <= 1`, so batch-unaware callers
+    /// and `max_batch = 1` fleets are bit-identical to the unbatched
+    /// model.
+    pub fn batch_ms(&self, clips: usize) -> f64 {
+        if clips <= 1 {
+            return self.service_ms;
+        }
+        // Clamp hand-built profiles where fill exceeds service; the
+        // simulator-derived profiles satisfy fill < service.
+        let marginal = (self.service_ms - self.fill_ms).max(0.0);
+        self.service_ms + (clips - 1) as f64 * marginal
+    }
 }
 
 /// The model × device profile grid the simulator and planner consume.
@@ -166,6 +195,40 @@ impl QueueDiscipline {
     }
 }
 
+/// Clip-batching policy: how many clips one invocation sequence may
+/// carry and how long an idle board holds the head clip waiting for
+/// batchmates.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchCfg {
+    /// Largest batch (clips per invocation sequence). 1 disables
+    /// batching — the simulator is then bit-identical to the
+    /// unbatched model.
+    pub max_batch: usize,
+    /// Longest hold (ms) an *idle* board waits for the candidate batch
+    /// to fill before starting short. 0 means purely opportunistic
+    /// batching: only clips already queued when service starts are
+    /// grouped, and no hold events exist.
+    pub max_wait_ms: f64,
+}
+
+impl BatchCfg {
+    pub fn new(max_batch: usize, max_wait_ms: f64) -> BatchCfg {
+        BatchCfg { max_batch: max_batch.max(1), max_wait_ms }
+    }
+
+    /// Whether holds can occur (batch > 1 and a positive window).
+    fn holds(&self) -> bool {
+        self.max_batch > 1 && self.max_wait_ms > 0.0
+    }
+}
+
+impl Default for BatchCfg {
+    /// Batching off: one clip per invocation sequence, no hold.
+    fn default() -> Self {
+        BatchCfg { max_batch: 1, max_wait_ms: 0.0 }
+    }
+}
+
 /// Fleet composition + serving policy for one simulation run.
 #[derive(Debug, Clone)]
 pub struct FleetCfg {
@@ -174,6 +237,8 @@ pub struct FleetCfg {
     pub queue: QueueDiscipline,
     /// The latency objective (ms); violations are counted per request.
     pub slo_ms: f64,
+    /// Clip batching (default: off).
+    pub batch: BatchCfg,
 }
 
 // ------------------------------------------------------------------------
@@ -185,6 +250,8 @@ pub struct FleetCfg {
 pub struct BoardReport {
     pub device: usize,
     pub completed: usize,
+    /// Invocation sequences started (== completed when batching off).
+    pub batches: usize,
     pub switches: usize,
     pub busy_ms: f64,
     /// busy time / makespan.
@@ -212,8 +279,12 @@ pub struct FleetMetrics {
     pub slo_ms: f64,
     pub slo_violations: usize,
     pub switches: usize,
-    /// Simulator events processed (arrivals + completions) — the
-    /// bench's events/sec numerator.
+    /// Invocation sequences started across the fleet. Equals
+    /// `completed` when batching is off; under batching,
+    /// `completed / batches` is the realised mean batch size.
+    pub batches: usize,
+    /// Simulator events processed (arrivals + completions + expired
+    /// batch holds) — the bench's events/sec numerator.
     pub events: usize,
     pub boards: Vec<BoardReport>,
 }
@@ -230,6 +301,16 @@ impl FleetMetrics {
     pub fn slo_met(&self) -> bool {
         self.p99_ms <= self.slo_ms
     }
+
+    /// Realised mean clips per invocation sequence (1.0 for an empty
+    /// run, so reports divide safely).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            1.0
+        } else {
+            self.completed as f64 / self.batches as f64
+        }
+    }
 }
 
 // ------------------------------------------------------------------------
@@ -240,8 +321,12 @@ impl FleetMetrics {
 enum EventKind {
     /// Index into the arrivals slice.
     Arrival(usize),
-    /// Board finished its in-service request.
+    /// Board finished its in-service invocation sequence.
     Done(usize),
+    /// A batch hold expired on board `.0`; `.1` is the hold epoch the
+    /// event was armed for (stale epochs are ignored — the board
+    /// started or re-held in the meantime).
+    HoldExpired(usize, u64),
 }
 
 /// Heap event. Ordered so `BinaryHeap::pop` yields the *earliest*
@@ -285,22 +370,38 @@ struct BoardState {
     /// estimator's switch-cost anchor.
     tail_model: usize,
     queue: VecDeque<Request>,
-    in_service: Option<Request>,
+    /// Clips of the in-flight invocation sequence (empty = idle).
+    in_service: Vec<Request>,
     free_at_ms: f64,
     /// Estimated queued work (service + expected switches), ms.
     backlog_ms: f64,
     busy_ms: f64,
     completed: usize,
     switches: usize,
+    batches: usize,
+    /// An idle board waiting out a batch hold window.
+    holding: bool,
+    /// Bumped every time a hold is armed; a `HoldExpired` event only
+    /// acts when its epoch still matches (invalidates stale timers).
+    hold_epoch: u64,
 }
 
 impl BoardState {
-    /// Cost of serving `model` right after `prev` on this board.
+    /// Estimated cost of serving one clip of `model` right after
+    /// `prev` on this board. Batch-aware: when batching is on and the
+    /// clip joins the same design's tail, it can ride an invocation
+    /// sequence and pays only the fill-free marginal cost; otherwise
+    /// it pays full service plus the switch if mismatched.
     fn cost_after(&self, profiles: &ProfileMatrix, prev: usize,
-                  model: usize) -> Option<f64> {
+                  model: usize, batch: &BatchCfg) -> Option<f64> {
         let p = profiles.get(model, self.device)?;
-        let switch = if prev == model { 0.0 } else { p.reconfig_ms };
-        Some(p.service_ms + switch)
+        if prev == model {
+            if batch.max_batch > 1 {
+                return Some(p.batch_ms(2) - p.batch_ms(1));
+            }
+            return Some(p.service_ms);
+        }
+        Some(p.service_ms + p.reconfig_ms)
     }
 }
 
@@ -322,12 +423,15 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
             loaded: b.preload,
             tail_model: b.preload,
             queue: VecDeque::new(),
-            in_service: None,
+            in_service: Vec::new(),
             free_at_ms: 0.0,
             backlog_ms: 0.0,
             busy_ms: 0.0,
             completed: 0,
             switches: 0,
+            batches: 0,
+            holding: false,
+            hold_epoch: 0,
         })
         .collect();
 
@@ -352,34 +456,48 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
             EventKind::Arrival(i) => {
                 let req = arrivals[i];
                 let Some(b) = dispatch(profiles, &boards, cfg.policy,
-                                       &mut rr_next, &req, now)
+                                       &mut rr_next, &req, now,
+                                       &cfg.batch)
                 else {
                     dropped += 1;
                     continue;
                 };
                 let board = &mut boards[b];
                 let est = board
-                    .cost_after(profiles, board.tail_model, req.model)
+                    .cost_after(profiles, board.tail_model, req.model,
+                                &cfg.batch)
                     .expect("dispatch returned a capable board");
                 board.backlog_ms += est;
                 board.tail_model = req.model;
                 board.queue.push_back(req);
-                if board.in_service.is_none() {
-                    start_next(profiles, board, cfg.queue, now, &mut heap,
-                               &mut seq, b);
+                if board.in_service.is_empty() {
+                    maybe_start(profiles, board, cfg, now, &mut heap,
+                                &mut seq, b);
                 }
             }
             EventKind::Done(b) => {
                 let board = &mut boards[b];
-                let req = board
-                    .in_service
-                    .take()
-                    .expect("completion without in-service request");
-                board.completed += 1;
-                latencies.push(now - req.arrival_ms);
+                let batch = std::mem::take(&mut board.in_service);
+                assert!(!batch.is_empty(),
+                        "completion without in-service request");
+                board.completed += batch.len();
+                for req in &batch {
+                    latencies.push(now - req.arrival_ms);
+                }
                 makespan_ms = makespan_ms.max(now);
                 if !board.queue.is_empty() {
-                    start_next(profiles, board, cfg.queue, now, &mut heap,
+                    maybe_start(profiles, board, cfg, now, &mut heap,
+                                &mut seq, b);
+                }
+            }
+            EventKind::HoldExpired(b, epoch) => {
+                let board = &mut boards[b];
+                if board.holding && board.hold_epoch == epoch
+                    && board.in_service.is_empty()
+                    && !board.queue.is_empty()
+                {
+                    board.holding = false;
+                    start_next(profiles, board, cfg, now, &mut heap,
                                &mut seq, b);
                 }
             }
@@ -399,6 +517,7 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
         .map(|b| BoardReport {
             device: b.device,
             completed: b.completed,
+            batches: b.batches,
             switches: b.switches,
             busy_ms: b.busy_ms,
             utilization: if makespan_ms > 0.0 {
@@ -425,6 +544,7 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
         slo_ms: cfg.slo_ms,
         slo_violations,
         switches: boards.iter().map(|b| b.switches).sum(),
+        batches: boards.iter().map(|b| b.batches).sum(),
         events,
         boards: board_reports,
     }
@@ -435,7 +555,7 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
 /// no board can serve it (the request is dropped and counted).
 fn dispatch(profiles: &ProfileMatrix, boards: &[BoardState],
             policy: Policy, rr_next: &mut usize, req: &Request,
-            now: f64) -> Option<usize> {
+            now: f64, batch: &BatchCfg) -> Option<usize> {
     let capable =
         |b: &BoardState| profiles.get(req.model, b.device).is_some();
     match policy {
@@ -452,30 +572,36 @@ fn dispatch(profiles: &ProfileMatrix, boards: &[BoardState],
             }
             None
         }
+        // Load is measured in clips (queued + in flight), so a board
+        // running a full batch reads as busier than one running a
+        // single clip — the batch-aware load signal.
         Policy::LeastLoaded => boards
             .iter()
             .enumerate()
             .filter(|(_, b)| capable(b))
             .min_by_key(|(i, b)| {
-                (b.queue.len() + b.in_service.is_some() as usize, *i)
+                (b.queue.len() + b.in_service.len(), *i)
             })
             .map(|(i, _)| i),
         Policy::SloAware => {
             // Earliest estimated completion of this request: current
-            // service tail + queued backlog + its own (service +
-            // switch-if-mismatched) cost. The backlog term is an
+            // service tail + queued backlog + its own cost, which is
+            // batch-aware (a clip joining its design's resident tail
+            // pays only the marginal batched cost — see
+            // `BoardState::cost_after`). The backlog term is an
             // estimate under priority reordering, exact under FIFO.
             let mut best: Option<(f64, usize)> = None;
             for (i, b) in boards.iter().enumerate() {
                 let Some(own) =
-                    b.cost_after(profiles, b.tail_model, req.model)
+                    b.cost_after(profiles, b.tail_model, req.model,
+                                 batch)
                 else {
                     continue;
                 };
-                let start = if b.in_service.is_some() {
-                    b.free_at_ms.max(now)
-                } else {
+                let start = if b.in_service.is_empty() {
                     now
+                } else {
+                    b.free_at_ms.max(now)
                 };
                 let est = start + b.backlog_ms + own;
                 let better = match best {
@@ -491,13 +617,10 @@ fn dispatch(profiles: &ProfileMatrix, boards: &[BoardState],
     }
 }
 
-/// Pop the next request off `board`'s queue per the discipline and put
-/// it in service at time `now`, scheduling its completion event.
-fn start_next(profiles: &ProfileMatrix, board: &mut BoardState,
-              queue: QueueDiscipline, now: f64,
-              heap: &mut BinaryHeap<Event>, seq: &mut u64,
-              board_idx: usize) {
-    let pick = match queue {
+/// Index into `board.queue` of the request the discipline serves next.
+fn pick_index(profiles: &ProfileMatrix, board: &BoardState,
+              queue: QueueDiscipline, batch: &BatchCfg) -> usize {
+    match queue {
         QueueDiscipline::Fifo => 0,
         QueueDiscipline::Priority => {
             // Cheapest (service + switch) first; ties to the earlier
@@ -507,7 +630,7 @@ fn start_next(profiles: &ProfileMatrix, board: &mut BoardState,
             let mut best_cost = f64::INFINITY;
             for (i, r) in board.queue.iter().enumerate() {
                 let c = board
-                    .cost_after(profiles, board.loaded, r.model)
+                    .cost_after(profiles, board.loaded, r.model, batch)
                     .expect("queued request must be servable");
                 if c < best_cost {
                     best_cost = c;
@@ -516,33 +639,101 @@ fn start_next(profiles: &ProfileMatrix, board: &mut BoardState,
             }
             best
         }
-    };
-    let req = board.queue.remove(pick).expect("queue checked non-empty");
+    }
+}
+
+/// Clips the next invocation sequence would carry if started now: the
+/// discipline's pick plus every queued clip of the same model, capped
+/// at `max_batch`. Only consulted while deciding whether to hold.
+fn candidate_batch_len(profiles: &ProfileMatrix, board: &BoardState,
+                       queue: QueueDiscipline, batch: &BatchCfg)
+    -> usize {
+    let pick = pick_index(profiles, board, queue, batch);
+    let model = board.queue[pick].model;
+    board
+        .queue
+        .iter()
+        .filter(|r| r.model == model)
+        .take(batch.max_batch)
+        .count()
+}
+
+/// Start the board's next invocation sequence — or, when batching with
+/// a hold window is on and the candidate batch is still short, arm a
+/// hold timer and wait for batchmates. Requires a non-empty queue and
+/// an idle board.
+fn maybe_start(profiles: &ProfileMatrix, board: &mut BoardState,
+               cfg: &FleetCfg, now: f64, heap: &mut BinaryHeap<Event>,
+               seq: &mut u64, board_idx: usize) {
+    let full = !cfg.batch.holds()
+        || candidate_batch_len(profiles, board, cfg.queue, &cfg.batch)
+            >= cfg.batch.max_batch;
+    if full {
+        board.holding = false;
+        start_next(profiles, board, cfg, now, heap, seq, board_idx);
+    } else if !board.holding {
+        board.holding = true;
+        board.hold_epoch += 1;
+        heap.push(Event {
+            t_ms: now + cfg.batch.max_wait_ms,
+            seq: *seq,
+            kind: EventKind::HoldExpired(board_idx, board.hold_epoch),
+        });
+        *seq += 1;
+    }
+    // Already holding with a still-short batch: keep waiting; the
+    // armed timer (or a filling arrival) will start the sequence.
+}
+
+/// Pop the next invocation sequence off `board`'s queue — the
+/// discipline's pick plus (under batching) every queued clip of the
+/// same model up to `max_batch`, in arrival order — and put it in
+/// service at time `now`, scheduling its completion event.
+fn start_next(profiles: &ProfileMatrix, board: &mut BoardState,
+              cfg: &FleetCfg, now: f64, heap: &mut BinaryHeap<Event>,
+              seq: &mut u64, board_idx: usize) {
+    let pick = pick_index(profiles, board, cfg.queue, &cfg.batch);
+    let first = board.queue.remove(pick).expect("queue checked non-empty");
+    let model = first.model;
+    let mut batch = vec![first];
+    if cfg.batch.max_batch > 1 {
+        let mut i = 0;
+        while batch.len() < cfg.batch.max_batch && i < board.queue.len()
+        {
+            if board.queue[i].model == model {
+                batch.push(board.queue.remove(i).expect("index in range"));
+            } else {
+                i += 1;
+            }
+        }
+    }
     let p = profiles
-        .get(req.model, board.device)
+        .get(model, board.device)
         .expect("queued request must be servable");
-    let switch = if board.loaded == req.model {
+    let switch = if board.loaded == model {
         0.0
     } else {
         board.switches += 1;
-        board.loaded = req.model;
+        board.loaded = model;
         p.reconfig_ms
     };
-    let cost = switch + p.service_ms;
-    // Keep the backlog estimator in sync: remove this request's
-    // estimated contribution. Priority reordering can make realised
-    // switches diverge from the enqueue-time estimates, so an empty
-    // queue resets the estimator exactly instead of carrying a
-    // residue that would bias SLO-aware dispatch against this board.
+    let cost = switch + p.batch_ms(batch.len());
+    // Keep the backlog estimator in sync: remove this sequence's
+    // estimated contribution. Priority reordering and batch
+    // amortisation can make realised costs diverge from the
+    // enqueue-time estimates, so an empty queue resets the estimator
+    // exactly instead of carrying a residue that would bias SLO-aware
+    // dispatch against this board.
     if board.queue.is_empty() {
         board.backlog_ms = 0.0;
-        board.tail_model = req.model;
+        board.tail_model = model;
     } else {
         board.backlog_ms = (board.backlog_ms - cost).max(0.0);
     }
     board.busy_ms += cost;
     board.free_at_ms = now + cost;
-    board.in_service = Some(req);
+    board.in_service = batch;
+    board.batches += 1;
     heap.push(Event {
         t_ms: now + cost,
         seq: *seq,
@@ -558,7 +749,8 @@ mod tests {
     fn matrix1(service_ms: f64, reconfig_ms: f64) -> ProfileMatrix {
         let mut m = ProfileMatrix::new(vec!["a".into()],
                                        vec!["dev".into()]);
-        m.set(0, 0, ServiceProfile { service_ms, reconfig_ms });
+        m.set(0, 0, ServiceProfile { service_ms, reconfig_ms,
+                                     fill_ms: 0.0 });
         m
     }
 
@@ -570,6 +762,7 @@ mod tests {
             policy: Policy::LeastLoaded,
             queue: QueueDiscipline::Fifo,
             slo_ms: 100.0,
+            batch: BatchCfg::default(),
         }
     }
 
@@ -622,8 +815,8 @@ mod tests {
         // b requests after the first pay no reconfiguration.
         let mut m = ProfileMatrix::new(vec!["a".into(), "b".into()],
                                        vec!["dev".into()]);
-        m.set(0, 0, ServiceProfile { service_ms: 10.0, reconfig_ms: 7.0 });
-        m.set(1, 0, ServiceProfile { service_ms: 10.0, reconfig_ms: 7.0 });
+        m.set(0, 0, ServiceProfile { service_ms: 10.0, reconfig_ms: 7.0, fill_ms: 0.0 });
+        m.set(1, 0, ServiceProfile { service_ms: 10.0, reconfig_ms: 7.0, fill_ms: 0.0 });
         let mut cfg = fleet(1);
         cfg.boards[0].preload = 0;
         let arr = vec![
@@ -644,8 +837,8 @@ mod tests {
         // Priority serves the short one first, FIFO the long one.
         let mut m = ProfileMatrix::new(vec!["long".into(), "short".into()],
                                        vec!["dev".into()]);
-        m.set(0, 0, ServiceProfile { service_ms: 20.0, reconfig_ms: 0.0 });
-        m.set(1, 0, ServiceProfile { service_ms: 2.0, reconfig_ms: 0.0 });
+        m.set(0, 0, ServiceProfile { service_ms: 20.0, reconfig_ms: 0.0, fill_ms: 0.0 });
+        m.set(1, 0, ServiceProfile { service_ms: 2.0, reconfig_ms: 0.0, fill_ms: 0.0 });
         let arr = vec![
             Request { id: 0, model: 0, arrival_ms: 0.0 },
             Request { id: 1, model: 0, arrival_ms: 1.0 },
@@ -672,8 +865,8 @@ mod tests {
         // every request after the first.
         let mut m = ProfileMatrix::new(vec!["a".into(), "b".into()],
                                        vec!["dev".into()]);
-        m.set(0, 0, ServiceProfile { service_ms: 5.0, reconfig_ms: 50.0 });
-        m.set(1, 0, ServiceProfile { service_ms: 5.0, reconfig_ms: 50.0 });
+        m.set(0, 0, ServiceProfile { service_ms: 5.0, reconfig_ms: 50.0, fill_ms: 0.0 });
+        m.set(1, 0, ServiceProfile { service_ms: 5.0, reconfig_ms: 50.0, fill_ms: 0.0 });
         // a,a,b,b,… — deliberately misaligned with the board rotation
         // so round-robin cannot stay resident by accident.
         let arr: Vec<Request> = (0..8)
@@ -689,6 +882,7 @@ mod tests {
             policy: Policy::SloAware,
             queue: QueueDiscipline::Fifo,
             slo_ms: 100.0,
+            batch: BatchCfg::default(),
         };
         let slo = simulate_fleet(&m, &cfg, &arr);
         assert_eq!(slo.switches, 0, "resident designs never reload");
@@ -703,7 +897,7 @@ mod tests {
     fn unservable_requests_are_dropped_and_counted() {
         let mut m = ProfileMatrix::new(vec!["a".into(), "b".into()],
                                        vec!["dev".into()]);
-        m.set(0, 0, ServiceProfile { service_ms: 5.0, reconfig_ms: 1.0 });
+        m.set(0, 0, ServiceProfile { service_ms: 5.0, reconfig_ms: 1.0, fill_ms: 0.0 });
         // model "b" has no feasible design anywhere.
         let arr = vec![
             Request { id: 0, model: 0, arrival_ms: 0.0 },
@@ -717,6 +911,119 @@ mod tests {
             assert_eq!(met.completed, 1, "{policy:?}");
             assert_eq!(met.dropped, 1, "{policy:?}");
         }
+    }
+
+    fn matrix_fill(service_ms: f64, fill_ms: f64) -> ProfileMatrix {
+        let mut m = ProfileMatrix::new(vec!["a".into()],
+                                       vec!["dev".into()]);
+        m.set(0, 0, ServiceProfile { service_ms, reconfig_ms: 5.0,
+                                     fill_ms });
+        m
+    }
+
+    #[test]
+    fn batch_ms_amortises_fill() {
+        let p = ServiceProfile { service_ms: 10.0, reconfig_ms: 5.0,
+                                 fill_ms: 4.0 };
+        assert_eq!(p.batch_ms(0), 10.0);
+        assert_eq!(p.batch_ms(1), 10.0);
+        assert_eq!(p.batch_ms(2), 16.0, "10 + one 6 ms marginal clip");
+        assert_eq!(p.batch_ms(4), 28.0, "10 + three 6 ms marginal clips");
+        // fill >= service clamps the marginal cost at zero.
+        let degenerate = ServiceProfile { service_ms: 3.0,
+                                          reconfig_ms: 0.0,
+                                          fill_ms: 9.0 };
+        assert_eq!(degenerate.batch_ms(5), 3.0);
+    }
+
+    #[test]
+    fn opportunistic_batching_groups_queued_clips() {
+        // 3 clips at t=0 on one board, service 10 / fill 4, batch cap
+        // 4, no hold window. The first clip starts alone (nothing else
+        // queued yet at its event); the two clips queued behind it run
+        // as one sequence: 10 + (10 + 6) = 26 ms makespan vs 30 ms
+        // unbatched.
+        let m = matrix_fill(10.0, 4.0);
+        let mut cfg = fleet(1);
+        cfg.batch = BatchCfg::new(4, 0.0);
+        let arr: Vec<Request> = (0..3)
+            .map(|id| Request { id, model: 0, arrival_ms: 0.0 })
+            .collect();
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 3);
+        assert_eq!(met.batches, 2, "1-clip + 2-clip sequences");
+        assert_eq!(met.makespan_ms, 26.0);
+        assert_eq!(met.max_ms, 26.0);
+        // 3 arrivals + 2 completions, no hold events.
+        assert_eq!(met.events, 5);
+        let unbatched = simulate_fleet(&m, &fleet(1), &arr);
+        assert_eq!(unbatched.makespan_ms, 30.0);
+        assert_eq!(unbatched.batches, 3);
+    }
+
+    #[test]
+    fn hold_window_fills_batch_from_later_arrival() {
+        // Batch cap 2 with a 5 ms hold: the t=0 clip waits, the t=2
+        // clip fills the batch, and the pair starts immediately at
+        // t=2 (cost 16 ms -> done at 18). The stale hold timer at t=5
+        // is a counted no-op event.
+        let m = matrix_fill(10.0, 4.0);
+        let mut cfg = fleet(1);
+        cfg.batch = BatchCfg::new(2, 5.0);
+        let arr = vec![
+            Request { id: 0, model: 0, arrival_ms: 0.0 },
+            Request { id: 1, model: 0, arrival_ms: 2.0 },
+        ];
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 2);
+        assert_eq!(met.batches, 1, "one 2-clip sequence");
+        assert_eq!(met.makespan_ms, 18.0);
+        assert_eq!(met.max_ms, 18.0, "head clip: 2 ms hold + 16 ms");
+        assert_eq!(met.mean_ms, 17.0, "(18 + 16) / 2");
+        // 2 arrivals + 1 expired (stale) hold + 1 completion.
+        assert_eq!(met.events, 4);
+    }
+
+    #[test]
+    fn hold_expiry_starts_short_batch() {
+        // A lone clip under a 4-wide batch cap with a 5 ms hold: no
+        // batchmates ever arrive, the timer expires, and the clip runs
+        // alone having paid the full hold window.
+        let m = matrix_fill(10.0, 4.0);
+        let mut cfg = fleet(1);
+        cfg.batch = BatchCfg::new(4, 5.0);
+        let arr = vec![Request { id: 0, model: 0, arrival_ms: 0.0 }];
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 1);
+        assert_eq!(met.batches, 1);
+        assert_eq!(met.max_ms, 15.0, "5 ms hold + 10 ms service");
+        assert_eq!(met.events, 3);
+    }
+
+    #[test]
+    fn batches_never_mix_models() {
+        // a, b, a queued: the b sequence must not absorb the trailing
+        // a clip, so three sequences run and two switches are paid.
+        let mut m = ProfileMatrix::new(vec!["a".into(), "b".into()],
+                                       vec!["dev".into()]);
+        for i in 0..2 {
+            m.set(i, 0, ServiceProfile { service_ms: 10.0,
+                                         reconfig_ms: 7.0,
+                                         fill_ms: 4.0 });
+        }
+        let mut cfg = fleet(1);
+        cfg.batch = BatchCfg::new(4, 0.0);
+        let arr = vec![
+            Request { id: 0, model: 0, arrival_ms: 0.0 },
+            Request { id: 1, model: 1, arrival_ms: 0.0 },
+            Request { id: 2, model: 0, arrival_ms: 0.0 },
+        ];
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 3);
+        assert_eq!(met.batches, 3);
+        assert_eq!(met.switches, 2, "b loads, then a reloads");
+        // 10 + (7 + 10) + (7 + 10) of busy time.
+        assert_eq!(met.makespan_ms, 44.0);
     }
 
     #[test]

@@ -1,21 +1,38 @@
-//! SLO-driven capacity planner: how many boards, running which
-//! designs, serve rate λ within a p99 latency SLO — at the lowest
-//! cost.
+//! SLO-driven capacity planner: how many boards, of which device
+//! types, running which designs, serve rate λ within a p99 latency
+//! SLO — at the lowest cost.
 //!
-//! The search walks each candidate device type, starts at the
-//! work-conservation lower bound (`λ · mean service` boards keep
-//! utilization below 1), and grows the fleet until the event-driven
-//! simulator ([`super::simulate_fleet`]) reports the p99 inside the
-//! SLO. Candidate fleets preload designs round-robin over the model
-//! mix so a warm fleet starts resident; the requested dispatch policy
-//! is used for validation, so the plan certifies the policy that will
-//! actually run. Mixed-device fleets are out of scope (one device
-//! type per plan — the ROADMAP lists heterogeneous fleets with the
-//! cross-machine distribution lever).
+//! Two searches feed one verdict:
+//!
+//! * **Homogeneous** (always on): for each candidate device type,
+//!   start at the work-conservation lower bound (`λ · mean service`
+//!   boards keep utilization below 1) and grow the fleet until the
+//!   event-driven simulator ([`super::simulate_fleet`]) reports the
+//!   p99 inside the SLO.
+//! * **Heterogeneous** ([`PlanCfg::mixed`]): mixed-device fleet
+//!   compositions over every device type that serves the whole model
+//!   mix — seeded from the work-conservation lower bound of the most
+//!   cost-efficient device, greedily grown one board at a time by
+//!   best p99-per-cost improvement, then locally improved by
+//!   shrink/swap moves that only accept strictly cheaper certified
+//!   compositions. Mixed fleets win when the traffic does not divide
+//!   evenly into one board size: topping a large-board fleet up with
+//!   one cheap small board beats over-provisioning another large one.
+//!
+//! Candidate fleets preload designs round-robin over the model mix so
+//! a warm fleet starts resident; the requested dispatch policy, queue
+//! discipline, and clip-batching config are used for validation, so
+//! the plan certifies the exact serving stack that will run.
+//! Certification demands zero drops as well as the p99 — a fleet that
+//! sheds requests cannot launder its tail latency. Every candidate is
+//! validated against the same seeded arrival stream, so the whole
+//! search is a deterministic function of (profiles, cfg).
+
+use std::collections::HashMap;
 
 use super::arrivals;
-use super::{simulate_fleet, BoardSpec, FleetCfg, FleetMetrics, Policy,
-            ProfileMatrix, QueueDiscipline};
+use super::{simulate_fleet, BatchCfg, BoardSpec, FleetCfg,
+            FleetMetrics, Policy, ProfileMatrix, QueueDiscipline};
 
 /// Planner inputs: the traffic contract and the search bounds.
 #[derive(Debug, Clone)]
@@ -26,10 +43,14 @@ pub struct PlanCfg {
     pub slo_ms: f64,
     pub policy: Policy,
     pub queue: QueueDiscipline,
+    /// Clip batching the candidate fleets serve with.
+    pub batch: BatchCfg,
     /// Requests simulated per candidate fleet (the p99 sample size).
     pub requests: usize,
-    /// Largest fleet considered per device type.
+    /// Largest fleet considered (total boards, any composition).
     pub max_boards: usize,
+    /// Also search heterogeneous (mixed-device) compositions.
+    pub mixed: bool,
     pub seed: u64,
 }
 
@@ -40,8 +61,10 @@ impl Default for PlanCfg {
             slo_ms: 100.0,
             policy: Policy::SloAware,
             queue: QueueDiscipline::Fifo,
+            batch: BatchCfg::default(),
             requests: 2000,
             max_boards: 64,
+            mixed: false,
             seed: 0x4A8F,
         }
     }
@@ -50,13 +73,46 @@ impl Default for PlanCfg {
 /// A fleet composition the planner certified against the SLO.
 #[derive(Debug, Clone)]
 pub struct FleetPlan {
-    /// Device column of every board (homogeneous fleets: all equal).
-    pub device: usize,
     pub boards: Vec<BoardSpec>,
-    /// Total relative cost (`boards · ProfileMatrix::costs[device]`).
+    /// Boards per [`ProfileMatrix`] device column; a mixed plan has
+    /// more than one non-zero entry.
+    pub device_counts: Vec<usize>,
+    /// Total relative cost (Σ counts[d] · `ProfileMatrix::costs[d]`).
     pub cost: f64,
     /// Metrics of the certifying simulation run.
     pub metrics: FleetMetrics,
+}
+
+impl FleetPlan {
+    /// More than one device type in the composition.
+    pub fn is_mixed(&self) -> bool {
+        self.device_counts.iter().filter(|&&c| c > 0).count() > 1
+    }
+
+    /// Device column of a homogeneous plan (`None` for mixed fleets).
+    pub fn device(&self) -> Option<usize> {
+        let mut nz = self
+            .device_counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0);
+        match (nz.next(), nz.next()) {
+            (Some((d, _)), None) => Some(d),
+            _ => None,
+        }
+    }
+
+    /// Human-readable composition, e.g. `2 x zcu102 + 1 x zc706`.
+    pub fn describe(&self, profiles: &ProfileMatrix) -> String {
+        let parts: Vec<String> = self
+            .device_counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(d, &c)| format!("{c} x {}", profiles.devices[d]))
+            .collect();
+        parts.join(" + ")
+    }
 }
 
 /// Planner outcome: the cheapest certified fleet, or why none exists
@@ -65,7 +121,8 @@ pub struct FleetPlan {
 pub enum Verdict {
     Feasible(FleetPlan),
     Infeasible {
-        /// One line per rejected device type.
+        /// One line per rejected composition family (each device type
+        /// considered, plus the mixed search when it was enabled).
         reasons: Vec<String>,
     },
 }
@@ -86,23 +143,150 @@ pub fn preload_round_robin(device: usize, n_boards: usize,
         .collect()
 }
 
+/// Boards of a (possibly mixed) composition, grouped by device column
+/// in column order, with the round-robin preload running across the
+/// whole fleet — deterministic for a given `counts`.
+pub fn compose_boards(counts: &[usize], n_models: usize)
+    -> Vec<BoardSpec> {
+    let mut boards = Vec::with_capacity(counts.iter().sum());
+    let mut i = 0usize;
+    for (device, &n) in counts.iter().enumerate() {
+        for _ in 0..n {
+            boards.push(BoardSpec { device, preload: i % n_models });
+            i += 1;
+        }
+    }
+    boards
+}
+
+/// One feasible device type: serves every model in the mix.
+struct DeviceCand {
+    d: usize,
+    /// Mean *effective* per-clip service over the (uniform) model mix
+    /// (ms): full-batch amortised cost per clip under the configured
+    /// [`BatchCfg`] — equal to the plain service mean when batching is
+    /// off. Optimistic (batches may run short), so bounds derived from
+    /// it stay true lower bounds.
+    mean_ms: f64,
+    /// Work-conservation throughput of one board, req/s.
+    cap_rps: f64,
+}
+
+/// Certification run of one composition against the shared arrival
+/// stream: cost, metrics, and whether the SLO held with zero drops.
+#[derive(Clone)]
+struct Certified {
+    cost: f64,
+    metrics: FleetMetrics,
+    ok: bool,
+}
+
+/// Memoised [`certify`]: the homogeneous and mixed searches revisit
+/// compositions (the mixed seed *is* a homogeneous candidate, and
+/// shrink/swap moves re-propose earlier counts), and every candidate
+/// is judged against the same arrival stream, so a cached verdict is
+/// reusable verbatim.
+fn certify_memo(profiles: &ProfileMatrix, cfg: &PlanCfg,
+                counts: &[usize], arr: &[super::Request],
+                memo: &mut HashMap<Vec<usize>, Certified>) -> Certified {
+    if let Some(c) = memo.get(counts) {
+        return c.clone();
+    }
+    let c = certify(profiles, cfg, counts, arr);
+    memo.insert(counts.to_vec(), c.clone());
+    c
+}
+
+fn certify(profiles: &ProfileMatrix, cfg: &PlanCfg, counts: &[usize],
+           arr: &[super::Request]) -> Certified {
+    let fc = FleetCfg {
+        boards: compose_boards(counts, profiles.models.len()),
+        policy: cfg.policy,
+        queue: cfg.queue,
+        slo_ms: cfg.slo_ms,
+        batch: cfg.batch,
+    };
+    let metrics = simulate_fleet(profiles, &fc, arr);
+    let ok = metrics.dropped == 0 && metrics.slo_met();
+    let cost = counts
+        .iter()
+        .enumerate()
+        .map(|(d, &n)| n as f64 * profiles.costs[d])
+        .sum();
+    Certified { cost, metrics, ok }
+}
+
+fn plan_from_counts(profiles: &ProfileMatrix, counts: Vec<usize>,
+                    cert: Certified) -> FleetPlan {
+    FleetPlan {
+        boards: compose_boards(&counts, profiles.models.len()),
+        device_counts: counts,
+        cost: cert.cost,
+        metrics: cert.metrics,
+    }
+}
+
 /// Search the cheapest fleet meeting `cfg.slo_ms` p99 at
 /// `cfg.rate_rps`. Deterministic: every candidate is validated with
 /// the same seeded arrival stream, and ties in cost break toward
-/// fewer boards, then device order.
+/// fewer boards, then device order. With [`PlanCfg::mixed`] the
+/// heterogeneous search runs on top of the homogeneous one and the
+/// overall cheapest certified composition wins, so enabling it never
+/// returns a costlier plan for the same inputs.
 pub fn plan(profiles: &ProfileMatrix, cfg: &PlanCfg) -> Verdict {
+    // Contract guards (defence in depth — the CLI validates too): a
+    // non-positive rate or SLO can never be served, and zero requests
+    // would "certify" every composition vacuously.
+    if !(cfg.rate_rps > 0.0) || !cfg.rate_rps.is_finite() {
+        return Verdict::Infeasible {
+            reasons: vec![format!(
+                "arrival rate must be a positive finite req/s (got {})",
+                cfg.rate_rps)],
+        };
+    }
+    if !(cfg.slo_ms > 0.0) {
+        return Verdict::Infeasible {
+            reasons: vec![format!(
+                "p99 SLO must be > 0 ms (got {})", cfg.slo_ms)],
+        };
+    }
+    if cfg.requests == 0 {
+        return Verdict::Infeasible {
+            reasons: vec!["certification needs at least one simulated \
+                           request"
+                .into()],
+        };
+    }
+
     let n_models = profiles.models.len();
+    // One arrival stream certifies every candidate — homogeneous and
+    // mixed alike — so cost comparisons are apples-to-apples.
+    let arr = arrivals::poisson(cfg.requests, cfg.rate_rps, n_models,
+                                cfg.seed);
     let mut best: Option<FleetPlan> = None;
     let mut reasons: Vec<String> = Vec::new();
+    let mut feasible: Vec<DeviceCand> = Vec::new();
+    let mut memo: HashMap<Vec<usize>, Certified> = HashMap::new();
 
     for d in 0..profiles.devices.len() {
         let dname = &profiles.devices[d];
         // Every model in the mix must have a feasible design here.
+        // `service` is the full single-clip latency (the p99 floor);
+        // `eff` the best-case amortised per-clip cost of a full batch
+        // — the work-conservation currency once batching is on.
         let mut service: Vec<f64> = Vec::with_capacity(n_models);
+        let mut eff: Vec<f64> = Vec::with_capacity(n_models);
         let mut missing = None;
         for m in 0..n_models {
             match profiles.get(m, d) {
-                Some(p) => service.push(p.service_ms),
+                Some(p) => {
+                    // `.max(1)` guards a hand-built `BatchCfg` with a
+                    // zero cap (the constructor clamps, literals may
+                    // not).
+                    let cap = cfg.batch.max_batch.max(1);
+                    service.push(p.service_ms);
+                    eff.push(p.batch_ms(cap) / cap as f64);
+                }
                 None => {
                     missing = Some(m);
                     break;
@@ -124,10 +308,16 @@ pub fn plan(profiles: &ProfileMatrix, cfg: &PlanCfg) -> Verdict {
                 cfg.slo_ms));
             continue;
         }
-        // Work conservation: λ · E[service] boards is the utilization
-        // = 1 floor under the uniform model mix.
-        let mean_ms =
-            service.iter().sum::<f64>() / service.len().max(1) as f64;
+        // Work conservation: λ · E[effective service] boards is the
+        // utilization = 1 floor under the uniform model mix (with
+        // batching, the full-batch amortised per-clip cost — a board
+        // can never serve clips faster than that).
+        let mean_ms = eff.iter().sum::<f64>() / eff.len().max(1) as f64;
+        feasible.push(DeviceCand {
+            d,
+            mean_ms,
+            cap_rps: 1e3 / mean_ms,
+        });
         let lb = ((cfg.rate_rps * mean_ms / 1e3).ceil() as usize).max(1);
         if lb > cfg.max_boards {
             reasons.push(format!(
@@ -136,38 +326,28 @@ pub fn plan(profiles: &ProfileMatrix, cfg: &PlanCfg) -> Verdict {
                 cfg.rate_rps, cfg.max_boards));
             continue;
         }
-        let arr = arrivals::poisson(cfg.requests, cfg.rate_rps,
-                                    n_models, cfg.seed);
-        let mut certified: Option<(usize, FleetMetrics)> = None;
+        let mut certified: Option<(Vec<usize>, Certified)> = None;
         let mut last_p99 = f64::NAN;
         for n in lb..=cfg.max_boards {
-            let fc = FleetCfg {
-                boards: preload_round_robin(d, n, n_models),
-                policy: cfg.policy,
-                queue: cfg.queue,
-                slo_ms: cfg.slo_ms,
-            };
-            let met = simulate_fleet(profiles, &fc, &arr);
-            last_p99 = met.p99_ms;
-            if met.slo_met() {
-                certified = Some((n, met));
+            let mut counts = vec![0usize; profiles.devices.len()];
+            counts[d] = n;
+            let cert = certify_memo(profiles, cfg, &counts, &arr,
+                                    &mut memo);
+            last_p99 = cert.metrics.p99_ms;
+            if cert.ok {
+                certified = Some((counts, cert));
                 break;
             }
         }
         match certified {
-            Some((n, met)) => {
-                let cost = n as f64 * profiles.costs[d];
+            Some((counts, cert)) => {
                 let better = match &best {
                     None => true,
-                    Some(b) => cost < b.cost,
+                    Some(b) => cert.cost < b.cost,
                 };
                 if better {
-                    best = Some(FleetPlan {
-                        device: d,
-                        boards: preload_round_robin(d, n, n_models),
-                        cost,
-                        metrics: met,
-                    });
+                    best = Some(plan_from_counts(profiles, counts,
+                                                 cert));
                 }
             }
             None => reasons.push(format!(
@@ -177,10 +357,172 @@ pub fn plan(profiles: &ProfileMatrix, cfg: &PlanCfg) -> Verdict {
         }
     }
 
+    if cfg.mixed {
+        match plan_mixed(profiles, cfg, &feasible, &arr, &mut memo) {
+            Ok(mixed) => {
+                let better = match &best {
+                    // Strictly cheaper only: a homogeneous plan of the
+                    // same cost is the simpler artifact to operate.
+                    Some(b) => mixed.cost < b.cost,
+                    None => true,
+                };
+                if better {
+                    best = Some(mixed);
+                }
+            }
+            Err(why) => reasons.push(format!("mixed: {why}")),
+        }
+    }
+
     match best {
         Some(p) => Verdict::Feasible(p),
         None => Verdict::Infeasible { reasons },
     }
+}
+
+/// Heterogeneous composition search. Returns the best certified mixed
+/// (or, when shrinking lands there, homogeneous) composition, or why
+/// the search produced none.
+fn plan_mixed(profiles: &ProfileMatrix, cfg: &PlanCfg,
+              feasible: &[DeviceCand], arr: &[super::Request],
+              memo: &mut HashMap<Vec<usize>, Certified>)
+    -> Result<FleetPlan, String> {
+    if feasible.len() < 2 {
+        return Err("fewer than two device types serve the whole model \
+                    mix"
+            .into());
+    }
+    let capacity = |counts: &[usize]| -> f64 {
+        feasible
+            .iter()
+            .map(|c| counts[c.d] as f64 * c.cap_rps)
+            .sum()
+    };
+    let total = |counts: &[usize]| -> usize { counts.iter().sum() };
+    let cost_of = |counts: &[usize]| -> f64 {
+        counts
+            .iter()
+            .enumerate()
+            .map(|(d, &n)| n as f64 * profiles.costs[d])
+            .sum()
+    };
+
+    // Seed: the work-conservation lower bound on the device with the
+    // most served req/s per unit cost, among those whose bound fits
+    // the board cap — a device too slow to carry the load alone (bound
+    // over the cap) may still join a mix through later swap moves, so
+    // it must not abort the whole search (ties to the lower column).
+    let lb_of = |c: &DeviceCand| -> usize {
+        ((cfg.rate_rps * c.mean_ms / 1e3).ceil() as usize).max(1)
+    };
+    let seed_dev = feasible
+        .iter()
+        .filter(|&c| lb_of(c) <= cfg.max_boards)
+        .max_by(|a, b| {
+            let ea = a.cap_rps / profiles.costs[a.d];
+            let eb = b.cap_rps / profiles.costs[b.d];
+            ea.total_cmp(&eb).then(b.d.cmp(&a.d))
+        })
+        .ok_or(format!(
+            "every device's work-conservation bound exceeds the \
+             {}-board cap", cfg.max_boards))?;
+    let mut counts = vec![0usize; profiles.devices.len()];
+    counts[seed_dev.d] = lb_of(seed_dev);
+    let mut cur = certify_memo(profiles, cfg, &counts, arr, memo);
+
+    // Grow one board at a time until certified: try every device type,
+    // prefer a certifying addition at the lowest cost, otherwise the
+    // best p99 reduction per unit cost (ties to the lower column).
+    while !cur.ok && total(&counts) < cfg.max_boards {
+        let mut best_add: Option<(usize, Certified, bool, f64)> = None;
+        for c in feasible {
+            counts[c.d] += 1;
+            let cand = certify_memo(profiles, cfg, &counts, arr, memo);
+            counts[c.d] -= 1;
+            let gain = (cur.metrics.p99_ms - cand.metrics.p99_ms)
+                / profiles.costs[c.d];
+            let better = match &best_add {
+                None => true,
+                Some((_, bc, bok, bgain)) => {
+                    if cand.ok != *bok {
+                        cand.ok
+                    } else if cand.ok {
+                        cand.cost < bc.cost
+                    } else {
+                        gain > *bgain
+                    }
+                }
+            };
+            if better {
+                best_add = Some((c.d, cand, cand.ok, gain));
+            }
+        }
+        let (d, cand, _, _) = best_add.expect("feasible non-empty");
+        counts[d] += 1;
+        cur = cand;
+    }
+    if !cur.ok {
+        return Err(format!(
+            "p99 {:.2} ms still above the {:.2} ms SLO at the {}-board \
+             cap",
+            cur.metrics.p99_ms, cfg.slo_ms, cfg.max_boards));
+    }
+
+    // Local improvement: shrink (drop one board) or swap (replace one
+    // board with one of a different type) while the result certifies
+    // and strictly lowers cost. Each accepted move lowers the cost, so
+    // the loop terminates; the iteration cap is a hard safety rail.
+    for _ in 0..64 {
+        let mut best_move: Option<(Vec<usize>, Certified)> = None;
+        let mut consider = |cand_counts: Vec<usize>,
+                            best_move: &mut Option<(Vec<usize>,
+                                                    Certified)>| {
+            if cost_of(&cand_counts) >= cur.cost - 1e-12 {
+                return; // not strictly cheaper
+            }
+            if capacity(&cand_counts) < cfg.rate_rps {
+                return; // utilization >= 1: unstable, never certify
+            }
+            if let Some((bc, _)) = best_move {
+                if cost_of(&cand_counts) >= cost_of(bc) {
+                    return;
+                }
+            }
+            let cert = certify_memo(profiles, cfg, &cand_counts, arr,
+                                    memo);
+            if cert.ok {
+                *best_move = Some((cand_counts, cert));
+            }
+        };
+        for rm in feasible {
+            if counts[rm.d] == 0 {
+                continue;
+            }
+            if total(&counts) > 1 {
+                let mut c = counts.clone();
+                c[rm.d] -= 1;
+                consider(c, &mut best_move);
+            }
+            for add in feasible {
+                if add.d == rm.d {
+                    continue;
+                }
+                let mut c = counts.clone();
+                c[rm.d] -= 1;
+                c[add.d] += 1;
+                consider(c, &mut best_move);
+            }
+        }
+        match best_move {
+            Some((c, cert)) => {
+                counts = c;
+                cur = cert;
+            }
+            None => break,
+        }
+    }
+
+    Ok(plan_from_counts(profiles, counts, cur))
 }
 
 #[cfg(test)]
@@ -191,7 +533,8 @@ mod tests {
     fn matrix(service_ms: f64) -> ProfileMatrix {
         let mut m = ProfileMatrix::new(vec!["a".into()],
                                        vec!["dev".into()]);
-        m.set(0, 0, ServiceProfile { service_ms, reconfig_ms: 2.0 });
+        m.set(0, 0, ServiceProfile { service_ms, reconfig_ms: 2.0,
+                                     fill_ms: 0.0 });
         m
     }
 
@@ -211,7 +554,9 @@ mod tests {
                 assert!(p.boards.len() >= 2, "{} boards", p.boards.len());
                 assert!(p.metrics.p99_ms <= 40.0);
                 assert!(p.cost > 0.0);
-                assert_eq!(p.device, 0);
+                assert_eq!(p.device(), Some(0));
+                assert!(!p.is_mixed());
+                assert_eq!(p.device_counts[0], p.boards.len());
             }
             Verdict::Infeasible { reasons } => {
                 panic!("expected feasible, got {reasons:?}")
@@ -249,14 +594,34 @@ mod tests {
     }
 
     #[test]
+    fn plan_rejects_bad_contract() {
+        let m = matrix(10.0);
+        for bad in [
+            PlanCfg { rate_rps: 0.0, ..PlanCfg::default() },
+            PlanCfg { rate_rps: -5.0, ..PlanCfg::default() },
+            PlanCfg { rate_rps: f64::NAN, ..PlanCfg::default() },
+            PlanCfg { slo_ms: 0.0, ..PlanCfg::default() },
+            PlanCfg { slo_ms: -1.0, ..PlanCfg::default() },
+            PlanCfg { requests: 0, ..PlanCfg::default() },
+        ] {
+            let Verdict::Infeasible { reasons } = plan(&m, &bad) else {
+                panic!("degenerate contract must be infeasible");
+            };
+            assert_eq!(reasons.len(), 1, "{reasons:?}");
+        }
+    }
+
+    #[test]
     fn plan_prefers_cheaper_device() {
         // Two devices serve the load; the slower one costs a third as
         // much and still meets the relaxed SLO, so it wins.
         let mut m = ProfileMatrix::new(
             vec!["a".into()],
             vec!["big".into(), "small".into()]);
-        m.set(0, 0, ServiceProfile { service_ms: 5.0, reconfig_ms: 1.0 });
-        m.set(0, 1, ServiceProfile { service_ms: 10.0, reconfig_ms: 1.0 });
+        m.set(0, 0, ServiceProfile { service_ms: 5.0, reconfig_ms: 1.0,
+                                     fill_ms: 0.0 });
+        m.set(0, 1, ServiceProfile { service_ms: 10.0, reconfig_ms: 1.0,
+                                     fill_ms: 0.0 });
         m.costs = vec![3.0, 1.0];
         let cfg = PlanCfg {
             rate_rps: 50.0,
@@ -267,12 +632,21 @@ mod tests {
         let Verdict::Feasible(p) = plan(&m, &cfg) else {
             panic!("feasible on both devices");
         };
-        assert_eq!(p.device, 1, "cheaper device wins");
+        assert_eq!(p.device(), Some(1), "cheaper device wins");
     }
 
     #[test]
     fn board_cost_normalises_to_zc706() {
         assert_eq!(board_cost(900.0), 1.0);
         assert!(board_cost(2520.0) > board_cost(900.0));
+    }
+
+    #[test]
+    fn compose_boards_grouped_and_preloaded() {
+        let boards = compose_boards(&[2, 0, 1], 2);
+        assert_eq!(boards.len(), 3);
+        assert_eq!((boards[0].device, boards[0].preload), (0, 0));
+        assert_eq!((boards[1].device, boards[1].preload), (0, 1));
+        assert_eq!((boards[2].device, boards[2].preload), (2, 0));
     }
 }

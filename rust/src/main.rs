@@ -10,7 +10,8 @@
 //!                 [--out points.json]                 model x device DSE
 //! harflow3d fleet [--models a,b] [--devices x,y] [--rate R]
 //!                 [--slo-ms S] [--policy rr|least-loaded|slo-aware]
-//!                 [--queue fifo|priority] [--boards N] [--requests N]
+//!                 [--queue fifo|priority] [--batch B] [--max-wait-ms W]
+//!                 [--mixed] [--boards N] [--requests N]
 //!                 [--max-boards N] [--seed S] [--trace file]
 //!                 [--profiles points.json] [--fast]   serving sim + planner
 //! harflow3d report <table2|table3|table4|table5|table6|
@@ -34,16 +35,18 @@ use harflow3d::report::{self, ReportCfg};
 use harflow3d::resource::ResourceModel;
 use harflow3d::sched::{self, SchedCfg};
 use harflow3d::sim::{self, SimCfg};
-use harflow3d::util::cli::Args;
+use harflow3d::util::cli::{csv_list, Args};
 use harflow3d::{device, sdf};
 
-fn opt_cfg(args: &Args) -> OptCfg {
-    let seed = args.opt_u64("seed", 0x4A8F);
-    if args.flag("fast") {
+fn opt_cfg(args: &Args) -> Result<OptCfg> {
+    // Strict: a typo'd --seed must error, not silently run (and get
+    // reported) under the default seed.
+    let seed = args.strict_u64("seed", 0x4A8F).map_err(|e| anyhow!(e))?;
+    Ok(if args.flag("fast") {
         OptCfg::fast(seed)
     } else {
         OptCfg { seed, ..OptCfg::default() }
-    }
+    })
 }
 
 /// DSE dispatch: `--chains K` selects the parallel multi-chain engine,
@@ -58,11 +61,11 @@ fn run_dse(args: &Args, m: &harflow3d::model::ModelGraph,
             exchange_every: args.opt_usize("exchange-every", 32),
         };
         harflow3d::optim::parallel::optimize_parallel(
-            m, dev, rm, opt_cfg(args), &par)
+            m, dev, rm, opt_cfg(args)?, &par)
             .map_err(|e| anyhow!(e))
     } else {
         let n_seeds = args.opt_u64("seeds", 6);
-        optim::optimize_multi(m, dev, rm, opt_cfg(args), n_seeds)
+        optim::optimize_multi(m, dev, rm, opt_cfg(args)?, n_seeds)
             .map_err(|e| anyhow!(e))
     }
 }
@@ -70,19 +73,6 @@ fn run_dse(args: &Args, m: &harflow3d::model::ModelGraph,
 fn load_model(name: &str) -> Result<harflow3d::model::ModelGraph> {
     // Zoo name or ONNX-JSON file path — shared with `report::sweep`.
     harflow3d::model::load(name).map_err(|e| anyhow!(e))
-}
-
-/// Comma-separated list option; the first present key wins (so
-/// `--model` and `--models` are interchangeable).
-fn csv_list(args: &Args, keys: &[&str], default: &str) -> Vec<String> {
-    let raw = keys
-        .iter()
-        .find_map(|k| args.opt(k))
-        .unwrap_or(default);
-    raw.split(',')
-        .map(|s| s.trim().to_string())
-        .filter(|s| !s.is_empty())
-        .collect()
 }
 
 fn main() -> Result<()> {
@@ -171,7 +161,7 @@ fn main() -> Result<()> {
                                  &default_models),
                 devices: csv_list(&args, &["devices", "device"],
                                   "zcu102,vc709"),
-                opt: opt_cfg(&args),
+                opt: opt_cfg(&args)?,
                 chains: args.opt_usize("chains", 1),
                 exchange_every: args.opt_usize("exchange-every", 32),
                 jobs: args.opt_usize("jobs", jobs_default),
@@ -188,7 +178,13 @@ fn main() -> Result<()> {
                 println!("wrote {path} ({} points)", rows.len());
             }
         }
-        "fleet" => run_fleet(&args)?,
+        "fleet" => {
+            // Parsing, validation, simulation, and rendering live in
+            // `fleet::cli` so the error paths and output are testable.
+            let out = harflow3d::fleet::cli::run(&args)
+                .map_err(|e| anyhow!(e))?;
+            print!("{out}");
+        }
         "report" => {
             let which = args
                 .positional
@@ -196,7 +192,8 @@ fn main() -> Result<()> {
                 .map(|s| s.as_str())
                 .unwrap_or("all");
             let cfg = ReportCfg {
-                seed: args.opt_u64("seed", 0x4A8F),
+                seed: args.strict_u64("seed", 0x4A8F)
+                    .map_err(|e| anyhow!(e))?,
                 n_seeds: args.opt_u64("seeds", 6),
                 fast: args.flag("fast"),
             };
@@ -308,237 +305,4 @@ fn main() -> Result<()> {
         other => return Err(anyhow!("unknown command {other}")),
     }
     Ok(())
-}
-
-/// `fleet` subcommand: derive per-design serving profiles (a sweep DSE
-/// run, or a `sweep --out` JSON-lines file via `--profiles`), then
-/// either simulate a fixed fleet (`--boards N`) or search the cheapest
-/// composition meeting the p99 SLO at the target rate. Every printed
-/// metric is a deterministic function of the seed — no wall-clock.
-fn run_fleet(args: &Args) -> Result<()> {
-    use harflow3d::fleet::{self, arrivals, planner};
-    use harflow3d::report::{self as rpt, SweepPoint};
-
-    let rate = args.opt_f64("rate", 100.0);
-    let slo_ms = args.opt_f64("slo-ms", 100.0);
-    let seed = args.opt_u64("seed", 0x4A8F);
-    let requests = args.opt_usize("requests", 2000);
-    let max_boards = args.opt_usize("max-boards", 64);
-    let fixed_boards = args.opt_usize("boards", 0);
-    let policy = fleet::Policy::parse(args.opt_or("policy", "slo-aware"))
-        .ok_or(anyhow!("unknown --policy (rr|least-loaded|slo-aware)"))?;
-    let queue = fleet::QueueDiscipline::parse(args.opt_or("queue", "fifo"))
-        .ok_or(anyhow!("unknown --queue (fifo|priority)"))?;
-    if rate <= 0.0 {
-        return Err(anyhow!("--rate must be > 0 requests/second"));
-    }
-    if slo_ms <= 0.0 {
-        return Err(anyhow!("--slo-ms must be > 0"));
-    }
-
-    // -- serving profiles: model x device service/switch latencies ------
-    let points: Vec<SweepPoint> = if let Some(path) = args.opt("profiles")
-    {
-        // Reuse a `sweep --out` JSON-lines file instead of re-running
-        // the DSE; rows with an "error" field are skipped, and
-        // explicit --model(s)/--device(s) flags filter the file (no
-        // flag = every point in the file).
-        let model_filter = args.opt("models").or(args.opt("model"))
-            .map(|_| csv_list(args, &["models", "model"], ""));
-        let device_filter = args.opt("devices").or(args.opt("device"))
-            .map(|_| csv_list(args, &["devices", "device"], ""));
-        let text = std::fs::read_to_string(path)?;
-        let mut pts = Vec::new();
-        for (i, line) in text.lines().enumerate() {
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
-            }
-            let j = harflow3d::util::json::Json::parse(line)
-                .map_err(|e| anyhow!("{path}:{}: {e}", i + 1))?;
-            if j.get("error").is_some() {
-                continue;
-            }
-            let p = SweepPoint::from_json(&j)
-                .map_err(|e| anyhow!("{path}:{}: {e}", i + 1))?;
-            if let Some(ms) = &model_filter {
-                if !ms.contains(&p.model) {
-                    continue;
-                }
-            }
-            if let Some(ds) = &device_filter {
-                if !ds.contains(&p.device) {
-                    continue;
-                }
-            }
-            pts.push(p);
-        }
-        pts
-    } else {
-        let jobs_default = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        let cfg = rpt::SweepCfg {
-            models: csv_list(args, &["models", "model"], "c3d"),
-            devices: csv_list(args, &["devices", "device"], "zcu102"),
-            opt: opt_cfg(args),
-            chains: args.opt_usize("chains", 1),
-            exchange_every: args.opt_usize("exchange-every", 32),
-            jobs: args.opt_usize("jobs", jobs_default),
-        };
-        let rows = rpt::sweep_points(&cfg).map_err(|e| anyhow!(e))?;
-        for row in &rows {
-            if let Err(e) = &row.point {
-                println!("note: {} @ {}: infeasible ({e})",
-                         row.model, row.device);
-            }
-        }
-        rows.into_iter().filter_map(|r| r.point.ok()).collect()
-    };
-    if points.is_empty() {
-        return Err(anyhow!("fleet: no feasible (model, device) design \
-                            points to serve with"));
-    }
-
-    // Model/device axes in first-seen order (both sources are already
-    // restricted to the requested sets: the sweep only ran those, and
-    // the --profiles path filtered the file above).
-    let mut models: Vec<String> = Vec::new();
-    let mut devices: Vec<String> = Vec::new();
-    for p in &points {
-        if !models.contains(&p.model) {
-            models.push(p.model.clone());
-        }
-        if !devices.contains(&p.device) {
-            devices.push(p.device.clone());
-        }
-    }
-    let mut matrix = fleet::ProfileMatrix::new(models, devices);
-    for (d, dname) in matrix.devices.clone().iter().enumerate() {
-        let dev = device::by_name(dname)
-            .ok_or(anyhow!("unknown device {dname} in profiles"))?;
-        matrix.costs[d] = planner::board_cost(dev.avail.dsp);
-    }
-    println!("profiles ({} models x {} devices):",
-             matrix.models.len(), matrix.devices.len());
-    for p in &points {
-        let m = matrix.model_index(&p.model).expect("built from points");
-        let d = matrix.device_index(&p.device).expect("built from points");
-        matrix.set(m, d, fleet::ServiceProfile {
-            service_ms: p.sim_ms,
-            reconfig_ms: p.reconfig_ms,
-        });
-        println!("  {} @ {}: service {:.2} ms/clip, switch {:.2} ms \
-                  (predicted {:.2} ms, board cost {:.2})",
-                 p.model, p.device, p.sim_ms, p.reconfig_ms,
-                 p.latency_ms, matrix.costs[d]);
-    }
-
-    let n_models = matrix.models.len();
-    let arr = if let Some(tr) = args.opt("trace") {
-        let text = std::fs::read_to_string(tr)?;
-        arrivals::from_trace(&text, &matrix.models)
-            .map_err(|e| anyhow!(e))?
-    } else {
-        arrivals::poisson(requests, rate, n_models, seed)
-    };
-    if arr.is_empty() {
-        return Err(anyhow!("fleet: empty arrival stream"));
-    }
-
-    if fixed_boards > 0 {
-        // Fixed-size fleet: simulate it as requested and judge the SLO.
-        if matrix.devices.len() != 1 {
-            return Err(anyhow!(
-                "--boards needs exactly one device (got {}); let the \
-                 planner pick by omitting --boards",
-                matrix.devices.len()));
-        }
-        let fc = fleet::FleetCfg {
-            boards: planner::preload_round_robin(0, fixed_boards,
-                                                 n_models),
-            policy,
-            queue,
-            slo_ms,
-        };
-        let met = fleet::simulate_fleet(&matrix, &fc, &arr);
-        print_fleet_metrics(&matrix, &met, policy, queue, seed);
-        print_verdict(&met, slo_ms);
-    } else {
-        if args.opt("trace").is_some() {
-            return Err(anyhow!(
-                "--trace replays onto a fixed fleet: pass --boards N \
-                 (the planner sizes fleets for Poisson traffic at \
-                 --rate)"));
-        }
-        let pcfg = planner::PlanCfg {
-            rate_rps: rate,
-            slo_ms,
-            policy,
-            queue,
-            requests,
-            max_boards,
-            seed,
-        };
-        match planner::plan(&matrix, &pcfg) {
-            planner::Verdict::Feasible(plan) => {
-                println!(
-                    "plan: {} x {} (cost {:.2}) meets p99 <= {:.1} ms \
-                     at {:.0} req/s",
-                    plan.boards.len(),
-                    matrix.devices[plan.device], plan.cost, slo_ms,
-                    rate);
-                print_fleet_metrics(&matrix, &plan.metrics, policy,
-                                    queue, seed);
-                print_verdict(&plan.metrics, slo_ms);
-            }
-            planner::Verdict::Infeasible { reasons } => {
-                println!("plan: INFEASIBLE at {rate:.0} req/s with \
-                          p99 <= {slo_ms:.1} ms:");
-                for r in &reasons {
-                    println!("  {r}");
-                }
-            }
-        }
-    }
-    Ok(())
-}
-
-/// Deterministic metric block shared by the fixed-fleet and planner
-/// paths of `run_fleet`.
-fn print_fleet_metrics(matrix: &harflow3d::fleet::ProfileMatrix,
-                       met: &harflow3d::fleet::FleetMetrics,
-                       policy: harflow3d::fleet::Policy,
-                       queue: harflow3d::fleet::QueueDiscipline,
-                       seed: u64) {
-    println!(
-        "fleet sim ({} boards, {}, {} queue, {} requests, seed {seed}):",
-        met.boards.len(), policy.name(), queue.name(),
-        met.completed + met.dropped);
-    println!(
-        "  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  mean {:.2} ms  \
-         max {:.2} ms",
-        met.p50_ms, met.p95_ms, met.p99_ms, met.mean_ms, met.max_ms);
-    println!(
-        "  throughput {:.1} req/s | completed {} dropped {} | {} \
-         design switches | {} SLO violations",
-        met.throughput_rps, met.completed, met.dropped, met.switches,
-        met.slo_violations);
-    for (i, b) in met.boards.iter().enumerate() {
-        println!(
-            "  board {i:>3} {:>8}: util {:>5.1}%  {:>6} clips  {} \
-             switches",
-            matrix.devices[b.device], 100.0 * b.utilization,
-            b.completed, b.switches);
-    }
-}
-
-fn print_verdict(met: &harflow3d::fleet::FleetMetrics, slo_ms: f64) {
-    if met.slo_met() {
-        println!("verdict: SLO met (p99 {:.2} <= {:.1} ms)", met.p99_ms,
-                 slo_ms);
-    } else {
-        println!("verdict: SLO MISSED (p99 {:.2} > {:.1} ms)",
-                 met.p99_ms, slo_ms);
-    }
 }

@@ -73,6 +73,55 @@ impl Args {
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    // Strict variants: like `opt_*`, but a present-yet-unparseable
+    // value is an error instead of silently becoming the default (a
+    // typo'd `--seed 0x7f` must not run under a seed the user never
+    // asked for). The permissive variants above stay for flags where
+    // best-effort defaults are acceptable.
+
+    pub fn strict_f64(&self, key: &str, default: f64)
+        -> Result<f64, String> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                format!("--{key} expects a number (got {s:?})")
+            }),
+        }
+    }
+
+    pub fn strict_usize(&self, key: &str, default: usize)
+        -> Result<usize, String> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                format!("--{key} expects a non-negative integer \
+                         (got {s:?})")
+            }),
+        }
+    }
+
+    pub fn strict_u64(&self, key: &str, default: u64)
+        -> Result<u64, String> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| {
+                format!("--{key} expects an unsigned integer \
+                         (got {s:?})")
+            }),
+        }
+    }
+}
+
+/// Comma-separated list option; the first present key wins (so
+/// `--model` and `--models` are interchangeable across subcommands).
+pub fn csv_list(args: &Args, keys: &[&str], default: &str)
+    -> Vec<String> {
+    let raw = keys.iter().find_map(|k| args.opt(k)).unwrap_or(default);
+    raw.split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
 }
 
 #[cfg(test)]
@@ -112,5 +161,24 @@ mod tests {
     fn empty() {
         let a = parse(&[]);
         assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn strict_variants_error_on_garbage() {
+        let a = parse(&["run", "--seed", "0x7f", "--rate", "fast"]);
+        assert!(a.strict_u64("seed", 1).is_err());
+        assert!(a.strict_f64("rate", 1.0).is_err());
+        assert_eq!(a.strict_u64("other", 9).unwrap(), 9);
+        let b = parse(&["run", "--seed", "7"]);
+        assert_eq!(b.strict_u64("seed", 1).unwrap(), 7);
+    }
+
+    #[test]
+    fn csv_list_splits_and_prefers_first_key() {
+        let a = parse(&["run", "--models", "a, b,,c"]);
+        assert_eq!(csv_list(&a, &["models", "model"], "x"),
+                   vec!["a", "b", "c"]);
+        assert_eq!(csv_list(&parse(&["run"]), &["models"], "x"),
+                   vec!["x"]);
     }
 }

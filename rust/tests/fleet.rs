@@ -4,9 +4,9 @@
 //! feasible/infeasible verdicts (the ISSUE 3 acceptance pins).
 
 use harflow3d::device;
-use harflow3d::fleet::{self, arrivals, planner, BoardSpec, FleetCfg,
-                       Policy, ProfileMatrix, QueueDiscipline, Request,
-                       ServiceProfile};
+use harflow3d::fleet::{self, arrivals, planner, BatchCfg, BoardSpec,
+                       FleetCfg, Policy, ProfileMatrix,
+                       QueueDiscipline, Request, ServiceProfile};
 use harflow3d::model::zoo;
 use harflow3d::optim::{self, OptCfg};
 use harflow3d::resource::ResourceModel;
@@ -27,6 +27,7 @@ fn c3d_tiny_profile() -> (ProfileMatrix, sim::DesignLatencyProfile) {
     mx.set(0, 0, ServiceProfile {
         service_ms: prof.service_ms,
         reconfig_ms: prof.reconfig_ms,
+        fill_ms: prof.fill_ms,
     });
     (mx, prof)
 }
@@ -42,6 +43,7 @@ fn single_request_latency_equals_sim_per_clip_latency() {
         policy: Policy::SloAware,
         queue: QueueDiscipline::Fifo,
         slo_ms: 1e9,
+        batch: BatchCfg::default(),
     };
     let arr = vec![Request { id: 0, model: 0, arrival_ms: 5.0 }];
     let met = fleet::simulate_fleet(&mx, &cfg, &arr);
@@ -67,6 +69,7 @@ fn same_seed_runs_are_bit_identical() {
         policy: Policy::LeastLoaded,
         queue: QueueDiscipline::Fifo,
         slo_ms: 50.0,
+        batch: BatchCfg::default(),
     };
     let run = |seed: u64| {
         let arr = arrivals::poisson(800, 400.0, 1, seed);
@@ -99,13 +102,15 @@ fn poisson_stream_matches_configured_rate() {
     // underloaded fleet tracks the configured arrival rate (every
     // request completes, so completions/sec ~= arrivals/sec).
     let mut mx = ProfileMatrix::new(vec!["a".into()], vec!["d".into()]);
-    mx.set(0, 0, ServiceProfile { service_ms: 2.0, reconfig_ms: 1.0 });
+    mx.set(0, 0, ServiceProfile { service_ms: 2.0, reconfig_ms: 1.0,
+                                  fill_ms: 0.0 });
     let cfg = FleetCfg {
         boards: (0..4).map(|_| BoardSpec { device: 0, preload: 0 })
             .collect(),
         policy: Policy::LeastLoaded,
         queue: QueueDiscipline::Fifo,
         slo_ms: 100.0,
+        batch: BatchCfg::default(),
     };
     let rate = 500.0;
     let arr = arrivals::poisson(20_000, rate, 1, 11);
@@ -132,6 +137,7 @@ fn utilization_and_percentiles_are_consistent() {
         policy: Policy::SloAware,
         queue: QueueDiscipline::Fifo,
         slo_ms: 20.0 * prof.service_ms,
+        batch: BatchCfg::default(),
     };
     let arr = arrivals::poisson(2_000, rate, 1, 13);
     let met = fleet::simulate_fleet(&mx, &cfg, &arr);
@@ -161,8 +167,10 @@ fn planner_meets_slo_or_reports_infeasible() {
         slo_ms: slo,
         policy: Policy::SloAware,
         queue: QueueDiscipline::Fifo,
+        batch: BatchCfg::default(),
         requests: 1_000,
         max_boards: 32,
+        mixed: false,
         seed: 7,
     };
     match planner::plan(&mx, &pcfg) {
@@ -198,15 +206,17 @@ fn planner_is_deterministic() {
         slo_ms: 5.0 * prof.service_ms,
         policy: Policy::SloAware,
         queue: QueueDiscipline::Fifo,
+        batch: BatchCfg::default(),
         requests: 600,
         max_boards: 16,
+        mixed: false,
         seed: 21,
     };
     let (a, b) = (planner::plan(&mx, &pcfg), planner::plan(&mx, &pcfg));
     match (a, b) {
         (planner::Verdict::Feasible(x), planner::Verdict::Feasible(y)) => {
             assert_eq!(x.boards.len(), y.boards.len());
-            assert_eq!(x.device, y.device);
+            assert_eq!(x.device_counts, y.device_counts);
             assert_eq!(x.cost.to_bits(), y.cost.to_bits());
             assert_eq!(x.metrics.p99_ms.to_bits(),
                        y.metrics.p99_ms.to_bits());
@@ -250,12 +260,14 @@ fn sweep_points_feed_the_fleet_pipeline() {
     mx.set(0, 0, ServiceProfile {
         service_ms: parsed.sim_ms,
         reconfig_ms: parsed.reconfig_ms,
+        fill_ms: parsed.fill_ms,
     });
     let cfg = FleetCfg {
         boards: planner::preload_round_robin(0, 2, 1),
         policy: Policy::RoundRobin,
         queue: QueueDiscipline::Fifo,
         slo_ms: 10.0 * parsed.sim_ms,
+        batch: BatchCfg::default(),
     };
     let arr = arrivals::poisson(200, 100.0, 1, 5);
     let met = fleet::simulate_fleet(&mx, &cfg, &arr);

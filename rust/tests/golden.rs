@@ -1,0 +1,240 @@
+//! Golden snapshot tests for the machine-readable interchange
+//! surfaces: the `sweep --out` JSON-lines format the fleet planner's
+//! `--profiles` path consumes, and the `report fleet` section. The
+//! writer side is pinned byte-for-byte on hand-built points (so a
+//! key rename, reorder, or format change cannot land silently), and
+//! the DSE-backed paths are pinned run-to-run (same seed => identical
+//! bytes) plus schema-exact.
+
+use harflow3d::fleet;
+use harflow3d::report::{self, SweepPoint, SweepRow};
+use harflow3d::util::cli::Args;
+use harflow3d::util::json::Json;
+
+/// A fully hand-chosen point: every float formats without rounding
+/// surprises (`Json::Num` prints integral values as integers).
+fn pinned_point() -> SweepPoint {
+    SweepPoint {
+        model: "c3d".into(),
+        device: "zcu102".into(),
+        latency_ms: 12.5,
+        sim_ms: 14.25,
+        reconfig_ms: 3.5,
+        fill_ms: 1.75,
+        gops: 250.0,
+        dsp: 1024.0,
+        bram: 300.5,
+        lut: 100_000.0,
+        ff: 200_000.0,
+        dsp_pct: 40.625,
+        sa_states: 5000,
+    }
+}
+
+#[test]
+fn sweep_jsonl_bytes_are_pinned() {
+    let rows = vec![
+        SweepRow {
+            model: "c3d".into(),
+            device: "zcu102".into(),
+            point: Ok(pinned_point()),
+        },
+        SweepRow {
+            model: "x3d_m".into(),
+            device: "vc709".into(),
+            point: Err("does not fit".into()),
+        },
+    ];
+    // Object keys serialise in BTreeMap (alphabetical) order — the
+    // whole line is deterministic. This is the `--profiles`
+    // interchange contract: changing it must change this test.
+    let expect = concat!(
+        "{\"bram\":300.5,\"device\":\"zcu102\",\"dsp\":1024,",
+        "\"dsp_pct\":40.625,\"ff\":200000,\"fill_ms\":1.75,",
+        "\"gops\":250,\"latency_ms\":12.5,\"lut\":100000,",
+        "\"model\":\"c3d\",\"reconfig_ms\":3.5,\"sa_states\":5000,",
+        "\"sim_ms\":14.25}\n",
+        "{\"device\":\"vc709\",\"error\":\"does not fit\",",
+        "\"model\":\"x3d_m\"}\n",
+    );
+    assert_eq!(report::sweep_jsonl(&rows), expect);
+}
+
+#[test]
+fn sweep_point_round_trips_bit_exact() {
+    let p = pinned_point();
+    let line = p.to_json().to_string();
+    let back = SweepPoint::from_json(&Json::parse(&line).unwrap())
+        .unwrap();
+    assert_eq!(back.model, p.model);
+    assert_eq!(back.device, p.device);
+    for (a, b) in [
+        (back.latency_ms, p.latency_ms),
+        (back.sim_ms, p.sim_ms),
+        (back.reconfig_ms, p.reconfig_ms),
+        (back.fill_ms, p.fill_ms),
+        (back.gops, p.gops),
+        (back.dsp, p.dsp),
+        (back.bram, p.bram),
+        (back.lut, p.lut),
+        (back.ff, p.ff),
+        (back.dsp_pct, p.dsp_pct),
+    ] {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(back.sa_states, p.sa_states);
+}
+
+#[test]
+fn sweep_point_reader_accepts_pre_batching_files() {
+    // `fill_ms` arrived with clip batching; old `sweep --out` files
+    // lack it and must still load (fill 0 = no amortisation).
+    let mut legacy = pinned_point().to_json();
+    if let Json::Obj(m) = &mut legacy {
+        m.remove("fill_ms");
+    }
+    let p = SweepPoint::from_json(&legacy).unwrap();
+    assert_eq!(p.fill_ms, 0.0);
+    // A missing required key still errors.
+    let mut broken = pinned_point().to_json();
+    if let Json::Obj(m) = &mut broken {
+        m.remove("sim_ms");
+    }
+    assert!(SweepPoint::from_json(&broken).is_err());
+    // Present-but-malformed fill_ms is corruption, not a legacy file.
+    let mut corrupt = pinned_point().to_json();
+    if let Json::Obj(m) = &mut corrupt {
+        m.insert("fill_ms".into(), Json::Str("1.75".into()));
+    }
+    assert!(SweepPoint::from_json(&corrupt).is_err());
+}
+
+#[test]
+fn sweep_out_jsonl_is_run_stable_and_schema_exact() {
+    // The real DSE-backed path: same seed => byte-identical output,
+    // and the schema is exactly the pinned key set (catches silent
+    // drift the hand-built test cannot — e.g. a field added to the
+    // writer only for real runs).
+    let cfg = report::SweepCfg {
+        models: vec!["c3d_tiny".into()],
+        devices: vec!["zcu102".into()],
+        opt: harflow3d::optim::OptCfg::fast(5),
+        chains: 1,
+        exchange_every: 32,
+        jobs: 1,
+    };
+    let a = report::sweep_jsonl(&report::sweep_points(&cfg).unwrap());
+    let b = report::sweep_jsonl(&report::sweep_points(&cfg).unwrap());
+    assert_eq!(a, b, "sweep --out must be byte-stable for a seed");
+
+    let parsed = Json::parse(a.trim()).unwrap();
+    let Json::Obj(map) = &parsed else { panic!("object per line") };
+    let keys: Vec<&str> = map.keys().map(|k| k.as_str()).collect();
+    assert_eq!(keys, vec![
+        "bram", "device", "dsp", "dsp_pct", "ff", "fill_ms", "gops",
+        "latency_ms", "lut", "model", "reconfig_ms", "sa_states",
+        "sim_ms",
+    ]);
+    let p = SweepPoint::from_json(&parsed).unwrap();
+    assert!(p.fill_ms > 0.0 && p.fill_ms < p.sim_ms,
+            "fill is a proper slice of the service time: {} vs {}",
+            p.fill_ms, p.sim_ms);
+}
+
+#[test]
+fn report_fleet_section_is_run_stable_and_structure_pinned() {
+    let cfg = report::ReportCfg { seed: 0x4A8F, n_seeds: 2, fast: true };
+    let a = report::by_name("fleet", &cfg).unwrap();
+    let b = report::by_name("fleet", &cfg).unwrap();
+    assert_eq!(a, b, "report fleet must be byte-stable for a seed");
+    // Structural pins: both tables, all three policies, the batching
+    // sweep, and the fill profile header.
+    for needle in [
+        "Fleet — C3D @ zcu102 x4 boards",
+        "fill",
+        "round-robin",
+        "least-loaded",
+        "slo-aware",
+        "Fleet batching — C3D @ zcu102 x4 boards at 120% of \
+         single-clip capacity",
+        "Batch cap",
+        "Mean clips/seq",
+        "batching: pipeline fill is paid once per sequence",
+    ] {
+        assert!(a.contains(needle), "missing {needle:?} in:\n{a}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fleet CLI end-to-end golden: hand-written profiles + trace, every
+// printed number hand-computed.
+// ---------------------------------------------------------------------
+
+fn write_tmp(name: &str, content: &str) -> std::path::PathBuf {
+    // Process-unique name: two concurrent test runs on one machine
+    // must not race on a shared /tmp file.
+    let p = std::env::temp_dir()
+        .join(format!("{}_{name}", std::process::id()));
+    std::fs::write(&p, content).unwrap();
+    p
+}
+
+#[test]
+fn fleet_cli_output_is_pinned_for_profiles_and_trace() {
+    // Profile: service 10 ms, switch 5 ms, fill 4 ms on zcu102
+    // (board cost 2520/900 = 2.80). Trace: three c3d clips at t=0 on
+    // one board with batch cap 4: clip 0 runs alone (10 ms), clips
+    // 1+2 ride one sequence (10 + 6 ms), so latencies are 10/26/26,
+    // makespan 26 ms, throughput 3/0.026 s = 115.4 req/s.
+    let profiles = write_tmp(
+        "harflow3d_golden_profiles.jsonl",
+        "{\"bram\":100,\"device\":\"zcu102\",\"dsp\":64,\
+         \"dsp_pct\":2.5,\"ff\":1000,\"fill_ms\":4,\"gops\":50,\
+         \"latency_ms\":8,\"lut\":2000,\"model\":\"c3d\",\
+         \"reconfig_ms\":5,\"sa_states\":100,\"sim_ms\":10}\n");
+    let trace = write_tmp("harflow3d_golden_trace.txt",
+                          "0 c3d\n0 c3d\n0 c3d\n");
+    let argv = [
+        "fleet", "--profiles", profiles.to_str().unwrap(),
+        "--trace", trace.to_str().unwrap(),
+        "--boards", "1", "--batch", "4", "--slo-ms", "100",
+        "--seed", "7",
+    ];
+    let args = Args::parse(argv.iter().map(|s| s.to_string()));
+    let out = fleet::cli::run(&args).unwrap();
+    let again = fleet::cli::run(&args).unwrap();
+    assert_eq!(out, again, "CLI output must be deterministic");
+    for needle in [
+        "profiles (1 models x 1 devices):",
+        "c3d @ zcu102: service 10.00 ms/clip, switch 5.00 ms, \
+         fill 4.00 ms (predicted 8.00 ms, board cost 2.80)",
+        "fleet sim (1 boards, slo-aware, fifo queue, 3 requests, \
+         seed 7, batch <= 4 wait 0.0 ms):",
+        "p50 26.00 ms  p95 26.00 ms  p99 26.00 ms  mean 20.67 ms  \
+         max 26.00 ms",
+        "throughput 115.4 req/s | completed 3 dropped 0 | 0 design \
+         switches | 0 SLO violations | 2 sequences (mean 1.50 clips)",
+        "zcu102: util 100.0%",
+        "verdict: SLO met (p99 26.00 <= 100.0 ms)",
+    ] {
+        assert!(out.contains(needle), "missing {needle:?} in:\n{out}");
+    }
+}
+
+#[test]
+fn fleet_cli_errors_are_clean_strings() {
+    // End-to-end regression for the CLI bugfix: bad inputs come back
+    // as Err strings (printed as one-line diagnostics), never panics.
+    for argv in [
+        &["fleet", "--model", "nosuchnet"][..],
+        &["fleet", "--device", "zc9999"][..],
+        &["fleet", "--rate", "0"][..],
+        &["fleet", "--slo-ms", "-1"][..],
+        &["fleet", "--batch", "0"][..],
+        &["fleet", "--profiles", "/nonexistent/points.json"][..],
+    ] {
+        let args = Args::parse(argv.iter().map(|s| s.to_string()));
+        let e = fleet::cli::run(&args).unwrap_err();
+        assert!(e.starts_with("fleet:"), "{argv:?} -> {e}");
+    }
+}

@@ -1,0 +1,137 @@
+//! Edge-case suite for the two primitives the fleet planner's
+//! certification path leans on: `util::stats::percentile` (every p99
+//! the planner certifies goes through it) and `Rng::exponential` (the
+//! Poisson arrival streams every candidate fleet is judged against).
+
+use harflow3d::util::rng::{stream_seed, Rng};
+use harflow3d::util::stats::{percentile, percentile_sorted};
+
+// ---------------------------------------------------------------------
+// percentile
+// ---------------------------------------------------------------------
+
+#[test]
+fn percentile_of_empty_slice_is_zero() {
+    for p in [0.0, 50.0, 99.0, 100.0] {
+        assert_eq!(percentile(&[], p), 0.0);
+        assert_eq!(percentile_sorted(&[], p), 0.0);
+    }
+}
+
+#[test]
+fn percentile_of_single_sample_is_that_sample() {
+    for p in [0.0, 37.5, 50.0, 99.0, 100.0] {
+        assert_eq!(percentile(&[42.25], p), 42.25);
+        assert_eq!(percentile_sorted(&[-7.5], p), -7.5);
+    }
+}
+
+#[test]
+fn percentile_extremes_are_min_and_max() {
+    // Unsorted, with duplicates and negatives.
+    let xs = [3.0, -8.0, 3.0, 12.5, 0.0, -1.0];
+    assert_eq!(percentile(&xs, 0.0), -8.0);
+    assert_eq!(percentile(&xs, 100.0), 12.5);
+    // Out-of-range p clamps to the extremes instead of indexing out
+    // of bounds (the planner never passes these, but a caller typo
+    // must not panic).
+    assert_eq!(percentile(&xs, 150.0), 12.5);
+    assert_eq!(percentile(&xs, -10.0), -8.0);
+}
+
+#[test]
+fn percentile_nearest_rank_interior_points() {
+    let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+    // Nearest-rank over (len - 1): idx = round(4 * p / 100).
+    assert_eq!(percentile(&xs, 25.0), 20.0);
+    assert_eq!(percentile(&xs, 50.0), 30.0);
+    assert_eq!(percentile(&xs, 75.0), 40.0);
+    assert_eq!(percentile(&xs, 95.0), 50.0);
+    // Two samples: p50 rounds up to the higher one.
+    assert_eq!(percentile(&[1.0, 9.0], 50.0), 9.0);
+}
+
+#[test]
+fn percentile_ordering_is_total_and_nan_free() {
+    // `total_cmp` gives a deterministic order even for the floats
+    // `sort_by(partial_cmp)` would choke on: -0.0 sorts before +0.0
+    // and NaN sorts last — no panic, no order-dependent result.
+    let xs = [0.0f64, f64::NAN, -0.0, -1.5];
+    assert_eq!(percentile(&xs, 0.0), -1.5);
+    let p33 = percentile(&xs, 33.0); // idx round(3*0.33) = 1 -> -0.0
+    assert_eq!(p33.to_bits(), (-0.0f64).to_bits());
+    let p66 = percentile(&xs, 66.0); // idx 2 -> +0.0
+    assert_eq!(p66.to_bits(), 0.0f64.to_bits());
+    assert!(percentile(&xs, 100.0).is_nan(), "NaN sorts last");
+    // All-finite inputs (the only case the simulator produces) never
+    // yield NaN.
+    let clean = [5.0, 1.0, 3.0];
+    for p in [0.0, 10.0, 50.0, 90.0, 100.0] {
+        assert!(!percentile(&clean, p).is_nan());
+    }
+}
+
+#[test]
+fn percentile_sorted_agrees_with_percentile() {
+    let mut xs: Vec<f64> =
+        (0..101).map(|i| ((i * 37) % 101) as f64).collect();
+    let unsorted = xs.clone();
+    xs.sort_by(|a, b| a.total_cmp(b));
+    for p in [0.0, 1.0, 12.5, 50.0, 90.0, 99.0, 100.0] {
+        assert_eq!(percentile(&unsorted, p), percentile_sorted(&xs, p),
+                   "p = {p}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rng::exponential
+// ---------------------------------------------------------------------
+
+#[test]
+fn exponential_mean_within_tolerance_per_stream() {
+    // Every stream the arrival constructors use (0 = base, 1 =
+    // inter-arrival, 2 = model pick) must individually produce
+    // Exp(rate) draws with the right mean — a biased stream would
+    // skew every certification the planner runs.
+    let rate = 200.0;
+    let n = 50_000;
+    for stream in [0u64, 1, 2, 3] {
+        let mut r = Rng::stream(0x4A8F, stream);
+        let mean: f64 =
+            (0..n).map(|_| r.exponential(rate)).sum::<f64>() / n as f64;
+        assert!((mean * rate - 1.0).abs() < 0.03,
+                "stream {stream}: mean {mean} vs expected {}",
+                1.0 / rate);
+    }
+}
+
+#[test]
+fn exponential_streams_are_decorrelated_but_reproducible() {
+    let a: Vec<u64> = {
+        let mut r = Rng::stream(7, 1);
+        (0..64).map(|_| r.exponential(100.0).to_bits()).collect()
+    };
+    let a2: Vec<u64> = {
+        let mut r = Rng::stream(7, 1);
+        (0..64).map(|_| r.exponential(100.0).to_bits()).collect()
+    };
+    assert_eq!(a, a2, "same stream replays bit-identically");
+    let b: Vec<u64> = {
+        let mut r = Rng::stream(7, 2);
+        (0..64).map(|_| r.exponential(100.0).to_bits()).collect()
+    };
+    let same = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+    assert!(same < 2, "sibling streams must decorrelate");
+    assert_ne!(stream_seed(7, 1), stream_seed(7, 2));
+}
+
+#[test]
+fn exponential_draws_are_strictly_positive_and_finite() {
+    let mut r = Rng::stream(99, 1);
+    for rate in [1e-6, 1.0, 250.0, 1e9] {
+        for _ in 0..2_000 {
+            let x = r.exponential(rate);
+            assert!(x > 0.0 && x.is_finite(), "rate {rate}: {x}");
+        }
+    }
+}
