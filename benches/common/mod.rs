@@ -39,6 +39,11 @@ pub struct BenchResult {
     /// per invocation sequence, 1 = batching off. Lets the regression
     /// gate compare like-for-like rows as the batch dimension grows.
     pub batch: Option<usize>,
+    /// Datapath wordlength of the scenario (quant benches only):
+    /// bits per weight/activation word. Rows at different widths are
+    /// different workload shapes — the regression gate reports the
+    /// width and refuses cross-width comparisons, mirroring `batch`.
+    pub bits: Option<u8>,
 }
 
 #[allow(dead_code)]
@@ -67,6 +72,9 @@ impl BenchResult {
         }
         if let Some(b) = self.batch {
             s.push_str(&format!(",\"batch\":{b}"));
+        }
+        if let Some(b) = self.bits {
+            s.push_str(&format!(",\"bits\":{b}"));
         }
         s.push('}');
         s
@@ -112,6 +120,7 @@ pub fn bench_rec<F: FnMut()>(name: &str, iters: usize, mut f: F)
         events_per_sec: None,
         p99_ms: None,
         batch: None,
+        bits: None,
     }
 }
 

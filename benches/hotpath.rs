@@ -76,6 +76,32 @@ fn main() {
         results.push(b);
     }
 
+    // Quantised DSE (quant subsystem): the SA with the wordlength
+    // move enabled under an SQNR floor — the per-candidate accuracy
+    // proxy plus the width-aware resource/latency models are on this
+    // path, so its states/second is gated separately (its `bits`
+    // field keeps the gate from comparing it across widths).
+    let qcfg = harflow3d::optim::OptCfg {
+        quant: Some(harflow3d::quant::QuantCfg {
+            default: harflow3d::quant::LayerQuant::uniform(8),
+            overrides: Vec::new(),
+            min_sqnr_db: 25.0,
+            search: true,
+        }),
+        ..OptCfg::fast(1)
+    };
+    let q_states = std::cell::Cell::new(0usize);
+    let mut qb = common::bench_rec(
+        "optim/SA c3d quant 8-bit search", 2 * k, || {
+            let r = optim::optimize(&c3d, &dev, &rm, qcfg.clone())
+                .unwrap();
+            q_states.set(r.iterations);
+            std::hint::black_box(&r);
+        });
+    qb.states_per_sec = Some(q_states.get() as f64 / qb.mean_s);
+    qb.bits = Some(8);
+    results.push(qb);
+
     // Cycle-approximate simulation of a schedule.
     let dd = Design::initial(&c3d);
     results.push(common::bench_rec(

@@ -15,10 +15,12 @@ each wherever it appears: ``states_per_sec`` (DSE benches,
 Rows are matched by ``name`` (the multi-chain rows embed their chain
 count in the name, so K=1/K=2/... compare like-for-like; fleet rows
 embed their batch cap and also carry it as a ``batch`` field, which
-the gate reports but never compares across different caps). Rows
-present in only one of the two files are reported but never fail the
-gate — new benches must be able to land before a baseline exists for
-them.
+the gate reports but never compares across different caps; quantised
+DSE rows carry a ``bits`` datapath-wordlength field with the same
+rule — a width change redefines the workload, so throughput is never
+compared across widths). Rows present in only one of the two files
+are reported but never fail the gate — new benches must be able to
+land before a baseline exists for them.
 
 Seeded baselines: a baseline row carrying ``"seeded": true`` was
 hand-committed to arm the gate before any trusted CI run existed (the
@@ -108,17 +110,26 @@ def main():
         seeded = bool(base.get("seeded"))
         max_drop = args.max_drop_seeded if seeded else args.max_drop
         tag = " [seeded: collapse floor only]" if seeded else ""
-        # Batched fleet rows are a different workload shape: a cap
-        # mismatch between baseline and fresh means the scenario was
-        # redefined, so comparing throughput would be apples-to-oranges.
-        if (cur is not None and base.get("batch") is not None
-                and cur.get("batch") is not None
-                and base["batch"] != cur["batch"]):
-            print(f"note: '{name}' batch cap changed "
-                  f"({base['batch']} -> {cur['batch']}); not gated")
-            continue
+        # Batched fleet rows and quantised DSE rows are different
+        # workload shapes per `batch` cap / `bits` width: any mismatch
+        # between baseline and fresh — including the field appearing
+        # on only one side — means the scenario was redefined, so
+        # comparing throughput would be apples-to-oranges.
+        if cur is not None:
+            redefined = False
+            for key, what in (("batch", "batch cap"),
+                              ("bits", "wordlength")):
+                bv, cv = base.get(key), cur.get(key)
+                if (bv is not None or cv is not None) and bv != cv:
+                    print(f"note: '{name}' {what} changed "
+                          f"({bv} -> {cv}); not gated")
+                    redefined = True
+            if redefined:
+                continue
         if base.get("batch") is not None:
             tag += f" [batch={base['batch']}]"
+        if base.get("bits") is not None:
+            tag += f" [bits={base['bits']}]"
         for metric in METRICS:
             sps_base = base.get(metric)
             # A zero/absent baseline cannot be compared against (and a

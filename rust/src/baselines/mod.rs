@@ -29,8 +29,25 @@ pub struct PriorWork {
     pub op_dsp_cycle: f64,
     pub freq_mhz: f64,
     pub precision: &'static str,
+    /// Machine-readable datapath wordlength behind the free-text
+    /// `precision` tag (see [`precision_bits`]) — lets the quant
+    /// subsystem's reports group comparisons like-for-like.
+    pub bits: u8,
     pub dsp_pct: f64,
     pub bram_pct: f64,
+}
+
+/// Wordlength of a Table V precision tag. Block floating point (BFP)
+/// counts as 8: the referenced design streams 8-bit mantissas with a
+/// shared per-block exponent, so its datapath/bandwidth economics are
+/// 8-bit-class.
+pub fn precision_bits(precision: &str) -> Option<u8> {
+    match precision {
+        "fp-8" | "BFP" => Some(8),
+        "fp-16" => Some(16),
+        "float-32" => Some(32),
+        _ => None,
+    }
 }
 
 /// Table V's prior-work columns, verbatim.
@@ -40,51 +57,61 @@ pub fn prior_works() -> Vec<PriorWork> {
             model: "c3d", accuracy: 79.87, fpga: "zc706",
             latency_ms: 542.5, gops: 71.17, gops_per_dsp: 0.079,
             op_dsp_cycle: 0.459, freq_mhz: 172.0, precision: "fp-16",
+            bits: 16,
             dsp_pct: 90.0, bram_pct: 86.6 },
         PriorWork { work: "H. Fan [5] BFP", style: "hand-tuned",
             model: "c3d", accuracy: 81.99, fpga: "zc706",
             latency_ms: 476.8, gops: 80.97, gops_per_dsp: 0.089,
             op_dsp_cycle: 0.449, freq_mhz: 200.0, precision: "BFP",
+            bits: 8,
             dsp_pct: 86.6, bram_pct: 88.1 },
         PriorWork { work: "Z. Liu [8]", style: "partial",
             model: "c3d", accuracy: 83.2, fpga: "vc709",
             latency_ms: 115.5, gops: 334.28, gops_per_dsp: 0.092,
             op_dsp_cycle: 0.773, freq_mhz: 120.0, precision: "fp-16",
+            bits: 16,
             dsp_pct: 99.8, bram_pct: 26.6 },
         PriorWork { work: "T. Teng [13]", style: "hand-tuned",
             model: "c3d", accuracy: 83.2, fpga: "vc707",
             latency_ms: 107.9, gops: 357.83, gops_per_dsp: 0.127,
             op_dsp_cycle: 0.798, freq_mhz: 160.0, precision: "fp-8",
+            bits: 8,
             dsp_pct: 96.0, bram_pct: 25.3 },
         PriorWork { work: "J. Shen [9] (VC709)", style: "partial",
             model: "c3d", accuracy: 83.2, fpga: "vc709",
             latency_ms: 89.4, gops: 431.87, gops_per_dsp: 0.119,
             op_dsp_cycle: 0.799, freq_mhz: 150.0, precision: "fp-16",
+            bits: 16,
             dsp_pct: 42.0, bram_pct: 52.0 },
         PriorWork { work: "J. Shen [9] (VUS440)", style: "partial",
             model: "c3d", accuracy: 83.2, fpga: "vus440",
             latency_ms: 49.1, gops: 786.35, gops_per_dsp: 0.273,
             op_dsp_cycle: 1.365, freq_mhz: 200.0, precision: "fp-16",
+            bits: 16,
             dsp_pct: 53.0, bram_pct: 30.0 },
         PriorWork { work: "M. Sun [11] (C3D)", style: "partial",
             model: "c3d", accuracy: 83.2, fpga: "zcu102",
             latency_ms: 487.0, gops: 79.28, gops_per_dsp: 0.031,
             op_dsp_cycle: 0.209, freq_mhz: 150.0, precision: "fp-16",
+            bits: 16,
             dsp_pct: 48.0, bram_pct: 100.0 },
         PriorWork { work: "M. Sun [11] (R(2+1)D-18)", style: "partial",
             model: "r2plus1d_18", accuracy: 88.66, fpga: "zcu102",
             latency_ms: 243.0, gops: 35.06, gops_per_dsp: 0.013,
             op_dsp_cycle: 0.092, freq_mhz: 150.0, precision: "fp-16",
+            bits: 16,
             dsp_pct: 48.0, bram_pct: 100.0 },
         PriorWork { work: "H. Fan [6] F-E3D", style: "hand-tuned",
             model: "e3d", accuracy: 85.17, fpga: "intel-sx660",
             latency_ms: 35.32, gops: 172.8, gops_per_dsp: 0.102,
             op_dsp_cycle: 0.68, freq_mhz: 150.0, precision: "float-32",
+            bits: 32,
             dsp_pct: 93.3, bram_pct: 0.0 },
         PriorWork { work: "F. H. Khan [14]", style: "hand-tuned",
             model: "i3d", accuracy: 95.0, fpga: "vc709",
             latency_ms: 96.0, gops: 1145.83, gops_per_dsp: 0.318,
             op_dsp_cycle: 1.59, freq_mhz: 200.0, precision: "fp-8",
+            bits: 8,
             dsp_pct: 100.0, bram_pct: 79.0 },
     ]
 }
@@ -199,6 +226,17 @@ mod tests {
         assert!(!c.enable_combine);
         assert!(!c.enable_fusion);
         assert!(!c.runtime_params);
+    }
+
+    #[test]
+    fn bits_agree_with_precision_tags() {
+        // The machine-readable wordlength must always match the
+        // free-text precision tag it annotates.
+        for w in prior_works() {
+            assert_eq!(precision_bits(w.precision), Some(w.bits),
+                       "{}", w.work);
+        }
+        assert_eq!(precision_bits("int-3"), None);
     }
 
     #[test]

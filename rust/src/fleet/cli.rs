@@ -5,12 +5,19 @@
 //! Grammar (see `main.rs` for the full launcher grammar):
 //!
 //! ```text
-//! fleet [--models a,b] [--devices x,y] [--rate R] [--slo-ms S]
+//! fleet [--models a,b] [--devices x,y] [--bits 16,8] [--rate R]
+//!       [--slo-ms S]
 //!       [--policy rr|least-loaded|slo-aware] [--queue fifo|priority]
 //!       [--batch B] [--max-wait-ms W] [--mixed]
 //!       [--boards N] [--requests N] [--max-boards N] [--seed S]
 //!       [--trace file] [--profiles points.json] [--fast]
 //! ```
+//!
+//! `--bits` (quant subsystem) selects datapath wordlengths: it fans
+//! the DSE sweep over the listed widths, or filters a `--profiles`
+//! file by its `bits` column (rows from pre-quantisation files count
+//! as 16). When several precision variants survive for one (model,
+//! device) cell, the fleet serves with the fastest one and says so.
 //!
 //! Every option is validated up front with a specific error message —
 //! an unknown model or device name, a non-positive `--rate`/`--slo-ms`,
@@ -35,6 +42,10 @@ pub struct FleetArgs {
     /// explicit list filters a `--profiles` file; the defaults do not.
     pub models_explicit: bool,
     pub devices_explicit: bool,
+    /// Datapath wordlengths (quant subsystem): the DSE sweep's bits
+    /// axis, and — when explicit — a filter on `--profiles` rows.
+    pub bits: Vec<u8>,
+    pub bits_explicit: bool,
     pub rate: f64,
     pub slo_ms: f64,
     pub seed: u64,
@@ -139,6 +150,10 @@ impl FleetArgs {
         if devices.is_empty() {
             return Err("fleet: --devices lists no device names".into());
         }
+        let bits_explicit = args.opt("bits").is_some();
+        let bits = crate::quant::parse_bits_csv(args.opt_or("bits",
+                                                            "16"))
+            .map_err(|e| format!("fleet: {e}"))?;
         // Device names always resolve against the board registry (the
         // planner prices boards by device). Model names must be zoo
         // models or ONNX-JSON paths when the DSE will run; with
@@ -207,6 +222,8 @@ impl FleetArgs {
             devices,
             models_explicit,
             devices_explicit,
+            bits,
+            bits_explicit,
             rate,
             slo_ms,
             seed: u64_opt(args, "seed", 0x4A8F)?,
@@ -236,6 +253,36 @@ pub fn run(args: &Args) -> Result<String, String> {
 
     // -- serving profiles: model x device service/switch/fill grid ------
     let points = load_points(&fa, &mut out)?;
+    // Collapse precision variants (quant subsystem): a sweep over
+    // several --bits leaves one row per width for a (model, device)
+    // cell; the fleet serves each cell with its fastest design.
+    let mut collapsed: Vec<SweepPoint> = Vec::new();
+    for p in points {
+        let pos = collapsed
+            .iter()
+            .position(|k| k.model == p.model && k.device == p.device);
+        match pos {
+            Some(i) => {
+                let k = &collapsed[i];
+                let faster = p.sim_ms < k.sim_ms;
+                let (kb, kms, db, dms) = if faster {
+                    (p.bits, p.sim_ms, k.bits, k.sim_ms)
+                } else {
+                    (k.bits, k.sim_ms, p.bits, p.sim_ms)
+                };
+                out.push_str(&format!(
+                    "note: {} @ {}: serving with the {kb}-bit design \
+                     ({kms:.2} ms/clip); dropping the {db}-bit \
+                     variant ({dms:.2} ms)\n",
+                    k.model, k.device));
+                if faster {
+                    collapsed[i] = p;
+                }
+            }
+            None => collapsed.push(p),
+        }
+    }
+    let points = collapsed;
     if points.is_empty() {
         // Carry the buffered per-point infeasibility notes into the
         // error — the caller only prints `out` on success, and a bare
@@ -282,9 +329,10 @@ pub fn run(args: &Args) -> Result<String, String> {
         });
         out.push_str(&format!(
             "  {} @ {}: service {:.2} ms/clip, switch {:.2} ms, fill \
-             {:.2} ms (predicted {:.2} ms, board cost {:.2})\n",
+             {:.2} ms ({}-bit, predicted {:.2} ms, board cost \
+             {:.2})\n",
             p.model, p.device, p.sim_ms, p.reconfig_ms, p.fill_ms,
-            p.latency_ms, matrix.costs[d]));
+            p.bits, p.latency_ms, matrix.costs[d]));
     }
 
     let n_models = matrix.models.len();
@@ -386,6 +434,9 @@ fn load_points(fa: &FleetArgs, out: &mut String)
             if fa.devices_explicit && !fa.devices.contains(&p.device) {
                 continue;
             }
+            if fa.bits_explicit && !fa.bits.contains(&p.bits) {
+                continue;
+            }
             pts.push(p);
         }
         return Ok(pts);
@@ -398,6 +449,7 @@ fn load_points(fa: &FleetArgs, out: &mut String)
     let cfg = report::SweepCfg {
         models: fa.models.clone(),
         devices: fa.devices.clone(),
+        bits: fa.bits.clone(),
         opt,
         chains: fa.chains,
         exchange_every: fa.exchange_every,
@@ -406,8 +458,9 @@ fn load_points(fa: &FleetArgs, out: &mut String)
     let rows = report::sweep_points(&cfg)?;
     for row in &rows {
         if let Err(e) = &row.point {
-            out.push_str(&format!("note: {} @ {}: infeasible ({e})\n",
-                                  row.model, row.device));
+            out.push_str(&format!(
+                "note: {} @ {} ({}-bit): infeasible ({e})\n",
+                row.model, row.device, row.bits));
         }
     }
     Ok(rows.into_iter().filter_map(|r| r.point.ok()).collect())
@@ -488,6 +541,20 @@ mod tests {
         assert_eq!(fa.batch.max_wait_ms, 2.5);
         assert!(fa.mixed);
         assert_eq!(fa.devices, vec!["zcu102", "zc706"]);
+    }
+
+    #[test]
+    fn bits_flag_parses_and_validates() {
+        let fa = parse(&["fleet", "--bits", "16,8"]).unwrap();
+        assert_eq!(fa.bits, vec![16, 8]);
+        assert!(fa.bits_explicit);
+        let fa = parse(&["fleet"]).unwrap();
+        assert_eq!(fa.bits, vec![16]);
+        assert!(!fa.bits_explicit);
+        let e = parse(&["fleet", "--bits", "12"]).unwrap_err();
+        assert!(e.contains("12") && e.contains("4, 8, 16, 32"), "{e}");
+        let e = parse(&["fleet", "--bits", "lots"]).unwrap_err();
+        assert!(e.contains("--bits"), "{e}");
     }
 
     #[test]

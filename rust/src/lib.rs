@@ -3,6 +3,30 @@
 //!
 //! See DESIGN.md for the system inventory and the experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
+
+// CI runs `cargo clippy -- -D warnings`; these stylistic/complexity
+// lints fight deliberate patterns in this codebase (index loops over
+// split borrows in the SA hot path, NaN-rejecting `!(x > 0.0)` guards,
+// result enums sized by their payload, `&Vec` closures over fitted
+// coefficient tables) and are allowed crate-wide so the correctness,
+// suspicious, and perf lints stay armed.
+#![allow(
+    clippy::collapsible_else_if,
+    clippy::collapsible_if,
+    clippy::comparison_chain,
+    clippy::large_enum_variant,
+    clippy::manual_div_ceil,
+    clippy::needless_range_loop,
+    clippy::neg_cmp_op_on_partial_ord,
+    clippy::new_without_default,
+    clippy::or_fun_call,
+    clippy::ptr_arg,
+    clippy::should_implement_trait,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::useless_format
+)]
+
 pub mod baselines;
 pub mod codegen;
 pub mod coordinator;
@@ -11,6 +35,7 @@ pub mod fleet;
 pub mod model;
 pub mod optim;
 pub mod perf;
+pub mod quant;
 pub mod report;
 pub mod resource;
 pub mod runtime;

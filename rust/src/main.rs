@@ -5,9 +5,13 @@
 //!                    [--chains K [--exchange-every T]]
 //! harflow3d schedule <model> <device> [--fast]        dump Φ_G summary
 //! harflow3d simulate <model> <device> [--fast]        cycle-approx run
-//! harflow3d sweep [--models a,b] [--devices x,y] [--chains K]
-//!                 [--jobs J] [--seed S] [--fast]
-//!                 [--out points.json]                 model x device DSE
+//! harflow3d sweep [--models a,b] [--devices x,y] [--bits 16,8]
+//!                 [--chains K] [--jobs J] [--seed S] [--fast]
+//!                 [--out points.json]           model x device x bits DSE
+//! harflow3d quant <model> [device] [--bits B] [--weight-bits B]
+//!                 [--act-bits B] [--override l=W:A,...]
+//!                 [--min-sqnr-db F] [--search] [--fast]
+//!                                               wordlength co-design report
 //! harflow3d fleet [--models a,b] [--devices x,y] [--rate R]
 //!                 [--slo-ms S] [--policy rr|least-loaded|slo-aware]
 //!                 [--queue fifo|priority] [--batch B] [--max-wait-ms W]
@@ -25,6 +29,12 @@
 //! multi-chain engine: K annealing chains on K threads with periodic
 //! best-design exchange, reproducible for a fixed `--seed` (K = 1 is
 //! bit-identical to the sequential engine).
+
+// Same stylistic-lint policy as the library crate (see rust/src/lib.rs);
+// CI denies clippy warnings.
+#![allow(clippy::or_fun_call, clippy::useless_format,
+         clippy::too_many_arguments, clippy::collapsible_if,
+         clippy::collapsible_else_if)]
 
 use anyhow::{anyhow, Result};
 
@@ -156,11 +166,16 @@ fn main() -> Result<()> {
             let jobs_default = std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1);
+            let bits =
+                harflow3d::quant::parse_bits_csv(args.opt_or("bits",
+                                                             "16"))
+                    .map_err(|e| anyhow!("sweep: {e}"))?;
             let cfg = report::SweepCfg {
                 models: csv_list(&args, &["models", "model"],
                                  &default_models),
                 devices: csv_list(&args, &["devices", "device"],
                                   "zcu102,vc709"),
+                bits,
                 opt: opt_cfg(&args)?,
                 chains: args.opt_usize("chains", 1),
                 exchange_every: args.opt_usize("exchange-every", 32),
@@ -182,6 +197,13 @@ fn main() -> Result<()> {
             // Parsing, validation, simulation, and rendering live in
             // `fleet::cli` so the error paths and output are testable.
             let out = harflow3d::fleet::cli::run(&args)
+                .map_err(|e| anyhow!(e))?;
+            print!("{out}");
+        }
+        "quant" => {
+            // Wordlength co-design report (quant subsystem); parsing,
+            // validation, and rendering live in `quant::cli`.
+            let out = harflow3d::quant::cli::run(&args)
                 .map_err(|e| anyhow!(e))?;
             print!("{out}");
         }
@@ -300,7 +322,8 @@ fn main() -> Result<()> {
             let d = sdf::Design::initial(&m);
             d.validate(&m).map_err(|e| anyhow!(e))?;
             println!("harflow3d: use optimize/schedule/simulate/sweep/\
-                      report/serve/export/devices/models (see README)");
+                      quant/fleet/report/serve/export/devices/models \
+                      (see README)");
         }
         other => return Err(anyhow!("unknown command {other}")),
     }

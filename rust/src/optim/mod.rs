@@ -52,6 +52,14 @@ pub struct OptCfg {
     pub l_e: usize,
     /// `N_c` — computation nodes merged per combination move.
     pub n_c: usize,
+    /// Wordlength configuration (quant subsystem). `None` — the
+    /// default — is the paper's fixed 16-bit datapath and keeps the
+    /// engine bit-identical to the historical one (same RNG stream,
+    /// same accepted-move traces). `Some` stamps the configured
+    /// per-layer widths onto the warm start and, when
+    /// [`crate::quant::QuantCfg::search`] is set, adds the SA
+    /// wordlength move under the SQNR budget.
+    pub quant: Option<crate::quant::QuantCfg>,
 }
 
 impl Default for OptCfg {
@@ -67,6 +75,7 @@ impl Default for OptCfg {
             runtime_params: true,
             l_e: 2,
             n_c: 2,
+            quant: None,
         }
     }
 }
@@ -76,6 +85,12 @@ impl OptCfg {
     pub fn fast(seed: u64) -> OptCfg {
         OptCfg { seed, tau_min: 1e-2, iters_per_temp: 2,
                  ..OptCfg::default() }
+    }
+
+    /// Is the SA wordlength move enabled (quant config present with
+    /// `search`)?
+    pub fn quant_search(&self) -> bool {
+        self.quant.as_ref().is_some_and(|q| q.search)
     }
 }
 
@@ -361,6 +376,30 @@ impl<'a> Optimizer<'a> {
             transforms::fuse_all(self.model, &mut design);
             design.compact();
         }
+        // Quant subsystem: stamp the configured per-layer wordlengths
+        // onto the nodes (max over mapped layers) and reject a
+        // configuration that already busts the accuracy budget. The
+        // budget is a *hard* constraint over the whole annealing
+        // trajectory — the search explores only feasible
+        // configurations and cannot traverse an infeasible start — so
+        // the configured widths must satisfy it up front in both
+        // modes. Uniform 16-bit stamps are no-ops, keeping the
+        // historical warm start bit-identical.
+        if let Some(q) = &self.cfg.quant {
+            let widths = q.resolve(self.model)?;
+            crate::quant::apply_to_design(self.model, &mut design,
+                                          &widths);
+            let sqnr = crate::quant::design_sqnr_db(
+                self.model, &design, &mut Vec::new());
+            if sqnr < q.min_sqnr_db {
+                return Err(format!(
+                    "quant: configured wordlengths give SQNR \
+                     {sqnr:.1} dB, below the {:.1} dB budget — raise \
+                     the starting widths or lower the budget \
+                     (--min-sqnr-db)",
+                    q.min_sqnr_db));
+            }
+        }
         // Memory-bound node types (act/eltwise/gap/pool) consume no
         // DSPs; give them enough stream parallelism up front to meet
         // the DMA bandwidth — SA still tunes them, but the warm start
@@ -447,6 +486,15 @@ pub struct Chain<'a> {
     iter: usize,
     accepted_moves: usize,
     cycles_per_ms: f64,
+    /// SQNR floor (dB) every candidate must keep — set only when the
+    /// wordlength search is on (widths never shrink otherwise, so the
+    /// warm-start budget check suffices and the per-move O(L) proxy
+    /// evaluation is skipped).
+    quant_floor: Option<f64>,
+    /// Scratch noise buffer + precomputed model sink mask for the
+    /// SQNR proxy (no per-candidate allocation on the hot path).
+    sqnr_scratch: Vec<f64>,
+    sqnr_sinks: Vec<bool>,
 }
 
 impl<'a> Chain<'a> {
@@ -465,6 +513,17 @@ impl<'a> Chain<'a> {
         let best = design.clone();
         let best_lat = ev.lat.total;
         let cycles_per_ms = opt.device.cycles_per_ms();
+        let quant_floor = opt
+            .cfg
+            .quant
+            .as_ref()
+            .filter(|q| q.search)
+            .map(|q| q.min_sqnr_db);
+        let sqnr_sinks = if quant_floor.is_some() {
+            crate::quant::sink_mask(opt.model)
+        } else {
+            Vec::new()
+        };
         Ok(Chain {
             model: opt.model,
             device: opt.device,
@@ -484,6 +543,9 @@ impl<'a> Chain<'a> {
             iter: 0,
             accepted_moves: 0,
             cycles_per_ms,
+            quant_floor,
+            sqnr_scratch: Vec::new(),
+            sqnr_sinks,
         })
     }
 
@@ -525,6 +587,30 @@ impl<'a> Chain<'a> {
             if self.design.validate_nodes(self.model, &touched).is_err() {
                 self.log.undo(&mut self.design);
                 continue;
+            }
+            // Accuracy budget (quant subsystem, search mode only).
+            // Execution widths can only change when some node's
+            // datapath widths changed (wordlength steps narrow them;
+            // combine maxes the target up; separate clones the donor,
+            // and remaps always land on equal-or-wider nodes), so the
+            // O(layers) SQNR proxy runs only for those candidates —
+            // the ~77% of moves that touch dims/folding alone skip it.
+            if let Some(floor) = self.quant_floor {
+                let widths_changed =
+                    self.log.saved_nodes().iter().any(|&(i, old)| {
+                        let n = &self.design.nodes[i];
+                        n.weight_bits != old.weight_bits
+                            || n.act_bits != old.act_bits
+                    });
+                if widths_changed {
+                    let sqnr = crate::quant::design_sqnr_db_sinks(
+                        self.model, &self.design, &self.sqnr_sinks,
+                        &mut self.sqnr_scratch);
+                    if sqnr < floor {
+                        self.log.undo(&mut self.design);
+                        continue;
+                    }
+                }
             }
             debug_assert_eq!(self.design.validate(self.model), Ok(()));
             let cand_res = self.ev.price_move(&self.design, self.rm,

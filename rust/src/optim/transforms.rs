@@ -184,6 +184,28 @@ pub fn fine(design: &mut Design, rng: &mut Rng, n: usize) -> bool {
     true
 }
 
+/// Supported wordlengths as a step pool for [`wordlength`].
+const BITS_POOL: [usize; 4] = [4, 8, 16, 32];
+
+/// Wordlength step (quant subsystem): move one of node `n`'s datapath
+/// widths one notch along {4, 8, 16, 32}. Weight width is meaningful
+/// on conv/fc nodes only; other kinds step the activation width
+/// alone. The caller gates the move behind `OptCfg::quant_search` and
+/// the SA loop holds every candidate to the SQNR budget.
+pub fn wordlength(design: &mut Design, rng: &mut Rng, n: usize) -> bool {
+    let node = &mut design.nodes[n];
+    let weighted = matches!(node.kind, NodeKind::Conv | NodeKind::Fc);
+    if weighted && rng.uniform() < 0.5 {
+        node.weight_bits =
+            step_in_pool(&BITS_POOL, node.weight_bits as usize, rng)
+                as u8;
+    } else {
+        node.act_bits =
+            step_in_pool(&BITS_POOL, node.act_bits as usize, rng) as u8;
+    }
+    true
+}
+
 /// §V-C4 — Separate: detach `L_e` execution nodes onto fresh
 /// computation nodes (one per type among the selected layers).
 /// Mutations are recorded in `log` so the move can be rolled back.
@@ -280,6 +302,15 @@ pub fn combine(model: &ModelGraph, design: &mut Design, rng: &mut Rng,
             log.save_mapping(design, l);
             design.mapping[l] = MapTarget::Node(target);
         }
+        // The merged node carries the widest datapath of its members:
+        // data bypasses down to narrower widths, never up (a 16-bit
+        // layer cannot run on an 8-bit multiplier array). No-op at
+        // the uniform 16-bit configuration.
+        let (wb, ab) =
+            (design.nodes[src].weight_bits, design.nodes[src].act_bits);
+        let t = &mut design.nodes[target];
+        t.weight_bits = t.weight_bits.max(wb);
+        t.act_bits = t.act_bits.max(ab);
     }
     // Update the target to support the new set of workloads: only the
     // kernel must cover every mapped layer (runtime bypass goes down,
@@ -329,6 +360,20 @@ pub fn random_move_logged(model: &ModelGraph, design: &mut Design,
     }
     let roll = rng.uniform();
     let n = *rng.choose(&used);
+    // Wordlength moves (quant subsystem) take the top 12.5% of the
+    // roll when the search is enabled; the remainder is renormalised
+    // so the historical dispatch keeps its exact proportions — and,
+    // with the search off, its exact RNG stream (the bit-identical
+    // trace contract of the 16-bit configuration).
+    let roll = if cfg.quant_search() {
+        if roll >= 0.875 {
+            log.save_node(design, n);
+            return wordlength(design, rng, n).then(|| vec![n]);
+        }
+        roll / 0.875
+    } else {
+        roll
+    };
     if !cfg.runtime_params {
         // Baseline hardware cannot tile below its compile-time dims:
         // feature-map reshaping is unavailable, and combination /
@@ -567,6 +612,67 @@ mod tests {
             }
         }
         assert!(applied > 200, "only {applied} moves applied");
+    }
+
+    #[test]
+    fn wordlength_steps_stay_in_pool_and_undo_exactly() {
+        let m = zoo::c3d();
+        let mut d = Design::initial(&m);
+        let mut rng = Rng::new(9);
+        let mut log = UndoLog::new();
+        let mut changed = 0;
+        for _ in 0..200 {
+            let n = rng.below(d.nodes.len());
+            let before = d.clone();
+            log.begin(&d);
+            log.save_node(&d, n);
+            wordlength(&mut d, &mut rng, n);
+            assert!(crate::quant::is_wordlength(d.nodes[n].weight_bits));
+            assert!(crate::quant::is_wordlength(d.nodes[n].act_bits));
+            assert_eq!(d.validate(&m), Ok(()));
+            if d.nodes[n] != before.nodes[n] {
+                changed += 1;
+            }
+            if rng.below(2) == 0 {
+                log.undo(&mut d);
+                assert_eq!(d.nodes, before.nodes);
+            }
+        }
+        assert!(changed > 50, "only {changed} width changes");
+    }
+
+    #[test]
+    fn quant_search_gates_the_wordlength_move() {
+        // With the search off the dispatch never touches widths (the
+        // bit-identity contract); with it on, widths move.
+        let m = zoo::c3d();
+        let all_16 = |d: &Design| {
+            d.nodes
+                .iter()
+                .all(|n| n.weight_bits == 16 && n.act_bits == 16)
+        };
+        let run = |search: bool| {
+            let mut d = Design::initial(&m);
+            let mut rng = Rng::new(0xA11);
+            let cfg = OptCfg {
+                quant: Some(crate::quant::QuantCfg {
+                    search,
+                    ..crate::quant::QuantCfg::default()
+                }),
+                ..OptCfg::default()
+            };
+            for _ in 0..300 {
+                let mut cand = d.clone();
+                if random_move(&m, &mut cand, &mut rng, &cfg).is_some()
+                    && cand.validate(&m).is_ok()
+                {
+                    d = cand;
+                }
+            }
+            d
+        };
+        assert!(all_16(&run(false)));
+        assert!(!all_16(&run(true)));
     }
 
     #[test]

@@ -52,8 +52,14 @@ pub fn compute_latency(kind: NodeKind, inv: &Invocation) -> f64 {
     }
 }
 
-/// Streaming rates of the invocation (words/cycle/stream): in, out,
-/// weight parameters, partial sums.
+/// Streaming rates of the invocation (16-bit-equivalent words/cycle/
+/// stream): in, out, weight parameters, partial sums.
+///
+/// The DMA environment (`BwEnv`) is calibrated in 16-bit words; a
+/// quantised datapath moves `bits/16` of a word per element, so the
+/// activation and weight traffic scale by [`Invocation::act_scale`] /
+/// [`Invocation::weight_scale`] — exactly 1.0 at the paper's 16-bit
+/// datapath, making the quantised model a strict generalisation.
 #[derive(Debug, Clone, Copy)]
 pub struct Rates {
     pub r_in: f64,
@@ -62,15 +68,27 @@ pub struct Rates {
     pub r_psum: f64,
 }
 
+impl Invocation {
+    /// Feature-map traffic scale vs the 16-bit DMA word unit.
+    pub fn act_scale(&self) -> f64 {
+        self.act_bits as f64 / 16.0
+    }
+
+    /// Weight traffic scale vs the 16-bit DMA word unit.
+    pub fn weight_scale(&self) -> f64 {
+        self.weight_bits as f64 / 16.0
+    }
+}
+
 pub fn rates(kind: NodeKind, inv: &Invocation) -> Rates {
     let l = compute_latency(kind, inv).max(1.0);
-    let s_in = inv.in_words();
-    let s_out = inv.tile_out.elems() as f64;
+    let s_in = inv.in_words() * inv.act_scale();
+    let s_out = inv.tile_out.elems() as f64 * inv.act_scale();
     let r_in = s_in / (l * inv.coarse_in as f64);
     let r_out = s_out / (l * inv.coarse_out as f64);
     let (r_param, r_psum) = match kind {
         NodeKind::Conv | NodeKind::Fc => {
-            let w = inv.weight_words() as f64;
+            let w = inv.weight_words() as f64 * inv.weight_scale();
             let folds =
                 (inv.coarse_in * inv.coarse_out * inv.fine) as f64;
             let r_param = w / (l * folds);
@@ -103,13 +121,16 @@ pub fn constrained_bw(kind: NodeKind, inv: &Invocation, env: &BwEnv)
 /// draining the input at `B_in` and filling the output at `B_out`.
 pub fn latency(kind: NodeKind, inv: &Invocation, env: &BwEnv) -> f64 {
     let (b_in, b_out) = constrained_bw(kind, inv, env);
-    let s_in = inv.in_words()
-        + if inv.psum { inv.tile_out.elems() as f64 } else { 0.0 }
+    let s_in = (inv.in_words()
+        + if inv.psum { inv.tile_out.elems() as f64 } else { 0.0 })
+        * inv.act_scale()
         + match kind {
-            NodeKind::Conv | NodeKind::Fc => inv.weight_words() as f64,
+            NodeKind::Conv | NodeKind::Fc => {
+                inv.weight_words() as f64 * inv.weight_scale()
+            }
             _ => 0.0,
         };
-    let s_out = inv.tile_out.elems() as f64;
+    let s_out = inv.tile_out.elems() as f64 * inv.act_scale();
     (s_in / b_in.max(1e-12)).max(s_out / b_out.max(1e-12))
 }
 
@@ -138,6 +159,8 @@ mod tests {
             psum: false,
             n_inputs: 1,
             extra_in_words: 0,
+            weight_bits: 16,
+            act_bits: 16,
         }
     }
 
@@ -188,6 +211,8 @@ mod tests {
             psum: false,
             n_inputs: 1,
             extra_in_words: 0,
+            weight_bits: 16,
+            act_bits: 16,
         };
         let env = BwEnv { bw_in: 24.0, bw_out: 24.0 };
         assert!(memory_bound(NodeKind::Act, &inv, &env));
@@ -195,6 +220,46 @@ mod tests {
         let l = latency(NodeKind::Act, &inv, &env);
         let expect = (8 * 56 * 56 * 64) as f64 / 24.0;
         assert!((l - expect).abs() / expect < 1e-6);
+    }
+
+    #[test]
+    fn quantised_traffic_halves_memory_bound_latency() {
+        // 8-bit activations move half the DMA words: a memory-bound
+        // act invocation speeds up by exactly 2x, while a
+        // compute-bound conv stays at its MAC-limited latency.
+        let mut act = Invocation {
+            layer: 0,
+            node: 0,
+            tile_in: Shape::new(8, 56, 56, 64),
+            tile_out: Shape::new(8, 56, 56, 64),
+            kernel: [1; 3],
+            groups: 1,
+            coarse_in: 64,
+            coarse_out: 64,
+            fine: 1,
+            psum: false,
+            n_inputs: 1,
+            extra_in_words: 0,
+            weight_bits: 16,
+            act_bits: 16,
+        };
+        let env = BwEnv { bw_in: 24.0, bw_out: 24.0 };
+        let l16 = latency(NodeKind::Act, &act, &env);
+        act.act_bits = 8;
+        act.weight_bits = 8;
+        let l8 = latency(NodeKind::Act, &act, &env);
+        assert!(memory_bound(NodeKind::Act, &act, &env));
+        assert_eq!((l8 * 2.0).to_bits(), l16.to_bits());
+
+        let mut conv = conv_inv(16, 32, 2, 2, 1);
+        let wide = wide_env();
+        let c16 = latency(NodeKind::Conv, &conv, &wide);
+        conv.act_bits = 8;
+        conv.weight_bits = 8;
+        let c8 = latency(NodeKind::Conv, &conv, &wide);
+        let compute = compute_latency(NodeKind::Conv, &conv);
+        assert!((c8 - compute).abs() / compute < 1e-6);
+        assert!((c16 - compute).abs() / compute < 1e-6);
     }
 
     #[test]
@@ -237,6 +302,8 @@ mod tests {
             psum: false,
             n_inputs,
             extra_in_words: 0,
+            weight_bits: 16,
+            act_bits: 16,
         };
         let env = BwEnv { bw_in: 2.0, bw_out: 1e9 };
         let one = latency(NodeKind::Eltwise, &mk(1), &env);
@@ -263,6 +330,8 @@ mod tests {
             psum: false,
             n_inputs,
             extra_in_words: extra,
+            weight_bits: 16,
+            act_bits: 16,
         };
         let env = BwEnv { bw_in: 2.0, bw_out: 1e9 };
         let one = latency(NodeKind::Eltwise, &mk(1, 0), &env);
@@ -289,6 +358,8 @@ mod tests {
             psum: false,
             n_inputs: 1,
             extra_in_words: 0,
+            weight_bits: 16,
+            act_bits: 16,
         };
         let l = compute_latency(NodeKind::Fc, &inv);
         assert!((l - (4096.0 * 4096.0 / 64.0)).abs() < 1e-6);

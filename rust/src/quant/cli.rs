@@ -1,0 +1,280 @@
+//! The `quant` CLI subcommand, as a library function so argument
+//! validation and the rendered output are unit-testable (the launcher
+//! in `main.rs` only parses `std::env::args` and prints).
+//!
+//! ```text
+//! quant <model> [device] [--bits B] [--weight-bits B] [--act-bits B]
+//!       [--override l=W:A[,l=B...]] [--min-sqnr-db F] [--search]
+//!       [--seed S] [--seeds N] [--fast]
+//! ```
+//!
+//! Runs the DSE twice — at the paper's uniform 16-bit datapath and at
+//! the requested quantisation (default: uniform 8-bit) — and reports
+//! per-node wordlengths, the analytic SQNR proxy, and the
+//! resource/latency deltas. `--search` additionally lets the SA step
+//! per-node wordlengths under the `--min-sqnr-db` budget instead of
+//! keeping the configured widths fixed.
+
+use crate::device;
+use crate::model;
+use crate::optim::{self, OptCfg};
+use crate::resource::ResourceModel;
+use crate::util::cli::Args;
+use crate::util::table::{num, Table};
+
+use super::{design_sqnr_db, is_wordlength, LayerQuant, QuantCfg,
+            WORDLENGTHS};
+
+fn parse_bits(what: &str, s: &str) -> Result<u8, String> {
+    let b: u8 = s.parse().map_err(|_| {
+        format!("quant: {what} expects a bit width (got {s:?})")
+    })?;
+    if !is_wordlength(b) {
+        return Err(format!(
+            "quant: {what} width {b} unsupported (accepted: {})",
+            WORDLENGTHS.map(|w| w.to_string()).join(", ")));
+    }
+    Ok(b)
+}
+
+/// `name=W:A` or `name=B` (both widths), comma-separated.
+fn parse_overrides(raw: &str) -> Result<Vec<(String, LayerQuant)>, String> {
+    let mut out = Vec::new();
+    for entry in raw.split(',').filter(|e| !e.trim().is_empty()) {
+        let (name, spec) = entry.trim().split_once('=').ok_or(format!(
+            "quant: --override entry {entry:?} is not name=W:A or \
+             name=BITS"))?;
+        let lq = match spec.split_once(':') {
+            Some((w, a)) => LayerQuant {
+                weight_bits: parse_bits("--override weight", w)?,
+                act_bits: parse_bits("--override activation", a)?,
+            },
+            None => LayerQuant::uniform(parse_bits("--override", spec)?),
+        };
+        out.push((name.to_string(), lq));
+    }
+    Ok(out)
+}
+
+/// Validated `quant` invocation.
+#[derive(Debug, Clone)]
+pub struct QuantArgs {
+    pub model: String,
+    pub device: String,
+    pub cfg: QuantCfg,
+    pub seed: u64,
+    pub n_seeds: u64,
+    pub fast: bool,
+}
+
+impl QuantArgs {
+    pub fn from_args(args: &Args) -> Result<QuantArgs, String> {
+        let model = args
+            .positional
+            .first()
+            .ok_or("quant: usage: quant <model> [device] [--bits B] \
+                    [--weight-bits B] [--act-bits B] [--override \
+                    l=W:A,...] [--min-sqnr-db F] [--search]"
+                .to_string())?
+            .clone();
+        let device = args
+            .positional
+            .get(1)
+            .map(|s| s.as_str())
+            .unwrap_or("zcu102")
+            .to_string();
+        if device::by_name(&device).is_none() {
+            let known: Vec<&str> = device::all_devices()
+                .iter()
+                .map(|d| d.name)
+                .collect();
+            return Err(format!(
+                "quant: unknown device {device:?} (known: {})",
+                known.join(", ")));
+        }
+        // Default: uniform 8-bit — the precision FPGA-QHAR-class
+        // designs use; --bits / --weight-bits / --act-bits refine it.
+        let bits = match args.opt("bits") {
+            Some(s) => parse_bits("--bits", s)?,
+            None => 8,
+        };
+        let weight_bits = match args.opt("weight-bits") {
+            Some(s) => parse_bits("--weight-bits", s)?,
+            None => bits,
+        };
+        let act_bits = match args.opt("act-bits") {
+            Some(s) => parse_bits("--act-bits", s)?,
+            None => bits,
+        };
+        let overrides = match args.opt("override") {
+            Some(raw) => parse_overrides(raw)?,
+            None => Vec::new(),
+        };
+        let min_sqnr_db = args
+            .strict_f64("min-sqnr-db", 30.0)
+            .map_err(|e| format!("quant: {e}"))?;
+        let cfg = QuantCfg {
+            default: LayerQuant { weight_bits, act_bits },
+            overrides,
+            min_sqnr_db,
+            search: args.flag("search"),
+        };
+        cfg.validate()?;
+        Ok(QuantArgs {
+            model,
+            device,
+            cfg,
+            seed: args
+                .strict_u64("seed", 0x4A8F)
+                .map_err(|e| format!("quant: {e}"))?,
+            n_seeds: args
+                .strict_u64("seeds", 2)
+                .map_err(|e| format!("quant: {e}"))?,
+            fast: args.flag("fast"),
+        })
+    }
+
+    fn opt_cfg(&self) -> OptCfg {
+        if self.fast {
+            OptCfg::fast(self.seed)
+        } else {
+            OptCfg { seed: self.seed, ..OptCfg::default() }
+        }
+    }
+}
+
+fn pct_delta(new: f64, old: f64) -> String {
+    if old == 0.0 {
+        return "-".into();
+    }
+    format!("{:+.1}%", (new - old) / old * 100.0)
+}
+
+/// Run the `quant` subcommand and return its rendered output.
+pub fn run(args: &Args) -> Result<String, String> {
+    let qa = QuantArgs::from_args(args)?;
+    let m = model::load(&qa.model)?;
+    let dev = device::by_name(&qa.device).expect("validated above");
+    // Resolve early: a typo'd override layer name must fail before
+    // the (expensive) baseline DSE runs.
+    qa.cfg.resolve(&m)?;
+    let rm = ResourceModel::default_fit();
+
+    let base_cfg = qa.opt_cfg();
+    let quant_cfg = OptCfg { quant: Some(qa.cfg.clone()), ..base_cfg.clone() };
+    let base = optim::optimize_multi(&m, &dev, &rm, base_cfg, qa.n_seeds)?;
+    let quant = optim::optimize_multi(&m, &dev, &rm, quant_cfg,
+                                      qa.n_seeds)?;
+
+    let sqnr_base =
+        design_sqnr_db(&m, &base.design, &mut Vec::new());
+    let sqnr_quant =
+        design_sqnr_db(&m, &quant.design, &mut Vec::new());
+
+    let mut out = format!(
+        "== Quant — {} @ {} ==\n\
+         config: default {}w/{}a bits, {} override(s), SQNR budget \
+         {:.1} dB, search {}\n\
+         proxy SQNR: {:.1} dB @ uniform 16-bit -> {:.1} dB quantised\n",
+        m.name, dev.name,
+        qa.cfg.default.weight_bits, qa.cfg.default.act_bits,
+        qa.cfg.overrides.len(), qa.cfg.min_sqnr_db,
+        if qa.cfg.search { "on" } else { "off" },
+        sqnr_base, sqnr_quant,
+    );
+
+    let mut t = Table::new("Quantised design — per-node wordlengths")
+        .header(&["Node", "Kind", "W bits", "A bits", "DSP", "BRAM",
+                  "Layers"]);
+    for (i, node) in quant.design.nodes.iter().enumerate() {
+        let layers = quant.design.layers_of(i);
+        if layers.is_empty() {
+            continue;
+        }
+        let r = rm.node_resources(node);
+        t.row(vec![
+            format!("{i}"),
+            node.kind.tag().into(),
+            format!("{}", node.weight_bits),
+            format!("{}", node.act_bits),
+            num(r.dsp, 0),
+            num(r.bram, 0),
+            format!("{}", layers.len()),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    out.push_str(&format!(
+        "baseline 16-bit: {:.2} ms/clip | DSP {:.0} BRAM {:.0} LUT \
+         {:.1}K FF {:.1}K\n\
+         quantised:       {:.2} ms/clip | DSP {:.0} BRAM {:.0} LUT \
+         {:.1}K FF {:.1}K\n\
+         delta: latency {} | DSP {} | BRAM {} | LUT {} | FF {}\n",
+        base.latency_ms, base.resources.dsp, base.resources.bram,
+        base.resources.lut / 1e3, base.resources.ff / 1e3,
+        quant.latency_ms, quant.resources.dsp, quant.resources.bram,
+        quant.resources.lut / 1e3, quant.resources.ff / 1e3,
+        pct_delta(quant.latency_ms, base.latency_ms),
+        pct_delta(quant.resources.dsp, base.resources.dsp),
+        pct_delta(quant.resources.bram, base.resources.bram),
+        pct_delta(quant.resources.lut, base.resources.lut),
+        pct_delta(quant.resources.ff, base.resources.ff),
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(argv: &[&str]) -> Result<QuantArgs, String> {
+        QuantArgs::from_args(&Args::parse(
+            argv.iter().map(|s| s.to_string())))
+    }
+
+    #[test]
+    fn defaults_to_uniform_8() {
+        let qa = parse(&["quant", "c3d"]).unwrap();
+        assert_eq!(qa.cfg.default, LayerQuant::uniform(8));
+        assert_eq!(qa.device, "zcu102");
+        assert!(!qa.cfg.search);
+        assert_eq!(qa.cfg.min_sqnr_db, 30.0);
+    }
+
+    #[test]
+    fn split_widths_and_overrides_parse() {
+        let qa = parse(&["quant", "c3d", "vc709", "--weight-bits", "8",
+                         "--act-bits", "16", "--override",
+                         "conv1a=16:16,fc8=4", "--search",
+                         "--min-sqnr-db", "25"]).unwrap();
+        assert_eq!(qa.cfg.default,
+                   LayerQuant { weight_bits: 8, act_bits: 16 });
+        assert_eq!(qa.cfg.overrides.len(), 2);
+        assert_eq!(qa.cfg.overrides[0],
+                   ("conv1a".into(), LayerQuant::W16));
+        assert_eq!(qa.cfg.overrides[1],
+                   ("fc8".into(), LayerQuant::uniform(4)));
+        assert!(qa.cfg.search);
+        assert_eq!(qa.cfg.min_sqnr_db, 25.0);
+    }
+
+    #[test]
+    fn rejects_bad_widths_and_garbage() {
+        let e = parse(&["quant", "c3d", "--bits", "12"]).unwrap_err();
+        assert!(e.contains("12") && e.contains("4, 8, 16, 32"), "{e}");
+        let e = parse(&["quant", "c3d", "--bits", "many"]).unwrap_err();
+        assert!(e.contains("--bits"), "{e}");
+        let e = parse(&["quant", "c3d", "--override", "conv1a"])
+            .unwrap_err();
+        assert!(e.contains("name=W:A"), "{e}");
+        let e = parse(&["quant", "c3d", "--override", "c=8:12"])
+            .unwrap_err();
+        assert!(e.contains("12"), "{e}");
+        let e = parse(&["quant"]).unwrap_err();
+        assert!(e.contains("usage"), "{e}");
+        let e = parse(&["quant", "c3d", "zc9999"]).unwrap_err();
+        assert!(e.contains("unknown device"), "{e}");
+        let e = parse(&["quant", "c3d", "--seed", "0x7"]).unwrap_err();
+        assert!(e.contains("--seed"), "{e}");
+    }
+}

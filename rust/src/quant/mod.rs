@@ -1,0 +1,486 @@
+//! Wordlength / precision modeling — the quantization subsystem.
+//!
+//! HARFLOW3D fixes the datapath at 16-bit fixed point (§IV-B models
+//! BRAM as 16-bit words, Table VI reports "16-bit fixed"), yet its own
+//! comparison table spans fp-8 and block-floating-point designs, and
+//! the throughput-per-DSP gap to those designs is mostly a precision
+//! gap. This module opens wordlength as a first-class, per-layer
+//! design axis:
+//!
+//! * [`LayerQuant`]/[`QuantCfg`] — per-layer weight/activation widths
+//!   drawn from [`WORDLENGTHS`] = {4, 8, 16, 32}, with a graph-wide
+//!   default and per-layer (by name) overrides;
+//! * an **analytic accuracy proxy**: SQNR-style quantisation noise
+//!   power accumulated along `ModelGraph` edges ([`sqnr_db`]), which
+//!   turns "how low can each layer go" into a checkable budget the
+//!   optimiser enforces per candidate ([`design_sqnr_db`]);
+//! * design plumbing: computation nodes carry compile-time datapath
+//!   widths (`CompNode::{weight_bits, act_bits}`); a node executing
+//!   several layers carries the widest of them (data bypasses *down*
+//!   to narrower widths, never up — the same rule as the runtime
+//!   kernel crossbar), stamped by [`apply_to_design`].
+//!
+//! The resource model prices the widths (BRAM primitive packing per
+//! bit, 2-per-DSP packing at <= 8-bit multipliers), the performance
+//! model scales DMA word traffic by bits/16 (memory-bound layers
+//! genuinely speed up), and the optimiser gets a wordlength move
+//! (`optim::transforms::wordlength`). Everything is calibrated so the
+//! uniform 16-bit configuration is **bit-identical** to the historical
+//! fixed-point models (pinned by `rust/tests/quant.rs`).
+
+pub mod cli;
+
+use crate::model::layer::LayerKind;
+use crate::model::ModelGraph;
+use crate::sdf::{Design, MapTarget};
+
+/// The wordlengths the datapath generator supports (power-of-two
+/// fixed-point widths; 36-bit BRAM lanes and DSP48 packing are modeled
+/// for exactly these).
+pub const WORDLENGTHS: [u8; 4] = [4, 8, 16, 32];
+
+/// Is `bits` a supported datapath wordlength?
+pub fn is_wordlength(bits: u8) -> bool {
+    WORDLENGTHS.contains(&bits)
+}
+
+/// Per-layer wordlengths: weight and activation (feature-map) widths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerQuant {
+    pub weight_bits: u8,
+    pub act_bits: u8,
+}
+
+impl LayerQuant {
+    /// The paper's fixed datapath: 16-bit weights and activations.
+    pub const W16: LayerQuant = LayerQuant { weight_bits: 16, act_bits: 16 };
+
+    /// Same width for weights and activations.
+    pub fn uniform(bits: u8) -> LayerQuant {
+        LayerQuant { weight_bits: bits, act_bits: bits }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (what, b) in [("weight", self.weight_bits),
+                          ("activation", self.act_bits)] {
+            if !is_wordlength(b) {
+                return Err(format!(
+                    "quant: {what} width {b} unsupported (accepted: \
+                     4, 8, 16, 32)"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Graph-wide quantisation configuration: a default width pair,
+/// per-layer overrides by layer name, and the accuracy budget.
+#[derive(Debug, Clone)]
+pub struct QuantCfg {
+    pub default: LayerQuant,
+    /// `(layer name, widths)` overrides; every name must exist in the
+    /// model ([`QuantCfg::resolve`] errors otherwise).
+    pub overrides: Vec<(String, LayerQuant)>,
+    /// Accuracy budget: the analytic SQNR proxy of every candidate
+    /// configuration must stay at/above this floor (dB). The uniform
+    /// 16-bit network sits near 90 dB on the zoo models; 30 dB admits
+    /// 8-bit everywhere on C3D-sized graphs while rejecting 4-bit.
+    pub min_sqnr_db: f64,
+    /// Let the SA perturb node wordlengths (within the floor). Off,
+    /// the configured widths are fixed for the whole run.
+    pub search: bool,
+}
+
+impl Default for QuantCfg {
+    fn default() -> Self {
+        QuantCfg {
+            default: LayerQuant::W16,
+            overrides: Vec::new(),
+            min_sqnr_db: 30.0,
+            search: false,
+        }
+    }
+}
+
+impl QuantCfg {
+    /// Uniform `bits`-wide configuration with an unconstrained budget
+    /// — the precision-sweep setting (report what uniform-`bits`
+    /// costs; the table carries the proxy SQNR for the reader).
+    pub fn uniform(bits: u8) -> QuantCfg {
+        QuantCfg {
+            default: LayerQuant::uniform(bits),
+            overrides: Vec::new(),
+            min_sqnr_db: f64::NEG_INFINITY,
+            search: false,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        self.default.validate()?;
+        for (name, q) in &self.overrides {
+            q.validate()
+                .map_err(|e| format!("{e} (override {name:?})"))?;
+        }
+        Ok(())
+    }
+
+    /// Resolve to dense per-layer widths for `model`. Unknown override
+    /// names error — a typo'd layer name must not silently quantise
+    /// the wrong thing.
+    pub fn resolve(&self, model: &ModelGraph)
+        -> Result<Vec<LayerQuant>, String> {
+        self.validate()?;
+        let mut q = vec![self.default; model.layers.len()];
+        for (name, lq) in &self.overrides {
+            let l = model
+                .layers
+                .iter()
+                .position(|layer| layer.name == *name)
+                .ok_or(format!(
+                    "quant: override names unknown layer {name:?} in \
+                     model {}", model.name))?;
+            q[l] = *lq;
+        }
+        Ok(q)
+    }
+}
+
+/// Quantisation noise power of a `bits`-wide uniform quantiser on
+/// unit-power data: step Δ = 2^(1-bits) over [-1, 1), noise Δ²/12.
+pub fn noise_power(bits: u8) -> f64 {
+    let delta = (2.0f64).powi(1 - bits as i32);
+    delta * delta / 12.0
+}
+
+/// Sink mask of a model: `true` for layers no other layer consumes —
+/// the network outputs the SQNR proxy reports on. Model-invariant, so
+/// hot-path callers (the SA's per-candidate budget gate) compute it
+/// once and pass it to [`sqnr_db_sinks`].
+pub fn sink_mask(model: &ModelGraph) -> Vec<bool> {
+    let mut is_sink = vec![true; model.layers.len()];
+    for layer in &model.layers {
+        for &src in &layer.inputs {
+            is_sink[src] = false;
+        }
+    }
+    is_sink
+}
+
+/// Analytic SQNR proxy (dB) of the network output when layer `l`
+/// executes at widths `q(l)` — one-shot convenience over
+/// [`sqnr_db_sinks`].
+pub fn sqnr_db_with(model: &ModelGraph,
+                    q: impl Fn(usize) -> LayerQuant,
+                    scratch: &mut Vec<f64>) -> f64 {
+    sqnr_db_sinks(model, q, &sink_mask(model), scratch)
+}
+
+/// Noise-gain accumulation along the `ModelGraph` edges: every layer
+/// forwards its producers' noise power (summed for eltwise — two
+/// independent noisy operands — and channel-weighted for concat) and
+/// adds its own requantisation noise: the activation width's
+/// quantiser always, plus the weight width's for conv/fc (weight
+/// noise enters multiplicatively against unit-power activations, so
+/// to first order it adds the same Δ²/12). Signal power is normalised
+/// to 1, so SQNR = -10·log10(noise at the output); the reported value
+/// is the worst (highest-noise) sink layer per `is_sink` (from
+/// [`sink_mask`]). `scratch` is the per-layer noise buffer — both are
+/// reused across candidates on the SA hot path, so this function
+/// performs no allocation.
+pub fn sqnr_db_sinks(model: &ModelGraph,
+                     q: impl Fn(usize) -> LayerQuant,
+                     is_sink: &[bool],
+                     scratch: &mut Vec<f64>) -> f64 {
+    let n_layers = model.layers.len();
+    scratch.clear();
+    scratch.resize(n_layers, 0.0);
+    let mut worst = 0.0f64;
+    for (l, layer) in model.layers.iter().enumerate() {
+        let n_in = match &layer.kind {
+            LayerKind::Eltwise { .. } => {
+                layer.inputs.iter().map(|&s| scratch[s]).sum()
+            }
+            LayerKind::Concat => {
+                let mut num = 0.0;
+                let mut den = 0.0;
+                for &s in &layer.inputs {
+                    let c = model.layers[s].out_shape.c as f64;
+                    num += scratch[s] * c;
+                    den += c;
+                }
+                if den > 0.0 { num / den } else { 0.0 }
+            }
+            _ => layer
+                .inputs
+                .first()
+                .map(|&s| scratch[s])
+                .unwrap_or(0.0),
+        };
+        let lq = q(l);
+        let own = match &layer.kind {
+            LayerKind::Conv3d { .. } | LayerKind::Fc { .. } => {
+                noise_power(lq.act_bits) + noise_power(lq.weight_bits)
+            }
+            _ => noise_power(lq.act_bits),
+        };
+        scratch[l] = n_in + own;
+        if is_sink[l] && scratch[l] > worst {
+            worst = scratch[l];
+        }
+    }
+    // Every layer adds act-quantiser noise, so `worst` is strictly
+    // positive for any non-empty model.
+    -10.0 * worst.max(f64::MIN_POSITIVE).log10()
+}
+
+/// [`sqnr_db_with`] over a dense per-layer width table.
+pub fn sqnr_db(model: &ModelGraph, q: &[LayerQuant]) -> f64 {
+    sqnr_db_with(model, |l| q[l], &mut Vec::new())
+}
+
+/// Widths layer `l` executes at in `design`: its node's compile-time
+/// datapath widths; fused layers ride their producer chain's node.
+pub fn design_layer_quant(model: &ModelGraph, design: &Design, l: usize)
+    -> LayerQuant {
+    let mut cur = l;
+    loop {
+        match design.mapping[cur] {
+            MapTarget::Node(i) => {
+                let node = &design.nodes[i];
+                return LayerQuant {
+                    weight_bits: node.weight_bits,
+                    act_bits: node.act_bits,
+                };
+            }
+            // Inputs precede their consumers (topological order), so
+            // the chain strictly descends and terminates.
+            MapTarget::Fused => match model.layers[cur].inputs.first() {
+                Some(&src) => cur = src,
+                None => return LayerQuant::W16,
+            },
+        }
+    }
+}
+
+/// SQNR proxy of a design: each layer at its executing node's widths.
+/// This is the quantity the optimiser holds above
+/// [`QuantCfg::min_sqnr_db`] for every candidate move.
+pub fn design_sqnr_db(model: &ModelGraph, design: &Design,
+                      scratch: &mut Vec<f64>) -> f64 {
+    sqnr_db_with(model, |l| design_layer_quant(model, design, l), scratch)
+}
+
+/// [`design_sqnr_db`] with a precomputed [`sink_mask`] — the
+/// allocation-free form the SA budget gate calls per candidate.
+pub fn design_sqnr_db_sinks(model: &ModelGraph, design: &Design,
+                            is_sink: &[bool], scratch: &mut Vec<f64>)
+    -> f64 {
+    sqnr_db_sinks(model, |l| design_layer_quant(model, design, l),
+                  is_sink, scratch)
+}
+
+/// Parse a CSV wordlength list (e.g. `"16,8"`): every entry must be a
+/// supported width. The shared strict parser behind `sweep --bits`,
+/// `fleet --bits`, and the quant CLI; error messages name the flag.
+pub fn parse_bits_csv(raw: &str) -> Result<Vec<u8>, String> {
+    let mut out = Vec::new();
+    for s in raw.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let b: u8 = s.parse().map_err(|_| format!(
+            "--bits expects widths from 4, 8, 16, 32 (got {s:?})"))?;
+        if !is_wordlength(b) {
+            return Err(format!(
+                "--bits width {b} unsupported (accepted: 4, 8, 16, \
+                 32)"));
+        }
+        out.push(b);
+    }
+    if out.is_empty() {
+        return Err("--bits lists no widths".into());
+    }
+    Ok(out)
+}
+
+/// Stamp configured per-layer widths onto a design's nodes: each node
+/// takes the **maximum** width over its mapped layers (a wide datapath
+/// carries narrow data, never the reverse — the same down-only bypass
+/// rule as the runtime kernel crossbar), with fused layers
+/// contributing to their producer's node. Weight widths are maxed
+/// from conv/fc layers only; nodes without weighted layers keep their
+/// current weight width.
+pub fn apply_to_design(model: &ModelGraph, design: &mut Design,
+                       q: &[LayerQuant]) {
+    let mut ab = vec![0u8; design.nodes.len()];
+    let mut wb = vec![0u8; design.nodes.len()];
+    for l in 0..model.layers.len() {
+        let mut cur = l;
+        let node = loop {
+            match design.mapping[cur] {
+                MapTarget::Node(i) => break Some(i),
+                MapTarget::Fused => {
+                    match model.layers[cur].inputs.first() {
+                        Some(&src) => cur = src,
+                        None => break None,
+                    }
+                }
+            }
+        };
+        let Some(i) = node else { continue };
+        ab[i] = ab[i].max(q[l].act_bits);
+        if matches!(model.layers[l].kind,
+                    LayerKind::Conv3d { .. } | LayerKind::Fc { .. }) {
+            wb[i] = wb[i].max(q[l].weight_bits);
+        }
+    }
+    for (i, node) in design.nodes.iter_mut().enumerate() {
+        if ab[i] > 0 {
+            node.act_bits = ab[i];
+        }
+        if wb[i] > 0 {
+            node.weight_bits = wb[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::sdf::Design;
+
+    #[test]
+    fn wordlength_set_is_pinned() {
+        assert_eq!(WORDLENGTHS, [4, 8, 16, 32]);
+        assert!(is_wordlength(8) && !is_wordlength(12));
+    }
+
+    #[test]
+    fn noise_power_halving_bits_squares_noise() {
+        // Each extra bit is ~6 dB: 2^-2b scaling.
+        assert!(noise_power(8) > noise_power(16));
+        let ratio = noise_power(8) / noise_power(16);
+        assert_eq!(ratio, (2.0f64).powi(16));
+    }
+
+    #[test]
+    fn sqnr_monotone_in_width() {
+        let m = zoo::c3d_tiny();
+        let s4 = sqnr_db(&m, &vec![LayerQuant::uniform(4); m.layers.len()]);
+        let s8 = sqnr_db(&m, &vec![LayerQuant::uniform(8); m.layers.len()]);
+        let s16 = sqnr_db(&m, &vec![LayerQuant::W16; m.layers.len()]);
+        let s32 =
+            sqnr_db(&m, &vec![LayerQuant::uniform(32); m.layers.len()]);
+        assert!(s4 < s8 && s8 < s16 && s16 < s32,
+                "{s4} {s8} {s16} {s32}");
+        // ~6 dB/bit: the 8->16 step is near 48 dB.
+        assert!((s16 - s8) > 40.0 && (s16 - s8) < 56.0, "{}", s16 - s8);
+    }
+
+    #[test]
+    fn sqnr_16_clears_default_budget_4_does_not() {
+        let m = zoo::c3d();
+        let floor = QuantCfg::default().min_sqnr_db;
+        let l = m.layers.len();
+        assert!(sqnr_db(&m, &vec![LayerQuant::W16; l]) >= floor);
+        assert!(sqnr_db(&m, &vec![LayerQuant::uniform(4); l]) < floor);
+    }
+
+    #[test]
+    fn resolve_applies_overrides_and_rejects_unknown_names() {
+        let m = zoo::c3d_tiny();
+        let name = m.layers[0].name.clone();
+        let cfg = QuantCfg {
+            default: LayerQuant::uniform(8),
+            overrides: vec![(name, LayerQuant::W16)],
+            ..QuantCfg::default()
+        };
+        let q = cfg.resolve(&m).unwrap();
+        assert_eq!(q[0], LayerQuant::W16);
+        assert!(q[1..].iter().all(|&x| x == LayerQuant::uniform(8)));
+
+        let bad = QuantCfg {
+            overrides: vec![("nosuchlayer".into(), LayerQuant::W16)],
+            ..QuantCfg::default()
+        };
+        let e = bad.resolve(&m).unwrap_err();
+        assert!(e.contains("nosuchlayer"), "{e}");
+    }
+
+    #[test]
+    fn validate_rejects_unsupported_widths() {
+        assert!(LayerQuant { weight_bits: 12, act_bits: 16 }
+            .validate()
+            .is_err());
+        assert!(LayerQuant::uniform(8).validate().is_ok());
+        let cfg = QuantCfg {
+            default: LayerQuant { weight_bits: 16, act_bits: 0 },
+            ..QuantCfg::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn apply_to_design_maxes_over_mapped_layers() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        // One conv layer pinned at 16 keeps the shared conv node at
+        // 16 even when everything else drops to 8.
+        let conv_l = m
+            .layers
+            .iter()
+            .position(|l| matches!(l.kind, LayerKind::Conv3d { .. }))
+            .unwrap();
+        let mut q = vec![LayerQuant::uniform(8); m.layers.len()];
+        q[conv_l] = LayerQuant::W16;
+        apply_to_design(&m, &mut d, &q);
+        let MapTarget::Node(conv_n) = d.mapping[conv_l] else {
+            panic!()
+        };
+        assert_eq!(d.nodes[conv_n].weight_bits, 16);
+        assert_eq!(d.nodes[conv_n].act_bits, 16);
+        // A node with only 8-bit layers drops to 8.
+        let fc_l = m
+            .layers
+            .iter()
+            .position(|l| matches!(l.kind, LayerKind::Fc { .. }))
+            .unwrap();
+        let MapTarget::Node(fc_n) = d.mapping[fc_l] else { panic!() };
+        assert_eq!(d.nodes[fc_n].weight_bits, 8);
+        assert_eq!(d.nodes[fc_n].act_bits, 8);
+        assert_eq!(d.validate(&m), Ok(()));
+    }
+
+    #[test]
+    fn parse_bits_csv_accepts_lists_and_rejects_garbage() {
+        assert_eq!(parse_bits_csv("16").unwrap(), vec![16]);
+        assert_eq!(parse_bits_csv("16, 8,4").unwrap(), vec![16, 8, 4]);
+        for bad in ["12", "lots", "", ","] {
+            let e = parse_bits_csv(bad).unwrap_err();
+            assert!(e.contains("--bits"), "{bad:?} -> {e}");
+        }
+    }
+
+    #[test]
+    fn precomputed_sink_mask_matches_one_shot() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        apply_to_design(&m, &mut d,
+                        &vec![LayerQuant::uniform(8); m.layers.len()]);
+        let sinks = sink_mask(&m);
+        let a = design_sqnr_db(&m, &d, &mut Vec::new());
+        let b = design_sqnr_db_sinks(&m, &d, &sinks, &mut Vec::new());
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn design_sqnr_matches_layer_table() {
+        // With uniform widths, the design-derived SQNR equals the
+        // dense-table SQNR (fused layers resolve through producers).
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        let q = vec![LayerQuant::uniform(8); m.layers.len()];
+        apply_to_design(&m, &mut d, &q);
+        let a = design_sqnr_db(&m, &d, &mut Vec::new());
+        let b = sqnr_db(&m, &q);
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}

@@ -212,11 +212,18 @@ pub fn table5(cfg: &ReportCfg) -> String {
     let mut t = Table::new(
         "Table V — HARFLOW3D vs prior works (3D CNN HAR accelerators)",
     )
-    .header(&["Work", "Model", "FPGA", "Lat/clip (ms)", "GOps/s",
-              "GOps/s/DSP", "Op/DSP/cyc", "DSP %", "BRAM %"]);
-    for w in baselines::prior_works() {
+    .header(&["Work", "Model", "FPGA", "Prec (bits)", "Lat/clip (ms)",
+              "GOps/s", "GOps/s/DSP", "Op/DSP/cyc", "DSP %",
+              "BRAM %"]);
+    // Group prior works by machine-readable precision (widest first,
+    // stable within a group) so quantised designs compare
+    // like-for-like — an fp-8 GOps/s/DSP number is not an fp-16 one.
+    let mut prior = baselines::prior_works();
+    prior.sort_by(|a, b| b.bits.cmp(&a.bits));
+    for w in prior {
         t.row(vec![
             w.work.into(), w.model.into(), w.fpga.into(),
+            format!("{} ({})", w.precision, w.bits),
             num(w.latency_ms, 2), num(w.gops, 2),
             num(w.gops_per_dsp, 3), num(w.op_dsp_cycle, 3),
             num(w.dsp_pct, 1), num(w.bram_pct, 1),
@@ -242,6 +249,7 @@ pub fn table5(cfg: &ReportCfg) -> String {
                 format!("HARFLOW3D (paper {:.2} ms)", paper_lat),
                 model_name.into(),
                 dev_name.into(),
+                "fixed-16 (16)".into(),
                 num(r.latency_ms, 2),
                 num(g, 2),
                 num(gd, 3),
@@ -583,11 +591,16 @@ pub fn ext(cfg: &ReportCfg) -> String {
 // thread pool, each point optionally running the multi-chain engine.
 // ------------------------------------------------------------------------
 
-/// Sweep configuration: which models × devices, how parallel.
+/// Sweep configuration: which models × devices × wordlengths, how
+/// parallel.
 #[derive(Debug, Clone)]
 pub struct SweepCfg {
     pub models: Vec<String>,
     pub devices: Vec<String>,
+    /// Uniform datapath wordlengths to sweep (quant subsystem);
+    /// `[16]` is the paper's fixed datapath and reproduces the
+    /// historical model × device sweep exactly.
+    pub bits: Vec<u8>,
     pub opt: OptCfg,
     /// SA chains per design point (1 = the sequential engine).
     pub chains: usize,
@@ -605,6 +618,10 @@ pub struct SweepCfg {
 pub struct SweepPoint {
     pub model: String,
     pub device: String,
+    /// Uniform datapath wordlength the design was optimised at
+    /// (quant subsystem); 16 is the paper's fixed datapath, and
+    /// pre-quantisation files load as 16.
+    pub bits: u8,
     /// Analytic (predicted) per-clip latency, ms.
     pub latency_ms: f64,
     /// Cycle-approximate simulated per-clip latency, ms — the service
@@ -630,6 +647,7 @@ impl SweepPoint {
         Json::obj(vec![
             ("model", Json::Str(self.model.clone())),
             ("device", Json::Str(self.device.clone())),
+            ("bits", Json::Num(self.bits as f64)),
             ("latency_ms", Json::Num(self.latency_ms)),
             ("sim_ms", Json::Num(self.sim_ms)),
             ("reconfig_ms", Json::Num(self.reconfig_ms)),
@@ -659,6 +677,26 @@ impl SweepPoint {
         Ok(SweepPoint {
             model: s("model")?,
             device: s("device")?,
+            // Absent in pre-quantisation files: those designs ran the
+            // paper's fixed 16-bit datapath (same backward-compat rule
+            // as `fill_ms` below). Present-but-malformed errors.
+            bits: match j.get("bits") {
+                None => 16,
+                Some(v) => {
+                    let b = v.as_f64().ok_or(
+                        "sweep point: bits must be a number"
+                            .to_string())?;
+                    let b8 = b as u8;
+                    if b8 as f64 != b
+                        || !crate::quant::is_wordlength(b8)
+                    {
+                        return Err(format!(
+                            "sweep point: bits {b} not one of \
+                             4/8/16/32"));
+                    }
+                    b8
+                }
+            },
             latency_ms: f("latency_ms")?,
             sim_ms: f("sim_ms")?,
             reconfig_ms: f("reconfig_ms")?,
@@ -682,12 +720,14 @@ impl SweepPoint {
     }
 }
 
-/// One sweep row: the requested pair and its outcome (an error row —
-/// e.g. a model that cannot fit a device — does not sink the sweep).
+/// One sweep row: the requested (model, device, bits) point and its
+/// outcome (an error row — e.g. a model that cannot fit a device —
+/// does not sink the sweep).
 #[derive(Debug, Clone)]
 pub struct SweepRow {
     pub model: String,
     pub device: String,
+    pub bits: u8,
     pub point: Result<SweepPoint, String>,
 }
 
@@ -701,10 +741,14 @@ pub fn sweep_points(cfg: &SweepCfg) -> Result<Vec<SweepRow>, String> {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Mutex;
 
-    let mut pairs: Vec<(String, String)> = Vec::new();
+    let bit_axis: &[u8] =
+        if cfg.bits.is_empty() { &[16] } else { &cfg.bits };
+    let mut pairs: Vec<(String, String, u8)> = Vec::new();
     for m in &cfg.models {
         for d in &cfg.devices {
-            pairs.push((m.clone(), d.clone()));
+            for &b in bit_axis {
+                pairs.push((m.clone(), d.clone(), b));
+            }
         }
     }
     if pairs.is_empty() {
@@ -724,7 +768,7 @@ pub fn sweep_points(cfg: &SweepCfg) -> Result<Vec<SweepRow>, String> {
                 if i >= n {
                     break;
                 }
-                let (mname, dname) = &pairs[i];
+                let (mname, dname, bits) = &pairs[i];
                 let out = (|| {
                     let model = crate::model::load(mname)?;
                     let dev = device::by_name(dname)
@@ -733,8 +777,19 @@ pub fn sweep_points(cfg: &SweepCfg) -> Result<Vec<SweepRow>, String> {
                         chains: cfg.chains,
                         exchange_every: cfg.exchange_every,
                     };
+                    // Every width runs the same DSE under a uniform
+                    // quant config (report-what-it-costs mode: budget
+                    // unconstrained, widths fixed). Uniform 16 is
+                    // bit-identical to `quant: None` — pinned by
+                    // rust/tests/quant.rs — so 16-bit sweep output
+                    // stays byte-identical to pre-quantisation runs.
+                    let opt = OptCfg {
+                        quant: Some(
+                            crate::quant::QuantCfg::uniform(*bits)),
+                        ..cfg.opt.clone()
+                    };
                     let r = optim::parallel::optimize_parallel(
-                        &model, &dev, &rm, cfg.opt.clone(), &par)?;
+                        &model, &dev, &rm, opt, &par)?;
                     let g = gops(&model, r.latency_ms);
                     let prof = sim::design_profile(
                         &model, &r.design, &dev, &SchedCfg::default(),
@@ -742,6 +797,7 @@ pub fn sweep_points(cfg: &SweepCfg) -> Result<Vec<SweepRow>, String> {
                     Ok(SweepPoint {
                         model: mname.clone(),
                         device: dname.clone(),
+                        bits: *bits,
                         latency_ms: r.latency_ms,
                         sim_ms: prof.service_ms,
                         reconfig_ms: prof.reconfig_ms,
@@ -764,9 +820,10 @@ pub fn sweep_points(cfg: &SweepCfg) -> Result<Vec<SweepRow>, String> {
     Ok(pairs
         .into_iter()
         .zip(results)
-        .map(|((model, device), point)| SweepRow {
+        .map(|((model, device, bits), point)| SweepRow {
             model,
             device,
+            bits,
             point: point.unwrap_or(Err("not scheduled".into())),
         })
         .collect())
@@ -776,12 +833,13 @@ pub fn sweep_points(cfg: &SweepCfg) -> Result<Vec<SweepRow>, String> {
 pub fn sweep_table(cfg: &SweepCfg, rows: &[SweepRow], elapsed_s: f64)
     -> String {
     let mut t = Table::new(&format!(
-        "Sweep — {} models x {} devices, {} chain(s)/point, {} job(s)",
-        cfg.models.len(), cfg.devices.len(), cfg.chains.max(1),
-        cfg.jobs.max(1),
+        "Sweep — {} models x {} devices x {} width(s), \
+         {} chain(s)/point, {} job(s)",
+        cfg.models.len(), cfg.devices.len(), cfg.bits.len().max(1),
+        cfg.chains.max(1), cfg.jobs.max(1),
     ))
-    .header(&["Model", "Device", "Lat/clip (ms)", "Sim (ms)", "GOps/s",
-              "GOps/s/DSP", "DSP %", "SA states"]);
+    .header(&["Model", "Device", "Bits", "Lat/clip (ms)", "Sim (ms)",
+              "GOps/s", "GOps/s/DSP", "DSP %", "SA states"]);
     let mut total_states = 0usize;
     for row in rows {
         match &row.point {
@@ -790,6 +848,7 @@ pub fn sweep_table(cfg: &SweepCfg, rows: &[SweepRow], elapsed_s: f64)
                 t.row(vec![
                     row.model.clone(),
                     row.device.clone(),
+                    format!("{}", p.bits),
                     num(p.latency_ms, 2),
                     num(p.sim_ms, 2),
                     num(p.gops, 2),
@@ -800,6 +859,7 @@ pub fn sweep_table(cfg: &SweepCfg, rows: &[SweepRow], elapsed_s: f64)
             }
             Err(e) => {
                 t.row(vec![row.model.clone(), row.device.clone(),
+                           format!("{}", row.bits),
                            format!("error: {e}"), "-".into(), "-".into(),
                            "-".into(), "-".into(), "-".into()]);
             }
@@ -824,6 +884,7 @@ pub fn sweep_jsonl(rows: &[SweepRow]) -> String {
             Err(e) => Json::obj(vec![
                 ("model", Json::Str(row.model.clone())),
                 ("device", Json::Str(row.device.clone())),
+                ("bits", Json::Num(row.bits as f64)),
                 ("error", Json::Str(e.clone())),
             ]),
         };

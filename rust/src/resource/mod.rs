@@ -15,13 +15,23 @@ use crate::sdf::{CompNode, Design, NodeKind};
 use crate::synth;
 use crate::util::stats::least_squares;
 
-/// `R^BRAM(depth, words)` = ceil(depth/512) * ceil(16*words/36) —
-/// 18 Kb primitives (512 x 36 bit) holding 16-bit words (§IV-B).
-pub fn bram_blocks(depth: usize, words: usize) -> f64 {
+/// `R^BRAM(depth, words, bits)` = ceil(depth/512) * ceil(bits*words/36)
+/// — 18 Kb primitives (512 x 36 bit) holding `bits`-wide words. The
+/// paper's §IV-B formula is the `bits = 16` instance; the quant
+/// subsystem prices narrower/wider datapaths through the same
+/// primitive packing.
+pub fn bram_blocks_w(depth: usize, words: usize, bits: u8) -> f64 {
     if depth == 0 || words == 0 {
         return 0.0;
     }
-    (depth.div_ceil(512) * (16 * words).div_ceil(36)) as f64
+    (depth.div_ceil(512) * (bits as usize * words).div_ceil(36)) as f64
+}
+
+/// `R^BRAM` at the paper's fixed 16-bit words (§IV-B) — kept as the
+/// named entry point; bit-identical to the historical hardcoded-16
+/// formula (pinned by `rust/tests/quant.rs`).
+pub fn bram_blocks(depth: usize, words: usize) -> f64 {
+    bram_blocks_w(depth, words, 16)
 }
 
 /// Weight streaming double-buffer depth cap (words per stream): the
@@ -30,15 +40,17 @@ pub fn bram_blocks(depth: usize, words: usize) -> f64 {
 /// double-buffering of weights", §IV-A).
 pub const WEIGHT_BUF_DEPTH: usize = 4096;
 
-/// Sliding-window (line buffer) BRAM for conv/pool nodes (§IV-B).
+/// Sliding-window (line buffer) BRAM for conv/pool nodes (§IV-B),
+/// holding feature-map words at the node's activation width.
 pub fn sliding_window_bram(node: &CompNode) -> f64 {
     let [kd, kh, kw] = node.max_kernel;
+    let b = node.act_bits;
     let c_per = node.max_in.c / node.coarse_in;
-    bram_blocks(node.max_in.w * node.max_in.d * c_per,
-                (kh - 1) * node.coarse_in)
-        + bram_blocks(node.max_in.d * c_per,
-                      kh * (kw - 1) * node.coarse_in)
-        + bram_blocks(c_per, kh * kw * (kd - 1) * node.coarse_in)
+    bram_blocks_w(node.max_in.w * node.max_in.d * c_per,
+                  (kh - 1) * node.coarse_in, b)
+        + bram_blocks_w(node.max_in.d * c_per,
+                        kh * (kw - 1) * node.coarse_in, b)
+        + bram_blocks_w(c_per, kh * kw * (kd - 1) * node.coarse_in, b)
 }
 
 /// Weight-buffer BRAM for conv/fc nodes (§IV-B; `K_n = 1, f_n = 1`
@@ -54,7 +66,8 @@ pub fn weight_bram(node: &CompNode) -> f64 {
     let folds = node.coarse_in * node.coarse_out * fine;
     let depth_full =
         (node.max_in.c * node.max_filters * k).div_ceil(folds);
-    bram_blocks(depth_full.min(WEIGHT_BUF_DEPTH), folds)
+    bram_blocks_w(depth_full.min(WEIGHT_BUF_DEPTH), folds,
+                  node.weight_bits)
 }
 
 /// Analytic BRAM for a node: conv = sliding window + weights,
@@ -71,7 +84,7 @@ pub fn node_bram(node: &CompNode) -> f64 {
 /// Feature vector for the LUT/FF regression (shared across types; the
 /// per-type fit learns which features matter for that block).
 pub fn features(node: &CompNode) -> Vec<f64> {
-    let mults = node.dsp();
+    let mults = node.mults();
     let k: usize = node.max_kernel.iter().product();
     let taps = (k * node.coarse_in) as f64;
     let streams = (node.coarse_in + node.coarse_out) as f64;
@@ -128,17 +141,21 @@ impl ResourceModel {
         ResourceModel::fit(0xF17, 5000 / 6)
     }
 
-    /// Predicted resources for one computation node.
+    /// Predicted resources for one computation node. LUT/FF come from
+    /// the width-16 regression scaled by the node's datapath width
+    /// (`CompNode::width_scale`, exactly 1.0 at 16-bit); DSP and BRAM
+    /// are the width-aware analytic models.
     pub fn node_resources(&self, node: &CompNode) -> Resources {
         let f = features(node);
         let dot = |beta: &Vec<f64>| -> f64 {
             beta.iter().zip(&f).map(|(b, x)| b * x).sum::<f64>().max(0.0)
         };
+        let ws = node.width_scale();
         Resources {
             dsp: node.dsp(),
             bram: node_bram(node),
-            lut: dot(&self.lut[node.kind.tag()]),
-            ff: dot(&self.ff[node.kind.tag()]),
+            lut: dot(&self.lut[node.kind.tag()]) * ws,
+            ff: dot(&self.ff[node.kind.tag()]) * ws,
         }
     }
 
@@ -269,6 +286,8 @@ mod tests {
             coarse_in: ci,
             coarse_out: co,
             fine,
+            weight_bits: 16,
+            act_bits: 16,
         }
     }
 
@@ -295,6 +314,8 @@ mod tests {
             coarse_in: 16,
             coarse_out: 8,
             fine: 1,
+            weight_bits: 16,
+            act_bits: 16,
         };
         assert_eq!(fc.dsp(), 128.0);
     }
@@ -393,6 +414,8 @@ mod tests {
             coarse_in: 16,
             coarse_out: 8,
             fine: 1,
+            weight_bits: 16,
+            act_bits: 16,
         };
         let b = weight_bram(&fc);
         let cap = bram_blocks(WEIGHT_BUF_DEPTH, 128);

@@ -312,6 +312,8 @@ fn make_invocation(layer: usize, node_idx: usize, node: &CompNode,
             psum,
             n_inputs,
             extra_in_words: (bcast * tile.c) as u64,
+            weight_bits: node.weight_bits,
+            act_bits: node.act_bits,
         }
     } else {
         // Baseline: padded execution at compile-time maxima. The node
@@ -356,6 +358,8 @@ fn make_invocation(layer: usize, node_idx: usize, node: &CompNode,
             psum,
             n_inputs,
             extra_in_words: (bcast * tile_in.c) as u64,
+            weight_bits: node.weight_bits,
+            act_bits: node.act_bits,
         }
     }
 }

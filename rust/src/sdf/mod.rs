@@ -70,17 +70,62 @@ pub struct CompNode {
     pub coarse_out: usize,
     /// `f_n` — vector dot-product folding (must divide `|K_n|`).
     pub fine: usize,
+    /// Weight datapath wordlength in bits (quant subsystem; one of
+    /// `quant::WORDLENGTHS`). Sizes the weight buffers and the
+    /// multiplier operand width; 16 is the paper's fixed datapath.
+    pub weight_bits: u8,
+    /// Activation/feature-map wordlength in bits: sizes line buffers,
+    /// stream widths, and the DMA word traffic.
+    pub act_bits: u8,
 }
 
 impl CompNode {
-    /// DSPs consumed (§IV-B): only Conv and FC use DSPs.
+    /// DSPs consumed (§IV-B): only Conv and FC use DSPs. At <= 8-bit
+    /// operands two multiplies pack into one DSP48
+    /// ([`CompNode::dsp_packing`]); the 16-bit datapath is exactly the
+    /// paper's one-multiplier-per-DSP count.
     pub fn dsp(&self) -> f64 {
+        match self.kind {
+            NodeKind::Conv => {
+                (self.coarse_in * self.coarse_out * self.fine)
+                    .div_ceil(self.dsp_packing()) as f64
+            }
+            NodeKind::Fc => (self.coarse_in * self.coarse_out)
+                .div_ceil(self.dsp_packing()) as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Hardware multipliers instantiated (the LUT/FF size driver —
+    /// DSP *slices* may pack two of them, multiplier count does not
+    /// change with packing).
+    pub fn mults(&self) -> f64 {
         match self.kind {
             NodeKind::Conv => {
                 (self.coarse_in * self.coarse_out * self.fine) as f64
             }
             NodeKind::Fc => (self.coarse_in * self.coarse_out) as f64,
             _ => 0.0,
+        }
+    }
+
+    /// Multiplies per DSP48 slice: two when both operands fit 8 bits
+    /// (the INT8 packing every recent quantised accelerator leans on),
+    /// one otherwise.
+    pub fn dsp_packing(&self) -> usize {
+        if self.weight_bits <= 8 && self.act_bits <= 8 { 2 } else { 1 }
+    }
+
+    /// Datapath-width scale for the LUT/FF models: fabric cost of
+    /// multipliers/adders/muxes grows ~linearly with operand width.
+    /// Exactly 1.0 at the 16-bit datapath the regression set is
+    /// calibrated on.
+    pub fn width_scale(&self) -> f64 {
+        match self.kind {
+            NodeKind::Conv | NodeKind::Fc => {
+                (self.weight_bits as f64 + self.act_bits as f64) / 32.0
+            }
+            _ => self.act_bits as f64 / 16.0,
         }
     }
 }
@@ -132,6 +177,8 @@ impl Design {
                         coarse_in: 1,
                         coarse_out: 1,
                         fine: 1,
+                        weight_bits: 16,
+                        act_bits: 16,
                     });
                     node_of.push((key, nodes.len() - 1));
                     nodes.len() - 1
@@ -160,6 +207,8 @@ impl Design {
                 coarse_in: 1,
                 coarse_out: 1,
                 fine: 1,
+                weight_bits: 16,
+                act_bits: 16,
             };
             grow_node_for_layer(&mut node, layer);
             nodes.push(node);
@@ -248,6 +297,11 @@ impl Design {
             if k % node.fine != 0 {
                 return Err(format!("node {i}: f !| |K_n|"));
             }
+            if !crate::quant::is_wordlength(node.weight_bits)
+                || !crate::quant::is_wordlength(node.act_bits)
+            {
+                return Err(format!("node {i}: unsupported wordlength"));
+            }
         }
         // Every node must be able to *schedule* its layers: kernel
         // coverage (runtime-parameterized nodes bypass down, never up).
@@ -287,6 +341,11 @@ impl Design {
             let k: usize = node.max_kernel.iter().product();
             if k % node.fine != 0 {
                 return Err(format!("node {i}: f !| |K_n|"));
+            }
+            if !crate::quant::is_wordlength(node.weight_bits)
+                || !crate::quant::is_wordlength(node.act_bits)
+            {
+                return Err(format!("node {i}: unsupported wordlength"));
             }
         }
         for (l, m) in self.mapping.iter().enumerate() {
@@ -404,6 +463,14 @@ impl UndoLog {
         &self.mapping
     }
 
+    /// Pre-move snapshots of every mutated node (each node at most
+    /// once) — lets the optimiser detect cheaply *what kind* of state
+    /// a move touched (e.g. whether any datapath width changed, which
+    /// is the only way a move can affect the quant SQNR proxy).
+    pub fn saved_nodes(&self) -> &[(usize, CompNode)] {
+        &self.nodes
+    }
+
     /// Node count at `begin` time.
     pub fn old_nodes_len(&self) -> usize {
         self.old_nodes_len
@@ -503,6 +570,12 @@ pub struct Invocation {
     /// per-channel word per tile channel) or the gamma/beta vectors of
     /// a Scale layer (two per channel). Zero for everything else.
     pub extra_in_words: u64,
+    /// Executing node's weight wordlength (bits) — scales the weight
+    /// word traffic against the 16-bit DMA word unit.
+    pub weight_bits: u8,
+    /// Executing node's activation wordlength (bits) — scales the
+    /// feature-map word traffic.
+    pub act_bits: u8,
 }
 
 impl Invocation {
@@ -664,6 +737,8 @@ mod tests {
             psum: false,
             n_inputs: 1,
             extra_in_words: 0,
+            weight_bits: 16,
+            act_bits: 16,
         };
         assert_eq!(inv.macs(), (4 * 8 * 8 * 32 * 27 * 16) as u64);
         assert_eq!(inv.weight_words(), (27 * 16 * 32) as u64);

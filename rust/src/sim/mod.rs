@@ -84,17 +84,20 @@ impl SimReport {
     }
 }
 
-/// Words streamed in/out by one invocation (feature-maps incl.
-/// broadcast operands + weights + partial sums).
+/// 16-bit-equivalent words streamed in/out by one invocation
+/// (feature-maps incl. broadcast operands + weights + partial sums).
+/// Quantised datapaths scale their traffic by bits/16, matching the
+/// analytic roofline (`perf::rates`) — exactly the historical counts
+/// at the 16-bit datapath.
 fn invocation_words(kind: NodeKind, inv: &Invocation) -> (f64, f64) {
-    let mut w_in = inv.in_words();
+    let mut w_in = inv.in_words() * inv.act_scale();
     if matches!(kind, NodeKind::Conv | NodeKind::Fc) {
-        w_in += inv.weight_words() as f64;
+        w_in += inv.weight_words() as f64 * inv.weight_scale();
         if inv.psum {
-            w_in += inv.tile_out.elems() as f64;
+            w_in += inv.tile_out.elems() as f64 * inv.act_scale();
         }
     }
-    (w_in, inv.tile_out.elems() as f64)
+    (w_in, inv.tile_out.elems() as f64 * inv.act_scale())
 }
 
 /// Pipeline fill cycles: the line buffers hold (K_h - 1) rows plus a

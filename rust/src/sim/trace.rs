@@ -62,13 +62,9 @@ pub fn trace(model: &ModelGraph, design: &Design, dev: &Device,
             for _ in 0..mult {
                 let cyc = super::simulate_invocation(kind, &inv, &env,
                                                      cfg, &mut rng);
-                let mut w_in = inv.in_words();
-                if matches!(kind, NodeKind::Conv | NodeKind::Fc) {
-                    w_in += inv.weight_words() as f64;
-                    if inv.psum {
-                        w_in += inv.tile_out.elems() as f64;
-                    }
-                }
+                // 16-bit-equivalent DMA words from the simulator's
+                // own accounting (quant-scaled) — one source of truth.
+                let (w_in, w_out) = super::invocation_words(kind, &inv);
                 events.push(TraceEvent {
                     index: idx,
                     layer: l,
@@ -77,7 +73,7 @@ pub fn trace(model: &ModelGraph, design: &Design, dev: &Device,
                     start_cycle: t,
                     end_cycle: t + cyc,
                     words_in: w_in,
-                    words_out: inv.tile_out.elems() as f64,
+                    words_out: w_out,
                     memory_bound: perf::memory_bound(kind, &inv, &env),
                 });
                 t += cyc;

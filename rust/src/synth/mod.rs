@@ -59,6 +59,14 @@ fn param_hash(node: &CompNode, seed: u64) -> u64 {
     mix(node.coarse_in);
     mix(node.coarse_out);
     mix(node.fine);
+    // Historical 16/16 modules must keep their exact hash — the
+    // fitted regression and the Table II/III noise draws are pinned
+    // on it — so the wordlengths only enter when they differ from the
+    // paper's fixed datapath.
+    if node.weight_bits != 16 || node.act_bits != 16 {
+        mix(node.weight_bits as usize);
+        mix(node.act_bits as usize);
+    }
     h
 }
 
@@ -66,7 +74,7 @@ fn param_hash(node: &CompNode, seed: u64) -> u64 {
 /// calibrated so an optimised C3D design lands in the Table II range
 /// (conv ~150K LUT at ~2.3K DSPs, pool ~20K, FC ~11K, ReLU ~1K).
 fn lut_ff_truth(node: &CompNode, rng: &mut Rng) -> (f64, f64) {
-    let mults = node.dsp();
+    let mults = node.mults();
     let k: usize = node.max_kernel.iter().product();
     let taps = (k * node.coarse_in) as f64;
     let streams = (node.coarse_in + node.coarse_out) as f64;
@@ -93,9 +101,12 @@ fn lut_ff_truth(node: &CompNode, rng: &mut Rng) -> (f64, f64) {
         + 230.0 * streams
         + 75.0 * cap
         + 0.5 * taps * (streams.max(2.0)).log2();
-    // Synthesis noise: log-normal ~6% LUT, ~4% FF.
-    let lut = lut * (0.06 * rng.normal()).exp();
-    let ff = ff * (0.04 * rng.normal()).exp();
+    // Synthesis noise: log-normal ~6% LUT, ~4% FF. The datapath-width
+    // scale mirrors the prediction side (`CompNode::width_scale`,
+    // exactly 1.0 for the historical 16-bit modules).
+    let ws = node.width_scale();
+    let lut = lut * (0.06 * rng.normal()).exp() * ws;
+    let ff = ff * (0.04 * rng.normal()).exp() * ws;
     (lut, ff)
 }
 
@@ -186,6 +197,8 @@ pub fn sample_modules(kind: NodeKind, n: usize, seed: u64)
                 _ => ci,
             },
             fine,
+            weight_bits: 16,
+            act_bits: 16,
         };
         let r = synthesize(&node, seed);
         out.push((node, r));
@@ -206,6 +219,8 @@ mod tests {
             coarse_in: 8,
             coarse_out: 8,
             fine: 9,
+            weight_bits: 16,
+            act_bits: 16,
         }
     }
 
@@ -273,6 +288,8 @@ mod tests {
             coarse_in: 16,
             coarse_out: 16,
             fine: 9,
+            weight_bits: 16,
+            act_bits: 16,
         };
         let r = synthesize(&node, 0);
         assert!(r.synth.lut > 90_000.0 && r.synth.lut < 250_000.0,

@@ -236,6 +236,7 @@ fn sweep_points_feed_the_fleet_pipeline() {
     let cfg = report::SweepCfg {
         models: vec!["c3d_tiny".into()],
         devices: vec!["zcu102".into()],
+        bits: vec![16],
         opt: OptCfg::fast(3),
         chains: 1,
         exchange_every: 32,

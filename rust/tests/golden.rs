@@ -17,6 +17,7 @@ fn pinned_point() -> SweepPoint {
     SweepPoint {
         model: "c3d".into(),
         device: "zcu102".into(),
+        bits: 16,
         latency_ms: 12.5,
         sim_ms: 14.25,
         reconfig_ms: 3.5,
@@ -37,11 +38,13 @@ fn sweep_jsonl_bytes_are_pinned() {
         SweepRow {
             model: "c3d".into(),
             device: "zcu102".into(),
+            bits: 16,
             point: Ok(pinned_point()),
         },
         SweepRow {
             model: "x3d_m".into(),
             device: "vc709".into(),
+            bits: 8,
             point: Err("does not fit".into()),
         },
     ];
@@ -49,12 +52,13 @@ fn sweep_jsonl_bytes_are_pinned() {
     // whole line is deterministic. This is the `--profiles`
     // interchange contract: changing it must change this test.
     let expect = concat!(
-        "{\"bram\":300.5,\"device\":\"zcu102\",\"dsp\":1024,",
+        "{\"bits\":16,\"bram\":300.5,\"device\":\"zcu102\",",
+        "\"dsp\":1024,",
         "\"dsp_pct\":40.625,\"ff\":200000,\"fill_ms\":1.75,",
         "\"gops\":250,\"latency_ms\":12.5,\"lut\":100000,",
         "\"model\":\"c3d\",\"reconfig_ms\":3.5,\"sa_states\":5000,",
         "\"sim_ms\":14.25}\n",
-        "{\"device\":\"vc709\",\"error\":\"does not fit\",",
+        "{\"bits\":8,\"device\":\"vc709\",\"error\":\"does not fit\",",
         "\"model\":\"x3d_m\"}\n",
     );
     assert_eq!(report::sweep_jsonl(&rows), expect);
@@ -88,13 +92,26 @@ fn sweep_point_round_trips_bit_exact() {
 #[test]
 fn sweep_point_reader_accepts_pre_batching_files() {
     // `fill_ms` arrived with clip batching; old `sweep --out` files
-    // lack it and must still load (fill 0 = no amortisation).
+    // lack it and must still load (fill 0 = no amortisation). `bits`
+    // arrived with the quant subsystem and defaults to the paper's
+    // 16-bit datapath the same way.
     let mut legacy = pinned_point().to_json();
     if let Json::Obj(m) = &mut legacy {
         m.remove("fill_ms");
+        m.remove("bits");
     }
     let p = SweepPoint::from_json(&legacy).unwrap();
     assert_eq!(p.fill_ms, 0.0);
+    assert_eq!(p.bits, 16);
+    // Present-but-malformed bits is corruption, as is an unsupported
+    // width.
+    for bad in [Json::Str("8".into()), Json::Num(12.0)] {
+        let mut corrupt = pinned_point().to_json();
+        if let Json::Obj(m) = &mut corrupt {
+            m.insert("bits".into(), bad);
+        }
+        assert!(SweepPoint::from_json(&corrupt).is_err());
+    }
     // A missing required key still errors.
     let mut broken = pinned_point().to_json();
     if let Json::Obj(m) = &mut broken {
@@ -118,6 +135,7 @@ fn sweep_out_jsonl_is_run_stable_and_schema_exact() {
     let cfg = report::SweepCfg {
         models: vec!["c3d_tiny".into()],
         devices: vec!["zcu102".into()],
+        bits: vec![16],
         opt: harflow3d::optim::OptCfg::fast(5),
         chains: 1,
         exchange_every: 32,
@@ -131,9 +149,9 @@ fn sweep_out_jsonl_is_run_stable_and_schema_exact() {
     let Json::Obj(map) = &parsed else { panic!("object per line") };
     let keys: Vec<&str> = map.keys().map(|k| k.as_str()).collect();
     assert_eq!(keys, vec![
-        "bram", "device", "dsp", "dsp_pct", "ff", "fill_ms", "gops",
-        "latency_ms", "lut", "model", "reconfig_ms", "sa_states",
-        "sim_ms",
+        "bits", "bram", "device", "dsp", "dsp_pct", "ff", "fill_ms",
+        "gops", "latency_ms", "lut", "model", "reconfig_ms",
+        "sa_states", "sim_ms",
     ]);
     let p = SweepPoint::from_json(&parsed).unwrap();
     assert!(p.fill_ms > 0.0 && p.fill_ms < p.sim_ms,
@@ -207,7 +225,7 @@ fn fleet_cli_output_is_pinned_for_profiles_and_trace() {
     for needle in [
         "profiles (1 models x 1 devices):",
         "c3d @ zcu102: service 10.00 ms/clip, switch 5.00 ms, \
-         fill 4.00 ms (predicted 8.00 ms, board cost 2.80)",
+         fill 4.00 ms (16-bit, predicted 8.00 ms, board cost 2.80)",
         "fleet sim (1 boards, slo-aware, fifo queue, 3 requests, \
          seed 7, batch <= 4 wait 0.0 ms):",
         "p50 26.00 ms  p95 26.00 ms  p99 26.00 ms  mean 20.67 ms  \

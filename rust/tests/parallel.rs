@@ -111,6 +111,7 @@ fn sweep_renders_all_requested_points() {
     let cfg = SweepCfg {
         models: vec!["c3d_tiny".into(), "nosuchmodel".into()],
         devices: vec!["zc706".into()],
+        bits: vec![16],
         opt: OptCfg::fast(3),
         chains: 2,
         exchange_every: 8,

@@ -151,6 +151,8 @@ fn prop_latency_monotone_in_parallelism() {
             psum: false,
             n_inputs: 1,
             extra_in_words: 0,
+            weight_bits: 16,
+            act_bits: 16,
         };
         let fs = factors(c);
         let i = rng.below(fs.len());
@@ -183,6 +185,8 @@ fn prop_roofline_never_below_compute() {
             psum: rng.below(2) == 1,
             n_inputs: 1,
             extra_in_words: 0,
+            weight_bits: 16,
+            act_bits: 16,
         };
         let env = BwEnv {
             bw_in: 1.0 + rng.uniform() * 50.0,

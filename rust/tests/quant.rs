@@ -1,0 +1,353 @@
+//! Quant subsystem acceptance pins (ISSUE 5):
+//!
+//! 1. *16-bit bit-identity*: the parameterised BRAM/DSP/traffic
+//!    models at width 16 are bit-identical to the historical
+//!    hardcoded-16 formulas, and a uniform-16 `QuantCfg` reproduces
+//!    the quant-free SA engine's accepted-move traces exactly.
+//! 2. *8-bit wins*: on pinned model/device pairs, 8-bit weights/
+//!    activations give strictly lower modeled latency (memory-bound
+//!    layers) and strictly fewer DSPs/BRAMs (packing), and the SA
+//!    run at 8 bits beats the 16-bit run on latency or resources.
+//! 3. *Fleet*: the capacity planner certifies a strictly cheaper
+//!    fleet from 8-bit serving profiles in a pinned scenario, and the
+//!    `fleet --profiles` path carries/filters the `bits` dimension.
+
+use harflow3d::device;
+use harflow3d::fleet::planner::{self, PlanCfg, Verdict};
+use harflow3d::fleet::{ProfileMatrix, ServiceProfile};
+use harflow3d::model::zoo;
+use harflow3d::optim::{self, OptCfg, Optimizer};
+use harflow3d::perf::BwEnv;
+use harflow3d::quant::{self, LayerQuant, QuantCfg};
+use harflow3d::resource::{self, ResourceModel};
+use harflow3d::sched::{self, SchedCfg};
+use harflow3d::sdf::{Design, NodeKind};
+use harflow3d::util::cli::Args;
+
+// ---------------------------------------------------------------------
+// 16-bit bit-identity against the pre-quantisation formulas
+// ---------------------------------------------------------------------
+
+#[test]
+fn bram_width_16_matches_legacy_formula_bitwise() {
+    // The §IV-B formula exactly as it was hardcoded before the quant
+    // subsystem parameterised it.
+    fn legacy(depth: usize, words: usize) -> f64 {
+        if depth == 0 || words == 0 {
+            return 0.0;
+        }
+        (depth.div_ceil(512) * (16 * words).div_ceil(36)) as f64
+    }
+    for depth in [0usize, 1, 100, 511, 512, 513, 1024, 4095, 4096,
+                  50_000] {
+        for words in 0usize..64 {
+            let new = resource::bram_blocks(depth, words);
+            let neww = resource::bram_blocks_w(depth, words, 16);
+            let old = legacy(depth, words);
+            assert_eq!(new.to_bits(), old.to_bits(),
+                       "depth {depth} words {words}");
+            assert_eq!(neww.to_bits(), old.to_bits());
+        }
+    }
+    // The existing fixture values from the historical unit test.
+    assert_eq!(resource::bram_blocks(512, 1), 1.0);
+    assert_eq!(resource::bram_blocks(513, 1), 2.0);
+    assert_eq!(resource::bram_blocks(100, 2), 1.0);
+    assert_eq!(resource::bram_blocks(100, 3), 2.0);
+    assert_eq!(resource::bram_blocks(0, 5), 0.0);
+}
+
+#[test]
+fn dsp_at_16_exact_and_packs_at_8() {
+    for kind in [NodeKind::Conv, NodeKind::Fc] {
+        for (node, _) in harflow3d::synth::sample_modules(kind, 40, 5) {
+            // Width 16: the historical count, exactly.
+            let legacy = match kind {
+                NodeKind::Conv => {
+                    (node.coarse_in * node.coarse_out * node.fine) as f64
+                }
+                _ => (node.coarse_in * node.coarse_out) as f64,
+            };
+            assert_eq!(node.dsp().to_bits(), legacy.to_bits());
+            assert_eq!(node.mults().to_bits(), legacy.to_bits());
+            // Width 8: two multiplies per DSP48.
+            let mut n8 = node;
+            n8.weight_bits = 8;
+            n8.act_bits = 8;
+            assert_eq!(n8.dsp(), (legacy / 2.0).ceil());
+            assert_eq!(n8.mults().to_bits(), legacy.to_bits());
+            // Mixed widths cannot pack.
+            let mut mixed = node;
+            mixed.weight_bits = 8;
+            assert_eq!(mixed.dsp().to_bits(), legacy.to_bits());
+        }
+    }
+}
+
+#[test]
+fn uniform_16_quant_cfg_reproduces_quant_free_traces_bitwise() {
+    // The acceptance pin: threading a 16-bit-everywhere QuantCfg
+    // through warm start + SA changes *nothing* — same resources,
+    // same latencies, same accepted-move trace, bit for bit.
+    let m = zoo::c3d_tiny();
+    let dev = device::by_name("zcu102").unwrap();
+    let rm = ResourceModel::fit(1, 120);
+    for seed in [3u64, 11] {
+        let plain = OptCfg::fast(seed);
+        let quant16 = OptCfg {
+            quant: Some(QuantCfg::default()), // uniform 16, no search
+            ..OptCfg::fast(seed)
+        };
+        let ws_a = Optimizer::new(&m, &dev, &rm, plain.clone())
+            .warm_start()
+            .unwrap();
+        let ws_b = Optimizer::new(&m, &dev, &rm, quant16.clone())
+            .warm_start()
+            .unwrap();
+        assert_eq!(ws_a.nodes, ws_b.nodes, "seed {seed}");
+        assert_eq!(ws_a.mapping, ws_b.mapping, "seed {seed}");
+
+        let a = optim::optimize(&m, &dev, &rm, plain).unwrap();
+        let b = optim::optimize(&m, &dev, &rm, quant16).unwrap();
+        assert_eq!(a.latency_cycles.to_bits(), b.latency_cycles.to_bits(),
+                   "seed {seed}");
+        assert_eq!(a.accepted_moves, b.accepted_moves, "seed {seed}");
+        assert_eq!(a.iterations, b.iterations, "seed {seed}");
+        assert_eq!(a.history.len(), b.history.len(), "seed {seed}");
+        for (x, y) in a.history.iter().zip(&b.history) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits());
+        }
+        let ra = a.resources;
+        let rb = b.resources;
+        assert_eq!(ra.dsp.to_bits(), rb.dsp.to_bits());
+        assert_eq!(ra.bram.to_bits(), rb.bram.to_bits());
+        assert_eq!(ra.lut.to_bits(), rb.lut.to_bits());
+        assert_eq!(ra.ff.to_bits(), rb.ff.to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------
+// 8-bit strictly wins on pinned designs
+// ---------------------------------------------------------------------
+
+#[test]
+fn eight_bit_strictly_cuts_latency_on_memory_bound_design() {
+    // R(2+1)D-18's warm start is memory-bound at its residual adds
+    // (two full operands through 16 streams against a 24-word/cycle
+    // DMA), so re-quantising the *same* design to 8 bits strictly
+    // lowers the modeled schedule latency; it can never raise any
+    // layer's latency.
+    let m = zoo::r2plus1d_18();
+    let dev = device::by_name("zcu102").unwrap();
+    let rm = ResourceModel::fit(1, 120);
+    let opt = Optimizer::new(&m, &dev, &rm, OptCfg::fast(7));
+    let ws16 = opt.warm_start().unwrap();
+    let mut ws8 = ws16.clone();
+    quant::apply_to_design(
+        &m, &mut ws8,
+        &vec![LayerQuant::uniform(8); m.layers.len()]);
+    let env = BwEnv::of_device(&dev);
+    let scfg = SchedCfg::default();
+    let mut strictly_faster = 0usize;
+    for l in 0..m.layers.len() {
+        let l16 = sched::layer_latency(&m, &ws16, l, &env, &scfg);
+        let l8 = sched::layer_latency(&m, &ws8, l, &env, &scfg);
+        assert!(l8 <= l16 * (1.0 + 1e-12), "layer {l}: {l8} > {l16}");
+        if l8 < l16 {
+            strictly_faster += 1;
+        }
+    }
+    assert!(strictly_faster > 0, "no memory-bound layer sped up");
+    let t16 = sched::total_latency_cycles(&m, &ws16, &env, &scfg);
+    let t8 = sched::total_latency_cycles(&m, &ws8, &env, &scfg);
+    assert!(t8 < t16, "8-bit {t8} not below 16-bit {t16}");
+}
+
+#[test]
+fn eight_bit_strictly_cuts_dsp_and_bram_on_parallel_design() {
+    // A conv node with real parallelism: 8-bit packs two multiplies
+    // per DSP48 and halves the line-buffer/weight-buffer word widths.
+    let m = zoo::c3d();
+    let mut d16 = Design::initial(&m);
+    let conv = d16
+        .nodes
+        .iter()
+        .position(|n| n.kind == NodeKind::Conv)
+        .unwrap();
+    d16.nodes[conv].coarse_in = 4;
+    d16.nodes[conv].coarse_out = 4;
+    assert_eq!(d16.validate(&m), Ok(()));
+    let mut d8 = d16.clone();
+    quant::apply_to_design(
+        &m, &mut d8, &vec![LayerQuant::uniform(8); m.layers.len()]);
+    let rm = ResourceModel::fit(1, 120);
+    let r16 = rm.design_resources(&d16);
+    let r8 = rm.design_resources(&d8);
+    assert!(r8.dsp < r16.dsp, "dsp {} !< {}", r8.dsp, r16.dsp);
+    assert!(r8.bram < r16.bram, "bram {} !< {}", r8.bram, r16.bram);
+    assert!(r8.lut < r16.lut, "lut {} !< {}", r8.lut, r16.lut);
+    // And exactly the packing law on the conv node itself.
+    assert_eq!(d8.nodes[conv].dsp(),
+               (d16.nodes[conv].dsp() / 2.0).ceil());
+}
+
+#[test]
+fn optimizer_finds_better_design_at_8_bit() {
+    // End-to-end acceptance: same seed, same budget of SA states; the
+    // 8-bit run must end strictly better on latency or resources
+    // (memory-bound layers evaluate strictly faster, DSP packing
+    // frees multipliers, BRAM halves).
+    let m = zoo::r2plus1d_18();
+    let dev = device::by_name("zcu102").unwrap();
+    let rm = ResourceModel::fit(1, 120);
+    let r16 = optim::optimize(&m, &dev, &rm, OptCfg::fast(13)).unwrap();
+    let r8 = optim::optimize(&m, &dev, &rm, OptCfg {
+        quant: Some(QuantCfg::uniform(8)),
+        ..OptCfg::fast(13)
+    })
+    .unwrap();
+    assert_eq!(r8.design.validate(&m), Ok(()));
+    assert!(r8
+        .design
+        .nodes
+        .iter()
+        .all(|n| n.weight_bits == 8 && n.act_bits == 8));
+    assert!(
+        r8.latency_cycles < r16.latency_cycles
+            || r8.resources.dsp < r16.resources.dsp
+            || r8.resources.bram < r16.resources.bram,
+        "8-bit run no better: lat {} vs {}, dsp {} vs {}, bram {} vs {}",
+        r8.latency_cycles, r16.latency_cycles, r8.resources.dsp,
+        r16.resources.dsp, r8.resources.bram, r16.resources.bram
+    );
+}
+
+#[test]
+fn wordlength_search_respects_the_sqnr_budget() {
+    let m = zoo::c3d_tiny();
+    let dev = device::by_name("zcu102").unwrap();
+    let rm = ResourceModel::fit(1, 120);
+    let floor = 40.0;
+    let r = optim::optimize(&m, &dev, &rm, OptCfg {
+        quant: Some(QuantCfg {
+            default: LayerQuant::W16,
+            overrides: Vec::new(),
+            min_sqnr_db: floor,
+            search: true,
+        }),
+        ..OptCfg::fast(5)
+    })
+    .unwrap();
+    assert_eq!(r.design.validate(&m), Ok(()));
+    let sqnr =
+        quant::design_sqnr_db(&m, &r.design, &mut Vec::new());
+    assert!(sqnr >= floor, "search ended at {sqnr:.1} dB < {floor}");
+    // An unmeetable budget is rejected up front, not annealed at.
+    let err = optim::optimize(&m, &dev, &rm, OptCfg {
+        quant: Some(QuantCfg {
+            default: LayerQuant::uniform(4),
+            overrides: Vec::new(),
+            min_sqnr_db: 60.0,
+            search: false,
+        }),
+        ..OptCfg::fast(5)
+    });
+    assert!(err.is_err());
+    assert!(err.unwrap_err().contains("SQNR"));
+}
+
+// ---------------------------------------------------------------------
+// Fleet: quantised profiles make fleets cheaper
+// ---------------------------------------------------------------------
+
+fn one_cell_matrix(service_ms: f64) -> ProfileMatrix {
+    let mut mx = ProfileMatrix::new(vec!["c3d".into()],
+                                    vec!["zcu102".into()]);
+    mx.set(0, 0, ServiceProfile {
+        service_ms,
+        reconfig_ms: 2.0,
+        fill_ms: 1.0,
+    });
+    mx.costs = vec![planner::board_cost(2520.0)];
+    mx
+}
+
+#[test]
+fn planner_certifies_strictly_cheaper_fleet_from_8_bit_profiles() {
+    // Pinned scenario: 120 req/s against a 200 ms p99 SLO. The
+    // 16-bit design serves a clip in 10 ms — one board is beyond
+    // utilization 1, so the plan needs 2. The 8-bit design's 6 ms
+    // service fits the whole load on a single board well inside the
+    // SLO: strictly cheaper, same contract.
+    let cfg = PlanCfg {
+        rate_rps: 120.0,
+        slo_ms: 200.0,
+        requests: 2000,
+        ..PlanCfg::default()
+    };
+    let Verdict::Feasible(p16) = planner::plan(&one_cell_matrix(10.0),
+                                               &cfg) else {
+        panic!("16-bit profile must be feasible");
+    };
+    let Verdict::Feasible(p8) = planner::plan(&one_cell_matrix(6.0),
+                                              &cfg) else {
+        panic!("8-bit profile must be feasible");
+    };
+    assert_eq!(p16.boards.len(), 2, "16-bit plan: {:?}", p16.boards);
+    assert_eq!(p8.boards.len(), 1, "8-bit plan: {:?}", p8.boards);
+    assert!(p8.cost < p16.cost, "8-bit fleet {} not cheaper than {}",
+            p8.cost, p16.cost);
+    // The general direction: a faster (quantised) service can never
+    // plan costlier under the same contract and search bounds.
+    assert!(p8.metrics.p99_ms <= cfg.slo_ms);
+}
+
+fn write_tmp(name: &str, content: &str) -> std::path::PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("{}_{name}", std::process::id()));
+    std::fs::write(&p, content).unwrap();
+    p
+}
+
+#[test]
+fn fleet_profiles_path_carries_and_filters_bits() {
+    // A profiles file with a 16-bit and an 8-bit variant of the same
+    // (model, device) cell: the fleet serves with the faster 8-bit
+    // design (and says so); --bits 16 filters back to the historical
+    // plan. The 16-bit row deliberately omits the "bits" key — old
+    // files default to 16.
+    let profiles = write_tmp(
+        "harflow3d_quant_profiles.jsonl",
+        concat!(
+            "{\"bram\":100,\"device\":\"zcu102\",\"dsp\":64,\
+             \"dsp_pct\":2.5,\"ff\":1000,\"fill_ms\":1,\"gops\":50,\
+             \"latency_ms\":8,\"lut\":2000,\"model\":\"c3d\",\
+             \"reconfig_ms\":2,\"sa_states\":100,\"sim_ms\":10}\n",
+            "{\"bits\":8,\"bram\":60,\"device\":\"zcu102\",\"dsp\":40,\
+             \"dsp_pct\":1.6,\"ff\":800,\"fill_ms\":1,\"gops\":80,\
+             \"latency_ms\":5,\"lut\":1500,\"model\":\"c3d\",\
+             \"reconfig_ms\":2,\"sa_states\":100,\"sim_ms\":6}\n",
+        ));
+    let base = ["fleet", "--profiles", profiles.to_str().unwrap(),
+                "--rate", "120", "--slo-ms", "200", "--seed", "7"];
+    let args = Args::parse(base.iter().map(|s| s.to_string()));
+    let out = harflow3d::fleet::cli::run(&args).unwrap();
+    assert!(out.contains("serving with the 8-bit design (6.00 \
+                          ms/clip); dropping the 16-bit variant \
+                          (10.00 ms)"),
+            "{out}");
+    assert!(out.contains("(8-bit, predicted 5.00 ms"), "{out}");
+    assert!(out.contains("plan: 1 x zcu102 (1 boards"), "{out}");
+
+    let filtered: Vec<String> = base
+        .iter()
+        .map(|s| s.to_string())
+        .chain(["--bits".to_string(), "16".to_string()])
+        .collect();
+    let out16 =
+        harflow3d::fleet::cli::run(&Args::parse(filtered)).unwrap();
+    assert!(!out16.contains("8-bit"), "{out16}");
+    assert!(out16.contains("(16-bit, predicted 8.00 ms"), "{out16}");
+    assert!(out16.contains("plan: 2 x zcu102 (2 boards"), "{out16}");
+}
