@@ -44,6 +44,11 @@ pub struct BenchResult {
     /// different workload shapes — the regression gate reports the
     /// width and refuses cross-width comparisons, mirroring `batch`.
     pub bits: Option<u8>,
+    /// Named fault scenario injected into the run (fleet benches
+    /// only): crash/straggler/overload/... . Faulted rows process
+    /// extra event kinds and retries, so the regression gate refuses
+    /// cross-scenario comparisons, mirroring `batch`/`bits`.
+    pub fault: Option<String>,
 }
 
 #[allow(dead_code)]
@@ -75,6 +80,9 @@ impl BenchResult {
         }
         if let Some(b) = self.bits {
             s.push_str(&format!(",\"bits\":{b}"));
+        }
+        if let Some(f) = &self.fault {
+            s.push_str(&format!(",\"fault\":\"{f}\""));
         }
         s.push('}');
         s
@@ -121,6 +129,7 @@ pub fn bench_rec<F: FnMut()>(name: &str, iters: usize, mut f: F)
         p99_ms: None,
         batch: None,
         bits: None,
+        fault: None,
     }
 }
 

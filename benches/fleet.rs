@@ -9,12 +9,15 @@
 //! correctness-trajectory marker (a p99 shift without a code reason is
 //! a modelling regression even when throughput holds) and, on batched
 //! scenarios, the `batch` cap so rows compare like-for-like across
-//! the batching dimension.
+//! the batching dimension. Fault-injected scenarios carry a `fault`
+//! field naming the scenario for the same reason: a crashed fleet
+//! processes Crash/Recover/Retry events a fault-free run never sees.
 
 mod common;
 
 use std::cell::Cell;
 
+use harflow3d::fleet::faults::{FaultPlan, ResilienceCfg, Scenario};
 use harflow3d::fleet::{self, arrivals, planner, BatchCfg, BoardSpec,
                        FleetCfg, Policy, ProfileMatrix,
                        QueueDiscipline, ServiceProfile};
@@ -75,6 +78,8 @@ fn main() {
             queue: QueueDiscipline::Fifo,
             slo_ms: 60.0,
             batch: BatchCfg::new(batch, 0.0),
+            faults: FaultPlan::none(),
+            resilience: ResilienceCfg::none(),
         };
         let events = Cell::new(0usize);
         let p99 = Cell::new(0.0f64);
@@ -87,6 +92,49 @@ fn main() {
         b.events_per_sec = Some(events.get() as f64 / b.mean_s);
         b.p99_ms = Some(p99.get());
         b.batch = Some(batch);
+        results.push(b);
+    }
+
+    // Chaos scenario: the slo-aware fleet under a seeded mid-run board
+    // crash (with recovery) plus timeout-and-retry resilience. The
+    // extra Crash/Recover/Retry event kinds and the failover drain are
+    // the hot paths this row watches; the `fault` tag keeps the gate
+    // from comparing it against fault-free rows.
+    {
+        let mx = canned_matrix(2);
+        let n_boards = 8usize;
+        let rate = 0.85 * n_boards as f64 / (10.0 * 1e-3);
+        let arr = arrivals::poisson(n_req, rate, 2, 7);
+        let span = arr.last().map(|r| r.arrival_ms).unwrap_or(0.0);
+        let cfg = FleetCfg {
+            boards: (0..n_boards)
+                .map(|i| BoardSpec { device: 0, preload: i % 2 })
+                .collect(),
+            policy: Policy::SloAware,
+            queue: QueueDiscipline::Fifo,
+            slo_ms: 60.0,
+            batch: BatchCfg::default(),
+            faults: Scenario::Crash.single(n_boards, span, 7),
+            resilience: ResilienceCfg {
+                deadline_ms: 120.0,
+                retries: 2,
+                seed: 7,
+                ..ResilienceCfg::none()
+            },
+        };
+        let events = Cell::new(0usize);
+        let p99 = Cell::new(0.0f64);
+        let mut b = common::bench_rec(
+            "fleet/sim 8 boards slo-aware 2 models crash", iters, || {
+                let met = fleet::simulate_fleet(&mx, &cfg, &arr);
+                events.set(met.events);
+                p99.set(met.p99_ms);
+                std::hint::black_box(&met);
+            });
+        b.events_per_sec = Some(events.get() as f64 / b.mean_s);
+        b.p99_ms = Some(p99.get());
+        b.batch = Some(1);
+        b.fault = Some(Scenario::Crash.name().to_string());
         results.push(b);
     }
 
@@ -121,6 +169,9 @@ fn main() {
             max_boards: 64,
             mixed,
             seed: 7,
+            faults: None,
+            resilience: ResilienceCfg::none(),
+            shed_cap: 0.0,
         };
         let p99 = Cell::new(0.0f64);
         let mut b = common::bench_rec(name, iters, || {

@@ -18,7 +18,11 @@ embed their batch cap and also carry it as a ``batch`` field, which
 the gate reports but never compares across different caps; quantised
 DSE rows carry a ``bits`` datapath-wordlength field with the same
 rule — a width change redefines the workload, so throughput is never
-compared across widths). Rows present in only one of the two files
+compared across widths; fault-injected fleet rows carry a ``fault``
+scenario name with the same rule again — a crashed or straggling
+fleet processes different event kinds, so its events/sec is never
+compared against a fault-free row or a different scenario's). Rows
+present in only one of the two files
 are reported but never fail the gate — new benches must be able to
 land before a baseline exists for them.
 
@@ -118,7 +122,8 @@ def main():
         if cur is not None:
             redefined = False
             for key, what in (("batch", "batch cap"),
-                              ("bits", "wordlength")):
+                              ("bits", "wordlength"),
+                              ("fault", "fault scenario")):
                 bv, cv = base.get(key), cur.get(key)
                 if (bv is not None or cv is not None) and bv != cv:
                     print(f"note: '{name}' {what} changed "
@@ -130,6 +135,8 @@ def main():
             tag += f" [batch={base['batch']}]"
         if base.get("bits") is not None:
             tag += f" [bits={base['bits']}]"
+        if base.get("fault") is not None:
+            tag += f" [fault={base['fault']}]"
         for metric in METRICS:
             sps_base = base.get(metric)
             # A zero/absent baseline cannot be compared against (and a

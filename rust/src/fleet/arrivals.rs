@@ -44,6 +44,16 @@ pub fn poisson(n: usize, rate_rps: f64, n_models: usize, seed: u64)
 /// index, defaulting to model 0. Blank lines and `#` comments are
 /// skipped. Out-of-order timestamps are accepted and sorted; ids are
 /// assigned in final time order.
+///
+/// Model tags resolve **name-first**: a tag is matched against the
+/// model names before it is tried as a row index. A model literally
+/// named `"2"` therefore always wins over "row 2" — deliberately, so
+/// adding a digit-named model to a fleet never silently re-routes
+/// trace lines that used to hit it by name, and a given trace line
+/// means the same thing whatever the fleet's size. Index resolution
+/// is the fallback for tags that name no model; a tag that is neither
+/// a known name nor an in-range index is an error carrying the
+/// 1-based line number (as does every other error path here).
 pub fn from_trace(text: &str, models: &[String])
     -> Result<Vec<Request>, String> {
     let mut reqs: Vec<(f64, usize)> = Vec::new();
@@ -65,6 +75,8 @@ pub fn from_trace(text: &str, models: &[String])
         }
         let model = match parts.next() {
             None => 0,
+            // Name-first (see the doc comment): only a tag matching no
+            // model name falls through to index resolution.
             Some(tag) => match models.iter().position(|m| m == tag) {
                 Some(i) => i,
                 None => tag.parse::<usize>().ok()
@@ -147,6 +159,44 @@ mod tests {
         assert_eq!(reqs[2].model, 1);
         assert_eq!(reqs.iter().map(|r| r.id).collect::<Vec<_>>(),
                    vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn trace_digit_named_model_wins_over_index() {
+        // The pinned name-first rule: with a model literally named
+        // "2", the tag "2" resolves by NAME (row 0 here), never as
+        // row index 2 — even though index 2 is also in range. Tags
+        // that name no model still resolve as indices.
+        let models = vec!["2".to_string(), "b".to_string(),
+                          "c".to_string()];
+        let reqs = from_trace("1.0 2\n2.0 1\n3.0 b\n", &models).unwrap();
+        assert_eq!(reqs[0].model, 0, "\"2\" is a name, not an index");
+        assert_eq!(reqs[1].model, 1, "\"1\" names nothing -> index 1");
+        assert_eq!(reqs[2].model, 1, "plain name resolution");
+        // The fallback still bounds-checks: "7" names nothing and is
+        // out of range, and the error names the 1-based line.
+        let e = from_trace("1.0 c\n4.0 7\n", &models).unwrap_err();
+        assert!(e.contains("line 2") && e.contains("\"7\""), "{e}");
+    }
+
+    #[test]
+    fn trace_errors_carry_the_line_number() {
+        // Every error path names the 1-based source line — comments
+        // and blanks count too (the number must match what an editor
+        // shows, not an index over surviving lines).
+        let models = vec!["c3d".to_string()];
+        let cases = [
+            ("# header\nbogus", "line 2"),          // bad timestamp
+            ("0.5\n\n-1.0", "line 3"),              // negative time
+            ("0.5\n1.0 nope", "line 2"),            // unknown model
+            ("# c\n# c\n0.5 c3d x", "line 3"),      // trailing field
+            ("inf", "line 1"),                      // non-finite time
+        ];
+        for (text, want) in cases {
+            let e = from_trace(text, &models).unwrap_err();
+            assert!(e.contains(want), "{text:?}: {e} (want {want})");
+            assert!(e.starts_with("trace line"), "{e}");
+        }
     }
 
     #[test]

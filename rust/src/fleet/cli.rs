@@ -10,8 +10,19 @@
 //!       [--policy rr|least-loaded|slo-aware] [--queue fifo|priority]
 //!       [--batch B] [--max-wait-ms W] [--mixed]
 //!       [--boards N] [--requests N] [--max-boards N] [--seed S]
+//!       [--faults crash|n-1|straggler|overload|flaky|chaos]
+//!       [--deadline-ms D] [--retries N] [--shed]
 //!       [--trace file] [--profiles points.json] [--fast]
 //! ```
+//!
+//! `--faults` injects a named fault scenario into the simulation (a
+//! fixed `--boards N` fleet gets one seeded instance; the planner
+//! certifies the plan against *every* instance, so `n-1` means "any
+//! single board may die"). `--deadline-ms`/`--retries`/`--shed` arm
+//! the resilience policies: per-request deadlines with
+//! timeout-and-retry under jittered exponential backoff, and
+//! SLO-aware admission control. All default off — the fault-free
+//! output is bit-identical to the pre-fault simulator.
 //!
 //! `--bits` (quant subsystem) selects datapath wordlengths: it fans
 //! the DSE sweep over the listed widths, or filters a `--profiles`
@@ -30,6 +41,8 @@ use crate::optim::OptCfg;
 use crate::report::{self, SweepPoint};
 use crate::util::cli::{csv_list, Args};
 
+use super::faults::{FaultPlan, ResilienceCfg, Scenario,
+                    SCENARIO_NAMES};
 use super::{arrivals, planner, BatchCfg, FleetCfg, FleetMetrics,
             Policy, ProfileMatrix, QueueDiscipline, ServiceProfile};
 
@@ -58,6 +71,14 @@ pub struct FleetArgs {
     pub batch: BatchCfg,
     /// `--mixed`: let the planner search heterogeneous compositions.
     pub mixed: bool,
+    /// `--faults NAME`: inject a named fault scenario.
+    pub faults: Option<Scenario>,
+    /// `--deadline-ms D`: per-request deadline (0 = off).
+    pub deadline_ms: f64,
+    /// `--retries N`: retry budget per request under backoff.
+    pub retries: usize,
+    /// `--shed`: SLO-aware admission control (needs `--deadline-ms`).
+    pub shed: bool,
     pub trace: Option<String>,
     pub profiles: Option<String>,
     pub fast: bool,
@@ -188,6 +209,36 @@ impl FleetArgs {
             }
         }
 
+        let faults = match args.opt("faults") {
+            Some(s) => Some(Scenario::parse(s).ok_or(format!(
+                "fleet: unknown --faults {s:?} (accepted: \
+                 {SCENARIO_NAMES})"))?),
+            None => None,
+        };
+        let deadline_ms = num_opt(args, "deadline-ms", 0.0)?;
+        if args.opt("deadline-ms").is_some()
+            && (!(deadline_ms > 0.0) || !deadline_ms.is_finite())
+        {
+            return Err(format!(
+                "fleet: --deadline-ms must be a positive finite \
+                 per-request deadline in ms (got {deadline_ms})"));
+        }
+        // `--retries -1` (and any other non-integer) dies inside the
+        // strict usize parser with the offending token in the message.
+        let retries = int_opt(args, "retries", 0)?;
+        if retries > 0 && faults.is_none() && deadline_ms <= 0.0 {
+            return Err("fleet: --retries only takes effect with \
+                        --faults (transient failures to retry) or \
+                        --deadline-ms (timeouts to retry)"
+                .into());
+        }
+        let shed = args.flag("shed");
+        if shed && deadline_ms <= 0.0 {
+            return Err("fleet: --shed admits by queue-delay estimate \
+                        against a deadline: pass --deadline-ms D"
+                .into());
+        }
+
         let fixed_boards = int_opt(args, "boards", 0)?;
         let mixed = args.flag("mixed");
         if mixed && fixed_boards > 0 {
@@ -234,6 +285,10 @@ impl FleetArgs {
             queue,
             batch: BatchCfg::new(max_batch, max_wait_ms),
             mixed,
+            faults,
+            deadline_ms,
+            retries,
+            shed,
             trace,
             profiles,
             fast: args.flag("fast"),
@@ -241,6 +296,26 @@ impl FleetArgs {
             exchange_every: int_opt(args, "exchange-every", 32)?,
             jobs: int_opt(args, "jobs", jobs_default)?,
         })
+    }
+
+    /// Resilience policies armed by the CLI flags. Degraded-mode
+    /// fallback variants ([`ResilienceCfg::fallback`]) stay a
+    /// library-level feature for now.
+    pub fn resilience(&self) -> ResilienceCfg {
+        ResilienceCfg {
+            deadline_ms: self.deadline_ms,
+            retries: self.retries,
+            shed: self.shed,
+            seed: self.seed,
+            ..ResilienceCfg::none()
+        }
+    }
+
+    /// Any fault or resilience flag is armed — gates the extra output
+    /// lines so default runs stay byte-identical.
+    fn chaos_active(&self) -> bool {
+        self.faults.is_some() || self.deadline_ms > 0.0
+            || self.retries > 0 || self.shed
     }
 }
 
@@ -355,6 +430,14 @@ pub fn run(args: &Args) -> Result<String, String> {
                  let the planner pick by omitting --boards",
                 matrix.devices.len()));
         }
+        // One seeded instance of the scenario, sized to this fleet and
+        // the arrival span (the planner path instead certifies against
+        // every instance).
+        let span = arr.last().map(|r| r.arrival_ms).unwrap_or(0.0);
+        let fault_plan = match fa.faults {
+            Some(s) => s.single(fa.fixed_boards, span, fa.seed),
+            None => FaultPlan::none(),
+        };
         let fc = FleetCfg {
             boards: planner::preload_round_robin(0, fa.fixed_boards,
                                                  n_models),
@@ -362,6 +445,8 @@ pub fn run(args: &Args) -> Result<String, String> {
             queue: fa.queue,
             slo_ms: fa.slo_ms,
             batch: fa.batch,
+            faults: fault_plan,
+            resilience: fa.resilience(),
         };
         let met = super::simulate_fleet(&matrix, &fc, &arr);
         out.push_str(&metrics_block(&matrix, &met, &fa));
@@ -377,6 +462,9 @@ pub fn run(args: &Args) -> Result<String, String> {
             max_boards: fa.max_boards,
             mixed: fa.mixed,
             seed: fa.seed,
+            faults: fa.faults,
+            resilience: fa.resilience(),
+            shed_cap: 0.0,
         };
         match planner::plan(&matrix, &pcfg) {
             planner::Verdict::Feasible(plan) => {
@@ -387,6 +475,15 @@ pub fn run(args: &Args) -> Result<String, String> {
                     plan.cost,
                     if plan.is_mixed() { ", mixed" } else { "" },
                     fa.slo_ms, fa.rate));
+                if let (Some(name), Some(base)) =
+                    (&plan.fault, plan.fault_free_boards)
+                {
+                    out.push_str(&format!(
+                        "plan survives '{name}' faults: {} boards vs \
+                         {base} fault-free (+{} for availability)\n",
+                        plan.boards.len(),
+                        plan.boards.len() - base));
+                }
                 out.push_str(&metrics_block(&matrix, &plan.metrics,
                                             &fa));
                 out.push_str(&verdict_line(&plan.metrics, fa.slo_ms));
@@ -477,21 +574,42 @@ fn metrics_block(matrix: &ProfileMatrix, met: &FleetMetrics,
     } else {
         String::new()
     };
+    let fault_note = match fa.faults {
+        Some(s) => format!(", faults {}", s.name()),
+        None => String::new(),
+    };
+    // Offered = completed + every loss bucket; the extra buckets are
+    // zero on a fault-free run, keeping the line byte-identical.
     s.push_str(&format!(
         "fleet sim ({} boards, {}, {} queue, {} requests, seed \
-         {}{batch_note}):\n",
+         {}{batch_note}{fault_note}):\n",
         met.boards.len(), fa.policy.name(), fa.queue.name(),
-        met.completed + met.dropped, fa.seed));
-    s.push_str(&format!(
-        "  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  mean {:.2} ms  \
-         max {:.2} ms\n",
-        met.p50_ms, met.p95_ms, met.p99_ms, met.mean_ms, met.max_ms));
+        met.completed + met.dropped + met.shed + met.failed, fa.seed));
+    if met.completed == 0 {
+        // Shed-everything / lose-everything runs have no latency
+        // population: report that plainly instead of 0.00 ms
+        // percentiles that read like a (suspiciously fast) fleet.
+        s.push_str("  0 completed requests - no latency percentiles\n");
+    } else {
+        s.push_str(&format!(
+            "  p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  mean {:.2} ms  \
+             max {:.2} ms\n",
+            met.p50_ms, met.p95_ms, met.p99_ms, met.mean_ms,
+            met.max_ms));
+    }
     s.push_str(&format!(
         "  throughput {:.1} req/s | completed {} dropped {} | {} \
          design switches | {} SLO violations | {} sequences (mean \
          {:.2} clips)\n",
         met.throughput_rps, met.completed, met.dropped, met.switches,
         met.slo_violations, met.batches, met.mean_batch()));
+    if fa.chaos_active() {
+        s.push_str(&format!(
+            "  resilience: shed {} timeouts {} retries {} failovers {} \
+             fallbacks {} failed {} | goodput p99 {:.2} ms\n",
+            met.shed, met.timeouts, met.retries, met.failovers,
+            met.fallbacks, met.failed, met.goodput_p99_ms));
+    }
     for (i, b) in met.boards.iter().enumerate() {
         s.push_str(&format!(
             "  board {i:>3} {:>8}: util {:>5.1}%  {:>6} clips  {} \
@@ -648,6 +766,54 @@ mod tests {
         assert!(e.contains("--mixed"), "{e}");
         let e = parse(&["fleet", "--trace", "t.txt"]).unwrap_err();
         assert!(e.contains("--boards"), "{e}");
+    }
+
+    #[test]
+    fn fault_flags_parse_and_validate() {
+        let fa = parse(&["fleet", "--faults", "crash", "--deadline-ms",
+                         "50", "--retries", "2", "--shed"]).unwrap();
+        assert_eq!(fa.faults, Some(Scenario::Crash));
+        assert_eq!(fa.deadline_ms, 50.0);
+        assert_eq!(fa.retries, 2);
+        assert!(fa.shed);
+        let r = fa.resilience();
+        assert_eq!(r.deadline_ms, 50.0);
+        assert_eq!(r.retries, 2);
+        assert!(r.shed);
+        assert_eq!(r.seed, fa.seed);
+        // Default run arms nothing: the resilience cfg is inert, so
+        // the simulator takes the bit-identical fault-free path.
+        let fa = parse(&["fleet"]).unwrap();
+        assert_eq!(fa.faults, None);
+        assert!(fa.resilience().is_none());
+        assert!(!fa.chaos_active());
+    }
+
+    #[test]
+    fn rejects_bad_fault_flags() {
+        // Unknown scenario names list the accepted taxonomy.
+        let e = parse(&["fleet", "--faults", "meteor"]).unwrap_err();
+        assert!(e.contains("--faults") && e.contains("meteor"), "{e}");
+        assert!(e.contains("n-1") && e.contains("chaos"), "{e}");
+        // A negative retry budget dies in the strict integer parser.
+        let e = parse(&["fleet", "--retries", "-1"]).unwrap_err();
+        assert!(e.starts_with("fleet:") && e.contains("retries"),
+                "{e}");
+        // Shedding needs a deadline to estimate against.
+        let e = parse(&["fleet", "--shed"]).unwrap_err();
+        assert!(e.contains("--deadline-ms"), "{e}");
+        // Retries without anything that can fail are inert.
+        let e = parse(&["fleet", "--retries", "3"]).unwrap_err();
+        assert!(e.contains("--retries"), "{e}");
+        assert!(parse(&["fleet", "--retries", "3", "--faults", "flaky"])
+            .is_ok());
+        // Deadlines must be positive and finite.
+        for bad in [["fleet", "--deadline-ms", "0"],
+                    ["fleet", "--deadline-ms", "-5"],
+                    ["fleet", "--deadline-ms", "inf"]] {
+            let e = parse(&bad).unwrap_err();
+            assert!(e.contains("--deadline-ms"), "{bad:?} -> {e}");
+        }
     }
 
     #[test]

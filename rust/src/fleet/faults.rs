@@ -1,0 +1,486 @@
+//! Fault injection and resilience policies for the fleet simulator.
+//!
+//! HARFLOW3D certifies the latency of one healthy accelerator; a
+//! production fleet must certify its SLO *under failure*: boards
+//! crash and power-cycle, thermal throttling turns boards into
+//! stragglers, and transient invocation faults lose work. This module
+//! provides
+//!
+//! * [`FaultPlan`] — a fully deterministic fault schedule (crash /
+//!   recover cycles, windowed per-board slowdown factors, and a
+//!   per-invocation transient failure probability drawn from a
+//!   dedicated RNG stream) that `simulate_fleet` injects into its
+//!   event loop; an empty plan is pinned bit-identical to the
+//!   fault-free simulator;
+//! * [`Scenario`] — named chaos scenarios (WIND-style taxonomy:
+//!   `crash`, `n-1`, `straggler`, `overload`, `flaky`, `chaos`) that
+//!   expand to concrete [`FaultPlan`]s for a given fleet size and
+//!   horizon, so the CLI and the planner speak the same vocabulary;
+//! * [`ResilienceCfg`] — the serving-side countermeasures: per-request
+//!   deadlines with timeout-and-retry under capped jittered
+//!   exponential backoff, SLO-aware admission control (shed on
+//!   estimated deadline violation), and degraded-mode fallback onto a
+//!   cheaper (lower-wordlength) variant of the same model when the
+//!   fleet is saturated. The default config disables everything.
+//!
+//! RNG stream allocation (see `util::rng::stream_seed`): streams 1–2
+//! belong to [`super::arrivals`]; this module owns 3 (transient
+//! invocation failures), 4 (retry backoff jitter) and 5 (scenario
+//! expansion), so fault draws never perturb the arrival process.
+
+use crate::util::rng::Rng;
+
+/// RNG stream for per-invocation transient failure draws.
+pub const STREAM_FLAKY: u64 = 3;
+/// RNG stream for retry backoff jitter draws.
+pub const STREAM_BACKOFF: u64 = 4;
+/// RNG stream for expanding a [`Scenario`] into concrete fault plans
+/// (which board crashes, which boards straggle).
+pub const STREAM_SCENARIO: u64 = 5;
+
+// ------------------------------------------------------------------------
+// FaultPlan
+// ------------------------------------------------------------------------
+
+/// One board crash: the board goes down at `at_ms` (losing its queue
+/// and any in-flight invocation sequence) and comes back — cold, with
+/// no design loaded — at `recover_ms` (`f64::INFINITY` = never).
+#[derive(Debug, Clone, Copy)]
+pub struct Crash {
+    pub board: usize,
+    pub at_ms: f64,
+    pub recover_ms: f64,
+}
+
+/// A straggler window: invocation sequences *started* on `board`
+/// within `[from_ms, to_ms)` run `factor` times slower (thermal
+/// throttling, a noisy neighbour on the host link, …).
+#[derive(Debug, Clone, Copy)]
+pub struct Slowdown {
+    pub board: usize,
+    pub from_ms: f64,
+    pub to_ms: f64,
+    pub factor: f64,
+}
+
+/// A deterministic fault schedule for one simulation run. The default
+/// (empty) plan injects nothing and is pinned bit-identical to the
+/// fault-free simulator: no events are scheduled, no RNG stream is
+/// ever drawn, and no float operation changes.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub crashes: Vec<Crash>,
+    pub slowdowns: Vec<Slowdown>,
+    /// Probability that one invocation sequence fails transiently
+    /// (board time is spent, results are lost; clips retry or fail).
+    /// 0 disables the draw entirely.
+    pub flaky_fail_prob: f64,
+    /// Base seed for the fault RNG streams ([`STREAM_FLAKY`]).
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// The empty plan: inject nothing.
+    pub fn none() -> FaultPlan {
+        FaultPlan { crashes: Vec::new(), slowdowns: Vec::new(),
+                    flaky_fail_prob: 0.0, seed: 0 }
+    }
+
+    /// True when this plan injects nothing at all.
+    pub fn is_none(&self) -> bool {
+        self.crashes.is_empty() && self.slowdowns.is_empty()
+            && self.flaky_fail_prob <= 0.0
+    }
+
+    /// Combined slowdown factor for an invocation sequence started on
+    /// `board` at `now` (product of all active windows; 1.0 when none
+    /// apply, so the fault-free path multiplies by nothing).
+    pub fn slowdown_factor(&self, board: usize, now: f64) -> f64 {
+        let mut f = 1.0;
+        for s in &self.slowdowns {
+            if s.board == board && now >= s.from_ms && now < s.to_ms {
+                f *= s.factor;
+            }
+        }
+        f
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+// ------------------------------------------------------------------------
+// Named scenarios
+// ------------------------------------------------------------------------
+
+/// Named chaos scenarios — the shared vocabulary of `--faults`, the
+/// fault-aware planner and the bench `fault` dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// One seeded board crashes at 25% of the horizon and recovers
+    /// (cold) at 60%.
+    Crash,
+    /// Survive any single board loss: one plan per board, crashing it
+    /// at 25% of the horizon with no recovery. The planner certifies
+    /// a fleet against *every* instance.
+    NMinusOne,
+    /// A quarter of the boards (at least one) run 4x slower over the
+    /// 20–70% window.
+    Straggler,
+    /// Every board runs 2x slower over the 40–70% window — a
+    /// fleet-wide capacity loss standing in for a demand spike.
+    Overload,
+    /// Each invocation sequence fails transiently with p = 0.05.
+    Flaky,
+    /// Crash + straggler + flaky (p = 0.02) combined.
+    Chaos,
+}
+
+/// Accepted `--faults` names, for error messages.
+pub const SCENARIO_NAMES: &str =
+    "crash, n-1, straggler, overload, flaky, chaos";
+
+impl Scenario {
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s {
+            "crash" => Some(Scenario::Crash),
+            "n-1" | "n-minus-one" => Some(Scenario::NMinusOne),
+            "straggler" | "stragglers" => Some(Scenario::Straggler),
+            "overload" => Some(Scenario::Overload),
+            "flaky" => Some(Scenario::Flaky),
+            "chaos" => Some(Scenario::Chaos),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Crash => "crash",
+            Scenario::NMinusOne => "n-1",
+            Scenario::Straggler => "straggler",
+            Scenario::Overload => "overload",
+            Scenario::Flaky => "flaky",
+            Scenario::Chaos => "chaos",
+        }
+    }
+
+    /// Expand into the fault plans a fleet must survive. All but
+    /// `n-1` produce exactly one plan; `n-1` produces one per board
+    /// (the planner certifies against every one of them). `span_ms`
+    /// is the traffic horizon (last arrival time); seeded picks come
+    /// from [`STREAM_SCENARIO`] so the same (fleet size, span, seed)
+    /// always yields the same plans.
+    pub fn instances(&self, n_boards: usize, span_ms: f64, seed: u64)
+        -> Vec<FaultPlan> {
+        assert!(n_boards > 0, "scenario needs a non-empty fleet");
+        let span = if span_ms > 0.0 { span_ms } else { 1000.0 };
+        let mut rng = Rng::stream(seed, STREAM_SCENARIO);
+        match self {
+            Scenario::Crash => vec![FaultPlan {
+                crashes: vec![Crash {
+                    board: rng.below(n_boards),
+                    at_ms: 0.25 * span,
+                    recover_ms: 0.60 * span,
+                }],
+                slowdowns: Vec::new(),
+                flaky_fail_prob: 0.0,
+                seed,
+            }],
+            Scenario::NMinusOne => (0..n_boards)
+                .map(|b| FaultPlan {
+                    crashes: vec![Crash {
+                        board: b,
+                        at_ms: 0.25 * span,
+                        recover_ms: f64::INFINITY,
+                    }],
+                    slowdowns: Vec::new(),
+                    flaky_fail_prob: 0.0,
+                    seed,
+                })
+                .collect(),
+            Scenario::Straggler => {
+                let k = n_boards.div_ceil(4);
+                let slow = pick_distinct(&mut rng, n_boards, k);
+                vec![FaultPlan {
+                    crashes: Vec::new(),
+                    slowdowns: slow
+                        .into_iter()
+                        .map(|b| Slowdown {
+                            board: b,
+                            from_ms: 0.20 * span,
+                            to_ms: 0.70 * span,
+                            factor: 4.0,
+                        })
+                        .collect(),
+                    flaky_fail_prob: 0.0,
+                    seed,
+                }]
+            }
+            Scenario::Overload => vec![FaultPlan {
+                crashes: Vec::new(),
+                slowdowns: (0..n_boards)
+                    .map(|b| Slowdown {
+                        board: b,
+                        from_ms: 0.40 * span,
+                        to_ms: 0.70 * span,
+                        factor: 2.0,
+                    })
+                    .collect(),
+                flaky_fail_prob: 0.0,
+                seed,
+            }],
+            Scenario::Flaky => vec![FaultPlan {
+                crashes: Vec::new(),
+                slowdowns: Vec::new(),
+                flaky_fail_prob: 0.05,
+                seed,
+            }],
+            Scenario::Chaos => {
+                let crashed = rng.below(n_boards);
+                let slow = pick_distinct(&mut rng, n_boards, 1);
+                vec![FaultPlan {
+                    crashes: vec![Crash {
+                        board: crashed,
+                        at_ms: 0.25 * span,
+                        recover_ms: 0.60 * span,
+                    }],
+                    slowdowns: slow
+                        .into_iter()
+                        .map(|b| Slowdown {
+                            board: b,
+                            from_ms: 0.20 * span,
+                            to_ms: 0.70 * span,
+                            factor: 3.0,
+                        })
+                        .collect(),
+                    flaky_fail_prob: 0.02,
+                    seed,
+                }]
+            }
+        }
+    }
+
+    /// One representative plan for a fixed-fleet simulation run
+    /// (`--boards N --faults NAME`): the single instance for most
+    /// scenarios; for `n-1`, a seeded pick of which board to lose.
+    pub fn single(&self, n_boards: usize, span_ms: f64, seed: u64)
+        -> FaultPlan {
+        match self {
+            Scenario::NMinusOne => {
+                let span = if span_ms > 0.0 { span_ms } else { 1000.0 };
+                let mut rng = Rng::stream(seed, STREAM_SCENARIO);
+                FaultPlan {
+                    crashes: vec![Crash {
+                        board: rng.below(n_boards),
+                        at_ms: 0.25 * span,
+                        recover_ms: f64::INFINITY,
+                    }],
+                    slowdowns: Vec::new(),
+                    flaky_fail_prob: 0.0,
+                    seed,
+                }
+            }
+            _ => self
+                .instances(n_boards, span_ms, seed)
+                .swap_remove(0),
+        }
+    }
+}
+
+/// `k` distinct indices out of `0..n` via a partial Fisher–Yates
+/// shuffle, returned sorted ascending for stable plan layouts.
+fn pick_distinct(rng: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+    let k = k.min(n);
+    let mut idx: Vec<usize> = (0..n).collect();
+    for i in 0..k {
+        let j = i + rng.below(n - i);
+        idx.swap(i, j);
+    }
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+// ------------------------------------------------------------------------
+// Resilience policies
+// ------------------------------------------------------------------------
+
+/// Serving-side countermeasures. The default disables every policy
+/// and is pinned bit-identical to the policy-free simulator.
+#[derive(Debug, Clone)]
+pub struct ResilienceCfg {
+    /// Per-attempt deadline (ms), measured from the moment a request
+    /// is queued on a board: a request still queued `deadline_ms`
+    /// after being enqueued times out (and retries or fails). Also the
+    /// admission bound when `shed` is on. 0 disables deadlines.
+    pub deadline_ms: f64,
+    /// Retry budget per request, consumed by timeouts, transient
+    /// failures and crash failovers that find no live board. 0
+    /// disables retries (a lost request fails permanently).
+    pub retries: usize,
+    /// Base retry backoff (ms); attempt `k` waits
+    /// `min(backoff_cap_ms, backoff_ms * 2^(k-1))` scaled by a jitter
+    /// factor uniform in `[0.5, 1.0)` from [`STREAM_BACKOFF`].
+    pub backoff_ms: f64,
+    /// Cap on the exponential backoff (ms).
+    pub backoff_cap_ms: f64,
+    /// SLO-aware admission control: reject an arrival outright when
+    /// the best estimated completion across live boards already blows
+    /// `deadline_ms`. Requires `deadline_ms > 0`.
+    pub shed: bool,
+    /// Degraded-mode fallback per model row: `fallback[m] = Some(d)`
+    /// lets a saturated arrival (or a timed-out retry) downgrade model
+    /// `m` to its cheaper lower-wordlength variant `d` (another row of
+    /// the same [`super::ProfileMatrix`]). Empty disables fallback.
+    pub fallback: Vec<Option<usize>>,
+    /// Base seed for the backoff jitter stream.
+    pub seed: u64,
+}
+
+impl ResilienceCfg {
+    /// All policies off.
+    pub fn none() -> ResilienceCfg {
+        ResilienceCfg { deadline_ms: 0.0, retries: 0, backoff_ms: 5.0,
+                        backoff_cap_ms: 80.0, shed: false,
+                        fallback: Vec::new(), seed: 0 }
+    }
+
+    /// True when every policy is off.
+    pub fn is_none(&self) -> bool {
+        self.deadline_ms <= 0.0 && self.retries == 0 && !self.shed
+            && self.fallback.is_empty()
+    }
+
+    /// Backoff delay (ms) before retry attempt `attempt` (1-based),
+    /// with jitter drawn from `rng` ([`STREAM_BACKOFF`]).
+    pub fn backoff_delay(&self, attempt: usize, rng: &mut Rng) -> f64 {
+        let exp = 2f64.powi(attempt.saturating_sub(1).min(62) as i32);
+        let base = (self.backoff_ms * exp).min(self.backoff_cap_ms);
+        base * (0.5 + 0.5 * rng.uniform())
+    }
+}
+
+impl Default for ResilienceCfg {
+    fn default() -> Self {
+        ResilienceCfg::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_none() {
+        assert!(FaultPlan::none().is_none());
+        assert!(FaultPlan::default().is_none());
+        let mut p = FaultPlan::none();
+        p.flaky_fail_prob = 0.01;
+        assert!(!p.is_none());
+    }
+
+    #[test]
+    fn scenario_parse_round_trips() {
+        for name in ["crash", "n-1", "straggler", "overload", "flaky",
+                     "chaos"] {
+            let s = Scenario::parse(name).expect(name);
+            assert_eq!(s.name(), name);
+            assert!(SCENARIO_NAMES.contains(name));
+        }
+        assert_eq!(Scenario::parse("stragglers"),
+                   Some(Scenario::Straggler));
+        assert!(Scenario::parse("meteor").is_none());
+    }
+
+    #[test]
+    fn n_minus_one_covers_every_board() {
+        let plans = Scenario::NMinusOne.instances(4, 1000.0, 7);
+        assert_eq!(plans.len(), 4);
+        for (b, p) in plans.iter().enumerate() {
+            assert_eq!(p.crashes.len(), 1);
+            assert_eq!(p.crashes[0].board, b);
+            assert_eq!(p.crashes[0].at_ms, 250.0);
+            assert!(p.crashes[0].recover_ms.is_infinite());
+        }
+    }
+
+    #[test]
+    fn crash_scenario_is_seed_deterministic() {
+        let a = Scenario::Crash.instances(8, 2000.0, 42);
+        let b = Scenario::Crash.instances(8, 2000.0, 42);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].crashes[0].board, b[0].crashes[0].board);
+        assert_eq!(a[0].crashes[0].at_ms, 500.0);
+        assert_eq!(a[0].crashes[0].recover_ms, 1200.0);
+        assert!(a[0].crashes[0].board < 8);
+    }
+
+    #[test]
+    fn straggler_picks_distinct_boards() {
+        let plans = Scenario::Straggler.instances(8, 1000.0, 3);
+        let boards: Vec<usize> =
+            plans[0].slowdowns.iter().map(|s| s.board).collect();
+        assert_eq!(boards.len(), 2, "ceil(8/4) stragglers");
+        assert!(boards.windows(2).all(|w| w[0] < w[1]),
+                "sorted and distinct");
+        for s in &plans[0].slowdowns {
+            assert_eq!(s.factor, 4.0);
+            assert_eq!(s.from_ms, 200.0);
+            assert_eq!(s.to_ms, 700.0);
+        }
+    }
+
+    #[test]
+    fn slowdown_factor_windows_compose() {
+        let p = FaultPlan {
+            crashes: Vec::new(),
+            slowdowns: vec![
+                Slowdown { board: 0, from_ms: 10.0, to_ms: 20.0,
+                           factor: 2.0 },
+                Slowdown { board: 0, from_ms: 15.0, to_ms: 30.0,
+                           factor: 3.0 },
+            ],
+            flaky_fail_prob: 0.0,
+            seed: 0,
+        };
+        assert_eq!(p.slowdown_factor(0, 5.0), 1.0);
+        assert_eq!(p.slowdown_factor(0, 10.0), 2.0);
+        assert_eq!(p.slowdown_factor(0, 17.0), 6.0, "windows overlap");
+        assert_eq!(p.slowdown_factor(0, 20.0), 3.0, "to_ms exclusive");
+        assert_eq!(p.slowdown_factor(1, 17.0), 1.0, "other board");
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_and_caps() {
+        let res = ResilienceCfg { backoff_ms: 5.0,
+                                  backoff_cap_ms: 80.0,
+                                  ..ResilienceCfg::none() };
+        let mut rng = Rng::stream(1, STREAM_BACKOFF);
+        // Jitter is in [0.5, 1.0), so attempt k's delay lies in
+        // [base/2, base) for base = min(80, 5 * 2^(k-1)).
+        for (attempt, base) in
+            [(1, 5.0), (2, 10.0), (3, 20.0), (5, 80.0), (9, 80.0)]
+        {
+            let d = res.backoff_delay(attempt, &mut rng);
+            assert!(d >= base / 2.0 && d < base,
+                    "attempt {attempt}: {d} vs base {base}");
+        }
+        // Replays bit-identically per stream.
+        let mut a = Rng::stream(9, STREAM_BACKOFF);
+        let mut b = Rng::stream(9, STREAM_BACKOFF);
+        assert_eq!(res.backoff_delay(2, &mut a).to_bits(),
+                   res.backoff_delay(2, &mut b).to_bits());
+    }
+
+    #[test]
+    fn default_resilience_is_off() {
+        assert!(ResilienceCfg::none().is_none());
+        assert!(ResilienceCfg::default().is_none());
+        let armed = ResilienceCfg { deadline_ms: 50.0,
+                                    ..ResilienceCfg::none() };
+        assert!(!armed.is_none());
+    }
+}

@@ -22,16 +22,27 @@
 //!   consumes `report::sweep` design points and searches board counts
 //!   × design assignments — homogeneous per device type and, when
 //!   enabled, heterogeneous mixed-device compositions — for the
-//!   cheapest fleet meeting a p99 SLO at a target arrival rate.
+//!   cheapest fleet meeting a p99 SLO at a target arrival rate;
+//! * **fault injection and resilience** ([`faults`]): deterministic
+//!   board crash/recover cycles, straggler slowdown windows and
+//!   transient invocation failures injected into the event loop,
+//!   countered by deadlines with jittered-backoff retries, failover
+//!   re-dispatch, admission control and degraded-mode fallback — all
+//!   off by default, in which case the simulator is pinned
+//!   bit-identical to the fault-free engine.
 
 pub mod arrivals;
 pub mod cli;
+pub mod faults;
 pub mod planner;
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
-use crate::util::stats::percentile_sorted;
+use crate::util::rng::Rng;
+use crate::util::stats::{percentile_sorted, percentile_with_failures};
+
+use self::faults::{FaultPlan, ResilienceCfg};
 
 // ------------------------------------------------------------------------
 // Profiles: what the simulator charges per request
@@ -239,6 +250,11 @@ pub struct FleetCfg {
     pub slo_ms: f64,
     /// Clip batching (default: off).
     pub batch: BatchCfg,
+    /// Injected faults (default: none — bit-identical to the
+    /// fault-free simulator).
+    pub faults: FaultPlan,
+    /// Resilience policies (default: all off).
+    pub resilience: ResilienceCfg,
 }
 
 // ------------------------------------------------------------------------
@@ -284,8 +300,27 @@ pub struct FleetMetrics {
     /// `completed / batches` is the realised mean batch size.
     pub batches: usize,
     /// Simulator events processed (arrivals + completions + expired
-    /// batch holds) — the bench's events/sec numerator.
+    /// batch holds; under faults also crashes, recoveries and
+    /// retries) — the bench's events/sec numerator.
     pub events: usize,
+    /// Arrivals rejected by admission control (never queued).
+    pub shed: usize,
+    /// Queued attempts that blew their per-attempt deadline.
+    pub timeouts: usize,
+    /// Retry attempts scheduled (timeouts, transient failures and
+    /// stranded failovers that found no live board).
+    pub retries: usize,
+    /// Clips re-dispatched off a crashed board (queued or in flight).
+    pub failovers: usize,
+    /// Requests downgraded to their degraded-mode fallback model.
+    pub fallbacks: usize,
+    /// Requests lost for good: out of retry budget after a timeout,
+    /// transient failure or crash. Always 0 without faults/policies.
+    pub failed: usize,
+    /// Goodput tail latency: p99 over admitted requests, counting
+    /// each failed request as `+inf`. Bit-identical to `p99_ms` when
+    /// nothing failed, `+inf` when the tail is dominated by losses.
+    pub goodput_p99_ms: f64,
     pub boards: Vec<BoardReport>,
 }
 
@@ -300,6 +335,20 @@ impl FleetMetrics {
 
     pub fn slo_met(&self) -> bool {
         self.p99_ms <= self.slo_ms
+    }
+
+    /// Requests admitted into the fleet that ran to a terminal state
+    /// (completed or failed) — the goodput-p99 population.
+    pub fn admitted(&self) -> usize {
+        self.completed + self.failed
+    }
+
+    /// Any fault-injection or resilience activity in this run (used
+    /// by reports to decide whether the resilience block is worth
+    /// printing).
+    pub fn resilience_touched(&self) -> bool {
+        self.shed + self.timeouts + self.retries + self.failovers
+            + self.fallbacks + self.failed > 0
     }
 
     /// Realised mean clips per invocation sequence (1.0 for an empty
@@ -321,12 +370,20 @@ impl FleetMetrics {
 enum EventKind {
     /// Index into the arrivals slice.
     Arrival(usize),
-    /// Board finished its in-service invocation sequence.
-    Done(usize),
+    /// Board `.0` finished the invocation sequence it started in
+    /// service epoch `.1` (stale epochs — the board crashed mid
+    /// sequence — are ignored).
+    Done(usize, u64),
     /// A batch hold expired on board `.0`; `.1` is the hold epoch the
     /// event was armed for (stale epochs are ignored — the board
     /// started or re-held in the meantime).
     HoldExpired(usize, u64),
+    /// Board `.0` crashes: queue and in-flight work fail over.
+    Crash(usize),
+    /// Board `.0` comes back up, cold (no design loaded).
+    Recover(usize),
+    /// Request `.0` (arrival index) retries after its backoff.
+    Retry(usize),
 }
 
 /// Heap event. Ordered so `BinaryHeap::pop` yields the *earliest*
@@ -361,10 +418,16 @@ impl Ord for Event {
     }
 }
 
+/// Sentinel "no design loaded" row for a board that crashed (it comes
+/// back cold and pays a full reconfiguration on its first sequence).
+/// Never a valid model row, so every `prev == model` check misses.
+const NOTHING: usize = usize::MAX;
+
 /// Live board state during a run.
 struct BoardState {
     device: usize,
-    /// Currently loaded design (model row).
+    /// Currently loaded design (model row), or [`NOTHING`] after a
+    /// crash wiped the configuration.
     loaded: usize,
     /// Design loaded once the whole queue has drained — the backlog
     /// estimator's switch-cost anchor.
@@ -384,6 +447,16 @@ struct BoardState {
     /// Bumped every time a hold is armed; a `HoldExpired` event only
     /// acts when its epoch still matches (invalidates stale timers).
     hold_epoch: u64,
+    /// False while crashed: the board takes no dispatches and its
+    /// pending `Done` is stale.
+    up: bool,
+    /// Bumped when a crash interrupts an in-flight sequence, so the
+    /// sequence's already-scheduled `Done` no-ops. 0 forever in a
+    /// fault-free run, where every `Done` therefore matches.
+    service_epoch: u64,
+    /// The in-flight sequence drew a transient failure: its `Done`
+    /// retries the clips instead of completing them.
+    service_failed: bool,
 }
 
 impl BoardState {
@@ -405,9 +478,54 @@ impl BoardState {
     }
 }
 
+/// Per-request resilience side state, indexed by arrival position.
+struct ReqState {
+    /// Current model row — degraded-mode fallback may downgrade it.
+    model: usize,
+    /// Remaining retry budget.
+    attempts_left: usize,
+    /// When the current attempt was queued on a board — the anchor of
+    /// the per-attempt deadline.
+    enqueued_ms: f64,
+}
+
+/// The running simulation: all mutable run state in one place so the
+/// fault and resilience handlers (crash failover, retries, admission
+/// control) can reach the heap, the boards and the counters without
+/// threading a dozen arguments through every call.
+struct Sim<'a> {
+    profiles: &'a ProfileMatrix,
+    cfg: &'a FleetCfg,
+    arrivals: &'a [Request],
+    boards: Vec<BoardState>,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    reqs: Vec<ReqState>,
+    latencies: Vec<f64>,
+    dropped: usize,
+    shed: usize,
+    timeouts: usize,
+    retries: usize,
+    failovers: usize,
+    fallbacks: usize,
+    failed: usize,
+    events: usize,
+    rr_next: usize,
+    makespan_ms: f64,
+    /// Transient-failure draws ([`faults::STREAM_FLAKY`]); only ever
+    /// advanced when `flaky_fail_prob > 0`.
+    flaky_rng: Rng,
+    /// Backoff jitter draws ([`faults::STREAM_BACKOFF`]); only ever
+    /// advanced when a retry is scheduled.
+    backoff_rng: Rng,
+}
+
 /// Run the fleet through a sorted arrival stream. Panics if `arrivals`
 /// is not sorted by `arrival_ms` (the arrival constructors guarantee
-/// it) or the fleet is empty.
+/// it) or the fleet is empty. With `cfg.faults` empty and
+/// `cfg.resilience` all off (the defaults) the run is bit-identical
+/// to the fault-free simulator: no fault events are scheduled, no
+/// fault RNG stream is drawn, and no float operation changes.
 pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
                       arrivals: &[Request]) -> FleetMetrics {
     assert!(!cfg.boards.is_empty(), "fleet has no boards");
@@ -415,7 +533,7 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
                       .all(|w| w[0].arrival_ms <= w[1].arrival_ms),
                   "arrivals must be time-sorted");
 
-    let mut boards: Vec<BoardState> = cfg
+    let boards: Vec<BoardState> = cfg
         .boards
         .iter()
         .map(|b| BoardState {
@@ -432,87 +550,70 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
             batches: 0,
             holding: false,
             hold_epoch: 0,
+            up: true,
+            service_epoch: 0,
+            service_failed: false,
         })
         .collect();
 
-    let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(
-        arrivals.len() + boards.len());
-    let mut seq = 0u64;
+    let mut sim = Sim {
+        profiles,
+        cfg,
+        arrivals,
+        boards,
+        heap: BinaryHeap::with_capacity(
+            arrivals.len() + cfg.boards.len()),
+        seq: 0,
+        reqs: arrivals
+            .iter()
+            .map(|r| ReqState {
+                model: r.model,
+                attempts_left: cfg.resilience.retries,
+                enqueued_ms: 0.0,
+            })
+            .collect(),
+        latencies: Vec::with_capacity(arrivals.len()),
+        dropped: 0,
+        shed: 0,
+        timeouts: 0,
+        retries: 0,
+        failovers: 0,
+        fallbacks: 0,
+        failed: 0,
+        events: 0,
+        rr_next: 0,
+        makespan_ms: 0.0,
+        flaky_rng: Rng::stream(cfg.faults.seed, faults::STREAM_FLAKY),
+        backoff_rng: Rng::stream(cfg.resilience.seed,
+                                 faults::STREAM_BACKOFF),
+    };
     for (i, r) in arrivals.iter().enumerate() {
-        heap.push(Event { t_ms: r.arrival_ms, seq, kind: EventKind::Arrival(i) });
-        seq += 1;
+        sim.push(r.arrival_ms, EventKind::Arrival(i));
     }
-
-    let mut latencies: Vec<f64> = Vec::with_capacity(arrivals.len());
-    let mut dropped = 0usize;
-    let mut events = 0usize;
-    let mut rr_next = 0usize;
-    let mut makespan_ms = 0.0f64;
-
-    while let Some(ev) = heap.pop() {
-        events += 1;
-        let now = ev.t_ms;
-        match ev.kind {
-            EventKind::Arrival(i) => {
-                let req = arrivals[i];
-                let Some(b) = dispatch(profiles, &boards, cfg.policy,
-                                       &mut rr_next, &req, now,
-                                       &cfg.batch)
-                else {
-                    dropped += 1;
-                    continue;
-                };
-                let board = &mut boards[b];
-                let est = board
-                    .cost_after(profiles, board.tail_model, req.model,
-                                &cfg.batch)
-                    .expect("dispatch returned a capable board");
-                board.backlog_ms += est;
-                board.tail_model = req.model;
-                board.queue.push_back(req);
-                if board.in_service.is_empty() {
-                    maybe_start(profiles, board, cfg, now, &mut heap,
-                                &mut seq, b);
-                }
-            }
-            EventKind::Done(b) => {
-                let board = &mut boards[b];
-                let batch = std::mem::take(&mut board.in_service);
-                assert!(!batch.is_empty(),
-                        "completion without in-service request");
-                board.completed += batch.len();
-                for req in &batch {
-                    latencies.push(now - req.arrival_ms);
-                }
-                makespan_ms = makespan_ms.max(now);
-                if !board.queue.is_empty() {
-                    maybe_start(profiles, board, cfg, now, &mut heap,
-                                &mut seq, b);
-                }
-            }
-            EventKind::HoldExpired(b, epoch) => {
-                let board = &mut boards[b];
-                if board.holding && board.hold_epoch == epoch
-                    && board.in_service.is_empty()
-                    && !board.queue.is_empty()
-                {
-                    board.holding = false;
-                    start_next(profiles, board, cfg, now, &mut heap,
-                               &mut seq, b);
-                }
+    // Fault events ride the same deterministic heap; an empty plan
+    // pushes nothing, keeping the event sequence byte-for-byte what
+    // the fault-free engine produced.
+    for c in &cfg.faults.crashes {
+        if c.board < cfg.boards.len() {
+            sim.push(c.at_ms, EventKind::Crash(c.board));
+            if c.recover_ms.is_finite() {
+                sim.push(c.recover_ms, EventKind::Recover(c.board));
             }
         }
     }
+    sim.run();
 
     let slo_violations =
-        latencies.iter().filter(|&&l| l > cfg.slo_ms).count();
-    let mean_ms = crate::util::stats::mean(&latencies);
+        sim.latencies.iter().filter(|&&l| l > cfg.slo_ms).count();
+    let mean_ms = crate::util::stats::mean(&sim.latencies);
     // One sort serves every percentile and the max (metrics are on the
     // benched path — events/sec should measure the simulator, not
     // repeated bookkeeping sorts).
-    let mut sorted = latencies;
+    let mut sorted = sim.latencies;
     sorted.sort_by(|a, b| a.total_cmp(b));
-    let board_reports: Vec<BoardReport> = boards
+    let makespan_ms = sim.makespan_ms;
+    let board_reports: Vec<BoardReport> = sim
+        .boards
         .iter()
         .map(|b| BoardReport {
             device: b.device,
@@ -529,7 +630,7 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
         .collect();
     FleetMetrics {
         completed: sorted.len(),
-        dropped,
+        dropped: sim.dropped,
         p50_ms: percentile_sorted(&sorted, 50.0),
         p95_ms: percentile_sorted(&sorted, 95.0),
         p99_ms: percentile_sorted(&sorted, 99.0),
@@ -543,21 +644,432 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
         makespan_ms,
         slo_ms: cfg.slo_ms,
         slo_violations,
-        switches: boards.iter().map(|b| b.switches).sum(),
-        batches: boards.iter().map(|b| b.batches).sum(),
-        events,
+        switches: sim.boards.iter().map(|b| b.switches).sum(),
+        batches: sim.boards.iter().map(|b| b.batches).sum(),
+        events: sim.events,
+        shed: sim.shed,
+        timeouts: sim.timeouts,
+        retries: sim.retries,
+        failovers: sim.failovers,
+        fallbacks: sim.fallbacks,
+        failed: sim.failed,
+        goodput_p99_ms: percentile_with_failures(&sorted, sim.failed,
+                                                 99.0),
         boards: board_reports,
     }
 }
 
+impl Sim<'_> {
+    /// Schedule an event, assigning the next tie-break sequence.
+    fn push(&mut self, t_ms: f64, kind: EventKind) {
+        self.heap.push(Event { t_ms, seq: self.seq, kind });
+        self.seq += 1;
+    }
+
+    fn run(&mut self) {
+        while let Some(ev) = self.heap.pop() {
+            self.events += 1;
+            let now = ev.t_ms;
+            match ev.kind {
+                EventKind::Arrival(i) => self.on_arrival(i, now),
+                EventKind::Done(b, epoch) => {
+                    self.on_done(b, epoch, now)
+                }
+                EventKind::HoldExpired(b, epoch) => {
+                    self.on_hold(b, epoch, now)
+                }
+                EventKind::Crash(b) => self.on_crash(b, now),
+                EventKind::Recover(b) => self.on_recover(b),
+                EventKind::Retry(i) => self.on_retry(i, now),
+            }
+        }
+    }
+
+    fn on_arrival(&mut self, i: usize, now: f64) {
+        // Internally `id` is the arrival index so retries and
+        // failovers can find the request's side state; the simulator
+        // only ever reads `model` and `arrival_ms`, so normalising
+        // the id leaves the fault-free run untouched.
+        let mut req = Request {
+            id: i,
+            model: self.reqs[i].model,
+            arrival_ms: self.arrivals[i].arrival_ms,
+        };
+        if self.cfg.resilience.shed
+            && self.cfg.resilience.deadline_ms > 0.0
+        {
+            let deadline = self.cfg.resilience.deadline_ms;
+            let est = best_completion_est(self.profiles, &self.boards,
+                                          req.model, now,
+                                          &self.cfg.batch);
+            let admits = matches!(est, Some(e) if e - now <= deadline);
+            if !admits {
+                // Saturated (or no live board): degrade to the
+                // fallback variant if that one still fits the
+                // deadline, else shed the request at the door.
+                let fb = self
+                    .cfg
+                    .resilience
+                    .fallback
+                    .get(req.model)
+                    .copied()
+                    .flatten()
+                    .filter(|&f| f != req.model)
+                    .filter(|&f| {
+                        matches!(
+                            best_completion_est(self.profiles,
+                                                &self.boards, f, now,
+                                                &self.cfg.batch),
+                            Some(e) if e - now <= deadline)
+                    });
+                match fb {
+                    Some(f) => {
+                        self.fallbacks += 1;
+                        self.reqs[i].model = f;
+                        req.model = f;
+                    }
+                    None => {
+                        self.shed += 1;
+                        return;
+                    }
+                }
+            }
+        }
+        if !self.try_enqueue(req, now) {
+            // No capable live board right now. With a retry budget
+            // the request backs off and tries again (the fleet may
+            // just be mid-crash); without one it is dropped, exactly
+            // as the fault-free engine drops unservable models.
+            if self.reqs[i].attempts_left > 0 {
+                self.retry_or_fail(i, now);
+            } else {
+                self.dropped += 1;
+            }
+        }
+    }
+
+    /// Dispatch `req` onto a board and queue it there, starting the
+    /// board if idle. False when no live board can serve the model.
+    fn try_enqueue(&mut self, req: Request, now: f64) -> bool {
+        let Some(b) = dispatch(self.profiles, &self.boards,
+                               self.cfg.policy, &mut self.rr_next,
+                               &req, now, &self.cfg.batch)
+        else {
+            return false;
+        };
+        self.reqs[req.id].enqueued_ms = now;
+        let board = &mut self.boards[b];
+        let est = board
+            .cost_after(self.profiles, board.tail_model, req.model,
+                        &self.cfg.batch)
+            .expect("dispatch returned a capable board");
+        board.backlog_ms += est;
+        board.tail_model = req.model;
+        board.queue.push_back(req);
+        if board.in_service.is_empty() {
+            self.maybe_start(b, now);
+        }
+        true
+    }
+
+    fn on_done(&mut self, b: usize, epoch: u64, now: f64) {
+        if self.boards[b].service_epoch != epoch {
+            // The board crashed mid-sequence; this work already
+            // failed over.
+            return;
+        }
+        let failed_seq =
+            std::mem::take(&mut self.boards[b].service_failed);
+        let batch = std::mem::take(&mut self.boards[b].in_service);
+        assert!(!batch.is_empty(),
+                "completion without in-service request");
+        if failed_seq {
+            // Transient invocation failure: the board time was spent,
+            // the results are lost, and every clip retries or fails.
+            for req in &batch {
+                self.retry_or_fail(req.id, now);
+            }
+        } else {
+            self.boards[b].completed += batch.len();
+            for req in &batch {
+                self.latencies.push(now - req.arrival_ms);
+            }
+            self.makespan_ms = self.makespan_ms.max(now);
+        }
+        if !self.boards[b].queue.is_empty() {
+            self.maybe_start(b, now);
+        }
+    }
+
+    fn on_hold(&mut self, b: usize, epoch: u64, now: f64) {
+        let board = &self.boards[b];
+        if board.holding && board.hold_epoch == epoch
+            && board.in_service.is_empty()
+            && !board.queue.is_empty()
+        {
+            self.boards[b].holding = false;
+            self.start_next(b, now);
+        }
+    }
+
+    fn on_crash(&mut self, b: usize, now: f64) {
+        if !self.boards[b].up {
+            return; // overlapping crash windows
+        }
+        let lost: Vec<Request> = {
+            let board = &mut self.boards[b];
+            board.up = false;
+            board.holding = false;
+            let mut lost: Vec<Request> = Vec::new();
+            if !board.in_service.is_empty() {
+                // The unfinished remainder of the interrupted
+                // sequence never ran: refund it and stale the
+                // pending `Done` via the service epoch.
+                board.busy_ms -= (board.free_at_ms - now).max(0.0);
+                board.service_epoch += 1;
+                board.service_failed = false;
+                lost.append(&mut board.in_service);
+            }
+            lost.extend(board.queue.drain(..));
+            board.backlog_ms = 0.0;
+            board.loaded = NOTHING;
+            board.tail_model = NOTHING;
+            lost
+        };
+        // Failover re-dispatch is free (no retry budget consumed);
+        // only a clip stranded with no live capable board burns a
+        // retry — or fails, if it has none left.
+        for req in lost {
+            self.failovers += 1;
+            if !self.try_enqueue(req, now) {
+                self.retry_or_fail(req.id, now);
+            }
+        }
+    }
+
+    fn on_recover(&mut self, b: usize) {
+        // Back up, cold: `loaded` stays `NOTHING`, so the first
+        // sequence pays a full reconfiguration. Work that failed over
+        // stays where it went; new arrivals find the board again.
+        self.boards[b].up = true;
+    }
+
+    fn on_retry(&mut self, i: usize, now: f64) {
+        let req = Request {
+            id: i,
+            model: self.reqs[i].model,
+            arrival_ms: self.arrivals[i].arrival_ms,
+        };
+        if !self.try_enqueue(req, now) {
+            self.retry_or_fail(i, now);
+        }
+    }
+
+    /// Burn one retry (scheduling the next attempt after a jittered
+    /// exponential backoff) or, with the budget exhausted, count the
+    /// request as permanently failed.
+    fn retry_or_fail(&mut self, i: usize, now: f64) {
+        if self.reqs[i].attempts_left > 0 {
+            self.reqs[i].attempts_left -= 1;
+            self.retries += 1;
+            let attempt = self.cfg.resilience.retries
+                - self.reqs[i].attempts_left;
+            let delay = self
+                .cfg
+                .resilience
+                .backoff_delay(attempt, &mut self.backoff_rng);
+            self.push(now + delay, EventKind::Retry(i));
+        } else {
+            self.failed += 1;
+        }
+    }
+
+    /// Expire queued attempts that blew their deadline before
+    /// service. Each expired clip retries (downgrading to its
+    /// degraded-mode fallback when one is configured — a timeout is
+    /// the saturation signal) or fails. The backlog estimator keeps
+    /// the expired clips' contribution until the queue next drains;
+    /// it is advisory and self-corrects on empty.
+    fn sweep_timeouts(&mut self, b: usize, now: f64) {
+        let deadline = self.cfg.resilience.deadline_ms;
+        if deadline <= 0.0 {
+            return;
+        }
+        let mut qi = 0;
+        while qi < self.boards[b].queue.len() {
+            let req = self.boards[b].queue[qi];
+            if now - self.reqs[req.id].enqueued_ms <= deadline {
+                qi += 1;
+                continue;
+            }
+            let _ = self.boards[b].queue.remove(qi);
+            self.timeouts += 1;
+            if let Some(fb) = self
+                .cfg
+                .resilience
+                .fallback
+                .get(req.model)
+                .copied()
+                .flatten()
+            {
+                if fb != req.model {
+                    self.reqs[req.id].model = fb;
+                    self.fallbacks += 1;
+                }
+            }
+            self.retry_or_fail(req.id, now);
+        }
+    }
+
+    /// Start the board's next invocation sequence — or, when batching
+    /// with a hold window is on and the candidate batch is still
+    /// short, arm a hold timer and wait for batchmates. Requires a
+    /// non-empty queue and an idle board.
+    fn maybe_start(&mut self, b: usize, now: f64) {
+        let full = !self.cfg.batch.holds()
+            || candidate_batch_len(self.profiles, &self.boards[b],
+                                   self.cfg.queue, &self.cfg.batch)
+                >= self.cfg.batch.max_batch;
+        if full {
+            self.boards[b].holding = false;
+            self.start_next(b, now);
+        } else if !self.boards[b].holding {
+            let board = &mut self.boards[b];
+            board.holding = true;
+            board.hold_epoch += 1;
+            let epoch = board.hold_epoch;
+            self.push(now + self.cfg.batch.max_wait_ms,
+                      EventKind::HoldExpired(b, epoch));
+        }
+        // Already holding with a still-short batch: keep waiting; the
+        // armed timer (or a filling arrival) will start the sequence.
+    }
+
+    /// Pop the next invocation sequence off board `b`'s queue — the
+    /// discipline's pick plus (under batching) every queued clip of
+    /// the same model up to `max_batch`, in arrival order — and put
+    /// it in service at time `now`, scheduling its completion event.
+    /// Expired clips are timed out first; if that empties the queue
+    /// the board simply stays idle.
+    fn start_next(&mut self, b: usize, now: f64) {
+        self.sweep_timeouts(b, now);
+        if self.boards[b].queue.is_empty() {
+            let board = &mut self.boards[b];
+            board.holding = false;
+            board.backlog_ms = 0.0;
+            board.tail_model = board.loaded;
+            return;
+        }
+        let pick = pick_index(self.profiles, &self.boards[b],
+                              self.cfg.queue, &self.cfg.batch);
+        let board = &mut self.boards[b];
+        let first =
+            board.queue.remove(pick).expect("queue checked non-empty");
+        let model = first.model;
+        let mut batch = vec![first];
+        if self.cfg.batch.max_batch > 1 {
+            let mut i = 0;
+            while batch.len() < self.cfg.batch.max_batch
+                && i < board.queue.len()
+            {
+                if board.queue[i].model == model {
+                    batch.push(
+                        board.queue.remove(i).expect("index in range"));
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        let p = self
+            .profiles
+            .get(model, board.device)
+            .expect("queued request must be servable");
+        let switch = if board.loaded == model {
+            0.0
+        } else {
+            board.switches += 1;
+            board.loaded = model;
+            p.reconfig_ms
+        };
+        let mut cost = switch + p.batch_ms(batch.len());
+        // Straggler windows stretch sequences started inside them;
+        // the guard keeps the fault-free float path untouched.
+        if !self.cfg.faults.slowdowns.is_empty() {
+            let factor = self.cfg.faults.slowdown_factor(b, now);
+            if factor != 1.0 {
+                cost *= factor;
+            }
+        }
+        // Transient invocation failure draw (never taken — and the
+        // stream never advanced — when the probability is 0).
+        board.service_failed = self.cfg.faults.flaky_fail_prob > 0.0
+            && self.flaky_rng.uniform()
+                < self.cfg.faults.flaky_fail_prob;
+        // Keep the backlog estimator in sync: remove this sequence's
+        // estimated contribution. Priority reordering and batch
+        // amortisation can make realised costs diverge from the
+        // enqueue-time estimates, so an empty queue resets the
+        // estimator exactly instead of carrying a residue that would
+        // bias SLO-aware dispatch against this board.
+        if board.queue.is_empty() {
+            board.backlog_ms = 0.0;
+            board.tail_model = model;
+        } else {
+            board.backlog_ms = (board.backlog_ms - cost).max(0.0);
+        }
+        board.busy_ms += cost;
+        board.free_at_ms = now + cost;
+        board.in_service = batch;
+        board.batches += 1;
+        let epoch = board.service_epoch;
+        self.push(now + cost, EventKind::Done(b, epoch));
+    }
+}
+
+/// Earliest estimated completion of one clip of `model` across live
+/// boards — the admission-control estimate (the SLO-aware dispatch
+/// formula, minimised over the fleet). `None` when no live board can
+/// serve the model.
+fn best_completion_est(profiles: &ProfileMatrix, boards: &[BoardState],
+                       model: usize, now: f64, batch: &BatchCfg)
+    -> Option<f64> {
+    let mut best: Option<f64> = None;
+    for b in boards {
+        if !b.up {
+            continue;
+        }
+        let Some(own) =
+            b.cost_after(profiles, b.tail_model, model, batch)
+        else {
+            continue;
+        };
+        let start = if b.in_service.is_empty() {
+            now
+        } else {
+            b.free_at_ms.max(now)
+        };
+        let est = start + b.backlog_ms + own;
+        let better = match best {
+            None => true,
+            Some(e) => est < e,
+        };
+        if better {
+            best = Some(est);
+        }
+    }
+    best
+}
+
 /// Choose a board for `req` under `policy`. Boards whose device has no
-/// feasible design for the request's model are skipped; `None` means
-/// no board can serve it (the request is dropped and counted).
+/// feasible design for the request's model — and boards that are down
+/// (crashed, not yet recovered) — are skipped; `None` means no board
+/// can serve it right now.
 fn dispatch(profiles: &ProfileMatrix, boards: &[BoardState],
             policy: Policy, rr_next: &mut usize, req: &Request,
             now: f64, batch: &BatchCfg) -> Option<usize> {
-    let capable =
-        |b: &BoardState| profiles.get(req.model, b.device).is_some();
+    let capable = |b: &BoardState| {
+        b.up && profiles.get(req.model, b.device).is_some()
+    };
     match policy {
         Policy::RoundRobin => {
             // Advance the cursor past incapable boards (bounded by the
@@ -592,6 +1104,9 @@ fn dispatch(profiles: &ProfileMatrix, boards: &[BoardState],
             // estimate under priority reordering, exact under FIFO.
             let mut best: Option<(f64, usize)> = None;
             for (i, b) in boards.iter().enumerate() {
+                if !b.up {
+                    continue;
+                }
                 let Some(own) =
                     b.cost_after(profiles, b.tail_model, req.model,
                                  batch)
@@ -658,90 +1173,6 @@ fn candidate_batch_len(profiles: &ProfileMatrix, board: &BoardState,
         .count()
 }
 
-/// Start the board's next invocation sequence — or, when batching with
-/// a hold window is on and the candidate batch is still short, arm a
-/// hold timer and wait for batchmates. Requires a non-empty queue and
-/// an idle board.
-fn maybe_start(profiles: &ProfileMatrix, board: &mut BoardState,
-               cfg: &FleetCfg, now: f64, heap: &mut BinaryHeap<Event>,
-               seq: &mut u64, board_idx: usize) {
-    let full = !cfg.batch.holds()
-        || candidate_batch_len(profiles, board, cfg.queue, &cfg.batch)
-            >= cfg.batch.max_batch;
-    if full {
-        board.holding = false;
-        start_next(profiles, board, cfg, now, heap, seq, board_idx);
-    } else if !board.holding {
-        board.holding = true;
-        board.hold_epoch += 1;
-        heap.push(Event {
-            t_ms: now + cfg.batch.max_wait_ms,
-            seq: *seq,
-            kind: EventKind::HoldExpired(board_idx, board.hold_epoch),
-        });
-        *seq += 1;
-    }
-    // Already holding with a still-short batch: keep waiting; the
-    // armed timer (or a filling arrival) will start the sequence.
-}
-
-/// Pop the next invocation sequence off `board`'s queue — the
-/// discipline's pick plus (under batching) every queued clip of the
-/// same model up to `max_batch`, in arrival order — and put it in
-/// service at time `now`, scheduling its completion event.
-fn start_next(profiles: &ProfileMatrix, board: &mut BoardState,
-              cfg: &FleetCfg, now: f64, heap: &mut BinaryHeap<Event>,
-              seq: &mut u64, board_idx: usize) {
-    let pick = pick_index(profiles, board, cfg.queue, &cfg.batch);
-    let first = board.queue.remove(pick).expect("queue checked non-empty");
-    let model = first.model;
-    let mut batch = vec![first];
-    if cfg.batch.max_batch > 1 {
-        let mut i = 0;
-        while batch.len() < cfg.batch.max_batch && i < board.queue.len()
-        {
-            if board.queue[i].model == model {
-                batch.push(board.queue.remove(i).expect("index in range"));
-            } else {
-                i += 1;
-            }
-        }
-    }
-    let p = profiles
-        .get(model, board.device)
-        .expect("queued request must be servable");
-    let switch = if board.loaded == model {
-        0.0
-    } else {
-        board.switches += 1;
-        board.loaded = model;
-        p.reconfig_ms
-    };
-    let cost = switch + p.batch_ms(batch.len());
-    // Keep the backlog estimator in sync: remove this sequence's
-    // estimated contribution. Priority reordering and batch
-    // amortisation can make realised costs diverge from the
-    // enqueue-time estimates, so an empty queue resets the estimator
-    // exactly instead of carrying a residue that would bias SLO-aware
-    // dispatch against this board.
-    if board.queue.is_empty() {
-        board.backlog_ms = 0.0;
-        board.tail_model = model;
-    } else {
-        board.backlog_ms = (board.backlog_ms - cost).max(0.0);
-    }
-    board.busy_ms += cost;
-    board.free_at_ms = now + cost;
-    board.in_service = batch;
-    board.batches += 1;
-    heap.push(Event {
-        t_ms: now + cost,
-        seq: *seq,
-        kind: EventKind::Done(board_idx),
-    });
-    *seq += 1;
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -763,6 +1194,8 @@ mod tests {
             queue: QueueDiscipline::Fifo,
             slo_ms: 100.0,
             batch: BatchCfg::default(),
+            faults: FaultPlan::none(),
+            resilience: ResilienceCfg::none(),
         }
     }
 
@@ -883,6 +1316,8 @@ mod tests {
             queue: QueueDiscipline::Fifo,
             slo_ms: 100.0,
             batch: BatchCfg::default(),
+            faults: FaultPlan::none(),
+            resilience: ResilienceCfg::none(),
         };
         let slo = simulate_fleet(&m, &cfg, &arr);
         assert_eq!(slo.switches, 0, "resident designs never reload");
@@ -1024,6 +1459,213 @@ mod tests {
         assert_eq!(met.switches, 2, "b loads, then a reloads");
         // 10 + (7 + 10) + (7 + 10) of busy time.
         assert_eq!(met.makespan_ms, 44.0);
+    }
+
+    #[test]
+    fn crash_fails_over_in_flight_and_queued_work() {
+        // Two boards, three clips at t=0: board 0 crashes at t=5 with
+        // one clip in flight and one queued. Both fail over to board
+        // 1 and finish behind its own clip: latencies 10/20/30, the
+        // interrupted work's unfinished remainder is refunded.
+        let m = matrix1(10.0, 5.0);
+        let mut cfg = fleet(2);
+        cfg.faults.crashes.push(faults::Crash {
+            board: 0, at_ms: 5.0, recover_ms: f64::INFINITY });
+        let arr: Vec<Request> = (0..3)
+            .map(|id| Request { id, model: 0, arrival_ms: 0.0 })
+            .collect();
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 3);
+        assert_eq!(met.failed, 0);
+        assert_eq!(met.failovers, 2, "in-flight clip + queued clip");
+        assert_eq!(met.dropped, 0);
+        assert_eq!(met.max_ms, 30.0);
+        assert_eq!(met.makespan_ms, 30.0);
+        assert_eq!(met.boards[0].busy_ms, 5.0, "remainder refunded");
+        assert_eq!(met.boards[0].completed, 0);
+        assert_eq!(met.boards[1].completed, 3);
+        // 3 arrivals + crash + stale done + 3 completions.
+        assert_eq!(met.events, 8);
+        assert_eq!(met.goodput_p99_ms.to_bits(), met.p99_ms.to_bits());
+    }
+
+    #[test]
+    fn crash_without_survivors_fails_requests() {
+        let m = matrix1(10.0, 5.0);
+        let mut cfg = fleet(1);
+        cfg.faults.crashes.push(faults::Crash {
+            board: 0, at_ms: 5.0, recover_ms: f64::INFINITY });
+        let arr = vec![
+            Request { id: 0, model: 0, arrival_ms: 0.0 },
+            Request { id: 1, model: 0, arrival_ms: 0.0 },
+            Request { id: 2, model: 0, arrival_ms: 6.0 },
+        ];
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 0);
+        assert_eq!(met.failed, 2, "in-flight + queued lost for good");
+        assert_eq!(met.dropped, 1, "arrival with no live board");
+        assert_eq!(met.failovers, 2);
+        assert_eq!(met.p99_ms, 0.0, "empty set: zero, not NaN");
+        assert!(met.goodput_p99_ms.is_infinite(),
+                "losses dominate the goodput tail");
+    }
+
+    #[test]
+    fn recovered_board_serves_retries_cold() {
+        // One board, one clip: the crash strands the failover (no
+        // live board), two backed-off retries still find the fleet
+        // down, and the third lands after the t=20 recovery — paying
+        // a full reconfiguration because recovery is cold.
+        let m = matrix1(10.0, 5.0);
+        let mut cfg = fleet(1);
+        cfg.faults.crashes.push(faults::Crash {
+            board: 0, at_ms: 5.0, recover_ms: 20.0 });
+        cfg.resilience.retries = 3;
+        let arr = vec![Request { id: 0, model: 0, arrival_ms: 0.0 }];
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 1);
+        assert_eq!(met.failed, 0);
+        assert_eq!(met.failovers, 1);
+        assert_eq!(met.retries, 3);
+        assert_eq!(met.switches, 1, "cold recovery reconfigures");
+        // Backoff: 5*(0.5..1) + 10*(0.5..1) + 20*(0.5..1) after t=5,
+        // then 15 ms reconfig + service.
+        assert!(met.max_ms >= 35.0 && met.max_ms < 55.0,
+                "retry lands after recovery: {}", met.max_ms);
+    }
+
+    #[test]
+    fn straggler_window_stretches_sequences() {
+        let m = matrix1(10.0, 5.0);
+        let mut cfg = fleet(1);
+        cfg.faults.slowdowns.push(faults::Slowdown {
+            board: 0, from_ms: 0.0, to_ms: 100.0, factor: 2.0 });
+        let arr = vec![
+            Request { id: 0, model: 0, arrival_ms: 0.0 },
+            Request { id: 1, model: 0, arrival_ms: 50.0 },
+            Request { id: 2, model: 0, arrival_ms: 150.0 },
+        ];
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 3);
+        assert_eq!(met.max_ms, 20.0, "inside the window: 2x service");
+        assert_eq!(met.p50_ms, 20.0);
+        assert_eq!(met.makespan_ms, 160.0,
+                   "outside the window: full speed again");
+    }
+
+    #[test]
+    fn deadline_times_out_queued_work_and_retries() {
+        // Service 10 with a 5 ms queue deadline: the second clip
+        // times out while the first is served, then lands on its
+        // backed-off retry.
+        let m = matrix1(10.0, 5.0);
+        let mut cfg = fleet(1);
+        cfg.resilience.deadline_ms = 5.0;
+        cfg.resilience.retries = 1;
+        let arr = vec![
+            Request { id: 0, model: 0, arrival_ms: 0.0 },
+            Request { id: 1, model: 0, arrival_ms: 0.0 },
+        ];
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 2);
+        assert_eq!(met.timeouts, 1);
+        assert_eq!(met.retries, 1);
+        assert_eq!(met.failed, 0);
+        assert!(met.max_ms >= 22.0 && met.max_ms < 25.0,
+                "retried clip: backoff in [2.5, 5) + 10 ms service: {}",
+                met.max_ms);
+        // Without a retry budget the timeout is terminal and the
+        // goodput tail goes infinite.
+        cfg.resilience.retries = 0;
+        let met0 = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met0.completed, 1);
+        assert_eq!(met0.failed, 1);
+        assert!(met0.goodput_p99_ms.is_infinite());
+        assert_eq!(met0.p99_ms, 10.0, "raw p99 hides the loss");
+    }
+
+    #[test]
+    fn transient_failures_burn_retries_then_fail() {
+        let m = matrix1(10.0, 5.0);
+        let mut cfg = fleet(1);
+        cfg.faults.flaky_fail_prob = 1.0;
+        cfg.resilience.retries = 2;
+        let arr = vec![Request { id: 0, model: 0, arrival_ms: 0.0 }];
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 0);
+        assert_eq!(met.failed, 1);
+        assert_eq!(met.retries, 2);
+        assert_eq!(met.batches, 3, "every attempt spent board time");
+        assert_eq!(met.boards[0].busy_ms, 30.0);
+        assert!(met.goodput_p99_ms.is_infinite());
+    }
+
+    #[test]
+    fn admission_control_sheds_on_estimated_deadline_blowout() {
+        // One board, service 10, deadline 12: the first clip fits
+        // (est 10), the other two would complete at 20+ and are shed
+        // at the door instead of blowing the SLO in the queue.
+        let m = matrix1(10.0, 5.0);
+        let mut cfg = fleet(1);
+        cfg.resilience.deadline_ms = 12.0;
+        cfg.resilience.shed = true;
+        let arr: Vec<Request> = (0..3)
+            .map(|id| Request { id, model: 0, arrival_ms: 0.0 })
+            .collect();
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 1);
+        assert_eq!(met.shed, 2);
+        assert_eq!(met.dropped, 0);
+        assert_eq!(met.max_ms, 10.0);
+        assert_eq!(met.goodput_p99_ms, 10.0,
+                   "shed requests are not goodput failures");
+    }
+
+    #[test]
+    fn saturated_arrival_downgrades_to_fallback_variant() {
+        let mut m = ProfileMatrix::new(
+            vec!["full".into(), "lite".into()], vec!["dev".into()]);
+        m.set(0, 0, ServiceProfile { service_ms: 20.0,
+                                     reconfig_ms: 2.0, fill_ms: 0.0 });
+        m.set(1, 0, ServiceProfile { service_ms: 5.0,
+                                     reconfig_ms: 2.0, fill_ms: 0.0 });
+        let mut cfg = fleet(1);
+        cfg.resilience.deadline_ms = 12.0;
+        cfg.resilience.shed = true;
+        cfg.resilience.fallback = vec![Some(1), None];
+        let arr = vec![Request { id: 0, model: 0, arrival_ms: 0.0 }];
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 1);
+        assert_eq!(met.fallbacks, 1, "full would miss, lite fits");
+        assert_eq!(met.shed, 0);
+        assert_eq!(met.switches, 1);
+        assert_eq!(met.max_ms, 7.0, "reconfig + lite service");
+    }
+
+    #[test]
+    fn fault_runs_replay_bit_identically() {
+        let m = matrix1(10.0, 5.0);
+        let mut cfg = fleet(2);
+        cfg.faults.crashes.push(faults::Crash {
+            board: 0, at_ms: 5.0, recover_ms: 40.0 });
+        cfg.faults.flaky_fail_prob = 0.5;
+        cfg.faults.seed = 9;
+        cfg.resilience.retries = 4;
+        cfg.resilience.deadline_ms = 25.0;
+        cfg.resilience.seed = 9;
+        let arr: Vec<Request> = (0..20)
+            .map(|id| Request { id, model: 0,
+                                arrival_ms: 2.0 * id as f64 })
+            .collect();
+        let a = simulate_fleet(&m, &cfg, &arr);
+        let b = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.failed, b.failed);
+        assert_eq!(a.retries, b.retries);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.p99_ms.to_bits(), b.p99_ms.to_bits());
+        assert_eq!(a.goodput_p99_ms.to_bits(), b.goodput_p99_ms.to_bits());
+        assert_eq!(a.makespan_ms.to_bits(), b.makespan_ms.to_bits());
     }
 
     #[test]

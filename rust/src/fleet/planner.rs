@@ -31,6 +31,7 @@
 use std::collections::HashMap;
 
 use super::arrivals;
+use super::faults::{FaultPlan, ResilienceCfg, Scenario};
 use super::{simulate_fleet, BatchCfg, BoardSpec, FleetCfg,
             FleetMetrics, Policy, ProfileMatrix, QueueDiscipline};
 
@@ -52,6 +53,20 @@ pub struct PlanCfg {
     /// Also search heterogeneous (mixed-device) compositions.
     pub mixed: bool,
     pub seed: u64,
+    /// Certify the plan under this named fault scenario on top of the
+    /// fault-free contract. The hardened plan starts from the
+    /// fault-free composition and only ever *adds* boards, so
+    /// availability can never argue a fleet smaller than capacity
+    /// does. `None` (default) keeps the planner bit-identical to the
+    /// fault-unaware search.
+    pub faults: Option<Scenario>,
+    /// Resilience policies the candidate fleets serve with (and are
+    /// certified under, fault-free and faulted alike).
+    pub resilience: ResilienceCfg,
+    /// Largest tolerated loss fraction under the fault scenario:
+    /// shed + failed + dropped requests over offered requests. 0
+    /// (default) demands every offered request complete.
+    pub shed_cap: f64,
 }
 
 impl Default for PlanCfg {
@@ -66,6 +81,9 @@ impl Default for PlanCfg {
             max_boards: 64,
             mixed: false,
             seed: 0x4A8F,
+            faults: None,
+            resilience: ResilienceCfg::none(),
+            shed_cap: 0.0,
         }
     }
 }
@@ -79,8 +97,16 @@ pub struct FleetPlan {
     pub device_counts: Vec<usize>,
     /// Total relative cost (Σ counts[d] · `ProfileMatrix::costs[d]`).
     pub cost: f64,
-    /// Metrics of the certifying simulation run.
+    /// Metrics of the certifying simulation run. For a fault-hardened
+    /// plan these are the metrics of the *worst* certified fault
+    /// instance, not the fault-free run.
     pub metrics: FleetMetrics,
+    /// Name of the fault scenario the plan was certified under
+    /// (`None` for a fault-unaware plan).
+    pub fault: Option<String>,
+    /// Size of the fault-free plan this hardened plan grew from —
+    /// the availability premium is `boards.len() - fault_free_boards`.
+    pub fault_free_boards: Option<usize>,
 }
 
 impl FleetPlan {
@@ -205,6 +231,8 @@ fn certify(profiles: &ProfileMatrix, cfg: &PlanCfg, counts: &[usize],
         queue: cfg.queue,
         slo_ms: cfg.slo_ms,
         batch: cfg.batch,
+        faults: FaultPlan::none(),
+        resilience: cfg.resilience.clone(),
     };
     let metrics = simulate_fleet(profiles, &fc, arr);
     let ok = metrics.dropped == 0 && metrics.slo_met();
@@ -223,6 +251,8 @@ fn plan_from_counts(profiles: &ProfileMatrix, counts: Vec<usize>,
         device_counts: counts,
         cost: cert.cost,
         metrics: cert.metrics,
+        fault: None,
+        fault_free_boards: None,
     }
 }
 
@@ -374,10 +404,125 @@ pub fn plan(profiles: &ProfileMatrix, cfg: &PlanCfg) -> Verdict {
         }
     }
 
-    match best {
-        Some(p) => Verdict::Feasible(p),
-        None => Verdict::Infeasible { reasons },
+    let base = match best {
+        Some(p) => p,
+        None => return Verdict::Infeasible { reasons },
+    };
+    match cfg.faults {
+        None => Verdict::Feasible(base),
+        Some(scenario) => harden(profiles, cfg, scenario, base, &arr),
     }
+}
+
+/// Grow the fault-free plan until it also certifies under every
+/// instance of `scenario`. The search starts from the fault-free
+/// composition and only ever *adds* boards (one at a time, to the most
+/// numerous device column, ties to the lower column), so a hardened
+/// plan is never smaller or cheaper-by-removal than the capacity plan
+/// it extends — availability can only cost extra boards.
+fn harden(profiles: &ProfileMatrix, cfg: &PlanCfg, scenario: Scenario,
+          base: FleetPlan, arr: &[super::Request]) -> Verdict {
+    let span = arr.last().map(|r| r.arrival_ms).unwrap_or(0.0);
+    let fault_free = base.boards.len();
+    let mut counts = base.device_counts;
+    loop {
+        match certify_fault(profiles, cfg, &counts, arr, scenario,
+                            span) {
+            Ok(cert) => {
+                let mut plan = plan_from_counts(profiles, counts, cert);
+                plan.fault = Some(scenario.name().to_string());
+                plan.fault_free_boards = Some(fault_free);
+                return Verdict::Feasible(plan);
+            }
+            Err(why) => {
+                let n: usize = counts.iter().sum();
+                if n >= cfg.max_boards {
+                    return Verdict::Infeasible {
+                        reasons: vec![format!(
+                            "'{}' faults: {why} at the {}-board cap \
+                             (fault-free plan: {fault_free} boards)",
+                            scenario.name(), cfg.max_boards)],
+                    };
+                }
+                // Add where the fleet already is: the most numerous
+                // device column (ties to the lower column) keeps the
+                // hardened composition a superset of the base one.
+                let mut add = 0usize;
+                for (d, &c) in counts.iter().enumerate() {
+                    if c > counts[add] {
+                        add = d;
+                    }
+                }
+                counts[add] += 1;
+            }
+        }
+    }
+}
+
+/// Certify one composition against *every* instance of the fault
+/// scenario (e.g. n-1 crashes each board in turn). Passing means each
+/// instance completes at least one request, holds the p99 SLO over
+/// completed requests, and loses (shed + timed-out-to-failure +
+/// dropped) at most `shed_cap` of the offered load. Returns the
+/// metrics of the worst certified instance (highest p99), or the first
+/// failing instance's reason.
+fn certify_fault(profiles: &ProfileMatrix, cfg: &PlanCfg,
+                 counts: &[usize], arr: &[super::Request],
+                 scenario: Scenario, span_ms: f64)
+    -> Result<Certified, String> {
+    let boards = compose_boards(counts, profiles.models.len());
+    let cost: f64 = counts
+        .iter()
+        .enumerate()
+        .map(|(d, &n)| n as f64 * profiles.costs[d])
+        .sum();
+    let offered = arr.len();
+    // Interchangeable n-1 instances (same device, same preload ⇒ the
+    // identical simulation) certify once per equivalence class.
+    let mut seen: Vec<(usize, usize)> = Vec::new();
+    let mut worst: Option<Certified> = None;
+    for fp in scenario.instances(boards.len(), span_ms, cfg.seed) {
+        if scenario == Scenario::NMinusOne {
+            let b = fp.crashes[0].board;
+            let key = (boards[b].device, boards[b].preload);
+            if seen.contains(&key) {
+                continue;
+            }
+            seen.push(key);
+        }
+        let fc = FleetCfg {
+            boards: boards.clone(),
+            policy: cfg.policy,
+            queue: cfg.queue,
+            slo_ms: cfg.slo_ms,
+            batch: cfg.batch,
+            faults: fp,
+            resilience: cfg.resilience.clone(),
+        };
+        let metrics = simulate_fleet(profiles, &fc, arr);
+        let lost = metrics.shed + metrics.failed + metrics.dropped;
+        if metrics.completed == 0 {
+            return Err(format!("0 of {offered} requests completed"));
+        }
+        if metrics.p99_ms > cfg.slo_ms {
+            return Err(format!(
+                "p99 {:.2} ms above the {:.2} ms SLO",
+                metrics.p99_ms, cfg.slo_ms));
+        }
+        if lost as f64 > cfg.shed_cap * offered as f64 {
+            return Err(format!(
+                "lost {lost} of {offered} requests (cap {:.1}%)",
+                cfg.shed_cap * 100.0));
+        }
+        let worse = match &worst {
+            None => true,
+            Some(w) => metrics.p99_ms > w.metrics.p99_ms,
+        };
+        if worse {
+            worst = Some(Certified { cost, metrics, ok: true });
+        }
+    }
+    worst.ok_or_else(|| "scenario produced no fault instances".into())
 }
 
 /// Heterogeneous composition search. Returns the best certified mixed
@@ -633,6 +778,70 @@ mod tests {
             panic!("feasible on both devices");
         };
         assert_eq!(p.device(), Some(1), "cheaper device wins");
+    }
+
+    #[test]
+    fn fault_scenario_only_ever_adds_boards() {
+        // 10 ms service at 150 req/s: the fault-free plan settles on
+        // 2 boards; n-1 hardening may only grow from there.
+        let m = matrix(10.0);
+        let base_cfg = PlanCfg {
+            rate_rps: 150.0,
+            slo_ms: 80.0,
+            requests: 800,
+            ..PlanCfg::default()
+        };
+        let Verdict::Feasible(base) = plan(&m, &base_cfg) else {
+            panic!("fault-free plan must be feasible");
+        };
+        assert_eq!(base.fault, None);
+        assert_eq!(base.fault_free_boards, None);
+        let cfg = PlanCfg {
+            faults: Some(Scenario::NMinusOne),
+            resilience: ResilienceCfg {
+                retries: 3,
+                ..ResilienceCfg::none()
+            },
+            ..base_cfg
+        };
+        match plan(&m, &cfg) {
+            Verdict::Feasible(p) => {
+                assert!(p.boards.len() > base.boards.len(),
+                        "n-1 must add boards: {} vs {}",
+                        p.boards.len(), base.boards.len());
+                assert_eq!(p.fault.as_deref(), Some("n-1"));
+                assert_eq!(p.fault_free_boards, Some(base.boards.len()));
+                assert!(p.metrics.p99_ms <= cfg.slo_ms);
+                assert_eq!(p.metrics.shed + p.metrics.failed
+                               + p.metrics.dropped, 0,
+                           "shed_cap 0 demands lossless survival");
+            }
+            Verdict::Infeasible { reasons } => {
+                panic!("expected hardened plan, got {reasons:?}")
+            }
+        }
+    }
+
+    #[test]
+    fn fault_hardening_reports_cap_exhaustion() {
+        // One board is all the cap allows; n-1 leaves zero survivors,
+        // so hardening must fail with a scenario-named reason while the
+        // fault-free plan is feasible.
+        let m = matrix(10.0);
+        let cfg = PlanCfg {
+            rate_rps: 20.0,
+            slo_ms: 80.0,
+            requests: 400,
+            max_boards: 1,
+            faults: Some(Scenario::NMinusOne),
+            ..PlanCfg::default()
+        };
+        let Verdict::Infeasible { reasons } = plan(&m, &cfg) else {
+            panic!("no single-board fleet survives n-1");
+        };
+        assert!(reasons[0].contains("n-1"), "{reasons:?}");
+        assert!(reasons[0].contains("fault-free plan: 1 boards"),
+                "{reasons:?}");
     }
 
     #[test]

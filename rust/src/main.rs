@@ -17,6 +17,8 @@
 //!                 [--queue fifo|priority] [--batch B] [--max-wait-ms W]
 //!                 [--mixed] [--boards N] [--requests N]
 //!                 [--max-boards N] [--seed S] [--trace file]
+//!                 [--faults crash|n-1|straggler|overload|flaky|chaos]
+//!                 [--deadline-ms D] [--retries N] [--shed]
 //!                 [--profiles points.json] [--fast]   serving sim + planner
 //! harflow3d report <table2|table3|table4|table5|table6|
 //!                   fig1|fig4|fig6|fig7|fig8|ablation|fleet|all> [--fast]

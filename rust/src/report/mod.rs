@@ -945,6 +945,8 @@ pub fn fleet_rep(cfg: &ReportCfg) -> String {
                 queue: fleet::QueueDiscipline::Fifo,
                 slo_ms: 4.0 * prof.service_ms,
                 batch: fleet::BatchCfg::default(),
+                faults: fleet::faults::FaultPlan::none(),
+                resilience: fleet::faults::ResilienceCfg::none(),
             };
             let met = fleet::simulate_fleet(&mx, &fc, &arr);
             t.row(vec![
@@ -979,6 +981,8 @@ pub fn fleet_rep(cfg: &ReportCfg) -> String {
             queue: fleet::QueueDiscipline::Fifo,
             slo_ms: 4.0 * prof.service_ms,
             batch: fleet::BatchCfg::new(max_batch, 0.0),
+            faults: fleet::faults::FaultPlan::none(),
+            resilience: fleet::faults::ResilienceCfg::none(),
         };
         let met = fleet::simulate_fleet(&mx, &fc, &arr);
         bt.row(vec![

@@ -62,6 +62,25 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
+/// Goodput percentile: [`percentile_sorted`] over the completed
+/// samples plus `failures` requests that never completed, each
+/// counted as `+inf`. This is the fleet simulator's goodput-p99: a
+/// fleet that sheds or loses requests cannot hide them from the tail.
+/// With `failures == 0` this is exactly [`percentile_sorted`]
+/// (bit-identical, so the fault-free simulator pins hold); an
+/// entirely empty population returns 0 — the caller reports
+/// "0 completed" rather than a NaN percentile.
+pub fn percentile_with_failures(sorted: &[f64], failures: usize,
+                                p: f64) -> f64 {
+    let total = sorted.len() + failures;
+    if total == 0 {
+        return 0.0;
+    }
+    let idx = ((total as f64 - 1.0) * p / 100.0).round() as usize;
+    let idx = idx.min(total - 1);
+    if idx < sorted.len() { sorted[idx] } else { f64::INFINITY }
+}
+
 /// Ordinary least squares: solve `min ||X beta - y||` via the normal
 /// equations with Gaussian elimination + partial pivoting and a small
 /// ridge term for rank safety. `x` is row-major, `n_features` columns.
@@ -163,6 +182,24 @@ mod tests {
         assert_eq!(percentile_sorted(&sorted, 50.0),
                    percentile(&sorted, 50.0));
         assert_eq!(percentile_sorted(&[], 10.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_with_failures_counts_lost_requests() {
+        let sorted = [10.0, 20.0, 30.0];
+        // No failures: exactly percentile_sorted.
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile_with_failures(&sorted, 0, p),
+                       percentile_sorted(&sorted, p));
+        }
+        // One failure out of four: p100 is +inf, p50 still finite.
+        assert_eq!(percentile_with_failures(&sorted, 1, 50.0), 20.0);
+        assert!(percentile_with_failures(&sorted, 1, 100.0)
+                    .is_infinite());
+        // Everything failed: the tail is +inf, never NaN.
+        assert!(percentile_with_failures(&[], 5, 99.0).is_infinite());
+        // Nothing offered at all: 0, not NaN.
+        assert_eq!(percentile_with_failures(&[], 0, 99.0), 0.0);
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! feasible/infeasible verdicts (the ISSUE 3 acceptance pins).
 
 use harflow3d::device;
+use harflow3d::fleet::faults::{Crash, FaultPlan, ResilienceCfg,
+                               Scenario};
 use harflow3d::fleet::{self, arrivals, planner, BatchCfg, BoardSpec,
                        FleetCfg, Policy, ProfileMatrix,
                        QueueDiscipline, Request, ServiceProfile};
@@ -44,6 +46,8 @@ fn single_request_latency_equals_sim_per_clip_latency() {
         queue: QueueDiscipline::Fifo,
         slo_ms: 1e9,
         batch: BatchCfg::default(),
+        faults: FaultPlan::none(),
+        resilience: ResilienceCfg::none(),
     };
     let arr = vec![Request { id: 0, model: 0, arrival_ms: 5.0 }];
     let met = fleet::simulate_fleet(&mx, &cfg, &arr);
@@ -70,6 +74,8 @@ fn same_seed_runs_are_bit_identical() {
         queue: QueueDiscipline::Fifo,
         slo_ms: 50.0,
         batch: BatchCfg::default(),
+        faults: FaultPlan::none(),
+        resilience: ResilienceCfg::none(),
     };
     let run = |seed: u64| {
         let arr = arrivals::poisson(800, 400.0, 1, seed);
@@ -111,6 +117,8 @@ fn poisson_stream_matches_configured_rate() {
         queue: QueueDiscipline::Fifo,
         slo_ms: 100.0,
         batch: BatchCfg::default(),
+        faults: FaultPlan::none(),
+        resilience: ResilienceCfg::none(),
     };
     let rate = 500.0;
     let arr = arrivals::poisson(20_000, rate, 1, 11);
@@ -138,6 +146,8 @@ fn utilization_and_percentiles_are_consistent() {
         queue: QueueDiscipline::Fifo,
         slo_ms: 20.0 * prof.service_ms,
         batch: BatchCfg::default(),
+        faults: FaultPlan::none(),
+        resilience: ResilienceCfg::none(),
     };
     let arr = arrivals::poisson(2_000, rate, 1, 13);
     let met = fleet::simulate_fleet(&mx, &cfg, &arr);
@@ -172,6 +182,9 @@ fn planner_meets_slo_or_reports_infeasible() {
         max_boards: 32,
         mixed: false,
         seed: 7,
+        faults: None,
+        resilience: ResilienceCfg::none(),
+        shed_cap: 0.0,
     };
     match planner::plan(&mx, &pcfg) {
         planner::Verdict::Feasible(p) => {
@@ -211,6 +224,9 @@ fn planner_is_deterministic() {
         max_boards: 16,
         mixed: false,
         seed: 21,
+        faults: None,
+        resilience: ResilienceCfg::none(),
+        shed_cap: 0.0,
     };
     let (a, b) = (planner::plan(&mx, &pcfg), planner::plan(&mx, &pcfg));
     match (a, b) {
@@ -269,9 +285,129 @@ fn sweep_points_feed_the_fleet_pipeline() {
         queue: QueueDiscipline::Fifo,
         slo_ms: 10.0 * parsed.sim_ms,
         batch: BatchCfg::default(),
+        faults: FaultPlan::none(),
+        resilience: ResilienceCfg::none(),
     };
     let arr = arrivals::poisson(200, 100.0, 1, 5);
     let met = fleet::simulate_fleet(&mx, &cfg, &arr);
     assert_eq!(met.completed, 200);
     assert!(met.p50_ms >= parsed.sim_ms);
+}
+
+/// Synthetic two-board fixture for the fault pins (no DSE needed).
+fn chaos_fixture() -> (ProfileMatrix, FleetCfg, Vec<Request>) {
+    let mut mx = ProfileMatrix::new(vec!["a".into()], vec!["d".into()]);
+    mx.set(0, 0, ServiceProfile { service_ms: 4.0, reconfig_ms: 2.0,
+                                  fill_ms: 0.0 });
+    let cfg = FleetCfg {
+        boards: (0..2).map(|_| BoardSpec { device: 0, preload: 0 })
+            .collect(),
+        policy: Policy::SloAware,
+        queue: QueueDiscipline::Fifo,
+        slo_ms: 60.0,
+        batch: BatchCfg::default(),
+        faults: FaultPlan::none(),
+        resilience: ResilienceCfg::none(),
+    };
+    let arr = arrivals::poisson(600, 300.0, 1, 17);
+    (mx, cfg, arr)
+}
+
+#[test]
+fn crash_free_fault_plan_is_bit_identical_to_plain_simulator() {
+    // Acceptance pin: threading an armed-but-empty FaultPlan (and an
+    // inert ResilienceCfg with a live seed) through the simulator
+    // changes no bit of any metric — no RNG draw, no extra event, no
+    // reordered float op relative to the pre-fault code path.
+    let (mx, cfg, arr) = chaos_fixture();
+    let plain = fleet::simulate_fleet(&mx, &cfg, &arr);
+    let mut armed = cfg.clone();
+    armed.faults = FaultPlan { seed: 0xDEAD, ..FaultPlan::none() };
+    armed.resilience = ResilienceCfg { seed: 0xBEEF,
+                                       ..ResilienceCfg::none() };
+    let chaos = fleet::simulate_fleet(&mx, &armed, &arr);
+    assert_eq!(plain.completed, chaos.completed);
+    assert_eq!(plain.dropped, chaos.dropped);
+    assert_eq!(plain.events, chaos.events);
+    assert_eq!(plain.switches, chaos.switches);
+    assert_eq!(plain.batches, chaos.batches);
+    assert_eq!(plain.p50_ms.to_bits(), chaos.p50_ms.to_bits());
+    assert_eq!(plain.p95_ms.to_bits(), chaos.p95_ms.to_bits());
+    assert_eq!(plain.p99_ms.to_bits(), chaos.p99_ms.to_bits());
+    assert_eq!(plain.mean_ms.to_bits(), chaos.mean_ms.to_bits());
+    assert_eq!(plain.max_ms.to_bits(), chaos.max_ms.to_bits());
+    assert_eq!(plain.makespan_ms.to_bits(), chaos.makespan_ms.to_bits());
+    assert_eq!(plain.throughput_rps.to_bits(),
+               chaos.throughput_rps.to_bits());
+    // Goodput equals raw p99 bit-for-bit when nothing is lost.
+    assert_eq!(chaos.goodput_p99_ms.to_bits(), plain.p99_ms.to_bits());
+    assert_eq!(chaos.shed + chaos.timeouts + chaos.retries
+                   + chaos.failovers + chaos.fallbacks + chaos.failed,
+               0);
+    for (x, y) in plain.boards.iter().zip(&chaos.boards) {
+        assert_eq!(x.utilization.to_bits(), y.utilization.to_bits());
+        assert_eq!(x.completed, y.completed);
+        assert_eq!(x.switches, y.switches);
+    }
+}
+
+#[test]
+fn same_seed_and_fault_plan_replay_bit_identically() {
+    // Acceptance pin: a faulted run is exactly as deterministic as a
+    // fault-free one — crashes, straggler windows, flaky failures,
+    // timeouts, and backoff jitter all replay from the seeds.
+    let (mx, mut cfg, arr) = chaos_fixture();
+    cfg.faults = FaultPlan {
+        crashes: vec![Crash { board: 0, at_ms: 300.0,
+                              recover_ms: 900.0 }],
+        flaky_fail_prob: 0.05,
+        seed: 99,
+        ..FaultPlan::none()
+    };
+    cfg.resilience = ResilienceCfg {
+        deadline_ms: 55.0,
+        retries: 2,
+        seed: 99,
+        ..ResilienceCfg::none()
+    };
+    let a = fleet::simulate_fleet(&mx, &cfg, &arr);
+    let b = fleet::simulate_fleet(&mx, &cfg, &arr);
+    assert!(a.failovers > 0 || a.retries > 0 || a.timeouts > 0,
+            "the scenario must actually exercise the fault paths");
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.shed, b.shed);
+    assert_eq!(a.timeouts, b.timeouts);
+    assert_eq!(a.retries, b.retries);
+    assert_eq!(a.failovers, b.failovers);
+    assert_eq!(a.failed, b.failed);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.p99_ms.to_bits(), b.p99_ms.to_bits());
+    assert_eq!(a.goodput_p99_ms.to_bits(), b.goodput_p99_ms.to_bits());
+    assert_eq!(a.makespan_ms.to_bits(), b.makespan_ms.to_bits());
+    assert_eq!(a.mean_ms.to_bits(), b.mean_ms.to_bits());
+}
+
+#[test]
+fn named_scenarios_scale_to_the_fleet_and_replay() {
+    // Every named scenario yields a valid plan for any fleet size, and
+    // the same (scenario, seed, span) always yields the same plan.
+    for name in ["crash", "n-1", "straggler", "overload", "flaky",
+                 "chaos"] {
+        let s = Scenario::parse(name).unwrap();
+        for n in [1usize, 3, 8] {
+            let a = s.single(n, 2000.0, 42);
+            let b = s.single(n, 2000.0, 42);
+            assert_eq!(a.crashes.len(), b.crashes.len(), "{name}");
+            for (x, y) in a.crashes.iter().zip(&b.crashes) {
+                assert_eq!(x.board, y.board, "{name}");
+                assert!(x.board < n, "{name} crash out of range");
+                assert_eq!(x.at_ms.to_bits(), y.at_ms.to_bits());
+            }
+            for (x, y) in a.slowdowns.iter().zip(&b.slowdowns) {
+                assert_eq!(x.board, y.board, "{name}");
+                assert!(x.board < n, "{name} slowdown out of range");
+                assert_eq!(x.factor.to_bits(), y.factor.to_bits());
+            }
+        }
+    }
 }

@@ -12,12 +12,17 @@
 //! * clip batching never raises the simulated p99 at a saturating
 //!   arrival rate, and `max_batch = 4` strictly lowers it;
 //! * every verdict and metric is bit-identical across reruns of the
-//!   same seed.
+//!   same seed;
+//! * the pinned n-1 fault scenario (ISSUE 6): the fault-aware planner
+//!   returns exactly one more board than the fault-free plan, and the
+//!   fault-free composition provably misses the SLO under the same
+//!   injected crash.
 //!
 //! All scenarios run on hand-built profile matrices (no DSE), so the
 //! suite is fast and the expected outcomes are arithmetic, not
 //! optimiser artifacts.
 
+use harflow3d::fleet::faults::{FaultPlan, ResilienceCfg, Scenario};
 use harflow3d::fleet::{self, arrivals, planner, BatchCfg, FleetCfg,
                        Policy, ProfileMatrix, QueueDiscipline,
                        ServiceProfile};
@@ -54,6 +59,9 @@ fn pinned_cfg(mixed: bool) -> planner::PlanCfg {
         max_boards: 32,
         mixed,
         seed: 0xF1EE7,
+        faults: None,
+        resilience: ResilienceCfg::none(),
+        shed_cap: 0.0,
     }
 }
 
@@ -80,6 +88,8 @@ fn recertify(profiles: &ProfileMatrix, cfg: &planner::PlanCfg,
         queue: cfg.queue,
         slo_ms: cfg.slo_ms,
         batch: cfg.batch,
+        faults: FaultPlan::none(),
+        resilience: cfg.resilience.clone(),
     };
     let arr = arrivals::poisson(cfg.requests, cfg.rate_rps,
                                 profiles.models.len(), cfg.seed);
@@ -277,6 +287,8 @@ fn saturated_run(max_batch: usize) -> fleet::FleetMetrics {
         queue: QueueDiscipline::Fifo,
         slo_ms: 100.0,
         batch: BatchCfg::new(max_batch, 0.0),
+        faults: FaultPlan::none(),
+        resilience: ResilienceCfg::none(),
     };
     let arr = arrivals::poisson(1500, 120.0, 1, 0xBA7C4);
     fleet::simulate_fleet(&m, &cfg, &arr)
@@ -347,6 +359,9 @@ fn planner_certifies_with_the_requested_batch_cfg() {
         max_boards: 2,
         mixed: false,
         seed: 9,
+        faults: None,
+        resilience: ResilienceCfg::none(),
+        shed_cap: 0.0,
     };
     let planner::Verdict::Infeasible { reasons } =
         planner::plan(&m, &base)
@@ -364,4 +379,87 @@ fn planner_certifies_with_the_requested_batch_cfg() {
     assert!(plan.metrics.mean_batch() > 1.0,
             "certification ran the batched stack");
     recertify(&m, &batched, &plan);
+}
+
+// ---------------------------------------------------------------------
+// Fault scenarios: the availability premium is pinned
+// ---------------------------------------------------------------------
+
+#[test]
+fn pinned_n_minus_one_plan_adds_exactly_one_board() {
+    // The ISSUE 6 acceptance pin. 10 ms service at 150 req/s is 1.5
+    // boards of raw work: the fault-free plan is exactly 2 boards
+    // (utilization 0.75). Under n-1 a 2-board fleet degrades to one
+    // survivor carrying 1.5 boards of load — the backlog grows for the
+    // rest of the run and the p99 blows the SLO — while 3 boards
+    // degrade to the certified 2-board operating point. The hardened
+    // plan is exactly the fault-free plan plus one board.
+    let mut m = ProfileMatrix::new(vec!["a".into()], vec!["dev".into()]);
+    m.set(0, 0, ServiceProfile { service_ms: 10.0, reconfig_ms: 1.0,
+                                 fill_ms: 0.0 });
+    let base_cfg = planner::PlanCfg {
+        rate_rps: 150.0,
+        slo_ms: 100.0,
+        policy: Policy::SloAware,
+        queue: QueueDiscipline::Fifo,
+        batch: BatchCfg::default(),
+        requests: 1000,
+        max_boards: 16,
+        mixed: false,
+        seed: 0xC4A5,
+        faults: None,
+        resilience: ResilienceCfg::none(),
+        shed_cap: 0.0,
+    };
+    let base = expect_feasible(planner::plan(&m, &base_cfg));
+    assert_eq!(base.boards.len(), 2,
+               "fault-free floor: 1.5 boards of raw work");
+    assert_eq!(base.fault, None);
+
+    let hard_cfg = planner::PlanCfg {
+        faults: Some(Scenario::NMinusOne),
+        ..base_cfg.clone()
+    };
+    let hard = expect_feasible(planner::plan(&m, &hard_cfg));
+    assert_eq!(hard.boards.len(), 3,
+               "the n-1 availability premium is exactly one board");
+    assert_eq!(hard.fault.as_deref(), Some("n-1"));
+    assert_eq!(hard.fault_free_boards, Some(2));
+    assert!(hard.metrics.p99_ms <= hard_cfg.slo_ms,
+            "worst-instance p99 {} certifies the SLO",
+            hard.metrics.p99_ms);
+    assert_eq!(hard.metrics.dropped + hard.metrics.shed
+                   + hard.metrics.failed, 0,
+               "shed_cap 0 demands lossless survival");
+
+    // Bit-identical across reruns, like every other planner verdict.
+    let again = expect_feasible(planner::plan(&m, &hard_cfg));
+    assert_eq!(again.device_counts, hard.device_counts);
+    assert_eq!(again.metrics.p99_ms.to_bits(),
+               hard.metrics.p99_ms.to_bits());
+
+    // The other half of the pin: the fault-free composition *provably
+    // misses* the SLO under the same injected crash — whichever board
+    // dies.
+    let arr = arrivals::poisson(base_cfg.requests, base_cfg.rate_rps,
+                                1, base_cfg.seed);
+    let span = arr.last().unwrap().arrival_ms;
+    let instances = Scenario::NMinusOne
+        .instances(base.boards.len(), span, base_cfg.seed);
+    assert_eq!(instances.len(), base.boards.len());
+    for fp in instances {
+        let fc = FleetCfg {
+            boards: base.boards.clone(),
+            policy: base_cfg.policy,
+            queue: base_cfg.queue,
+            slo_ms: base_cfg.slo_ms,
+            batch: base_cfg.batch,
+            faults: fp,
+            resilience: ResilienceCfg::none(),
+        };
+        let met = fleet::simulate_fleet(&m, &fc, &arr);
+        assert!(!met.slo_met(),
+                "the 2-board plan must miss the SLO with one survivor: \
+                 p99 {:.1} ms", met.p99_ms);
+    }
 }

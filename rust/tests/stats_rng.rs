@@ -4,7 +4,8 @@
 //! Poisson arrival streams every candidate fleet is judged against).
 
 use harflow3d::util::rng::{stream_seed, Rng};
-use harflow3d::util::stats::{percentile, percentile_sorted};
+use harflow3d::util::stats::{percentile, percentile_sorted,
+                             percentile_with_failures};
 
 // ---------------------------------------------------------------------
 // percentile
@@ -80,6 +81,63 @@ fn percentile_sorted_agrees_with_percentile() {
     for p in [0.0, 1.0, 12.5, 50.0, 90.0, 99.0, 100.0] {
         assert_eq!(percentile(&unsorted, p), percentile_sorted(&xs, p),
                    "p = {p}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// percentile_with_failures (the fleet's goodput-p99)
+// ---------------------------------------------------------------------
+
+#[test]
+fn goodput_percentile_never_yields_nan() {
+    // The shed-everything guard (ISSUE 6): admission control can leave
+    // an empty completed-request set, and the report must get a clean
+    // 0, never NaN or a panic, whatever the failure count.
+    for failures in [0usize, 1, 7, 10_000] {
+        let g = percentile_with_failures(&[], failures, 99.0);
+        assert!(!g.is_nan(), "failures {failures}: {g}");
+        if failures == 0 {
+            assert_eq!(g, 0.0, "empty population reports 0");
+        } else {
+            assert!(g.is_infinite() && g > 0.0,
+                    "all-lost population is +inf, not NaN: {g}");
+        }
+    }
+    // Degenerate p values clamp like percentile_sorted does.
+    assert_eq!(percentile_with_failures(&[1.0], 0, 150.0), 1.0);
+    assert_eq!(percentile_with_failures(&[1.0], 0, -10.0), 1.0);
+}
+
+#[test]
+fn goodput_percentile_is_bit_identical_without_failures() {
+    // The fault-free pin at the stats layer: zero failures means the
+    // goodput percentile IS the raw percentile, bit for bit.
+    let mut xs: Vec<f64> =
+        (0..257).map(|i| ((i * 89) % 257) as f64 * 0.125).collect();
+    xs.sort_by(|a, b| a.total_cmp(b));
+    for p in [0.0, 1.0, 50.0, 95.0, 99.0, 100.0] {
+        assert_eq!(percentile_with_failures(&xs, 0, p).to_bits(),
+                   percentile_sorted(&xs, p).to_bits(), "p = {p}");
+    }
+}
+
+#[test]
+fn goodput_percentile_pushes_tail_to_infinity_as_losses_grow() {
+    let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+    // Up to ~1% losses the p99 is still the worst completed sample...
+    assert_eq!(percentile_with_failures(&xs, 0, 99.0), 5.0);
+    // ...but once failures own the p99 rank, the tail is +inf: a fleet
+    // cannot shed its way to a good-looking goodput percentile.
+    assert!(percentile_with_failures(&xs, 5, 99.0).is_infinite());
+    assert!(percentile_with_failures(&xs, 495, 50.0).is_infinite());
+    // Low percentiles still report the completed population.
+    assert_eq!(percentile_with_failures(&xs, 5, 0.0), 1.0);
+    // Monotone in the failure count for a fixed p.
+    let mut last = 0.0f64;
+    for f in 0..20 {
+        let g = percentile_with_failures(&xs, f, 90.0);
+        assert!(g >= last, "f = {f}: {g} < {last}");
+        last = g;
     }
 }
 
