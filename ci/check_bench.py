@@ -47,7 +47,9 @@ row is flagged.
 
 import argparse
 import json
+import os
 import sys
+import tempfile
 
 METRICS = ("states_per_sec", "events_per_sec")
 
@@ -75,8 +77,16 @@ def main():
     ap.add_argument("--max-drop-seeded", type=float, default=0.75,
                     help="collapse floor for hand-seeded baseline rows "
                          "(see module docstring)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the gate against synthetic fixtures and "
+                         "exit (CI sanity check for this script itself)")
     args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    return run_gate(args)
 
+
+def run_gate(args):
     try:
         fresh = load_rows(args.fresh)
     except OSError as e:
@@ -167,6 +177,68 @@ def main():
         print(f"bench regression gate FAILED for: {', '.join(failures)}")
         return 1
     print("bench regression gate passed")
+    return 0
+
+
+def self_test():
+    """Exercise the gate logic on synthetic fixtures.
+
+    Covers: a healthy row passing, a >max-drop regression failing, a
+    seeded row gating only at the collapse floor, a workload
+    redefinition (``bits`` change) being excluded, and the
+    missing-baseline bootstrap path. Returns 0 only if every scenario
+    produced the expected exit code.
+    """
+    def gate(baseline_rows, fresh_rows, **overrides):
+        with tempfile.TemporaryDirectory() as td:
+            fresh_path = os.path.join(td, "fresh.json")
+            with open(fresh_path, "w") as fh:
+                for row in fresh_rows:
+                    fh.write(json.dumps(row) + "\n")
+            base_path = os.path.join(td, "base.json")
+            if baseline_rows is None:
+                base_path = os.path.join(td, "missing.json")
+            else:
+                with open(base_path, "w") as fh:
+                    for row in baseline_rows:
+                        fh.write(json.dumps(row) + "\n")
+            args = argparse.Namespace(
+                baseline=base_path, fresh=fresh_path,
+                max_drop=0.20, max_drop_seeded=0.75)
+            for key, val in overrides.items():
+                setattr(args, key, val)
+            return run_gate(args)
+
+    base = [{"name": "dse", "states_per_sec": 1000.0}]
+    cases = [
+        ("healthy row passes",
+         gate(base, [{"name": "dse", "states_per_sec": 950.0}]), 0),
+        ("regression fails",
+         gate(base, [{"name": "dse", "states_per_sec": 500.0}]), 1),
+        ("seeded row survives a 50% drop",
+         gate([{"name": "dse", "states_per_sec": 1000.0,
+                "seeded": True}],
+              [{"name": "dse", "states_per_sec": 500.0}]), 0),
+        ("seeded row fails the collapse floor",
+         gate([{"name": "dse", "states_per_sec": 1000.0,
+                "seeded": True}],
+              [{"name": "dse", "states_per_sec": 100.0}]), 1),
+        ("wordlength change is not gated",
+         gate([{"name": "dse", "states_per_sec": 1000.0, "bits": 16}],
+              [{"name": "dse", "states_per_sec": 10.0, "bits": 8}]), 0),
+        ("missing baseline bootstraps",
+         gate(None, [{"name": "dse", "states_per_sec": 10.0}]), 0),
+        ("total collapse to zero fails",
+         gate(base, [{"name": "dse", "states_per_sec": 0.0}]), 1),
+    ]
+    bad = [name for name, got, want in cases if got != want]
+    for name, got, want in cases:
+        status = "ok" if got == want else "FAIL"
+        print(f"self-test {status}: {name} (exit {got}, want {want})")
+    if bad:
+        print(f"check_bench self-test FAILED: {', '.join(bad)}")
+        return 1
+    print("check_bench self-test passed")
     return 0
 
 

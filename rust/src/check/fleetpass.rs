@@ -1,0 +1,149 @@
+//! Fleet-config passes (`H3D-040..042`): cross-field sanity for a
+//! serving configuration.
+//!
+//! The `fleet` CLI validates its *flags* (every rejection names the
+//! offending flag), but a [`FleetCfg`] can also be built
+//! programmatically — the planner, the benches, library users — and
+//! those paths historically got no cross-field checking at all. This
+//! pass promotes the CLI's cross-field rules to the config itself, so
+//! every construction route hits the same invariants. For CLI-built
+//! configs the gate is unreachable (the flag validation is strictly
+//! stronger), keeping `fleet` output byte-identical.
+
+use crate::fleet::FleetCfg;
+
+use super::{Diagnostic, Location};
+
+pub fn check_fleet_cfg(cfg: &FleetCfg) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if cfg.boards.is_empty() {
+        out.push(Diagnostic::error(
+            "H3D-042", Location::FleetField("boards"),
+            "fleet has no boards".into()));
+    }
+    if !cfg.slo_ms.is_finite() || cfg.slo_ms <= 0.0 {
+        out.push(Diagnostic::error(
+            "H3D-042", Location::FleetField("slo_ms"),
+            format!("SLO must be a positive finite latency in ms \
+                     (got {})", cfg.slo_ms)));
+    }
+
+    let b = &cfg.batch;
+    if b.max_batch < 1 {
+        out.push(Diagnostic::error(
+            "H3D-040", Location::FleetField("batch.max_batch"),
+            "max_batch 0: an invocation sequence carries at least one \
+             clip".into()));
+    }
+    if !b.max_wait_ms.is_finite() || b.max_wait_ms < 0.0 {
+        out.push(Diagnostic::error(
+            "H3D-040", Location::FleetField("batch.max_wait_ms"),
+            format!("hold window must be a finite non-negative ms \
+                     value (got {})", b.max_wait_ms)));
+    } else if b.max_wait_ms > 0.0 && b.max_batch <= 1 {
+        out.push(Diagnostic::error(
+            "H3D-040", Location::FleetField("batch.max_wait_ms"),
+            format!("hold window {} ms with max_batch {} — nothing to \
+                     wait for", b.max_wait_ms, b.max_batch)));
+    }
+
+    let r = &cfg.resilience;
+    if !r.deadline_ms.is_finite() || r.deadline_ms < 0.0 {
+        out.push(Diagnostic::error(
+            "H3D-041", Location::FleetField("resilience.deadline_ms"),
+            format!("deadline must be a finite non-negative ms value \
+                     (got {})", r.deadline_ms)));
+    } else {
+        if r.shed && r.deadline_ms <= 0.0 {
+            out.push(Diagnostic::error(
+                "H3D-041", Location::FleetField("resilience.shed"),
+                "shedding admits by queue-delay estimate against a \
+                 deadline: set deadline_ms > 0".into()));
+        }
+        if r.retries > 0 && cfg.faults.is_none() && r.deadline_ms <= 0.0 {
+            out.push(Diagnostic::error(
+                "H3D-041", Location::FleetField("resilience.retries"),
+                format!("retry budget {} with no faults to fail \
+                         transiently and no deadline to time out \
+                         against", r.retries)));
+        }
+    }
+    if r.retries > 0
+        && (!r.backoff_ms.is_finite() || r.backoff_ms < 0.0
+            || !r.backoff_cap_ms.is_finite()
+            || r.backoff_cap_ms < r.backoff_ms)
+    {
+        out.push(Diagnostic::error(
+            "H3D-041", Location::FleetField("resilience.backoff_ms"),
+            format!("backoff {} ms / cap {} ms must be finite, \
+                     non-negative, and cap >= base", r.backoff_ms,
+                    r.backoff_cap_ms)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::faults::{FaultPlan, ResilienceCfg};
+    use crate::fleet::{BatchCfg, BoardSpec, FleetCfg, Policy,
+                       QueueDiscipline};
+
+    fn base() -> FleetCfg {
+        FleetCfg {
+            boards: vec![BoardSpec { device: 0, preload: 0 }],
+            policy: Policy::RoundRobin,
+            queue: QueueDiscipline::Fifo,
+            slo_ms: 100.0,
+            batch: BatchCfg::default(),
+            faults: FaultPlan::none(),
+            resilience: ResilienceCfg::none(),
+        }
+    }
+
+    #[test]
+    fn default_shape_is_clean() {
+        assert!(check_fleet_cfg(&base()).is_empty());
+    }
+
+    #[test]
+    fn batching_cross_field() {
+        let mut c = base();
+        c.batch = BatchCfg { max_batch: 1, max_wait_ms: 4.0 };
+        let diags = check_fleet_cfg(&c);
+        assert!(diags.iter().any(|d| d.code == "H3D-040"), "{diags:?}");
+        c.batch = BatchCfg { max_batch: 0, max_wait_ms: 0.0 };
+        assert!(check_fleet_cfg(&c).iter()
+            .any(|d| d.code == "H3D-040"));
+    }
+
+    #[test]
+    fn resilience_cross_field() {
+        let mut c = base();
+        c.resilience.retries = 3; // no faults, no deadline
+        let diags = check_fleet_cfg(&c);
+        assert!(diags.iter().any(|d| d.code == "H3D-041"), "{diags:?}");
+        let mut c = base();
+        c.resilience.shed = true;
+        assert!(check_fleet_cfg(&c).iter()
+            .any(|d| d.code == "H3D-041"));
+        // A deadline legitimises both.
+        let mut c = base();
+        c.resilience.deadline_ms = 50.0;
+        c.resilience.retries = 3;
+        c.resilience.shed = true;
+        assert!(check_fleet_cfg(&c).is_empty());
+    }
+
+    #[test]
+    fn traffic_and_slo() {
+        let mut c = base();
+        c.slo_ms = 0.0;
+        assert!(check_fleet_cfg(&c).iter()
+            .any(|d| d.code == "H3D-042"));
+        let mut c = base();
+        c.boards.clear();
+        assert!(check_fleet_cfg(&c).iter()
+            .any(|d| d.code == "H3D-042"));
+    }
+}

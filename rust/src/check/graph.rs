@@ -1,0 +1,183 @@
+//! Graph passes (`H3D-001..003`): topology/shape propagation, fan-in
+//! arity per `LayerKind`, dead-layer detection.
+//!
+//! `H3D-001`/`H3D-002` verify the same invariants as
+//! `ModelGraph::validate` but report *every* violation as a
+//! diagnostic instead of stopping at the first, and split arity out
+//! under its own code. `H3D-003` is new: a layer whose output no
+//! other layer consumes — other than the model's terminal layer — is
+//! computed and then dropped, which `validate` accepts but is almost
+//! always a construction bug (a branch the builder forgot to join).
+
+use crate::model::layer::{Layer, LayerKind, Shape};
+use crate::model::ModelGraph;
+
+use super::{Diagnostic, Location};
+
+pub fn check_model(model: &ModelGraph) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let n = model.layers.len();
+    let mut consumed = vec![false; n];
+    for (i, l) in model.layers.iter().enumerate() {
+        // Topology first: a non-topological edge makes every
+        // shape lookup below unsound, so skip the rest of this layer.
+        if l.inputs.iter().any(|&src| src >= i) {
+            out.push(Diagnostic::error(
+                "H3D-001", Location::Layer(i),
+                format!("{}: non-topological input (inputs {:?})",
+                        l.name, l.inputs)));
+            continue;
+        }
+        for &src in &l.inputs {
+            consumed[src] = true;
+        }
+        check_arity(i, l, &mut out);
+        check_shapes(model, i, l, &mut out);
+    }
+    // Dead layers: every sink except the terminal layer. The terminal
+    // (highest-index) layer is the model output by construction.
+    for (i, l) in model.layers.iter().enumerate() {
+        if !consumed[i] && i + 1 != n {
+            out.push(Diagnostic::warn(
+                "H3D-003", Location::Layer(i),
+                format!("{}: output is never consumed and is not the \
+                         model output (dead layer)", l.name)));
+        }
+    }
+    out
+}
+
+fn check_arity(i: usize, l: &Layer, out: &mut Vec<Diagnostic>) {
+    let got = l.inputs.len();
+    let bad = match &l.kind {
+        LayerKind::Eltwise { .. } => got != 2,
+        LayerKind::Concat => got < 2,
+        // Single-operand kinds; an empty list means the model input.
+        _ => got > 1,
+    };
+    if bad {
+        out.push(Diagnostic::error(
+            "H3D-002", Location::Layer(i),
+            format!("{}: {} has {got} input(s)", l.name,
+                    l.kind.type_tag())));
+    }
+}
+
+fn check_shapes(model: &ModelGraph, i: usize, l: &Layer,
+                out: &mut Vec<Diagnostic>) {
+    let expected_in = match l.inputs.first() {
+        Some(&src) => model.layers[src].out_shape,
+        None => model.input_shape,
+    };
+    if expected_in != l.in_shape {
+        out.push(Diagnostic::error(
+            "H3D-001", Location::Layer(i),
+            format!("{}: in_shape {:?} != producer out {:?}", l.name,
+                    l.in_shape, expected_in)));
+        return; // downstream shape math would double-report
+    }
+    match &l.kind {
+        LayerKind::Eltwise { broadcast, .. } if l.inputs.len() == 2 => {
+            let b = model.layers[l.inputs[1]].out_shape;
+            if *broadcast {
+                if b.c != l.in_shape.c {
+                    out.push(Diagnostic::error(
+                        "H3D-001", Location::Layer(i),
+                        format!("{}: broadcast operand has {} channels, \
+                                 expected {}", l.name, b.c,
+                                l.in_shape.c)));
+                }
+            } else if b != l.in_shape {
+                out.push(Diagnostic::error(
+                    "H3D-001", Location::Layer(i),
+                    format!("{}: eltwise operand shapes differ \
+                             ({:?} vs {:?})", l.name, l.in_shape, b)));
+            }
+        }
+        LayerKind::Concat if l.inputs.len() >= 2 => {
+            let mut c_sum = 0;
+            for &src in &l.inputs {
+                let s = model.layers[src].out_shape;
+                if (s.d, s.h, s.w)
+                    != (l.in_shape.d, l.in_shape.h, l.in_shape.w)
+                {
+                    out.push(Diagnostic::error(
+                        "H3D-001", Location::Layer(i),
+                        format!("{}: concat operand {src} spatial \
+                                 mismatch", l.name)));
+                }
+                c_sum += s.c;
+            }
+            if l.out_shape != (Shape { c: c_sum, ..l.in_shape }) {
+                out.push(Diagnostic::error(
+                    "H3D-001", Location::Layer(i),
+                    format!("{}: concat out_shape {:?} != {} summed \
+                             channels", l.name, l.out_shape, c_sum)));
+            }
+        }
+        _ => {}
+    }
+    if !matches!(l.kind, LayerKind::Concat) {
+        let inferred = Layer::infer_out(&l.kind, l.in_shape);
+        if inferred != l.out_shape {
+            out.push(Diagnostic::error(
+                "H3D-001", Location::Layer(i),
+                format!("{}: out_shape {:?} != inferred {:?}", l.name,
+                        l.out_shape, inferred)));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::graph::{GraphBuilder, INPUT};
+    use crate::model::layer::{ActKind, PoolOp};
+    use crate::model::zoo;
+
+    #[test]
+    fn zoo_models_are_clean() {
+        for name in zoo::EVALUATED.iter().chain(["c3d_tiny"].iter()) {
+            let m = zoo::by_name(name).expect("zoo name");
+            assert!(check_model(&m).is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn dead_layer_warns() {
+        let mut b = GraphBuilder::new("dead", Shape::new(4, 8, 8, 3));
+        let c1 = b.conv("c1", INPUT, 8, [3; 3], [1; 3], [1; 3], 1);
+        // A branch nobody joins back: p1 is computed and dropped.
+        let _p1 = b.pool("p1", c1, PoolOp::Max, [1, 2, 2], [1, 2, 2],
+                         [0; 3]);
+        let r1 = b.act("r1", c1, ActKind::Relu);
+        b.gap("gap", r1);
+        let m = b.finish(0);
+        let diags = check_model(&m);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, "H3D-003");
+        assert_eq!(diags[0].severity, crate::check::Severity::Warn);
+        assert_eq!(diags[0].loc, Location::Layer(1));
+    }
+
+    #[test]
+    fn shape_break_and_arity_report_codes() {
+        let mut b = GraphBuilder::new("bad", Shape::new(4, 8, 8, 3));
+        let c1 = b.conv("c1", INPUT, 8, [3; 3], [1; 3], [1; 3], 1);
+        b.act("r1", c1, ActKind::Relu);
+        let mut m = b.finish(0);
+        m.layers[1].in_shape = Shape::new(1, 1, 1, 1);
+        let diags = check_model(&m);
+        assert!(diags.iter().any(|d| d.code == "H3D-001"), "{diags:?}");
+
+        // Arity: strip the eltwise's second operand.
+        let mut b = GraphBuilder::new("bad2", Shape::new(4, 8, 8, 8));
+        let c1 = b.conv("c1", INPUT, 8, [3; 3], [1; 3], [1; 3], 1);
+        let c2 = b.conv("c2", c1, 8, [3; 3], [1; 3], [1; 3], 1);
+        b.eltwise("add", c2, c1, crate::model::layer::EltOp::Add, false);
+        let mut m = b.finish(0);
+        m.layers[2].inputs.truncate(1);
+        let diags = check_model(&m);
+        assert!(diags.iter().any(|d| d.code == "H3D-002"), "{diags:?}");
+    }
+}

@@ -1,0 +1,279 @@
+//! Mapping passes (`H3D-010..017`): the §V-B constraint system over
+//! the SDF design `(G, E)` as diagnostics.
+//!
+//! `H3D-010..015` migrate the invariants of `Design::validate` /
+//! `validate_nodes` (which keep their `Result<(), String>` call-site
+//! behavior for the SA hot path) into per-violation diagnostics, and
+//! strengthen the fusion rule: a fused producer *chain* must bottom
+//! out in a `Node`-mapped compute layer, a case the string validator
+//! historically under-checked. `H3D-016` prices the design against
+//! the device budget; `H3D-017` flags orphaned computation nodes.
+
+use crate::device::Device;
+use crate::model::layer::LayerKind;
+use crate::model::ModelGraph;
+use crate::resource::ResourceModel;
+use crate::sdf::{layer_kernel, Design, MapTarget, NodeKind};
+
+use super::{Diagnostic, Location};
+
+pub fn check_design(model: &ModelGraph, design: &Design)
+    -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if design.mapping.len() != model.layers.len() {
+        out.push(Diagnostic::error(
+            "H3D-010", Location::Model,
+            format!("mapping covers {} layers, model has {}",
+                    design.mapping.len(), model.layers.len())));
+        // Nothing below is indexable; stop here.
+        return out;
+    }
+    for (l, m) in design.mapping.iter().enumerate() {
+        let layer = &model.layers[l];
+        match m {
+            MapTarget::Node(i) => {
+                let Some(node) = design.nodes.get(*i) else {
+                    out.push(Diagnostic::error(
+                        "H3D-010", Location::Layer(l),
+                        format!("{}: mapped to node {i}, design has \
+                                 {} nodes", layer.name,
+                                design.nodes.len())));
+                    continue;
+                };
+                if node.kind != NodeKind::of_layer(&layer.kind) {
+                    out.push(Diagnostic::error(
+                        "H3D-011", Location::Layer(l),
+                        format!("{}: {} layer mapped to {} node {i}",
+                                layer.name, layer.kind.type_tag(),
+                                node.kind.tag())));
+                }
+                if let Some(k) = layer_kernel(&layer.kind) {
+                    for d in 0..3 {
+                        if k[d] > node.max_kernel[d] {
+                            out.push(Diagnostic::error(
+                                "H3D-015", Location::Layer(l),
+                                format!("{}: kernel {:?} exceeds node \
+                                         {i} K_n {:?}", layer.name, k,
+                                        node.max_kernel)));
+                            break;
+                        }
+                    }
+                }
+            }
+            MapTarget::Fused => check_fused(model, design, l, &mut out),
+        }
+    }
+    for (i, node) in design.nodes.iter().enumerate() {
+        // Zero factors first: the divisibility rule below would
+        // divide by them.
+        for (name, v) in [("coarse_in", node.coarse_in),
+                          ("coarse_out", node.coarse_out),
+                          ("fine", node.fine)] {
+            if v == 0 {
+                out.push(Diagnostic::error(
+                    "H3D-013", Location::Node(i),
+                    format!("{name} is zero")));
+            }
+        }
+        if node.coarse_in > 0 && node.max_in.c % node.coarse_in != 0 {
+            out.push(Diagnostic::error(
+                "H3D-013", Location::Node(i),
+                format!("coarse_in {} does not divide C_n {}",
+                        node.coarse_in, node.max_in.c)));
+        }
+        if node.coarse_out > 0 && node.max_filters % node.coarse_out != 0 {
+            out.push(Diagnostic::error(
+                "H3D-013", Location::Node(i),
+                format!("coarse_out {} does not divide F_n {}",
+                        node.coarse_out, node.max_filters)));
+        }
+        let k: usize = node.max_kernel.iter().product();
+        if node.fine > 0 && k % node.fine != 0 {
+            out.push(Diagnostic::error(
+                "H3D-013", Location::Node(i),
+                format!("fine {} does not divide |K_n| {k}", node.fine)));
+        }
+        for (name, bits) in [("weight_bits", node.weight_bits),
+                             ("act_bits", node.act_bits)] {
+            if !crate::quant::is_wordlength(bits) {
+                out.push(Diagnostic::error(
+                    "H3D-014", Location::Node(i),
+                    format!("{name} {bits} not in the wordlength \
+                             lattice {:?}", crate::quant::WORDLENGTHS)));
+            }
+        }
+        if design.layers_of(i).is_empty() {
+            out.push(Diagnostic::warn(
+                "H3D-017", Location::Node(i),
+                format!("{} node has no mapped layers (compact() \
+                         removes it)", node.kind.tag())));
+        }
+    }
+    out
+}
+
+/// Fusion legality for layer `l` (mapped `Fused`). The immediate
+/// rules mirror `Design::validate` exactly: only activation/scale
+/// layers fuse, never the model input, and only into a compute-kind
+/// producer (conv/fc/eltwise/scale). On top of that this pass walks
+/// the producer *chain* — first inputs through any further fused
+/// layers — and requires it to bottom out in a `Node`-mapped layer,
+/// the case the string validator historically under-checked.
+/// Topological order guarantees the walk terminates.
+fn check_fused(model: &ModelGraph, design: &Design, l: usize,
+               out: &mut Vec<Diagnostic>) {
+    let layer = &model.layers[l];
+    if !matches!(layer.kind,
+                 LayerKind::Activation(_) | LayerKind::Scale) {
+        out.push(Diagnostic::error(
+            "H3D-012", Location::Layer(l),
+            format!("{}: {} layer cannot fuse (only activation/scale)",
+                    layer.name, layer.kind.type_tag())));
+        return;
+    }
+    let Some(&src) = layer.inputs.first() else {
+        out.push(Diagnostic::error(
+            "H3D-012", Location::Layer(l),
+            format!("{}: fused layer consumes the model input",
+                    layer.name)));
+        return;
+    };
+    if src >= l {
+        return; // non-topological edge: H3D-001 owns this
+    }
+    let pk = &model.layers[src].kind;
+    if !matches!(pk, LayerKind::Conv3d { .. } | LayerKind::Fc { .. }
+                 | LayerKind::Eltwise { .. } | LayerKind::Scale) {
+        out.push(Diagnostic::error(
+            "H3D-012", Location::Layer(l),
+            format!("{}: fused into non-compute producer {} ({})",
+                    layer.name, model.layers[src].name,
+                    pk.type_tag())));
+        return;
+    }
+    // Chain: keep following fused producers; a legal chain reaches a
+    // Node-mapped layer (each intermediate's own immediate rule is
+    // reported when the caller's loop visits it).
+    let mut cur = src;
+    loop {
+        match design.mapping.get(cur) {
+            Some(MapTarget::Node(_)) => return, // bottoms out: legal
+            None => return, // arity mismatch: H3D-010 owns this
+            Some(MapTarget::Fused) => {
+                let Some(&nxt) = model.layers[cur].inputs.first() else {
+                    out.push(Diagnostic::error(
+                        "H3D-012", Location::Layer(l),
+                        format!("{}: fusion chain never reaches a \
+                                 mapped compute layer", layer.name)));
+                    return;
+                };
+                if nxt >= cur {
+                    return; // H3D-001 owns this
+                }
+                cur = nxt;
+            }
+        }
+    }
+}
+
+/// `H3D-016`: total design resources against the device budget, per
+/// resource class.
+pub fn check_resources(design: &Design, device: &Device,
+                       rm: &ResourceModel) -> Vec<Diagnostic> {
+    let used = rm.design_resources(design);
+    let avail = &device.avail;
+    let mut out = Vec::new();
+    for (name, u, a) in [("DSP", used.dsp, avail.dsp),
+                         ("BRAM", used.bram, avail.bram),
+                         ("LUT", used.lut, avail.lut),
+                         ("FF", used.ff, avail.ff)] {
+        if u > a {
+            out.push(Diagnostic::error(
+                "H3D-016", Location::Device(device.name.to_string()),
+                format!("{name} {u:.1} exceeds the {a:.1} budget")));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device;
+    use crate::model::zoo;
+
+    #[test]
+    fn initial_designs_are_clean() {
+        for name in zoo::EVALUATED.iter().chain(["c3d_tiny"].iter()) {
+            let m = zoo::by_name(name).expect("zoo name");
+            let d = Design::initial(&m);
+            let diags = check_design(&m, &d);
+            assert!(diags.is_empty(), "{name}: {diags:?}");
+        }
+    }
+
+    #[test]
+    fn kind_mismatch_and_bad_index() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        // Layer 0 is a conv; point it at a non-conv node.
+        let pool = d.nodes.iter().position(|n| n.kind == NodeKind::Pool)
+            .expect("tiny model has a pool node");
+        d.mapping[0] = MapTarget::Node(pool);
+        assert!(check_design(&m, &d).iter()
+            .any(|x| x.code == "H3D-011"));
+        d.mapping[0] = MapTarget::Node(999);
+        assert!(check_design(&m, &d).iter()
+            .any(|x| x.code == "H3D-010"));
+    }
+
+    #[test]
+    fn nondividing_gamma_and_bad_wordlength() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        let conv = d.nodes.iter().position(|n| n.kind == NodeKind::Conv)
+            .expect("conv node");
+        // C_n + 1 never divides C_n (> 0).
+        d.nodes[conv].coarse_in = d.nodes[conv].max_in.c + 1;
+        d.nodes[conv].act_bits = 12;
+        let diags = check_design(&m, &d);
+        assert!(diags.iter().any(|x| x.code == "H3D-013"), "{diags:?}");
+        assert!(diags.iter().any(|x| x.code == "H3D-014"), "{diags:?}");
+        // The string validator agrees (migration, not divergence).
+        assert!(d.validate(&m).is_err());
+    }
+
+    #[test]
+    fn overbudget_design_reports_resources() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        let rm = ResourceModel::default_fit();
+        let dev = device::by_name("zc706").expect("device");
+        let conv = d.nodes.iter().position(|n| n.kind == NodeKind::Conv)
+            .expect("conv node");
+        // Max parallelism on the conv node: far beyond any device.
+        d.nodes[conv].coarse_in = d.nodes[conv].max_in.c;
+        d.nodes[conv].coarse_out = d.nodes[conv].max_filters;
+        d.nodes[conv].fine =
+            d.nodes[conv].max_kernel.iter().product();
+        let diags = check_resources(&d, &dev, &rm);
+        assert!(diags.iter().any(|x| x.code == "H3D-016"), "{diags:?}");
+    }
+
+    #[test]
+    fn fused_chain_must_bottom_out() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        // Find an activation fed by a conv and fuse it: legal.
+        let act = m.layers.iter().position(|l| matches!(
+            l.kind, LayerKind::Activation(_))).expect("act layer");
+        d.mapping[act] = MapTarget::Fused;
+        assert!(check_design(&m, &d).iter()
+            .all(|x| x.code != "H3D-012"));
+        // Fusing a conv is illegal.
+        let mut d2 = Design::initial(&m);
+        d2.mapping[0] = MapTarget::Fused;
+        assert!(check_design(&m, &d2).iter()
+            .any(|x| x.code == "H3D-012"));
+    }
+}

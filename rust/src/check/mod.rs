@@ -1,0 +1,363 @@
+//! Toolflow-wide static design verifier.
+//!
+//! Every IR in the pipeline — the model DAG `M`, the SDF design
+//! `(G, E)`, the expanded schedule `Φ_G`, the generated Verilog
+//! project, and the fleet serving config — carries invariants the
+//! paper states (§V-B, §V-C4) but the code historically spot-checked
+//! in scattered `validate()` functions and `debug_assert!`s that
+//! compile out of release builds. This module unifies them behind one
+//! [`Diagnostic`] type with stable codes (`H3D-0xx`), a severity, a
+//! location, and a one-line explanation, renderable as text or
+//! JSON-lines.
+//!
+//! Pass families (one submodule each):
+//!
+//! * [`graph`] — dead layers, shape-propagation consistency, fan-in
+//!   arity per `LayerKind` (`H3D-001..003`).
+//! * [`mapping`] — §V-C4 kind match, Γ-divisibility, fusion-chain
+//!   legality, wordlength lattice, kernel coverage, device resource
+//!   budget, orphaned nodes (`H3D-010..017`).
+//! * [`schedule`] — every layer's volume covered exactly once by its
+//!   tiles modulo declared folds (the PR-2 stride-bug class), no
+//!   zero-size invocations (`H3D-020..021`).
+//! * [`quantpass`] — SQNR floor feasibility and `DATA_W`/`WEIGHT_W`
+//!   agreement between node wordlengths and the emitted Verilog
+//!   headers (`H3D-030..031`).
+//! * [`fleetpass`] — cross-field serving-config sanity promoted from
+//!   the CLI so programmatic callers get it too (`H3D-040..042`).
+//!
+//! The `check` CLI subcommand runs every pass and exits 1 on any
+//! error-severity diagnostic; `optimize`/`schedule`/`generate`/`fleet`
+//! gate their outputs through [`gate_design`]/[`gate_project`]/
+//! [`gate_fleet_cfg`] in **all build profiles** (`--no-check` skips).
+//! The full catalogue lives in `docs/diagnostics.md`.
+
+pub mod fleetpass;
+pub mod graph;
+pub mod mapping;
+pub mod quantpass;
+pub mod schedule;
+
+use crate::codegen::Project;
+use crate::device::Device;
+use crate::fleet::FleetCfg;
+use crate::model::ModelGraph;
+use crate::resource::ResourceModel;
+use crate::sched::{self, SchedCfg};
+use crate::sdf::Design;
+use crate::util::json::Json;
+
+/// Diagnostic severity. `Error` gates pipelines and fails `check`
+/// (exit 1); `Warn` is advisory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warn,
+}
+
+impl Severity {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+        }
+    }
+}
+
+/// Where a diagnostic points: the IR element that violates the
+/// invariant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Location {
+    /// The model graph as a whole.
+    Model,
+    /// Model execution node (layer index).
+    Layer(usize),
+    /// SDF computation node index.
+    Node(usize),
+    /// One schedule invocation: (layer, position in `Φ_G`).
+    Invocation { layer: usize, index: usize },
+    /// A generated Verilog module (file name).
+    Module(String),
+    /// A fleet serving-config field.
+    FleetField(&'static str),
+    /// A device resource budget.
+    Device(String),
+}
+
+impl Location {
+    pub fn render(&self) -> String {
+        match self {
+            Location::Model => "model".to_string(),
+            Location::Layer(l) => format!("layer {l}"),
+            Location::Node(n) => format!("node {n}"),
+            Location::Invocation { layer, index } => {
+                format!("invocation {index} (layer {layer})")
+            }
+            Location::Module(m) => format!("module {m}"),
+            Location::FleetField(f) => format!("fleet.{f}"),
+            Location::Device(d) => format!("device {d}"),
+        }
+    }
+}
+
+/// One verifier finding: stable code, severity, location, one-line
+/// explanation.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable code (`H3D-0xx`), catalogued in `docs/diagnostics.md`
+    /// and [`REGISTRY`]. Codes never change meaning across PRs.
+    pub code: &'static str,
+    pub severity: Severity,
+    pub loc: Location,
+    pub msg: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, loc: Location, msg: String)
+        -> Diagnostic {
+        Diagnostic { code, severity: Severity::Error, loc, msg }
+    }
+
+    pub fn warn(code: &'static str, loc: Location, msg: String)
+        -> Diagnostic {
+        Diagnostic { code, severity: Severity::Warn, loc, msg }
+    }
+
+    /// `error[H3D-013] node 2: coarse_in 7 does not divide C_n 512`
+    pub fn render_text(&self) -> String {
+        format!("{}[{}] {}: {}", self.severity.tag(), self.code,
+                self.loc.render(), self.msg)
+    }
+
+    /// Deterministic single-object JSON (alphabetical keys via the
+    /// `Json` BTreeMap representation).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::Str(self.code.to_string())),
+            ("loc", Json::Str(self.loc.render())),
+            ("msg", Json::Str(self.msg.clone())),
+            ("severity", Json::Str(self.severity.tag().to_string())),
+        ])
+    }
+}
+
+/// Every registered diagnostic code with its default severity and a
+/// short title. `docs/diagnostics.md` catalogues the same set (a test
+/// pins the two in sync), and the negative-fixture suite triggers
+/// each one.
+pub const REGISTRY: &[(&str, Severity, &str)] = &[
+    ("H3D-001", Severity::Error,
+     "graph shape propagation / topology violated"),
+    ("H3D-002", Severity::Error, "layer fan-in arity violates its kind"),
+    ("H3D-003", Severity::Warn, "dead layer: output never consumed"),
+    ("H3D-010", Severity::Error,
+     "mapping structure broken (arity / node index)"),
+    ("H3D-011", Severity::Error,
+     "layer mapped to a node of a different kind (\u{a7}V-C4)"),
+    ("H3D-012", Severity::Error, "illegal activation fusion"),
+    ("H3D-013", Severity::Error,
+     "\u{393} coarse/fine factor does not divide the node shape"),
+    ("H3D-014", Severity::Error,
+     "node wordlength outside the {4,8,16,32} lattice"),
+    ("H3D-015", Severity::Error,
+     "layer kernel exceeds the node's compile-time maximum"),
+    ("H3D-016", Severity::Error,
+     "design resources exceed the device budget"),
+    ("H3D-017", Severity::Warn, "unused computation node"),
+    ("H3D-020", Severity::Error,
+     "schedule tile coverage mismatch (volume not covered exactly)"),
+    ("H3D-021", Severity::Error, "zero-size schedule invocation"),
+    ("H3D-030", Severity::Warn, "design SQNR below the configured floor"),
+    ("H3D-031", Severity::Error,
+     "generated Verilog width disagrees with node wordlength"),
+    ("H3D-040", Severity::Error, "batching config cross-field violation"),
+    ("H3D-041", Severity::Error,
+     "resilience config cross-field violation"),
+    ("H3D-042", Severity::Error, "traffic/SLO config violation"),
+];
+
+/// A pass run's collected diagnostics.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    pub fn extend(&mut self, diags: Vec<Diagnostic>) {
+        self.diags.extend(diags);
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.diags.len() - self.error_count()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// One line per diagnostic (empty string when clean).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            out.push_str(&d.render_text());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON-lines: one deterministic object per diagnostic.
+    pub fn render_jsonl(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            out.push_str(&d.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Gate form: `Err` listing every error diagnostic when any has
+    /// error severity (warnings never gate).
+    pub fn gate(&self, what: &str) -> Result<(), String> {
+        let errors: Vec<&Diagnostic> = self
+            .diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .collect();
+        if errors.is_empty() {
+            return Ok(());
+        }
+        let mut msg = format!(
+            "{what} failed the static verifier with {} error \
+             diagnostic(s) (see docs/diagnostics.md; --no-check \
+             skips):",
+            errors.len());
+        for d in errors {
+            msg.push_str("\n  ");
+            msg.push_str(&d.render_text());
+        }
+        Err(msg)
+    }
+}
+
+/// Run every design-level pass: graph, mapping, resources, schedule
+/// (built with the default `SchedCfg`), and quant (SQNR floor +
+/// Verilog width agreement over an in-memory `codegen` project).
+///
+/// `with_resources` controls the `H3D-016` budget pass: it is on for
+/// optimizer outputs and `--design` inputs (concrete resource claims)
+/// and off for the structural `Design::initial` skeleton the bare
+/// `check <model>` form verifies, which makes no claim of fitting any
+/// device before DSE folds it down.
+pub fn check_toolflow(model: &ModelGraph, design: &Design, device: &Device,
+                      rm: &ResourceModel, with_resources: bool) -> Report {
+    let mut rep = Report::new();
+    rep.extend(graph::check_model(model));
+    rep.extend(mapping::check_design(model, design));
+    if with_resources {
+        rep.extend(mapping::check_resources(design, device, rm));
+    }
+    // Structural mapping errors make the scheduler/codegen passes
+    // meaningless (and potentially panicky): report what we have.
+    if rep.error_count() > 0 {
+        return rep;
+    }
+    let cfg = SchedCfg::default();
+    let phi = sched::build_schedule(model, design, &cfg);
+    rep.extend(schedule::check_schedule(model, design, &phi, &cfg));
+    rep.extend(quantpass::check_sqnr(
+        model, design, crate::quant::QuantCfg::default().min_sqnr_db));
+    let project = crate::codegen::generate(model, design);
+    rep.extend(quantpass::check_project(design, &project));
+    rep
+}
+
+/// Pipeline gate for optimizer outputs (`optimize`/`schedule`/
+/// `simulate`/`generate`): graph + mapping + resource-budget +
+/// schedule-coverage passes, in all build profiles. Silent on
+/// success; `Err` lists the error diagnostics.
+pub fn gate_design(model: &ModelGraph, design: &Design, device: &Device,
+                   rm: &ResourceModel) -> Result<(), String> {
+    let mut rep = Report::new();
+    rep.extend(graph::check_model(model));
+    rep.extend(mapping::check_design(model, design));
+    rep.extend(mapping::check_resources(design, device, rm));
+    if rep.error_count() == 0 {
+        let cfg = SchedCfg::default();
+        let phi = sched::build_schedule(model, design, &cfg);
+        rep.extend(schedule::check_schedule(model, design, &phi, &cfg));
+    }
+    rep.gate("optimized design")
+}
+
+/// Pipeline gate for `generate` outputs: node wordlengths must agree
+/// with the emitted Verilog headers.
+pub fn gate_project(design: &Design, project: &Project)
+    -> Result<(), String> {
+    let mut rep = Report::new();
+    rep.extend(quantpass::check_project(design, project));
+    rep.gate("generated project")
+}
+
+/// Pipeline gate for fleet serving configs (`fleet` CLI and
+/// programmatic callers).
+pub fn gate_fleet_cfg(cfg: &FleetCfg) -> Result<(), String> {
+    let mut rep = Report::new();
+    rep.extend(fleetpass::check_fleet_cfg(cfg));
+    rep.gate("fleet config")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_codes_unique_and_sorted() {
+        let codes: Vec<&str> = REGISTRY.iter().map(|r| r.0).collect();
+        let mut sorted = codes.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(codes.len(), sorted.len(), "duplicate codes");
+        assert_eq!(codes, sorted, "registry must stay sorted by code");
+        assert!(codes.iter().all(|c| c.starts_with("H3D-0")
+            && c.len() == 7));
+    }
+
+    #[test]
+    fn diagnostic_renders_text_and_json() {
+        let d = Diagnostic::error(
+            "H3D-013", Location::Node(2),
+            "coarse_in 7 does not divide C_n 512".into());
+        assert_eq!(d.render_text(),
+                   "error[H3D-013] node 2: coarse_in 7 does not \
+                    divide C_n 512");
+        assert_eq!(
+            d.to_json().to_string(),
+            "{\"code\":\"H3D-013\",\"loc\":\"node 2\",\"msg\":\
+             \"coarse_in 7 does not divide C_n 512\",\"severity\":\
+             \"error\"}");
+    }
+
+    #[test]
+    fn gate_passes_warnings_fails_errors() {
+        let mut rep = Report::new();
+        rep.diags.push(Diagnostic::warn(
+            "H3D-003", Location::Layer(1), "dead".into()));
+        assert!(rep.gate("x").is_ok());
+        rep.diags.push(Diagnostic::error(
+            "H3D-010", Location::Model, "broken".into()));
+        let e = rep.gate("x").unwrap_err();
+        assert!(e.contains("H3D-010") && !e.contains("H3D-003"), "{e}");
+        assert!(e.contains("--no-check"), "{e}");
+    }
+}

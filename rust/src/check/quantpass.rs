@@ -1,0 +1,147 @@
+//! Quantization passes (`H3D-030..031`).
+//!
+//! `H3D-030` evaluates the analytic SQNR proxy of the design's
+//! per-layer execution widths against a floor (the `QuantCfg` default
+//! of 30 dB unless the caller brings its own budget) — warn-severity:
+//! the floor is an accuracy *budget*, not a structural invariant.
+//!
+//! `H3D-031` closes the codegen loop: it parses the `parameter int
+//! DATA_W` / `WEIGHT_W` headers out of each emitted per-node Verilog
+//! module and compares them against the node's wordlengths. Only the
+//! per-node `{tag}_{i}.sv` modules are checked — `dma_engine.sv`
+//! carries a fixed 128-bit AXI bus width and `axis_crossbar.sv` a
+//!16-bit default, neither of which tracks node quantization.
+
+use crate::codegen::Project;
+use crate::model::ModelGraph;
+use crate::sdf::{Design, NodeKind};
+
+use super::{Diagnostic, Location};
+
+/// `H3D-030`: proxy SQNR of the design's execution widths against
+/// `min_sqnr_db`.
+pub fn check_sqnr(model: &ModelGraph, design: &Design, min_sqnr_db: f64)
+    -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let sqnr =
+        crate::quant::design_sqnr_db(model, design, &mut Vec::new());
+    if sqnr < min_sqnr_db {
+        out.push(Diagnostic::warn(
+            "H3D-030", Location::Model,
+            format!("proxy SQNR {sqnr:.1} dB below the \
+                     {min_sqnr_db:.1} dB floor")));
+    }
+    out
+}
+
+/// `H3D-031`: `DATA_W` (all node kinds) and `WEIGHT_W` (conv/fc) of
+/// every emitted per-node module must equal the node's
+/// `act_bits`/`weight_bits`.
+pub fn check_project(design: &Design, project: &Project)
+    -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for (i, node) in design.nodes.iter().enumerate() {
+        if design.layers_of(i).is_empty() {
+            continue; // codegen skips orphaned nodes
+        }
+        let file = format!("{}_{i}.sv", node.kind.tag());
+        let Some(src) = project.get(&file) else {
+            out.push(Diagnostic::error(
+                "H3D-031", Location::Module(file),
+                format!("missing module for {} node {i}",
+                        node.kind.tag())));
+            continue;
+        };
+        check_param(&file, src, "DATA_W", node.act_bits, &mut out);
+        if matches!(node.kind, NodeKind::Conv | NodeKind::Fc) {
+            check_param(&file, src, "WEIGHT_W", node.weight_bits,
+                        &mut out);
+        }
+    }
+    out
+}
+
+fn check_param(file: &str, src: &str, name: &str, want_bits: u8,
+               out: &mut Vec<Diagnostic>) {
+    match parse_param(src, name) {
+        None => out.push(Diagnostic::error(
+            "H3D-031", Location::Module(file.to_string()),
+            format!("no `parameter int {name}` in the emitted header"))),
+        Some(got) if got != want_bits as usize => {
+            out.push(Diagnostic::error(
+                "H3D-031", Location::Module(file.to_string()),
+                format!("{name} = {got} disagrees with the node's \
+                         {want_bits}-bit wordlength")));
+        }
+        Some(_) => {}
+    }
+}
+
+/// First `parameter int <name> = <value>[,]` in a module header.
+fn parse_param(src: &str, name: &str) -> Option<usize> {
+    for line in src.lines() {
+        let t = line.trim();
+        let Some(rest) = t.strip_prefix("parameter int ") else {
+            continue;
+        };
+        let Some((key, val)) = rest.split_once('=') else {
+            continue;
+        };
+        if key.trim() != name {
+            continue;
+        }
+        return val.trim().trim_end_matches(',').trim().parse().ok();
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen;
+    use crate::model::zoo;
+
+    #[test]
+    fn generated_project_agrees_with_widths() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        // Mixed widths exercise both parameters.
+        for n in &mut d.nodes {
+            if n.kind == NodeKind::Conv {
+                n.weight_bits = 8;
+                n.act_bits = 8;
+            }
+        }
+        let p = codegen::generate(&m, &d);
+        assert!(check_project(&d, &p).is_empty());
+    }
+
+    #[test]
+    fn width_mismatch_detected() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        let p = codegen::generate(&m, &d);
+        // Tamper with the design after generating: 16-bit headers no
+        // longer match the 8-bit node.
+        let conv = d.nodes.iter().position(|n| n.kind == NodeKind::Conv)
+            .expect("conv node");
+        d.nodes[conv].act_bits = 8;
+        let diags = check_project(&d, &p);
+        assert!(diags.iter().any(|x| x.code == "H3D-031"), "{diags:?}");
+    }
+
+    #[test]
+    fn low_width_design_trips_sqnr_floor() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        for n in &mut d.nodes {
+            n.weight_bits = 4;
+            n.act_bits = 4;
+        }
+        let diags = check_sqnr(&m, &d, 30.0);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, "H3D-030");
+        assert_eq!(diags[0].severity, crate::check::Severity::Warn);
+        assert!(check_sqnr(&m, &d, -1e9).is_empty());
+    }
+}

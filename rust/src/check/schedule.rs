@@ -1,0 +1,210 @@
+//! Schedule passes (`H3D-020..021`): the expanded schedule `Φ_G`
+//! against the model it claims to execute.
+//!
+//! `H3D-020` re-derives, per layer, the input/output volume the tile
+//! set must cover — using `ceil_div` fold counts computed
+//! independently of the scheduler's tiling structures — and compares
+//! it against the sum over the layer's invocations. This is the PR-2
+//! stride-bug class (edge/remainder tiles of strided layers
+//! over-counted) checked statically on every pipeline run. Folds are
+//! part of the contract: convlike layers re-read their input once per
+//! filter tile and re-emit their output once per channel tile
+//! (partial sums), and a spatially tiled GAP emits one partial
+//! reduction per spatial tile; everything else is covered exactly
+//! once. `H3D-021` rejects degenerate invocations (empty input tile,
+//! zero Γ factors) that would make the cycle models divide by zero or
+//! stream nothing.
+
+use crate::model::layer::{LayerKind, Shape};
+use crate::model::ModelGraph;
+use crate::sdf::{Design, Invocation, MapTarget, NodeKind};
+use crate::util::math::ceil_div;
+
+use super::{Diagnostic, Location};
+
+/// Check an expanded schedule (`sched::build_schedule` order — one
+/// entry per executed invocation). Coverage is only defined for the
+/// runtime-parameterized scheduler; the padded baseline
+/// (`runtime_params: false`) over-covers by design, so only the
+/// degeneracy pass runs for it.
+pub fn check_schedule(model: &ModelGraph, design: &Design,
+                      phi: &[Invocation], cfg: &crate::sched::SchedCfg)
+    -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let n = model.layers.len();
+    let mut in_cov = vec![0u64; n];
+    let mut out_cov = vec![0u64; n];
+    for (idx, inv) in phi.iter().enumerate() {
+        if inv.tile_in.elems() == 0 || inv.coarse_in == 0
+            || inv.coarse_out == 0 || inv.fine == 0
+        {
+            out.push(Diagnostic::error(
+                "H3D-021",
+                Location::Invocation { layer: inv.layer, index: idx },
+                format!("degenerate invocation: tile {:?} coarse \
+                         {}x{} fine {}",
+                        (inv.tile_in.d, inv.tile_in.h, inv.tile_in.w,
+                         inv.tile_in.c),
+                        inv.coarse_in, inv.coarse_out, inv.fine)));
+        }
+        if inv.layer >= n {
+            out.push(Diagnostic::error(
+                "H3D-020",
+                Location::Invocation { layer: inv.layer, index: idx },
+                format!("invocation targets layer {} of a {n}-layer \
+                         model", inv.layer)));
+            continue;
+        }
+        in_cov[inv.layer] =
+            in_cov[inv.layer].saturating_add(inv.tile_in.elems() as u64);
+        out_cov[inv.layer] =
+            out_cov[inv.layer].saturating_add(inv.tile_out.elems() as u64);
+    }
+    if !cfg.runtime_params {
+        return out;
+    }
+    for (l, layer) in model.layers.iter().enumerate() {
+        let MapTarget::Node(i) = design.mapping.get(l).copied()
+            .unwrap_or(MapTarget::Fused) else {
+            // Fused layers execute inside their producer: any
+            // invocation claiming one is a schedule bug.
+            if in_cov[l] != 0 || out_cov[l] != 0 {
+                out.push(Diagnostic::error(
+                    "H3D-020", Location::Layer(l),
+                    format!("{}: fused layer has invocations",
+                            layer.name)));
+            }
+            continue;
+        };
+        let Some(node) = design.nodes.get(i) else {
+            continue; // H3D-010 owns this
+        };
+        // Mirror the scheduler's effective geometry: FC flattens the
+        // feature map onto the channel dim; non-convlike nodes carry
+        // no filter dimension.
+        let (in_shape, filters) = match &layer.kind {
+            LayerKind::Fc { filters } => {
+                (Shape::flat(layer.in_shape.elems()), *filters)
+            }
+            LayerKind::Conv3d { filters, .. } => {
+                (layer.in_shape, *filters)
+            }
+            _ => (layer.in_shape, layer.in_shape.c),
+        };
+        let convlike = matches!(node.kind, NodeKind::Conv | NodeKind::Fc);
+        let n_c = ceil_div(in_shape.c, node.max_in.c.max(1)) as u64;
+        let n_f = if convlike {
+            ceil_div(filters, node.max_filters.max(1)) as u64
+        } else {
+            1
+        };
+        let want_in = in_shape.elems() as u64 * n_f;
+        let want_out = match node.kind {
+            // Channel folding re-emits the output tile per partial
+            // sum pass.
+            NodeKind::Conv | NodeKind::Fc => {
+                layer.out_shape.elems() as u64 * n_c
+            }
+            NodeKind::Pool => layer.out_shape.elems() as u64,
+            // Spatial tiling of GAP emits one partial reduction
+            // (C channels) per spatial tile.
+            NodeKind::Gap => {
+                let tsp = ceil_div(in_shape.d, node.max_in.d.max(1))
+                    * ceil_div(in_shape.h, node.max_in.h.max(1))
+                    * ceil_div(in_shape.w, node.max_in.w.max(1));
+                in_shape.c as u64 * tsp as u64
+            }
+            // Streaming kinds map tiles 1:1 (concat layers are
+            // scheduled over their first operand's volume).
+            NodeKind::Act | NodeKind::Eltwise => in_shape.elems() as u64,
+        };
+        if in_cov[l] != want_in {
+            out.push(Diagnostic::error(
+                "H3D-020", Location::Layer(l),
+                format!("{}: input volume covered {} != expected {} \
+                         ({} filter fold(s))", layer.name, in_cov[l],
+                        want_in, n_f)));
+        }
+        if out_cov[l] != want_out {
+            out.push(Diagnostic::error(
+                "H3D-020", Location::Layer(l),
+                format!("{}: output volume covered {} != expected {} \
+                         ({} channel fold(s))", layer.name, out_cov[l],
+                        want_out, n_c)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::sched::{self, SchedCfg};
+
+    fn shrink(d: &mut Design) {
+        // Force real tiling: halve every node's spatial/channel
+        // capacity (keeping Γ divisibility legal at coarse 1).
+        for n in &mut d.nodes {
+            n.max_in.d = (n.max_in.d / 2).max(1);
+            n.max_in.h = (n.max_in.h / 2).max(1);
+            n.max_in.w = (n.max_in.w / 2).max(1);
+            n.max_in.c = (n.max_in.c / 2).max(1);
+            n.coarse_in = 1;
+            n.coarse_out = 1;
+            n.fine = 1;
+        }
+    }
+
+    #[test]
+    fn initial_and_shrunk_schedules_cover_exactly() {
+        let cfg = SchedCfg::default();
+        for name in ["c3d_tiny", "x3d_m", "slowonly"] {
+            let m = zoo::by_name(name).expect("zoo name");
+            for shrunk in [false, true] {
+                let mut d = Design::initial(&m);
+                if shrunk {
+                    shrink(&mut d);
+                }
+                let phi = sched::build_schedule(&m, &d, &cfg);
+                let diags = check_schedule(&m, &d, &phi, &cfg);
+                assert!(diags.is_empty(),
+                        "{name} shrunk={shrunk}: {diags:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dropped_invocation_breaks_coverage() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        shrink(&mut d);
+        let cfg = SchedCfg::default();
+        let mut phi = sched::build_schedule(&m, &d, &cfg);
+        assert!(phi.len() > 1);
+        phi.pop();
+        let diags = check_schedule(&m, &d, &phi, &cfg);
+        assert!(diags.iter().any(|x| x.code == "H3D-020"), "{diags:?}");
+    }
+
+    #[test]
+    fn zero_size_invocation_detected() {
+        let m = zoo::c3d_tiny();
+        let d = Design::initial(&m);
+        let cfg = SchedCfg::default();
+        let mut phi = sched::build_schedule(&m, &d, &cfg);
+        phi[0].tile_in.d = 0;
+        let diags = check_schedule(&m, &d, &phi, &cfg);
+        assert!(diags.iter().any(|x| x.code == "H3D-021"), "{diags:?}");
+    }
+
+    #[test]
+    fn padded_schedule_skips_coverage() {
+        let m = zoo::c3d_tiny();
+        let d = Design::initial(&m);
+        let cfg = SchedCfg { runtime_params: false };
+        let phi = sched::build_schedule(&m, &d, &cfg);
+        let diags = check_schedule(&m, &d, &phi, &cfg);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+}

@@ -63,7 +63,9 @@ pub fn from_trace(text: &str, models: &[String])
             continue;
         }
         let mut parts = line.split_whitespace();
-        let t_str = parts.next().expect("non-empty trimmed line");
+        let Some(t_str) = parts.next() else {
+            continue; // unreachable: the line was checked non-empty
+        };
         let t_ms: f64 = t_str.parse().map_err(|_| {
             format!("trace line {}: bad timestamp {t_str:?}",
                     lineno + 1)

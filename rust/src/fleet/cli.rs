@@ -395,8 +395,12 @@ pub fn run(args: &Args) -> Result<String, String> {
     out.push_str(&format!("profiles ({} models x {} devices):\n",
                           matrix.models.len(), matrix.devices.len()));
     for p in &points {
-        let m = matrix.model_index(&p.model).expect("built from points");
-        let d = matrix.device_index(&p.device).expect("built from points");
+        let m = matrix.model_index(&p.model).ok_or(format!(
+            "fleet: profiles row references unknown model {:?}",
+            p.model))?;
+        let d = matrix.device_index(&p.device).ok_or(format!(
+            "fleet: profiles row references unknown device {:?}",
+            p.device))?;
         matrix.set(m, d, ServiceProfile {
             service_ms: p.sim_ms,
             reconfig_ms: p.reconfig_ms,
@@ -448,6 +452,12 @@ pub fn run(args: &Args) -> Result<String, String> {
             faults: fault_plan,
             resilience: fa.resilience(),
         };
+        // Unreachable for CLI-built configs (the flag validation above
+        // is strictly stronger), but keeps every construction route —
+        // including future refactors of this one — behind the same
+        // cross-field invariants as programmatic callers.
+        crate::check::gate_fleet_cfg(&fc)
+            .map_err(|e| format!("fleet: {e}"))?;
         let met = super::simulate_fleet(&matrix, &fc, &arr);
         out.push_str(&metrics_block(&matrix, &met, &fa));
         out.push_str(&verdict_line(&met, fa.slo_ms));

@@ -750,6 +750,11 @@ impl Sim<'_> {
 
     /// Dispatch `req` onto a board and queue it there, starting the
     /// board if idle. False when no live board can serve the model.
+    //
+    // The `expect` documents a dispatch invariant (the chosen board
+    // is capable by construction); recovering would mean simulating
+    // on corrupt state and reporting wrong metrics as real.
+    #[allow(clippy::disallowed_methods)]
     fn try_enqueue(&mut self, req: Request, now: f64) -> bool {
         let Some(b) = dispatch(self.profiles, &self.boards,
                                self.cfg.policy, &mut self.rr_next,
@@ -951,6 +956,11 @@ impl Sim<'_> {
     /// it in service at time `now`, scheduling its completion event.
     /// Expired clips are timed out first; if that empties the queue
     /// the board simply stays idle.
+    //
+    // The `expect`s document queue invariants that hold by
+    // construction (the pick index is in range, a queued request is
+    // servable on its board); see `try_enqueue`.
+    #[allow(clippy::disallowed_methods)]
     fn start_next(&mut self, b: usize, now: f64) {
         self.sweep_timeouts(b, now);
         if self.boards[b].queue.is_empty() {
@@ -1133,6 +1143,10 @@ fn dispatch(profiles: &ProfileMatrix, boards: &[BoardState],
 }
 
 /// Index into `board.queue` of the request the discipline serves next.
+//
+// The `expect` documents the servability invariant of queued
+// requests; see `Sim::try_enqueue`.
+#[allow(clippy::disallowed_methods)]
 fn pick_index(profiles: &ProfileMatrix, board: &BoardState,
               queue: QueueDiscipline, batch: &BatchCfg) -> usize {
     match queue {

@@ -602,7 +602,12 @@ fn plan_mixed(profiles: &ProfileMatrix, cfg: &PlanCfg,
                 best_add = Some((c.d, cand, cand.ok, gain));
             }
         }
-        let (d, cand, _, _) = best_add.expect("feasible non-empty");
+        // `feasible` was checked non-empty above, so the scan always
+        // selects a candidate; error (not panic) if that ever breaks.
+        let Some((d, cand, _, _)) = best_add else {
+            return Err("planner: no addable board candidate \
+                        (feasible set empty mid-growth)".into());
+        };
         counts[d] += 1;
         cur = cand;
     }

@@ -28,6 +28,7 @@
 )]
 
 pub mod baselines;
+pub mod check;
 pub mod codegen;
 pub mod coordinator;
 pub mod device;

@@ -3,8 +3,11 @@
 //! ```text
 //! harflow3d optimize <model> <device> [--seeds N] [--seed S] [--fast]
 //!                    [--chains K [--exchange-every T]]
+//!                    [--design-out out.json]
 //! harflow3d schedule <model> <device> [--fast]        dump Φ_G summary
 //! harflow3d simulate <model> <device> [--fast]        cycle-approx run
+//! harflow3d check <model> [device] [--design d.json] [--format json]
+//!                                 static verifier (docs/diagnostics.md)
 //! harflow3d sweep [--models a,b] [--devices x,y] [--bits 16,8]
 //!                 [--chains K] [--jobs J] [--seed S] [--fast]
 //!                 [--out points.json]           model x device x bits DSE
@@ -31,6 +34,11 @@
 //! multi-chain engine: K annealing chains on K threads with periodic
 //! best-design exchange, reproducible for a fixed `--seed` (K = 1 is
 //! bit-identical to the sequential engine).
+//!
+//! `optimize`/`schedule`/`simulate`/`generate` gate their results
+//! through the static verifier (`H3D-0xx` diagnostics, catalogued in
+//! docs/diagnostics.md) in every build profile; `--no-check` skips
+//! the gate when debugging the toolflow itself.
 
 // Same stylistic-lint policy as the library crate (see rust/src/lib.rs);
 // CI denies clippy warnings.
@@ -102,6 +110,14 @@ fn main() -> Result<()> {
                 .ok_or(anyhow!("unknown device {dev_name}"))?;
             let rm = ResourceModel::default_fit();
             let r = run_dse(&args, &m, &dev, &rm)?;
+            if !args.flag("no-check") {
+                harflow3d::check::gate_design(&m, &r.design, &dev, &rm)
+                    .map_err(|e| anyhow!(e))?;
+            }
+            if let Some(path) = args.opt("design-out") {
+                std::fs::write(path, r.design.to_json().to_string())?;
+                println!("wrote design to {path}");
+            }
             let gops = m.total_macs() as f64 / 1e9 / (r.latency_ms / 1e3);
             println!(
                 "{} @ {}: latency {:.2} ms/clip | {:.1} GOps/s | \
@@ -161,6 +177,66 @@ fn main() -> Result<()> {
                     }
                 }
                 _ => {}
+            }
+        }
+        "check" => {
+            // Static verifier: every pass, text or JSON-lines, exit 1
+            // on any error-severity diagnostic. Without --design it
+            // verifies the structural `Design::initial` skeleton
+            // (no resource-budget claim); with --design it also prices
+            // the design against the device budget.
+            let model_name = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .or(args.opt("model"))
+                .ok_or(anyhow!("usage: check <model> [device] \
+                                [--design d.json] [--format json]"))?;
+            let dev_name = args
+                .positional
+                .get(1)
+                .map(|s| s.as_str())
+                .or(args.opt("device"))
+                .unwrap_or("zcu102");
+            let m = load_model(model_name)?;
+            let dev = device::by_name(dev_name)
+                .ok_or(anyhow!("unknown device {dev_name}"))?;
+            let rm = ResourceModel::default_fit();
+            let (design, with_resources) = match args.opt("design") {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path)?;
+                    let j = harflow3d::util::json::Json::parse(&text)
+                        .map_err(|e| anyhow!("design: {e}"))?;
+                    (sdf::Design::from_json(&j)
+                         .map_err(|e| anyhow!(e))?,
+                     true)
+                }
+                None => (sdf::Design::initial(&m), false),
+            };
+            let rep = harflow3d::check::check_toolflow(
+                &m, &design, &dev, &rm, with_resources);
+            match args.opt_or("format", "text") {
+                "json" => print!("{}", rep.render_jsonl()),
+                "text" => {
+                    print!("{}", rep.render_text());
+                    if rep.is_clean() {
+                        println!("check: {} on {}: clean",
+                                 m.name, dev.name);
+                    } else {
+                        println!("check: {} on {}: {} error(s), {} \
+                                  warning(s)", m.name, dev.name,
+                                 rep.error_count(), rep.warn_count());
+                    }
+                }
+                other => {
+                    return Err(anyhow!(
+                        "check: unknown --format {other:?} (text|json)"))
+                }
+            }
+            if rep.error_count() > 0 {
+                return Err(anyhow!(
+                    "check: {} error diagnostic(s) (see \
+                     docs/diagnostics.md)", rep.error_count()));
             }
         }
         "sweep" => {
@@ -274,7 +350,15 @@ fn main() -> Result<()> {
                 .ok_or(anyhow!("unknown device {dev_name}"))?;
             let rm = ResourceModel::default_fit();
             let r = run_dse(&args, &m, &dev, &rm)?;
+            if !args.flag("no-check") {
+                harflow3d::check::gate_design(&m, &r.design, &dev, &rm)
+                    .map_err(|e| anyhow!(e))?;
+            }
             let project = harflow3d::codegen::generate(&m, &r.design);
+            if !args.flag("no-check") {
+                harflow3d::check::gate_project(&r.design, &project)
+                    .map_err(|e| anyhow!(e))?;
+            }
             let out = std::path::PathBuf::from(
                 args.opt_or("out", "generated"));
             project.write_to(&out)?;
@@ -308,7 +392,7 @@ fn main() -> Result<()> {
         }
         "models" => {
             for name in zoo::EVALUATED.iter().chain(["c3d_tiny"].iter()) {
-                let m = zoo::by_name(name).unwrap();
+                let Some(m) = zoo::by_name(name) else { continue };
                 println!(
                     "{:14} {:>7.2} GMACs {:>7.2} MParams {:>4} layers \
                      {:>4} convs",
@@ -323,9 +407,9 @@ fn main() -> Result<()> {
             let m = zoo::c3d_tiny();
             let d = sdf::Design::initial(&m);
             d.validate(&m).map_err(|e| anyhow!(e))?;
-            println!("harflow3d: use optimize/schedule/simulate/sweep/\
-                      quant/fleet/report/serve/export/devices/models \
-                      (see README)");
+            println!("harflow3d: use optimize/schedule/simulate/check/\
+                      sweep/quant/fleet/report/serve/export/devices/\
+                      models (see README)");
         }
         other => return Err(anyhow!("unknown command {other}")),
     }

@@ -455,7 +455,14 @@ impl<'a> Optimizer<'a> {
         while !chain.done() {
             chain.step_temp();
         }
-        Ok(chain.finish())
+        let r = chain.finish();
+        // Full §V-B validation of the result in every build profile —
+        // this replaced the per-move `debug_assert_eq!` that compiled
+        // out of release builds.
+        r.design.validate(self.model).map_err(|e| {
+            format!("optimizer produced an invalid design: {e}")
+        })?;
+        Ok(r)
     }
 }
 
@@ -582,8 +589,10 @@ impl<'a> Chain<'a> {
                 continue;
             };
             // Constraint check (§V-B): structure + resources. Only
-            // the touched nodes can have changed (the full
-            // `validate` runs in debug builds and on the result).
+            // the touched nodes can have changed; the full `validate`
+            // runs on the finished result in every build profile
+            // (`Optimizer::run`), and the `check` passes re-verify
+            // pipeline outputs.
             if self.design.validate_nodes(self.model, &touched).is_err() {
                 self.log.undo(&mut self.design);
                 continue;
@@ -612,7 +621,6 @@ impl<'a> Chain<'a> {
                     }
                 }
             }
-            debug_assert_eq!(self.design.validate(self.model), Ok(()));
             let cand_res = self.ev.price_move(&self.design, self.rm,
                                               &self.log, &touched);
             if !cand_res.fits(&self.device.avail) {

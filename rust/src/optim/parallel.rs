@@ -66,12 +66,14 @@ fn exchange(chains: &mut [Chain]) {
 /// union of the pareto clouds, and aggregate iteration counts (the
 /// multi-chain `states_per_sec` numerator).
 fn merge(results: Vec<OptResult>) -> OptResult {
+    // `results` is never empty (k >= 2 on this path); the fallback
+    // index keeps this total without a panic path.
     let best_idx = results
         .iter()
         .enumerate()
         .min_by(|a, b| a.1.latency_cycles.total_cmp(&b.1.latency_cycles))
         .map(|(i, _)| i)
-        .expect("at least one chain");
+        .unwrap_or(0);
 
     let mut events: Vec<(usize, f64)> = Vec::new();
     let mut accepted = Vec::new();
@@ -150,7 +152,13 @@ pub fn optimize_parallel(model: &ModelGraph, device: &Device,
         }
     }
 
-    Ok(merge(chains.into_iter().map(Chain::finish).collect()))
+    let r = merge(chains.into_iter().map(Chain::finish).collect());
+    // Same result-level §V-B validation the sequential engine runs —
+    // the merged best came from a chain, but verify after compaction.
+    r.design.validate(model).map_err(|e| {
+        format!("optimizer produced an invalid design: {e}")
+    })?;
+    Ok(r)
 }
 
 #[cfg(test)]

@@ -154,7 +154,8 @@ fn pct_delta(new: f64, old: f64) -> String {
 pub fn run(args: &Args) -> Result<String, String> {
     let qa = QuantArgs::from_args(args)?;
     let m = model::load(&qa.model)?;
-    let dev = device::by_name(&qa.device).expect("validated above");
+    let dev = device::by_name(&qa.device)
+        .ok_or(format!("quant: unknown device {:?}", qa.device))?;
     // Resolve early: a typo'd override layer name must fail before
     // the (expensive) baseline DSE runs.
     qa.cfg.resolve(&m)?;

@@ -71,9 +71,10 @@ impl Runtime {
                 .and_then(Json::as_str)
                 .ok_or_else(|| anyhow!("{tag}: missing file"))?;
             let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().unwrap(),
-            )?;
+            let path_str = path.to_str().ok_or_else(|| {
+                anyhow!("{tag}: non-UTF-8 artifact path {path:?}")
+            })?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client.compile(&comp)?;
             let input_shapes = meta

@@ -99,13 +99,11 @@ impl SpatialTiles {
         }
         // ≤ 6 distinct (size, out) pairs can occur (two floor/ceil
         // interior counts, one stride-clamped edge, one empty group,
-        // the final tile, the remainder); the assert documents it and
-        // the merge keeps release builds safe regardless.
-        debug_assert!(self.len < self.buf.len(), "spatial group overflow");
-        if self.len == self.buf.len() {
-            self.buf[self.len - 1].2 += 1;
-            return;
-        }
+        // the final tile, the remainder). Checked in every profile:
+        // the old release fallback silently merged the overflow into
+        // the last group, mis-counting invocations — exactly the
+        // coverage-corruption class `H3D-020` exists to catch.
+        assert!(self.len < self.buf.len(), "spatial group overflow");
         self.buf[self.len] = (size, out, 1);
         self.len += 1;
     }

@@ -45,6 +45,19 @@ impl NodeKind {
             NodeKind::Fc => "fc",
         }
     }
+
+    /// Inverse of [`NodeKind::tag`] (the serialized-design kind key).
+    pub fn parse_tag(tag: &str) -> Option<NodeKind> {
+        match tag {
+            "conv" => Some(NodeKind::Conv),
+            "pool" => Some(NodeKind::Pool),
+            "act" => Some(NodeKind::Act),
+            "eltwise" => Some(NodeKind::Eltwise),
+            "gap" => Some(NodeKind::Gap),
+            "fc" => Some(NodeKind::Fc),
+            _ => None,
+        }
+    }
 }
 
 /// A computation node `n` of the hardware graph `G` with its
@@ -406,6 +419,91 @@ impl Design {
         }
         self.nodes = nodes;
     }
+
+    /// Serialize to the deterministic design-JSON the `check
+    /// --design` / `optimize --design-out` round trip uses:
+    /// `{"mapping": [0, "fused", ...], "nodes": [{...}, ...]}` with
+    /// alphabetical keys (the `Json` BTreeMap representation).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let nodes = self.nodes.iter().map(|n| Json::obj(vec![
+            ("act_bits", Json::Num(n.act_bits as f64)),
+            ("coarse_in", Json::Num(n.coarse_in as f64)),
+            ("coarse_out", Json::Num(n.coarse_out as f64)),
+            ("fine", Json::Num(n.fine as f64)),
+            ("kind", Json::Str(n.kind.tag().to_string())),
+            ("max_filters", Json::Num(n.max_filters as f64)),
+            ("max_in", Json::from_usizes(
+                &[n.max_in.d, n.max_in.h, n.max_in.w, n.max_in.c])),
+            ("max_kernel", Json::from_usizes(&n.max_kernel)),
+            ("weight_bits", Json::Num(n.weight_bits as f64)),
+        ])).collect();
+        let mapping = self.mapping.iter().map(|m| match m {
+            MapTarget::Node(i) => Json::Num(*i as f64),
+            MapTarget::Fused => Json::Str("fused".to_string()),
+        }).collect();
+        Json::obj(vec![
+            ("mapping", Json::Arr(mapping)),
+            ("nodes", Json::Arr(nodes)),
+        ])
+    }
+
+    /// Parse the design-JSON emitted by [`Design::to_json`]. Only the
+    /// *shape* of the document is checked here (`"design: ..."`
+    /// errors); semantic legality against a model is the `check`
+    /// passes' job.
+    pub fn from_json(j: &crate::util::json::Json)
+        -> Result<Design, String> {
+        use crate::util::json::Json;
+        let nodes_j = j.get("nodes").and_then(Json::as_arr)
+            .ok_or("design: missing \"nodes\" array")?;
+        let mut nodes = Vec::with_capacity(nodes_j.len());
+        for (i, nj) in nodes_j.iter().enumerate() {
+            let field = |k: &str| nj.get(k).and_then(Json::as_usize)
+                .ok_or(format!("design: node {i}: missing numeric \
+                                field {k:?}"));
+            let kind = nj.get("kind").and_then(Json::as_str)
+                .and_then(NodeKind::parse_tag)
+                .ok_or(format!("design: node {i}: bad \"kind\" tag"))?;
+            let s = nj.get("max_in").and_then(Json::usize_arr)
+                .filter(|v| v.len() == 4)
+                .ok_or(format!("design: node {i}: \"max_in\" must be \
+                                a 4-element array"))?;
+            let k = nj.get("max_kernel").and_then(Json::usize_arr)
+                .filter(|v| v.len() == 3)
+                .ok_or(format!("design: node {i}: \"max_kernel\" must \
+                                be a 3-element array"))?;
+            let bits = |k: &str| -> Result<u8, String> {
+                let v = field(k)?;
+                u8::try_from(v).map_err(|_| format!(
+                    "design: node {i}: {k:?} {v} does not fit u8"))
+            };
+            nodes.push(CompNode {
+                kind,
+                max_in: Shape::new(s[0], s[1], s[2], s[3]),
+                max_filters: field("max_filters")?,
+                max_kernel: [k[0], k[1], k[2]],
+                coarse_in: field("coarse_in")?,
+                coarse_out: field("coarse_out")?,
+                fine: field("fine")?,
+                weight_bits: bits("weight_bits")?,
+                act_bits: bits("act_bits")?,
+            });
+        }
+        let mapping_j = j.get("mapping").and_then(Json::as_arr)
+            .ok_or("design: missing \"mapping\" array")?;
+        let mut mapping = Vec::with_capacity(mapping_j.len());
+        for (l, mj) in mapping_j.iter().enumerate() {
+            match (mj.as_usize(), mj.as_str()) {
+                (Some(i), _) => mapping.push(MapTarget::Node(i)),
+                (None, Some("fused")) => mapping.push(MapTarget::Fused),
+                _ => return Err(format!(
+                    "design: mapping entry {l} must be a node index \
+                     or \"fused\"")),
+            }
+        }
+        Ok(Design { nodes, mapping })
+    }
 }
 
 /// Undo record for one SA move (§V-C transforms applied in place).
@@ -606,6 +704,24 @@ impl Invocation {
 mod tests {
     use super::*;
     use crate::model::zoo;
+
+    #[test]
+    fn design_json_round_trips() {
+        let m = zoo::c3d_tiny();
+        let mut d = Design::initial(&m);
+        d.mapping[2] = MapTarget::Fused; // exercise both entry forms
+        let text = d.to_json().to_string();
+        let back = Design::from_json(
+            &crate::util::json::Json::parse(&text).expect("parse"))
+            .expect("from_json");
+        assert_eq!(back.to_json().to_string(), text);
+        assert_eq!(back.nodes, d.nodes);
+        assert_eq!(back.mapping, d.mapping);
+        // Shape errors carry the "design:" prefix.
+        let e = Design::from_json(
+            &crate::util::json::Json::parse("{}").expect("parse"));
+        assert!(e.unwrap_err().starts_with("design:"));
+    }
 
     #[test]
     fn initial_design_one_node_per_type_and_kernel() {

@@ -19,22 +19,17 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
         let mut args = Args::default();
         let mut it = raw.into_iter().peekable();
-        if let Some(cmd) = it.peek() {
-            if !cmd.starts_with('-') {
-                args.command = it.next().unwrap();
-            }
+        if let Some(cmd) = it.next_if(|c| !c.starts_with('-')) {
+            args.command = cmd;
         }
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
                 // `--key=value`, `--key value`, or boolean `--flag`.
                 if let Some((k, v)) = name.split_once('=') {
                     args.options.insert(k.to_string(), v.to_string());
-                } else if it
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
+                } else if let Some(v) =
+                    it.next_if(|n| !n.starts_with("--"))
                 {
-                    let v = it.next().unwrap();
                     args.options.insert(name.to_string(), v);
                 } else {
                     args.flags.push(name.to_string());

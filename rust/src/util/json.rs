@@ -258,7 +258,10 @@ impl<'a> Parser<'a> {
                     let start = self.pos;
                     let text = std::str::from_utf8(&self.b[start..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let ch = text.chars().next().unwrap();
+                    let ch = text
+                        .chars()
+                        .next()
+                        .ok_or_else(|| self.err("unterminated string"))?;
                     s.push(ch);
                     self.pos += ch.len_utf8();
                 }
@@ -276,7 +279,10 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
-        let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        // The scanned range is ASCII digits/signs, but map the error
+        // rather than panicking on a parser bug.
+        let text = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))

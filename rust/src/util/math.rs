@@ -3,8 +3,13 @@
 //! all "x must be a factor of y"), ceiling division, products.
 
 /// Ceiling division for positive integers.
+///
+/// Panics on `b == 0` in every build profile: a zero divisor here
+/// means an upstream tiling/folding invariant broke, and the release
+/// behavior used to be `div_ceil`'s own divide-by-zero panic with no
+/// context.
 pub fn ceil_div(a: usize, b: usize) -> usize {
-    debug_assert!(b > 0);
+    assert!(b > 0, "ceil_div: zero divisor (a = {a})");
     a.div_ceil(b)
 }
 
@@ -34,7 +39,11 @@ pub fn factors(n: usize) -> Vec<usize> {
 /// scheduler's "c = max{factors Ĉ}" rule constrained by the node's
 /// compile-time stream count.
 pub fn max_factor_leq(n: usize, cap: usize) -> usize {
-    debug_assert!(n > 0 && cap > 0);
+    // Checked in every profile: with n == 0 or cap == 0 the downward
+    // scan below underflows `d` in release builds (a wrapping panic
+    // far from the cause); fail here with the operands instead.
+    assert!(n > 0 && cap > 0,
+            "max_factor_leq: n = {n}, cap = {cap} (both must be > 0)");
     if cap >= n {
         return n;
     }
@@ -122,5 +131,17 @@ mod tests {
         assert_eq!(gcd(12, 18), 6);
         assert_eq!(lcm(4, 6), 12);
         assert_eq!(gcd(7, 0), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "ceil_div: zero divisor")]
+    fn ceil_div_rejects_zero_divisor() {
+        ceil_div(5, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_factor_leq")]
+    fn max_factor_rejects_zero() {
+        max_factor_leq(0, 4);
     }
 }

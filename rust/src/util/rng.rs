@@ -85,7 +85,12 @@ impl Rng {
     /// `rate` must be > 0; the draw is in the same time unit as
     /// `1/rate` and is strictly positive.
     pub fn exponential(&mut self, rate: f64) -> f64 {
-        debug_assert!(rate > 0.0);
+        // Checked in every profile: a nonpositive (or NaN) rate would
+        // silently produce negative/NaN inter-arrival times and
+        // corrupt every downstream fleet metric.
+        assert!(rate > 0.0 && rate.is_finite(),
+                "exponential: rate must be positive and finite \
+                 (got {rate})");
         // 1 - uniform() is in (0, 1], so ln() is finite and <= 0.
         -(1.0 - self.uniform()).ln() / rate
     }
@@ -200,6 +205,12 @@ mod tests {
         assert!((mean * rate - 1.0).abs() < 0.02, "mean {mean}");
         let mut r2 = Rng::new(11);
         assert!(r2.exponential(1.0) > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exponential: rate must be positive")]
+    fn exponential_rejects_nonpositive_rate() {
+        Rng::new(1).exponential(0.0);
     }
 
     #[test]

@@ -113,9 +113,10 @@ pub fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
     let n = b.len();
     for col in 0..n {
         // Pivot.
+        // `col..n` is non-empty; the fallback never fires.
         let piv = (col..n)
             .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
-            .unwrap();
+            .unwrap_or(col);
         a.swap(col, piv);
         b.swap(col, piv);
         let d = a[col][col];

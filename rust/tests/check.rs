@@ -1,0 +1,440 @@
+//! Static-verifier lockdown suite.
+//!
+//! Three contracts:
+//! 1. **Negative fixtures** — every code in `check::REGISTRY` is
+//!    triggered by a minimal broken input, asserting both the code
+//!    and its registered severity, so a pass can't silently stop
+//!    firing (or change severity) without this suite noticing.
+//! 2. **Clean matrix** — `check_toolflow` reports no errors for every
+//!    zoo model on every device (and is byte-silent for the evaluated
+//!    set), so the verifier can't rot into rejecting valid designs.
+//! 3. **Rendering + CLI** — the JSON-lines rendering is byte-pinned,
+//!    the `check` subcommand's JSON output is byte-identical to the
+//!    library rendering, and exit codes follow error diagnostics.
+//!
+//! `docs/diagnostics.md` is pinned against the registry at the
+//! bottom.
+
+use std::process::Command;
+
+use harflow3d::check::{self, Diagnostic, Location, Report, Severity};
+use harflow3d::device;
+use harflow3d::fleet::faults::{FaultPlan, ResilienceCfg};
+use harflow3d::fleet::{BatchCfg, BoardSpec, FleetCfg, Policy,
+                       QueueDiscipline};
+use harflow3d::model::graph::{GraphBuilder, INPUT};
+use harflow3d::model::layer::{ActKind, EltOp, LayerKind, PoolOp, Shape};
+use harflow3d::model::zoo;
+use harflow3d::resource::ResourceModel;
+use harflow3d::sched::{self, SchedCfg};
+use harflow3d::sdf::{Design, MapTarget, NodeKind};
+
+/// Registered severity of a code (panics on unknown codes so a typo'd
+/// fixture fails loudly).
+fn registered_severity(code: &str) -> Severity {
+    check::REGISTRY
+        .iter()
+        .find(|r| r.0 == code)
+        .map(|r| r.1)
+        .unwrap_or_else(|| panic!("{code} not in REGISTRY"))
+}
+
+/// Assert `diags` contains `code` with its registered severity.
+fn assert_fires(diags: &[Diagnostic], code: &str) {
+    let hit = diags.iter().find(|d| d.code == code).unwrap_or_else(|| {
+        panic!("{code} did not fire; got {diags:?}")
+    });
+    assert_eq!(hit.severity, registered_severity(code), "{code}");
+}
+
+fn node_of(d: &Design, kind: NodeKind) -> usize {
+    d.nodes
+        .iter()
+        .position(|n| n.kind == kind)
+        .unwrap_or_else(|| panic!("no {kind:?} node"))
+}
+
+// ---------------------------------------------------------------------
+// Negative fixtures: one per registered code.
+// ---------------------------------------------------------------------
+
+#[test]
+fn fixture_h3d_001_shape_break() {
+    let m = {
+        let mut b = GraphBuilder::new("bad", Shape::new(4, 8, 8, 3));
+        let c1 = b.conv("c1", INPUT, 8, [3; 3], [1; 3], [1; 3], 1);
+        b.act("r1", c1, ActKind::Relu);
+        let mut m = b.finish(0);
+        m.layers[1].in_shape = Shape::new(1, 1, 1, 1);
+        m
+    };
+    assert_fires(&check::graph::check_model(&m), "H3D-001");
+}
+
+#[test]
+fn fixture_h3d_002_arity() {
+    let mut b = GraphBuilder::new("bad", Shape::new(4, 8, 8, 8));
+    let c1 = b.conv("c1", INPUT, 8, [3; 3], [1; 3], [1; 3], 1);
+    let c2 = b.conv("c2", c1, 8, [3; 3], [1; 3], [1; 3], 1);
+    b.eltwise("add", c2, c1, EltOp::Add, false);
+    let mut m = b.finish(0);
+    m.layers[2].inputs.truncate(1);
+    assert_fires(&check::graph::check_model(&m), "H3D-002");
+}
+
+#[test]
+fn fixture_h3d_003_dead_layer() {
+    let mut b = GraphBuilder::new("dead", Shape::new(4, 8, 8, 3));
+    let c1 = b.conv("c1", INPUT, 8, [3; 3], [1; 3], [1; 3], 1);
+    let _p1 = b.pool("p1", c1, PoolOp::Max, [1, 2, 2], [1, 2, 2],
+                     [0; 3]);
+    let r1 = b.act("r1", c1, ActKind::Relu);
+    b.gap("gap", r1);
+    let m = b.finish(0);
+    assert_fires(&check::graph::check_model(&m), "H3D-003");
+}
+
+#[test]
+fn fixture_h3d_010_mapping_structure() {
+    let m = zoo::c3d_tiny();
+    let mut d = Design::initial(&m);
+    d.mapping.pop();
+    assert_fires(&check::mapping::check_design(&m, &d), "H3D-010");
+    let mut d = Design::initial(&m);
+    d.mapping[0] = MapTarget::Node(999);
+    assert_fires(&check::mapping::check_design(&m, &d), "H3D-010");
+}
+
+#[test]
+fn fixture_h3d_011_kind_mismatch() {
+    let m = zoo::c3d_tiny();
+    let mut d = Design::initial(&m);
+    d.mapping[0] = MapTarget::Node(node_of(&d, NodeKind::Pool));
+    assert_fires(&check::mapping::check_design(&m, &d), "H3D-011");
+}
+
+#[test]
+fn fixture_h3d_012_illegal_fusion() {
+    let m = zoo::c3d_tiny();
+    let mut d = Design::initial(&m);
+    // Layer 0 is a conv: not fusable at all.
+    d.mapping[0] = MapTarget::Fused;
+    assert_fires(&check::mapping::check_design(&m, &d), "H3D-012");
+}
+
+#[test]
+fn fixture_h3d_013_gamma_divisibility() {
+    let m = zoo::c3d_tiny();
+    let mut d = Design::initial(&m);
+    let conv = node_of(&d, NodeKind::Conv);
+    d.nodes[conv].coarse_in = d.nodes[conv].max_in.c + 1;
+    assert_fires(&check::mapping::check_design(&m, &d), "H3D-013");
+}
+
+#[test]
+fn fixture_h3d_014_wordlength_lattice() {
+    let m = zoo::c3d_tiny();
+    let mut d = Design::initial(&m);
+    d.nodes[node_of(&d, NodeKind::Conv)].act_bits = 12;
+    assert_fires(&check::mapping::check_design(&m, &d), "H3D-014");
+}
+
+#[test]
+fn fixture_h3d_015_kernel_exceeds_node() {
+    let m = zoo::c3d_tiny();
+    let mut d = Design::initial(&m);
+    d.nodes[node_of(&d, NodeKind::Conv)].max_kernel = [1, 1, 1];
+    assert_fires(&check::mapping::check_design(&m, &d), "H3D-015");
+}
+
+#[test]
+fn fixture_h3d_016_resource_budget() {
+    let m = zoo::c3d_tiny();
+    let mut d = Design::initial(&m);
+    let rm = ResourceModel::default_fit();
+    let dev = device::by_name("zc706").expect("device");
+    let conv = node_of(&d, NodeKind::Conv);
+    d.nodes[conv].coarse_in = d.nodes[conv].max_in.c;
+    d.nodes[conv].coarse_out = d.nodes[conv].max_filters;
+    d.nodes[conv].fine = d.nodes[conv].max_kernel.iter().product();
+    assert_fires(&check::mapping::check_resources(&d, &dev, &rm),
+                 "H3D-016");
+}
+
+#[test]
+fn fixture_h3d_017_unused_node() {
+    let m = zoo::c3d_tiny();
+    let mut d = Design::initial(&m);
+    let dup = d.nodes[node_of(&d, NodeKind::Conv)];
+    d.nodes.push(dup);
+    assert_fires(&check::mapping::check_design(&m, &d), "H3D-017");
+}
+
+#[test]
+fn fixture_h3d_020_coverage() {
+    let m = zoo::c3d_tiny();
+    let d = Design::initial(&m);
+    let cfg = SchedCfg::default();
+    let mut phi = sched::build_schedule(&m, &d, &cfg);
+    assert!(phi.len() > 1);
+    phi.pop();
+    assert_fires(&check::schedule::check_schedule(&m, &d, &phi, &cfg),
+                 "H3D-020");
+}
+
+#[test]
+fn fixture_h3d_021_zero_size_invocation() {
+    let m = zoo::c3d_tiny();
+    let d = Design::initial(&m);
+    let cfg = SchedCfg::default();
+    let mut phi = sched::build_schedule(&m, &d, &cfg);
+    phi[0].tile_in.d = 0;
+    assert_fires(&check::schedule::check_schedule(&m, &d, &phi, &cfg),
+                 "H3D-021");
+}
+
+#[test]
+fn fixture_h3d_030_sqnr_floor() {
+    let m = zoo::c3d_tiny();
+    let d = Design::initial(&m);
+    // An unattainable floor guarantees the warn fires whatever the
+    // proxy value of the 16-bit warm start is.
+    assert_fires(&check::quantpass::check_sqnr(&m, &d, 1e9), "H3D-030");
+}
+
+#[test]
+fn fixture_h3d_031_verilog_width() {
+    let m = zoo::c3d_tiny();
+    let mut d = Design::initial(&m);
+    let p = harflow3d::codegen::generate(&m, &d);
+    d.nodes[node_of(&d, NodeKind::Conv)].act_bits = 8;
+    assert_fires(&check::quantpass::check_project(&d, &p), "H3D-031");
+}
+
+fn base_fleet_cfg() -> FleetCfg {
+    FleetCfg {
+        boards: vec![BoardSpec { device: 0, preload: 0 }],
+        policy: Policy::RoundRobin,
+        queue: QueueDiscipline::Fifo,
+        slo_ms: 100.0,
+        batch: BatchCfg::default(),
+        faults: FaultPlan::none(),
+        resilience: ResilienceCfg::none(),
+    }
+}
+
+#[test]
+fn fixture_h3d_040_batching() {
+    let mut c = base_fleet_cfg();
+    c.batch = BatchCfg { max_batch: 1, max_wait_ms: 4.0 };
+    assert_fires(&check::fleetpass::check_fleet_cfg(&c), "H3D-040");
+}
+
+#[test]
+fn fixture_h3d_041_resilience() {
+    let mut c = base_fleet_cfg();
+    c.resilience.retries = 3;
+    assert_fires(&check::fleetpass::check_fleet_cfg(&c), "H3D-041");
+}
+
+#[test]
+fn fixture_h3d_042_traffic_slo() {
+    let mut c = base_fleet_cfg();
+    c.slo_ms = f64::NAN;
+    assert_fires(&check::fleetpass::check_fleet_cfg(&c), "H3D-042");
+}
+
+/// Every registered code has a fixture above — count them so adding a
+/// code without a fixture fails here.
+#[test]
+fn every_registered_code_has_a_fixture() {
+    // One fixture_* test per code; keep this list in sync with the
+    // functions above (the compiler can't enumerate tests for us).
+    let covered = [
+        "H3D-001", "H3D-002", "H3D-003", "H3D-010", "H3D-011",
+        "H3D-012", "H3D-013", "H3D-014", "H3D-015", "H3D-016",
+        "H3D-017", "H3D-020", "H3D-021", "H3D-030", "H3D-031",
+        "H3D-040", "H3D-041", "H3D-042",
+    ];
+    let registered: Vec<&str> =
+        check::REGISTRY.iter().map(|r| r.0).collect();
+    assert_eq!(covered.to_vec(), registered,
+               "REGISTRY and the fixture list diverged");
+}
+
+// ---------------------------------------------------------------------
+// Clean matrix: the verifier accepts every zoo model on every device.
+// ---------------------------------------------------------------------
+
+#[test]
+fn clean_matrix_all_models_all_devices() {
+    let rm = ResourceModel::default_fit();
+    let evaluated: Vec<&str> = zoo::EVALUATED.to_vec();
+    let extra = ["c3d_tiny", "e3d", "i3d"];
+    for name in evaluated.iter().chain(extra.iter()) {
+        let m = zoo::by_name(name).expect("zoo name");
+        let d = Design::initial(&m);
+        for dev in device::all_devices() {
+            let rep =
+                check::check_toolflow(&m, &d, &dev, &rm, false);
+            assert_eq!(rep.error_count(), 0,
+                       "{name} on {}: {}", dev.name, rep.render_text());
+            // The evaluated set (plus the CI workhorse) must be fully
+            // silent — not even warnings.
+            if *name != "e3d" && *name != "i3d" {
+                assert!(rep.is_clean(), "{name} on {}: {}", dev.name,
+                        rep.render_text());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rendering pins + CLI behavior.
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_jsonl_rendering_is_byte_stable() {
+    let mut rep = Report::new();
+    rep.diags.push(Diagnostic::error(
+        "H3D-013", Location::Node(2),
+        "coarse_in 7 does not divide C_n 512".into()));
+    rep.diags.push(Diagnostic::warn(
+        "H3D-003", Location::Layer(4),
+        "p1: output is never consumed and is not the model output \
+         (dead layer)".into()));
+    assert_eq!(
+        rep.render_jsonl(),
+        "{\"code\":\"H3D-013\",\"loc\":\"node 2\",\"msg\":\"coarse_in \
+         7 does not divide C_n 512\",\"severity\":\"error\"}\n\
+         {\"code\":\"H3D-003\",\"loc\":\"layer 4\",\"msg\":\"p1: \
+         output is never consumed and is not the model output (dead \
+         layer)\",\"severity\":\"warn\"}\n");
+    assert_eq!(
+        rep.render_text(),
+        "error[H3D-013] node 2: coarse_in 7 does not divide C_n 512\n\
+         warn[H3D-003] layer 4: p1: output is never consumed and is \
+         not the model output (dead layer)\n");
+}
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_harflow3d"))
+}
+
+#[test]
+fn cli_clean_model_exits_zero() {
+    let out = bin().args(["check", "c3d_tiny", "zcu102"]).output()
+        .expect("spawn");
+    assert!(out.status.success(), "{out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("clean"), "{stdout}");
+}
+
+#[test]
+fn cli_json_output_matches_library_rendering() {
+    let m = zoo::c3d_tiny();
+    let mut d = Design::initial(&m);
+    d.nodes[node_of(&d, NodeKind::Conv)].act_bits = 12;
+    let path = std::env::temp_dir().join("h3d_check_bad_design.json");
+    std::fs::write(&path, d.to_json().to_string()).expect("write");
+
+    let out = bin()
+        .args(["check", "c3d_tiny", "zcu102", "--format", "json",
+               "--design"])
+        .arg(&path)
+        .output()
+        .expect("spawn");
+    // H3D-014 is error-severity: the CLI must exit non-zero.
+    assert!(!out.status.success(), "{out:?}");
+
+    let rm = ResourceModel::default_fit();
+    let dev = device::by_name("zcu102").expect("device");
+    let rep = check::check_toolflow(&m, &d, &dev, &rm, true);
+    assert!(rep.error_count() > 0);
+    assert_eq!(String::from_utf8_lossy(&out.stdout),
+               rep.render_jsonl(),
+               "CLI JSON must be byte-identical to the library \
+                rendering");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn cli_corrupt_design_exits_nonzero() {
+    let path = std::env::temp_dir().join("h3d_check_corrupt.json");
+    std::fs::write(&path, "{\"mapping\": [], \"nodes\": \"nope\"}")
+        .expect("write");
+    let out = bin()
+        .args(["check", "c3d_tiny", "zcu102", "--design"])
+        .arg(&path)
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success(), "{out:?}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("design"), "{stderr}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn cli_rejects_unknown_format() {
+    let out = bin()
+        .args(["check", "c3d_tiny", "zcu102", "--format", "yaml"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success(), "{out:?}");
+}
+
+// ---------------------------------------------------------------------
+// Gate behavior + docs.
+// ---------------------------------------------------------------------
+
+#[test]
+fn gate_design_rejects_broken_accepts_warm_start() {
+    let m = zoo::c3d_tiny();
+    let rm = ResourceModel::default_fit();
+    let dev = device::by_name("zcu102").expect("device");
+    // The warm start is shrunk until it fits the device, so the gate
+    // (which prices resources) must be silent on it.
+    let opt = harflow3d::optim::Optimizer::new(
+        &m, &dev, &rm, harflow3d::optim::OptCfg::default());
+    let d = opt.warm_start().expect("warm start");
+    assert!(check::gate_design(&m, &d, &dev, &rm).is_ok());
+    let mut bad = d.clone();
+    bad.nodes[node_of(&bad, NodeKind::Conv)].act_bits = 12;
+    let e = check::gate_design(&m, &bad, &dev, &rm).unwrap_err();
+    assert!(e.contains("H3D-014"), "{e}");
+    assert!(e.contains("--no-check"), "{e}");
+}
+
+#[test]
+fn fused_design_stays_schedulable_and_clean() {
+    // Fusing an activation must not break the coverage invariant: the
+    // fused layer simply has no invocations.
+    let m = zoo::c3d_tiny();
+    let mut d = Design::initial(&m);
+    let act = m
+        .layers
+        .iter()
+        .position(|l| matches!(l.kind, LayerKind::Activation(_)))
+        .expect("act layer");
+    d.mapping[act] = MapTarget::Fused;
+    let rm = ResourceModel::default_fit();
+    let dev = device::by_name("zcu102").expect("device");
+    let rep = check::check_toolflow(&m, &d, &dev, &rm, false);
+    assert_eq!(rep.error_count(), 0, "{}", rep.render_text());
+}
+
+#[test]
+fn docs_catalogue_every_registered_code() {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"),
+                       "/docs/diagnostics.md");
+    let doc = std::fs::read_to_string(path).expect("docs/diagnostics.md");
+    for (code, sev, _) in check::REGISTRY {
+        let heading = format!("### {code} — {} — ", sev.tag());
+        assert!(doc.contains(&heading),
+                "docs/diagnostics.md missing {heading:?}");
+    }
+    let documented = doc.matches("\n### H3D-").count();
+    assert_eq!(documented, check::REGISTRY.len(),
+               "docs catalogue {documented} codes, registry has {}",
+               check::REGISTRY.len());
+}
