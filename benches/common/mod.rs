@@ -53,14 +53,16 @@ pub struct BenchResult {
 
 #[allow(dead_code)]
 impl BenchResult {
-    /// `{"name":…,"iters":…,"ns_per_iter":…,"ns_per_iter_min":…}` with
-    /// optional `"states_per_sec"` / `"chains"` — names are
-    /// harness-controlled and contain no characters needing JSON
-    /// escaping.
+    /// `{"schema":1,"name":…,"iters":…,"ns_per_iter":…,
+    /// "ns_per_iter_min":…}` with optional `"states_per_sec"` /
+    /// `"chains"` — names are harness-controlled and contain no
+    /// characters needing JSON escaping. `"schema"` versions the row
+    /// format; `ci/check_bench.py` rejects fresh rows without it
+    /// (committed baselines predating the field stay accepted).
     pub fn json_line(&self) -> String {
         let mut s = format!(
-            "{{\"name\":\"{}\",\"iters\":{},\"ns_per_iter\":{:.1},\
-             \"ns_per_iter_min\":{:.1}",
+            "{{\"schema\":1,\"name\":\"{}\",\"iters\":{},\
+             \"ns_per_iter\":{:.1},\"ns_per_iter_min\":{:.1}",
             self.name, self.iters, self.mean_s * 1e9, self.min_s * 1e9,
         );
         if let Some(sps) = self.states_per_sec {

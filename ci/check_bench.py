@@ -36,6 +36,13 @@ as *collapse floors* only: they fail at ``--max-drop-seeded`` (default
 as the baselines — to restore the tight gate; artifact rows carry no
 ``seeded`` flag.
 
+Schema hygiene: every fresh row must carry ``"schema": 1`` (the bench
+harness stamps it — see ``benches/common/mod.rs``); a missing or
+unknown schema version fails the gate, because it means the row format
+and the gate disagree. Committed *baselines* predating the field are
+still accepted — the exemption applies to the baseline side only, so
+old baselines keep gating new runs until re-baselined.
+
 Bootstrap: when the baseline file is missing entirely the gate passes
 and prints the fresh rows. Re-baseline after intentional perf changes.
 
@@ -91,6 +98,17 @@ def run_gate(args):
         fresh = load_rows(args.fresh)
     except OSError as e:
         print(f"FAIL: cannot read fresh bench output: {e}")
+        return 1
+
+    # Fresh rows must declare the row-format version the gate expects;
+    # committed baselines predating the field are exempt (see module
+    # docstring).
+    schema_bad = [f"{name} (schema={rec.get('schema')!r})"
+                  for name, rec in sorted(fresh.items())
+                  if rec.get("schema") != 1]
+    if schema_bad:
+        print('FAIL: fresh bench rows missing "schema": 1: '
+              + ", ".join(schema_bad))
         return 1
 
     # Scaling sanity (warning only): K>1 aggregate vs K=1.
@@ -185,9 +203,10 @@ def self_test():
 
     Covers: a healthy row passing, a >max-drop regression failing, a
     seeded row gating only at the collapse floor, a workload
-    redefinition (``bits`` change) being excluded, and the
-    missing-baseline bootstrap path. Returns 0 only if every scenario
-    produced the expected exit code.
+    redefinition (``bits`` change) being excluded, the
+    missing-baseline bootstrap path, and the row-schema hygiene rules
+    (fresh rows need ``"schema": 1``; baselines are exempt). Returns 0
+    only if every scenario produced the expected exit code.
     """
     def gate(baseline_rows, fresh_rows, **overrides):
         with tempfile.TemporaryDirectory() as td:
@@ -212,24 +231,39 @@ def self_test():
     base = [{"name": "dse", "states_per_sec": 1000.0}]
     cases = [
         ("healthy row passes",
-         gate(base, [{"name": "dse", "states_per_sec": 950.0}]), 0),
+         gate(base, [{"name": "dse", "schema": 1,
+                      "states_per_sec": 950.0}]), 0),
         ("regression fails",
-         gate(base, [{"name": "dse", "states_per_sec": 500.0}]), 1),
+         gate(base, [{"name": "dse", "schema": 1,
+                      "states_per_sec": 500.0}]), 1),
         ("seeded row survives a 50% drop",
          gate([{"name": "dse", "states_per_sec": 1000.0,
                 "seeded": True}],
-              [{"name": "dse", "states_per_sec": 500.0}]), 0),
+              [{"name": "dse", "schema": 1,
+                "states_per_sec": 500.0}]), 0),
         ("seeded row fails the collapse floor",
          gate([{"name": "dse", "states_per_sec": 1000.0,
                 "seeded": True}],
-              [{"name": "dse", "states_per_sec": 100.0}]), 1),
+              [{"name": "dse", "schema": 1,
+                "states_per_sec": 100.0}]), 1),
         ("wordlength change is not gated",
          gate([{"name": "dse", "states_per_sec": 1000.0, "bits": 16}],
-              [{"name": "dse", "states_per_sec": 10.0, "bits": 8}]), 0),
+              [{"name": "dse", "schema": 1, "states_per_sec": 10.0,
+                "bits": 8}]), 0),
         ("missing baseline bootstraps",
-         gate(None, [{"name": "dse", "states_per_sec": 10.0}]), 0),
+         gate(None, [{"name": "dse", "schema": 1,
+                      "states_per_sec": 10.0}]), 0),
         ("total collapse to zero fails",
-         gate(base, [{"name": "dse", "states_per_sec": 0.0}]), 1),
+         gate(base, [{"name": "dse", "schema": 1,
+                      "states_per_sec": 0.0}]), 1),
+        ("schemaless baseline still gates a schema-1 fresh row",
+         gate(base, [{"name": "dse", "schema": 1,
+                      "states_per_sec": 990.0}]), 0),
+        ("missing schema on a fresh row fails",
+         gate(base, [{"name": "dse", "states_per_sec": 990.0}]), 1),
+        ("unknown schema version fails",
+         gate(base, [{"name": "dse", "schema": 2,
+                      "states_per_sec": 990.0}]), 1),
     ]
     bad = [name for name, got, want in cases if got != want]
     for name, got, want in cases:

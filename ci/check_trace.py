@@ -1,0 +1,248 @@
+#!/usr/bin/env python3
+"""Structural validator for `--trace-out` Chrome Trace Event files.
+
+The obs subsystem (``rust/src/obs/``, ``docs/observability.md``) emits
+Chrome Trace Event Format JSON that Perfetto must be able to load and
+that downstream tooling diffs byte-for-byte across same-seed runs.
+This gate checks the structural contract CI relies on:
+
+* the file is valid JSON with the expected top-level shape
+  (``displayTimeUnit`` + a ``traceEvents`` array);
+* every event carries ``name``/``ph``/``pid``/``tid``/``ts`` and a
+  known phase (``X``, ``B``/``E``, ``i``, ``C``, ``s``/``t``/``f``,
+  ``M``);
+* ``B``/``E`` duration events balance per (pid, tid) track;
+* ``X`` complete events carry a finite ``dur >= 0``;
+* timestamps are non-decreasing per (pid, tid) track *in file order*
+  (metadata events are exempt — they carry no timeline position);
+* every non-metadata event's category is one of the emitter's known
+  categories (``board``, ``req``, ``sa``, ``plan``, ``counter``);
+* flow events are well-formed: each flow id starts with ``s`` before
+  any ``t``/``f``, and every started flow terminates in exactly one
+  ``f``.
+
+Usage:
+
+    ci/check_trace.py trace.json [more.json ...]
+    ci/check_trace.py --self-test
+
+``--self-test`` runs the validator against synthetic good/bad fixtures
+and exits nonzero if any misjudges — the CI sanity check for this
+script itself.
+"""
+
+import argparse
+import json
+import sys
+
+KNOWN_PHASES = {"X", "B", "E", "i", "C", "s", "t", "f", "M"}
+KNOWN_CATEGORIES = {"board", "req", "sa", "plan", "counter"}
+REQUIRED_KEYS = ("name", "ph", "pid", "tid", "ts")
+
+
+def check_trace(doc, label="trace"):
+    """Validate one parsed trace document; return a list of problems."""
+    errors = []
+
+    def err(msg):
+        errors.append(f"{label}: {msg}")
+
+    if not isinstance(doc, dict):
+        err("top level is not a JSON object")
+        return errors
+    if "traceEvents" not in doc or not isinstance(
+            doc["traceEvents"], list):
+        err('missing "traceEvents" array')
+        return errors
+    if not isinstance(doc.get("displayTimeUnit"), str):
+        err('missing "displayTimeUnit"')
+
+    last_ts = {}       # (pid, tid) -> last timeline ts seen
+    open_durs = {}     # (pid, tid) -> stack of open B names
+    flows = {}         # flow id -> "open" | "ended"
+
+    for i, ev in enumerate(doc["traceEvents"]):
+        where = f"event {i}"
+        if not isinstance(ev, dict):
+            err(f"{where}: not an object")
+            continue
+        missing = [k for k in REQUIRED_KEYS if k not in ev]
+        if missing:
+            err(f"{where}: missing keys {missing}")
+            continue
+        ph = ev["ph"]
+        if ph not in KNOWN_PHASES:
+            err(f"{where} ({ev['name']!r}): unknown phase {ph!r}")
+            continue
+        if ph == "M":
+            continue  # metadata: no timeline position, no category
+        track = (ev["pid"], ev["tid"])
+        ts = ev["ts"]
+        if not isinstance(ts, (int, float)) or ts != ts:
+            err(f"{where} ({ev['name']!r}): non-numeric ts {ts!r}")
+            continue
+        if ev.get("cat") not in KNOWN_CATEGORIES:
+            err(f"{where} ({ev['name']!r}): unknown category "
+                f"{ev.get('cat')!r}")
+        prev = last_ts.get(track)
+        if prev is not None and ts < prev:
+            err(f"{where} ({ev['name']!r}): ts {ts} < previous {prev} "
+                f"on track {track} (non-monotone)")
+        last_ts[track] = ts
+
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur != dur \
+                    or dur < 0:
+                err(f"{where} ({ev['name']!r}): X event needs a "
+                    f"finite dur >= 0 (got {dur!r})")
+        elif ph == "B":
+            open_durs.setdefault(track, []).append(ev["name"])
+        elif ph == "E":
+            stack = open_durs.get(track, [])
+            if not stack:
+                err(f"{where} ({ev['name']!r}): E without matching B "
+                    f"on track {track}")
+            else:
+                stack.pop()
+        elif ph in ("s", "t", "f"):
+            fid = ev.get("id")
+            if fid is None:
+                err(f"{where} ({ev['name']!r}): flow event without id")
+                continue
+            state = flows.get(fid)
+            if ph == "s":
+                if state is not None:
+                    err(f"flow {fid}: second 's' at {where}")
+                flows[fid] = "open"
+            elif state is None:
+                err(f"flow {fid}: '{ph}' at {where} before any 's'")
+            elif state == "ended":
+                err(f"flow {fid}: '{ph}' at {where} after its 'f'")
+            elif ph == "f":
+                flows[fid] = "ended"
+
+    for track, stack in open_durs.items():
+        if stack:
+            err(f"track {track}: {len(stack)} unmatched B event(s) "
+                f"({', '.join(repr(n) for n in stack)})")
+    dangling = [fid for fid, st in flows.items() if st == "open"]
+    if dangling:
+        err(f"{len(dangling)} flow(s) never terminated in 'f': "
+            f"{sorted(dangling)[:10]}")
+    return errors
+
+
+def check_file(path):
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as e:
+        return [f"{path}: cannot parse: {e}"]
+    return check_trace(doc, label=path)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("traces", nargs="*",
+                    help="Chrome-trace JSON files to validate")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the validator against synthetic fixtures "
+                         "and exit (CI sanity check for this script)")
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    if not args.traces:
+        print("check_trace: no trace files given (see --help)")
+        return 1
+    bad = 0
+    for path in args.traces:
+        problems = check_file(path)
+        if problems:
+            bad += 1
+            for p in problems:
+                print(f"FAIL: {p}")
+        else:
+            with open(path) as fh:
+                n = len(json.load(fh)["traceEvents"])
+            print(f"ok: {path}: {n} events, structurally valid")
+    if bad:
+        print(f"trace gate FAILED for {bad} file(s)")
+        return 1
+    print("trace gate passed")
+    return 0
+
+
+def self_test():
+    """Run the validator on synthetic fixtures.
+
+    One known-good trace exercising every accepted phase, then one
+    fixture per independently-detected defect class. Returns 0 only if
+    every fixture is judged as expected.
+    """
+    def doc(events):
+        return {"displayTimeUnit": "ms", "traceEvents": events}
+
+    def ev(ph, name="e", pid=1, tid=0, ts=0.0, cat="board", **extra):
+        base = {"name": name, "ph": ph, "pid": pid, "tid": tid,
+                "ts": ts, "cat": cat}
+        base.update(extra)
+        return base
+
+    good = doc([
+        {"name": "process_name", "ph": "M", "pid": 1, "tid": 0,
+         "ts": 0, "args": {"name": "fleet boards"}},
+        ev("X", "service", ts=0.0, dur=5.0),
+        ev("B", "phase", ts=5.0),
+        ev("E", "phase", ts=6.0),
+        ev("i", "crash", ts=7.0, s="t"),
+        ev("C", "queue_depth", ts=7.0, cat="counter",
+           args={"value": 3}),
+        ev("s", "req", pid=2, ts=0.0, cat="req", id=0),
+        ev("t", "req", pid=2, ts=1.0, cat="req", id=0),
+        ev("f", "req", pid=2, ts=2.0, cat="req", id=0, bp="e"),
+    ])
+    cases = [
+        ("valid trace passes", good, 0),
+        ("non-object top level", [1, 2], 1),
+        ("missing traceEvents", {"displayTimeUnit": "ms"}, 1),
+        ("unknown phase", doc([ev("Q")]), 1),
+        ("missing required keys",
+         doc([{"name": "x", "ph": "X"}]), 1),
+        ("unknown category", doc([ev("i", cat="mystery")]), 1),
+        ("X without dur", doc([ev("X")]), 1),
+        ("negative dur", doc([ev("X", dur=-1.0)]), 1),
+        ("non-monotone track",
+         doc([ev("i", ts=5.0), ev("i", ts=4.0)]), 1),
+        ("monotone across tracks is fine",
+         doc([ev("i", ts=5.0), ev("i", ts=4.0, tid=1)]), 0),
+        ("unmatched B", doc([ev("B")]), 1),
+        ("E without B", doc([ev("E")]), 1),
+        ("flow step before start",
+         doc([ev("t", cat="req", id=9)]), 1),
+        ("flow never terminated",
+         doc([ev("s", cat="req", id=9)]), 1),
+        ("flow event after its f",
+         doc([ev("s", cat="req", id=9, ts=0.0),
+              ev("f", cat="req", id=9, ts=1.0),
+              ev("t", cat="req", id=9, ts=2.0)]), 1),
+    ]
+    bad = []
+    for name, fixture, want in cases:
+        problems = check_trace(fixture, label=name)
+        got = 1 if problems else 0
+        status = "ok" if got == want else "FAIL"
+        print(f"self-test {status}: {name} (exit {got}, want {want})")
+        if got != want:
+            for p in problems:
+                print(f"    {p}")
+            bad.append(name)
+    if bad:
+        print(f"check_trace self-test FAILED: {', '.join(bad)}")
+        return 1
+    print("check_trace self-test passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

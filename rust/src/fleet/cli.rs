@@ -13,6 +13,7 @@
 //!       [--faults crash|n-1|straggler|overload|flaky|chaos]
 //!       [--deadline-ms D] [--retries N] [--shed]
 //!       [--trace file] [--profiles points.json] [--fast]
+//!       [--trace-out t.json] [--metrics-out m.jsonl] [--quiet]
 //! ```
 //!
 //! `--faults` injects a named fault scenario into the simulation (a
@@ -29,6 +30,13 @@
 //! file by its `bits` column (rows from pre-quantisation files count
 //! as 16). When several precision variants survive for one (model,
 //! device) cell, the fleet serves with the fastest one and says so.
+//!
+//! `--trace-out` writes a Chrome Trace Event Format timeline of the
+//! run (open it at <https://ui.perfetto.dev>) and `--metrics-out` a
+//! JSON-lines metrics snapshot — both deterministic per seed, both
+//! ignored by every stdout byte-pin (see `docs/observability.md`).
+//! `--quiet` suppresses the per-point/per-candidate progress lines
+//! the DSE sweep and the planner search print to stderr.
 //!
 //! Every option is validated up front with a specific error message —
 //! an unknown model or device name, a non-positive `--rate`/`--slo-ms`,
@@ -80,6 +88,13 @@ pub struct FleetArgs {
     /// `--shed`: SLO-aware admission control (needs `--deadline-ms`).
     pub shed: bool,
     pub trace: Option<String>,
+    /// `--trace-out FILE`: write a Chrome Trace Event Format timeline
+    /// of the run (Perfetto-openable; obs subsystem).
+    pub trace_out: Option<String>,
+    /// `--metrics-out FILE`: write the JSON-lines metrics snapshot.
+    pub metrics_out: Option<String>,
+    /// `--quiet`: suppress stderr progress lines.
+    pub quiet: bool,
     pub profiles: Option<String>,
     pub fast: bool,
     pub chains: usize,
@@ -290,6 +305,9 @@ impl FleetArgs {
             retries,
             shed,
             trace,
+            trace_out: args.opt("trace-out").map(str::to_string),
+            metrics_out: args.opt("metrics-out").map(str::to_string),
+            quiet: args.flag("quiet"),
             profiles,
             fast: args.flag("fast"),
             chains: int_opt(args, "chains", 1)?,
@@ -325,6 +343,15 @@ impl FleetArgs {
 pub fn run(args: &Args) -> Result<String, String> {
     let fa = FleetArgs::from_args(args)?;
     let mut out = String::new();
+    // One buffer serves both exporters; `None` keeps the simulator on
+    // its zero-overhead path (and the run bit-identical — pinned by
+    // rust/tests/obs.rs).
+    let mut buf: Option<crate::obs::TraceBuffer> =
+        if fa.trace_out.is_some() || fa.metrics_out.is_some() {
+            Some(crate::obs::TraceBuffer::new())
+        } else {
+            None
+        };
 
     // -- serving profiles: model x device service/switch/fill grid ------
     let points = load_points(&fa, &mut out)?;
@@ -458,7 +485,8 @@ pub fn run(args: &Args) -> Result<String, String> {
         // cross-field invariants as programmatic callers.
         crate::check::gate_fleet_cfg(&fc)
             .map_err(|e| format!("fleet: {e}"))?;
-        let met = super::simulate_fleet(&matrix, &fc, &arr);
+        let met = super::simulate_fleet_traced(&matrix, &fc, &arr,
+                                               buf.as_mut());
         out.push_str(&metrics_block(&matrix, &met, &fa));
         out.push_str(&verdict_line(&met, fa.slo_ms));
     } else {
@@ -476,7 +504,8 @@ pub fn run(args: &Args) -> Result<String, String> {
             resilience: fa.resilience(),
             shed_cap: 0.0,
         };
-        match planner::plan(&matrix, &pcfg) {
+        match planner::plan_traced(&matrix, &pcfg, buf.as_mut(),
+                                   !fa.quiet) {
             planner::Verdict::Feasible(plan) => {
                 out.push_str(&format!(
                     "plan: {} ({} boards, cost {:.2}{}) meets p99 <= \
@@ -506,6 +535,26 @@ pub fn run(args: &Args) -> Result<String, String> {
                 for r in &reasons {
                     out.push_str(&format!("  {r}\n"));
                 }
+            }
+        }
+    }
+    if let Some(buf) = &buf {
+        if let Some(path) = &fa.trace_out {
+            std::fs::write(path, buf.chrome_trace()).map_err(|e| {
+                format!("fleet: cannot write --trace-out {path}: {e}")
+            })?;
+            if !fa.quiet {
+                eprintln!("[fleet] wrote Chrome trace ({} events) to \
+                           {path} - open at https://ui.perfetto.dev",
+                          buf.len());
+            }
+        }
+        if let Some(path) = &fa.metrics_out {
+            std::fs::write(path, buf.metrics_jsonl()).map_err(|e| {
+                format!("fleet: cannot write --metrics-out {path}: {e}")
+            })?;
+            if !fa.quiet {
+                eprintln!("[fleet] wrote metrics snapshot to {path}");
             }
         }
     }
@@ -562,7 +611,7 @@ fn load_points(fa: &FleetArgs, out: &mut String)
         exchange_every: fa.exchange_every,
         jobs: fa.jobs,
     };
-    let rows = report::sweep_points(&cfg)?;
+    let rows = report::sweep_points_progress(&cfg, !fa.quiet)?;
     for row in &rows {
         if let Err(e) = &row.point {
             out.push_str(&format!(
@@ -824,6 +873,20 @@ mod tests {
             let e = parse(&bad).unwrap_err();
             assert!(e.contains("--deadline-ms"), "{bad:?} -> {e}");
         }
+    }
+
+    #[test]
+    fn observability_flags_parse() {
+        let fa = parse(&["fleet", "--boards", "4", "--trace-out",
+                         "t.json", "--metrics-out", "m.jsonl",
+                         "--quiet"]).unwrap();
+        assert_eq!(fa.trace_out.as_deref(), Some("t.json"));
+        assert_eq!(fa.metrics_out.as_deref(), Some("m.jsonl"));
+        assert!(fa.quiet);
+        let fa = parse(&["fleet"]).unwrap();
+        assert!(fa.trace_out.is_none());
+        assert!(fa.metrics_out.is_none());
+        assert!(!fa.quiet);
     }
 
     #[test]

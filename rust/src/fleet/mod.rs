@@ -39,6 +39,8 @@ pub mod planner;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
 
+use crate::obs::{Recorder, TraceBuffer, PID_FLEET, PID_REQ};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::{percentile_sorted, percentile_with_failures};
 
@@ -457,6 +459,13 @@ struct BoardState {
     /// The in-flight sequence drew a transient failure: its `Done`
     /// retries the clips instead of completing them.
     service_failed: bool,
+    /// Trace-only (written when a recorder is attached, read at the
+    /// matching `Done`): start time and switch/fill share of the
+    /// in-flight sequence, for the reconfig/fill/service slice
+    /// decomposition on the board's Perfetto track.
+    seq_start_ms: f64,
+    seq_reconfig_ms: f64,
+    seq_fill_ms: f64,
 }
 
 impl BoardState {
@@ -518,6 +527,12 @@ struct Sim<'a> {
     /// Backoff jitter draws ([`faults::STREAM_BACKOFF`]); only ever
     /// advanced when a retry is scheduled.
     backoff_rng: Rng,
+    /// Observability sink (obs subsystem). `None` — the default — is
+    /// the production hot path: every recording site is a single
+    /// `is-None` branch with no allocation, and recorded timestamps
+    /// are simulated milliseconds, so attaching a recorder changes no
+    /// metric bit (pinned by `rust/tests/obs.rs`).
+    rec: Option<&'a mut TraceBuffer>,
 }
 
 /// Run the fleet through a sorted arrival stream. Panics if `arrivals`
@@ -528,6 +543,21 @@ struct Sim<'a> {
 /// fault RNG stream is drawn, and no float operation changes.
 pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
                       arrivals: &[Request]) -> FleetMetrics {
+    simulate_fleet_traced(profiles, cfg, arrivals, None)
+}
+
+/// [`simulate_fleet`] with an optional trace recorder attached: board
+/// service timelines (reconfig/fill/service slices), request
+/// lifecycle flows (arrival → enqueue → complete | shed | dropped |
+/// failed), live counters (queue depth, boards up/busy, retries,
+/// shed) and end-of-run gauges land in `rec`. Metrics are
+/// bit-identical with and without a recorder; the trace itself is
+/// byte-reproducible per seed (timestamps are simulated time — no
+/// wall clock anywhere).
+pub fn simulate_fleet_traced(profiles: &ProfileMatrix, cfg: &FleetCfg,
+                             arrivals: &[Request],
+                             mut rec: Option<&mut TraceBuffer>)
+    -> FleetMetrics {
     assert!(!cfg.boards.is_empty(), "fleet has no boards");
     debug_assert!(arrivals.windows(2)
                       .all(|w| w[0].arrival_ms <= w[1].arrival_ms),
@@ -553,8 +583,22 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
             up: true,
             service_epoch: 0,
             service_failed: false,
+            seq_start_ms: 0.0,
+            seq_reconfig_ms: 0.0,
+            seq_fill_ms: 0.0,
         })
         .collect();
+
+    if let Some(r) = rec.as_deref_mut() {
+        r.process(PID_FLEET, "fleet boards");
+        for (i, b) in cfg.boards.iter().enumerate() {
+            r.track(PID_FLEET, i as u64,
+                    &format!("board{} {}", i,
+                             profiles.devices[b.device]));
+        }
+        r.process(PID_REQ, "requests");
+        r.track(PID_REQ, 0, "lifecycle");
+    }
 
     let mut sim = Sim {
         profiles,
@@ -586,6 +630,7 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
         flaky_rng: Rng::stream(cfg.faults.seed, faults::STREAM_FLAKY),
         backoff_rng: Rng::stream(cfg.resilience.seed,
                                  faults::STREAM_BACKOFF),
+        rec,
     };
     for (i, r) in arrivals.iter().enumerate() {
         sim.push(r.arrival_ms, EventKind::Arrival(i));
@@ -628,7 +673,7 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
             },
         })
         .collect();
-    FleetMetrics {
+    let metrics = FleetMetrics {
         completed: sorted.len(),
         dropped: sim.dropped,
         p50_ms: percentile_sorted(&sorted, 50.0),
@@ -656,7 +701,25 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
         goodput_p99_ms: percentile_with_failures(&sorted, sim.failed,
                                                  99.0),
         boards: board_reports,
+    };
+    if let Some(r) = sim.rec {
+        r.gauge("fleet/batches", metrics.batches as f64);
+        r.gauge("fleet/completed", metrics.completed as f64);
+        r.gauge("fleet/dropped", metrics.dropped as f64);
+        r.gauge("fleet/events", metrics.events as f64);
+        r.gauge("fleet/failed", metrics.failed as f64);
+        r.gauge("fleet/failovers", metrics.failovers as f64);
+        r.gauge("fleet/makespan_ms", metrics.makespan_ms);
+        r.gauge("fleet/p50_ms", metrics.p50_ms);
+        r.gauge("fleet/p95_ms", metrics.p95_ms);
+        r.gauge("fleet/p99_ms", metrics.p99_ms);
+        r.gauge("fleet/retries", metrics.retries as f64);
+        r.gauge("fleet/shed", metrics.shed as f64);
+        r.gauge("fleet/switches", metrics.switches as f64);
+        r.gauge("fleet/throughput_rps", metrics.throughput_rps);
+        r.gauge("fleet/timeouts", metrics.timeouts as f64);
     }
+    metrics
 }
 
 impl Sim<'_> {
@@ -679,7 +742,7 @@ impl Sim<'_> {
                     self.on_hold(b, epoch, now)
                 }
                 EventKind::Crash(b) => self.on_crash(b, now),
-                EventKind::Recover(b) => self.on_recover(b),
+                EventKind::Recover(b) => self.on_recover(b, now),
                 EventKind::Retry(i) => self.on_retry(i, now),
             }
         }
@@ -695,6 +758,14 @@ impl Sim<'_> {
             model: self.reqs[i].model,
             arrival_ms: self.arrivals[i].arrival_ms,
         };
+        if let Some(r) = self.rec.as_deref_mut() {
+            let ts = now * 1000.0;
+            r.flow_start(PID_REQ, 0, "req", "req", ts, i as u64);
+            r.instant(PID_REQ, 0, "req", "arrival", ts, vec![
+                ("model", Json::Num(req.model as f64)),
+                ("req", Json::Num(i as f64)),
+            ]);
+        }
         if self.cfg.resilience.shed
             && self.cfg.resilience.deadline_ms > 0.0
         {
@@ -725,11 +796,30 @@ impl Sim<'_> {
                 match fb {
                     Some(f) => {
                         self.fallbacks += 1;
+                        if let Some(r) = self.rec.as_deref_mut() {
+                            r.instant(PID_REQ, 0, "req", "fallback",
+                                      now * 1000.0, vec![
+                                ("from", Json::Num(req.model as f64)),
+                                ("req", Json::Num(i as f64)),
+                                ("to", Json::Num(f as f64)),
+                            ]);
+                        }
                         self.reqs[i].model = f;
                         req.model = f;
                     }
                     None => {
                         self.shed += 1;
+                        if let Some(r) = self.rec.as_deref_mut() {
+                            let ts = now * 1000.0;
+                            r.instant(PID_REQ, 0, "req", "shed", ts,
+                                      vec![("req",
+                                            Json::Num(i as f64))]);
+                            r.flow_end(PID_REQ, 0, "req", "req", ts,
+                                       i as u64);
+                            let shed = self.shed;
+                            r.counter(PID_REQ, 0, "shed", ts,
+                                      shed as f64);
+                        }
                         return;
                     }
                 }
@@ -744,6 +834,12 @@ impl Sim<'_> {
                 self.retry_or_fail(i, now);
             } else {
                 self.dropped += 1;
+                if let Some(r) = self.rec.as_deref_mut() {
+                    let ts = now * 1000.0;
+                    r.instant(PID_REQ, 0, "req", "dropped", ts,
+                              vec![("req", Json::Num(i as f64))]);
+                    r.flow_end(PID_REQ, 0, "req", "req", ts, i as u64);
+                }
             }
         }
     }
@@ -763,6 +859,7 @@ impl Sim<'_> {
             return false;
         };
         self.reqs[req.id].enqueued_ms = now;
+        let (rid, rmodel) = (req.id, req.model);
         let board = &mut self.boards[b];
         let est = board
             .cost_after(self.profiles, board.tail_model, req.model,
@@ -771,7 +868,22 @@ impl Sim<'_> {
         board.backlog_ms += est;
         board.tail_model = req.model;
         board.queue.push_back(req);
-        if board.in_service.is_empty() {
+        let idle = board.in_service.is_empty();
+        if self.rec.is_some() {
+            let depth: usize =
+                self.boards.iter().map(|bd| bd.queue.len()).sum();
+            if let Some(r) = self.rec.as_deref_mut() {
+                let ts = now * 1000.0;
+                r.instant(PID_REQ, 0, "req", "enqueue", ts, vec![
+                    ("board", Json::Num(b as f64)),
+                    ("model", Json::Num(rmodel as f64)),
+                    ("req", Json::Num(rid as f64)),
+                ]);
+                r.flow_step(PID_REQ, 0, "req", "req", ts, rid as u64);
+                r.counter(PID_REQ, 0, "queue_depth", ts, depth as f64);
+            }
+        }
+        if idle {
             self.maybe_start(b, now);
         }
         true
@@ -788,16 +900,74 @@ impl Sim<'_> {
         let batch = std::mem::take(&mut self.boards[b].in_service);
         assert!(!batch.is_empty(),
                 "completion without in-service request");
+        if self.rec.is_some() {
+            // Decompose the finished sequence into its
+            // reconfig/fill/service slices on the board track. Emitted
+            // at completion (not start) so a crash never leaves
+            // forward-dated timestamps behind it — the interrupted
+            // sequence's `Done` is staled above and draws nothing.
+            let (start, reconfig_d, fill_d) = {
+                let bd = &self.boards[b];
+                (bd.seq_start_ms, bd.seq_reconfig_ms, bd.seq_fill_ms)
+            };
+            let model = batch[0].model;
+            let n = batch.len();
+            let outcome = if failed_seq { "failed" } else { "ok" };
+            if let Some(r) = self.rec.as_deref_mut() {
+                let tid = b as u64;
+                let args = |name: &'static str| vec![
+                    ("clips", Json::Num(n as f64)),
+                    ("model", Json::Num(model as f64)),
+                    ("outcome", Json::Str(name.to_string())),
+                ];
+                let mut at = start * 1000.0;
+                if reconfig_d > 0.0 {
+                    r.slice(PID_FLEET, tid, "board", "reconfig", at,
+                            reconfig_d * 1000.0, args(outcome));
+                    at += reconfig_d * 1000.0;
+                }
+                if fill_d > 0.0 {
+                    r.slice(PID_FLEET, tid, "board", "fill", at,
+                            fill_d * 1000.0, args(outcome));
+                    at += fill_d * 1000.0;
+                }
+                r.slice(PID_FLEET, tid, "board", "service", at,
+                        (now * 1000.0 - at).max(0.0), args(outcome));
+            }
+        }
         if failed_seq {
             // Transient invocation failure: the board time was spent,
             // the results are lost, and every clip retries or fails.
             for req in &batch {
+                if let Some(r) = self.rec.as_deref_mut() {
+                    r.instant(PID_REQ, 0, "req", "service_failed",
+                              now * 1000.0,
+                              vec![("req",
+                                    Json::Num(req.id as f64))]);
+                }
                 self.retry_or_fail(req.id, now);
             }
         } else {
             self.boards[b].completed += batch.len();
             for req in &batch {
-                self.latencies.push(now - req.arrival_ms);
+                let lat = now - req.arrival_ms;
+                self.latencies.push(lat);
+                if let Some(r) = self.rec.as_deref_mut() {
+                    let ts = now * 1000.0;
+                    r.instant(PID_REQ, 0, "req", "complete", ts, vec![
+                        ("latency_ms", Json::Num(lat)),
+                        ("req", Json::Num(req.id as f64)),
+                    ]);
+                    r.flow_end(PID_FLEET, b as u64, "req", "req", ts,
+                               req.id as u64);
+                }
+            }
+            if self.rec.is_some() {
+                let done = self.latencies.len();
+                if let Some(r) = self.rec.as_deref_mut() {
+                    r.counter(PID_REQ, 0, "completed", now * 1000.0,
+                              done as f64);
+                }
             }
             self.makespan_ms = self.makespan_ms.max(now);
         }
@@ -841,22 +1011,45 @@ impl Sim<'_> {
             board.tail_model = NOTHING;
             lost
         };
+        if self.rec.is_some() {
+            let up = self.boards.iter().filter(|bd| bd.up).count();
+            if let Some(r) = self.rec.as_deref_mut() {
+                let ts = now * 1000.0;
+                r.instant(PID_FLEET, b as u64, "board", "crash", ts,
+                          vec![("lost",
+                                Json::Num(lost.len() as f64))]);
+                r.counter(PID_REQ, 0, "boards_up", ts, up as f64);
+            }
+        }
         // Failover re-dispatch is free (no retry budget consumed);
         // only a clip stranded with no live capable board burns a
         // retry — or fails, if it has none left.
         for req in lost {
             self.failovers += 1;
+            if let Some(r) = self.rec.as_deref_mut() {
+                r.instant(PID_REQ, 0, "req", "failover", now * 1000.0,
+                          vec![("req", Json::Num(req.id as f64))]);
+            }
             if !self.try_enqueue(req, now) {
                 self.retry_or_fail(req.id, now);
             }
         }
     }
 
-    fn on_recover(&mut self, b: usize) {
+    fn on_recover(&mut self, b: usize, now: f64) {
         // Back up, cold: `loaded` stays `NOTHING`, so the first
         // sequence pays a full reconfiguration. Work that failed over
         // stays where it went; new arrivals find the board again.
         self.boards[b].up = true;
+        if self.rec.is_some() {
+            let up = self.boards.iter().filter(|bd| bd.up).count();
+            if let Some(r) = self.rec.as_deref_mut() {
+                let ts = now * 1000.0;
+                r.instant(PID_FLEET, b as u64, "board", "recover", ts,
+                          Vec::new());
+                r.counter(PID_REQ, 0, "boards_up", ts, up as f64);
+            }
+        }
     }
 
     fn on_retry(&mut self, i: usize, now: f64) {
@@ -879,6 +1072,20 @@ impl Sim<'_> {
             self.retries += 1;
             let attempt = self.cfg.resilience.retries
                 - self.reqs[i].attempts_left;
+            if let Some(r) = self.rec.as_deref_mut() {
+                let ts = now * 1000.0;
+                r.instant(PID_REQ, 0, "req", "retry", ts, vec![
+                    ("attempt", Json::Num(attempt as f64)),
+                    ("req", Json::Num(i as f64)),
+                ]);
+            }
+            if self.rec.is_some() {
+                let retries = self.retries;
+                if let Some(r) = self.rec.as_deref_mut() {
+                    r.counter(PID_REQ, 0, "retries", now * 1000.0,
+                              retries as f64);
+                }
+            }
             let delay = self
                 .cfg
                 .resilience
@@ -886,6 +1093,12 @@ impl Sim<'_> {
             self.push(now + delay, EventKind::Retry(i));
         } else {
             self.failed += 1;
+            if let Some(r) = self.rec.as_deref_mut() {
+                let ts = now * 1000.0;
+                r.instant(PID_REQ, 0, "req", "failed", ts,
+                          vec![("req", Json::Num(i as f64))]);
+                r.flow_end(PID_REQ, 0, "req", "req", ts, i as u64);
+            }
         }
     }
 
@@ -909,6 +1122,10 @@ impl Sim<'_> {
             }
             let _ = self.boards[b].queue.remove(qi);
             self.timeouts += 1;
+            if let Some(r) = self.rec.as_deref_mut() {
+                r.instant(PID_REQ, 0, "req", "timeout", now * 1000.0,
+                          vec![("req", Json::Num(req.id as f64))]);
+            }
             if let Some(fb) = self
                 .cfg
                 .resilience
@@ -1031,8 +1248,31 @@ impl Sim<'_> {
         board.free_at_ms = now + cost;
         board.in_service = batch;
         board.batches += 1;
+        if self.rec.is_some() {
+            // Stash the (straggler-scaled) switch/fill share of this
+            // sequence for the reconfig/fill/service slice
+            // decomposition its `Done` emits on the board track.
+            let clips = board.in_service.len();
+            let pre = switch + p.batch_ms(clips);
+            let scale = if pre > 0.0 { cost / pre } else { 1.0 };
+            board.seq_start_ms = now;
+            board.seq_reconfig_ms = switch * scale;
+            board.seq_fill_ms =
+                p.fill_ms.max(0.0).min(p.batch_ms(clips)) * scale;
+        }
         let epoch = board.service_epoch;
         self.push(now + cost, EventKind::Done(b, epoch));
+        if self.rec.is_some() {
+            let busy = self
+                .boards
+                .iter()
+                .filter(|bd| !bd.in_service.is_empty())
+                .count();
+            if let Some(r) = self.rec.as_deref_mut() {
+                r.counter(PID_REQ, 0, "boards_busy", now * 1000.0,
+                          busy as f64);
+            }
+        }
     }
 }
 

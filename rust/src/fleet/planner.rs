@@ -30,6 +30,9 @@
 
 use std::collections::HashMap;
 
+use crate::obs::{Recorder, TraceBuffer, PID_PLAN};
+use crate::util::json::Json;
+
 use super::arrivals;
 use super::faults::{FaultPlan, ResilienceCfg, Scenario};
 use super::{simulate_fleet, BatchCfg, BoardSpec, FleetCfg,
@@ -207,6 +210,64 @@ struct Certified {
     ok: bool,
 }
 
+/// Planner-search observability: per-certified-candidate progress on
+/// stderr and one unit-length slice per candidate on the planner's
+/// Perfetto track (pid 4, timestamp = candidate sequence — the search
+/// is simulation-ordinal, not wall-clock). Both off (the [`plan`]
+/// path) this is inert: no state, no output, no allocation.
+struct PlanObs<'a> {
+    rec: Option<&'a mut TraceBuffer>,
+    progress: bool,
+    /// Candidates certified so far — the deterministic timestamp of
+    /// the planner track.
+    seq: u64,
+}
+
+impl PlanObs<'_> {
+    fn off() -> PlanObs<'static> {
+        PlanObs { rec: None, progress: false, seq: 0 }
+    }
+
+    /// Record one *actually simulated* certification (memo hits are
+    /// not re-recorded — the trace shows the work done).
+    fn candidate(&mut self, label: &str, cost: f64, p99_ms: f64,
+                 ok: bool) {
+        if self.progress {
+            eprintln!(
+                "[plan] candidate {}: {label} -> p99 {p99_ms:.2} ms, \
+                 cost {cost:.1} ({})",
+                self.seq, if ok { "ok" } else { "reject" });
+        }
+        if let Some(r) = self.rec.as_deref_mut() {
+            r.slice(PID_PLAN, 0, "plan", label, self.seq as f64, 1.0,
+                    vec![
+                ("cost", Json::Num(cost)),
+                ("ok", Json::Bool(ok)),
+                ("p99_ms", Json::Num(p99_ms)),
+            ]);
+        }
+        self.seq += 1;
+    }
+}
+
+/// Human-readable composition label, e.g. `zcu102x3+vc709x1`.
+fn counts_label(profiles: &ProfileMatrix, counts: &[usize]) -> String {
+    let mut s = String::new();
+    for (d, &n) in counts.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        if !s.is_empty() {
+            s.push('+');
+        }
+        s.push_str(&format!("{}x{}", profiles.devices[d], n));
+    }
+    if s.is_empty() {
+        s.push_str("empty");
+    }
+    s
+}
+
 /// Memoised [`certify`]: the homogeneous and mixed searches revisit
 /// compositions (the mixed seed *is* a homogeneous candidate, and
 /// shrink/swap moves re-propose earlier counts), and every candidate
@@ -214,11 +275,14 @@ struct Certified {
 /// reusable verbatim.
 fn certify_memo(profiles: &ProfileMatrix, cfg: &PlanCfg,
                 counts: &[usize], arr: &[super::Request],
-                memo: &mut HashMap<Vec<usize>, Certified>) -> Certified {
+                memo: &mut HashMap<Vec<usize>, Certified>,
+                obs: &mut PlanObs) -> Certified {
     if let Some(c) = memo.get(counts) {
         return c.clone();
     }
     let c = certify(profiles, cfg, counts, arr);
+    obs.candidate(&counts_label(profiles, counts), c.cost,
+                  c.metrics.p99_ms, c.ok);
     memo.insert(counts.to_vec(), c.clone());
     c
 }
@@ -264,6 +328,32 @@ fn plan_from_counts(profiles: &ProfileMatrix, counts: Vec<usize>,
 /// overall cheapest certified composition wins, so enabling it never
 /// returns a costlier plan for the same inputs.
 pub fn plan(profiles: &ProfileMatrix, cfg: &PlanCfg) -> Verdict {
+    plan_inner(profiles, cfg, &mut PlanObs::off())
+}
+
+/// [`plan`] with observability attached: every actually-simulated
+/// candidate lands as a slice on the planner's trace track (when
+/// `rec` is set) and as a one-line stderr progress report (when
+/// `progress` is set). The returned verdict is identical to
+/// [`plan`]'s — observation never steers the search.
+pub fn plan_traced(profiles: &ProfileMatrix, cfg: &PlanCfg,
+                   mut rec: Option<&mut TraceBuffer>, progress: bool)
+    -> Verdict {
+    if let Some(r) = rec.as_deref_mut() {
+        r.process(PID_PLAN, "capacity planner");
+        r.track(PID_PLAN, 0, "candidates");
+    }
+    let mut obs = PlanObs { rec, progress, seq: 0 };
+    let verdict = plan_inner(profiles, cfg, &mut obs);
+    let certified = obs.seq;
+    if let Some(r) = obs.rec {
+        r.gauge("plan/candidates", certified as f64);
+    }
+    verdict
+}
+
+fn plan_inner(profiles: &ProfileMatrix, cfg: &PlanCfg,
+              obs: &mut PlanObs) -> Verdict {
     // Contract guards (defence in depth — the CLI validates too): a
     // non-positive rate or SLO can never be served, and zero requests
     // would "certify" every composition vacuously.
@@ -362,7 +452,7 @@ pub fn plan(profiles: &ProfileMatrix, cfg: &PlanCfg) -> Verdict {
             let mut counts = vec![0usize; profiles.devices.len()];
             counts[d] = n;
             let cert = certify_memo(profiles, cfg, &counts, &arr,
-                                    &mut memo);
+                                    &mut memo, obs);
             last_p99 = cert.metrics.p99_ms;
             if cert.ok {
                 certified = Some((counts, cert));
@@ -388,7 +478,8 @@ pub fn plan(profiles: &ProfileMatrix, cfg: &PlanCfg) -> Verdict {
     }
 
     if cfg.mixed {
-        match plan_mixed(profiles, cfg, &feasible, &arr, &mut memo) {
+        match plan_mixed(profiles, cfg, &feasible, &arr, &mut memo,
+                         obs) {
             Ok(mixed) => {
                 let better = match &best {
                     // Strictly cheaper only: a homogeneous plan of the
@@ -410,7 +501,9 @@ pub fn plan(profiles: &ProfileMatrix, cfg: &PlanCfg) -> Verdict {
     };
     match cfg.faults {
         None => Verdict::Feasible(base),
-        Some(scenario) => harden(profiles, cfg, scenario, base, &arr),
+        Some(scenario) => {
+            harden(profiles, cfg, scenario, base, &arr, obs)
+        }
     }
 }
 
@@ -421,13 +514,14 @@ pub fn plan(profiles: &ProfileMatrix, cfg: &PlanCfg) -> Verdict {
 /// plan is never smaller or cheaper-by-removal than the capacity plan
 /// it extends — availability can only cost extra boards.
 fn harden(profiles: &ProfileMatrix, cfg: &PlanCfg, scenario: Scenario,
-          base: FleetPlan, arr: &[super::Request]) -> Verdict {
+          base: FleetPlan, arr: &[super::Request], obs: &mut PlanObs)
+    -> Verdict {
     let span = arr.last().map(|r| r.arrival_ms).unwrap_or(0.0);
     let fault_free = base.boards.len();
     let mut counts = base.device_counts;
     loop {
         match certify_fault(profiles, cfg, &counts, arr, scenario,
-                            span) {
+                            span, obs) {
             Ok(cert) => {
                 let mut plan = plan_from_counts(profiles, counts, cert);
                 plan.fault = Some(scenario.name().to_string());
@@ -468,7 +562,7 @@ fn harden(profiles: &ProfileMatrix, cfg: &PlanCfg, scenario: Scenario,
 /// failing instance's reason.
 fn certify_fault(profiles: &ProfileMatrix, cfg: &PlanCfg,
                  counts: &[usize], arr: &[super::Request],
-                 scenario: Scenario, span_ms: f64)
+                 scenario: Scenario, span_ms: f64, obs: &mut PlanObs)
     -> Result<Certified, String> {
     let boards = compose_boards(counts, profiles.models.len());
     let cost: f64 = counts
@@ -501,6 +595,13 @@ fn certify_fault(profiles: &ProfileMatrix, cfg: &PlanCfg,
         };
         let metrics = simulate_fleet(profiles, &fc, arr);
         let lost = metrics.shed + metrics.failed + metrics.dropped;
+        let instance_ok = metrics.completed > 0
+            && metrics.p99_ms <= cfg.slo_ms
+            && lost as f64 <= cfg.shed_cap * offered as f64;
+        obs.candidate(
+            &format!("{}@{}", counts_label(profiles, counts),
+                     scenario.name()),
+            cost, metrics.p99_ms, instance_ok);
         if metrics.completed == 0 {
             return Err(format!("0 of {offered} requests completed"));
         }
@@ -530,7 +631,8 @@ fn certify_fault(profiles: &ProfileMatrix, cfg: &PlanCfg,
 /// the search produced none.
 fn plan_mixed(profiles: &ProfileMatrix, cfg: &PlanCfg,
               feasible: &[DeviceCand], arr: &[super::Request],
-              memo: &mut HashMap<Vec<usize>, Certified>)
+              memo: &mut HashMap<Vec<usize>, Certified>,
+              obs: &mut PlanObs)
     -> Result<FleetPlan, String> {
     if feasible.len() < 2 {
         return Err("fewer than two device types serve the whole model \
@@ -573,7 +675,7 @@ fn plan_mixed(profiles: &ProfileMatrix, cfg: &PlanCfg,
              {}-board cap", cfg.max_boards))?;
     let mut counts = vec![0usize; profiles.devices.len()];
     counts[seed_dev.d] = lb_of(seed_dev);
-    let mut cur = certify_memo(profiles, cfg, &counts, arr, memo);
+    let mut cur = certify_memo(profiles, cfg, &counts, arr, memo, obs);
 
     // Grow one board at a time until certified: try every device type,
     // prefer a certifying addition at the lowest cost, otherwise the
@@ -582,7 +684,8 @@ fn plan_mixed(profiles: &ProfileMatrix, cfg: &PlanCfg,
         let mut best_add: Option<(usize, Certified, bool, f64)> = None;
         for c in feasible {
             counts[c.d] += 1;
-            let cand = certify_memo(profiles, cfg, &counts, arr, memo);
+            let cand = certify_memo(profiles, cfg, &counts, arr, memo,
+                                    obs);
             counts[c.d] -= 1;
             let gain = (cur.metrics.p99_ms - cand.metrics.p99_ms)
                 / profiles.costs[c.d];
@@ -626,7 +729,8 @@ fn plan_mixed(profiles: &ProfileMatrix, cfg: &PlanCfg,
         let mut best_move: Option<(Vec<usize>, Certified)> = None;
         let mut consider = |cand_counts: Vec<usize>,
                             best_move: &mut Option<(Vec<usize>,
-                                                    Certified)>| {
+                                                    Certified)>,
+                            obs: &mut PlanObs| {
             if cost_of(&cand_counts) >= cur.cost - 1e-12 {
                 return; // not strictly cheaper
             }
@@ -639,7 +743,7 @@ fn plan_mixed(profiles: &ProfileMatrix, cfg: &PlanCfg,
                 }
             }
             let cert = certify_memo(profiles, cfg, &cand_counts, arr,
-                                    memo);
+                                    memo, obs);
             if cert.ok {
                 *best_move = Some((cand_counts, cert));
             }
@@ -651,7 +755,7 @@ fn plan_mixed(profiles: &ProfileMatrix, cfg: &PlanCfg,
             if total(&counts) > 1 {
                 let mut c = counts.clone();
                 c[rm.d] -= 1;
-                consider(c, &mut best_move);
+                consider(c, &mut best_move, obs);
             }
             for add in feasible {
                 if add.d == rm.d {
@@ -660,7 +764,7 @@ fn plan_mixed(profiles: &ProfileMatrix, cfg: &PlanCfg,
                 let mut c = counts.clone();
                 c[rm.d] -= 1;
                 c[add.d] += 1;
-                consider(c, &mut best_move);
+                consider(c, &mut best_move, obs);
             }
         }
         match best_move {

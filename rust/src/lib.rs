@@ -34,6 +34,7 @@ pub mod coordinator;
 pub mod device;
 pub mod fleet;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod perf;
 pub mod quant;

@@ -4,13 +4,15 @@
 //! harflow3d optimize <model> <device> [--seeds N] [--seed S] [--fast]
 //!                    [--chains K [--exchange-every T]]
 //!                    [--design-out out.json]
+//!                    [--trace-out t.json] [--metrics-out m.jsonl]
+//!                    [--quiet]
 //! harflow3d schedule <model> <device> [--fast]        dump Φ_G summary
 //! harflow3d simulate <model> <device> [--fast]        cycle-approx run
 //! harflow3d check <model> [device] [--design d.json] [--format json]
 //!                                 static verifier (docs/diagnostics.md)
 //! harflow3d sweep [--models a,b] [--devices x,y] [--bits 16,8]
 //!                 [--chains K] [--jobs J] [--seed S] [--fast]
-//!                 [--out points.json]           model x device x bits DSE
+//!                 [--out points.json] [--quiet]  model x device x bits DSE
 //! harflow3d quant <model> [device] [--bits B] [--weight-bits B]
 //!                 [--act-bits B] [--override l=W:A,...]
 //!                 [--min-sqnr-db F] [--search] [--fast]
@@ -22,9 +24,12 @@
 //!                 [--max-boards N] [--seed S] [--trace file]
 //!                 [--faults crash|n-1|straggler|overload|flaky|chaos]
 //!                 [--deadline-ms D] [--retries N] [--shed]
-//!                 [--profiles points.json] [--fast]   serving sim + planner
+//!                 [--profiles points.json] [--fast]
+//!                 [--trace-out t.json] [--metrics-out m.jsonl]
+//!                 [--quiet]                           serving sim + planner
 //! harflow3d report <table2|table3|table4|table5|table6|
-//!                   fig1|fig4|fig6|fig7|fig8|ablation|fleet|all> [--fast]
+//!                   fig1|fig4|fig6|fig7|fig8|ablation|fleet|
+//!                   convergence|all> [--fast]
 //! harflow3d serve [--clips N] [--tiled] [--no-verify]  e2e PJRT serving
 //! harflow3d export <model> <out.json>                  ONNX-JSON export
 //! harflow3d devices | models                           list targets
@@ -34,6 +39,15 @@
 //! multi-chain engine: K annealing chains on K threads with periodic
 //! best-design exchange, reproducible for a fixed `--seed` (K = 1 is
 //! bit-identical to the sequential engine).
+//!
+//! `--trace-out` writes a Chrome Trace Event Format timeline (open it
+//! at <https://ui.perfetto.dev>) and `--metrics-out` a JSON-lines
+//! metrics snapshot — SA convergence telemetry on the DSE commands,
+//! the full board/request timeline on `fleet`. Both are deterministic
+//! per seed and leave every stdout byte-pin and every computed result
+//! bit-identical (obs subsystem, docs/observability.md). `--quiet`
+//! suppresses the stderr progress lines the DSE restarts / exchange
+//! barriers / sweep points print by default.
 //!
 //! `optimize`/`schedule`/`simulate`/`generate` gate their results
 //! through the static verifier (`H3D-0xx` diagnostics, catalogued in
@@ -74,18 +88,32 @@ fn opt_cfg(args: &Args) -> Result<OptCfg> {
 fn run_dse(args: &Args, m: &harflow3d::model::ModelGraph,
            dev: &harflow3d::device::Device, rm: &ResourceModel)
     -> Result<harflow3d::optim::OptResult> {
+    run_dse_obs(args, m, dev, rm, false).map(|(r, _)| r)
+}
+
+/// [`run_dse`] with observability hooks: `telemetry` asks every chain
+/// for SA convergence samples (`--trace-out`/`--metrics-out`), and
+/// `--quiet` suppresses the stderr progress lines. Neither changes
+/// the computed result (pinned by rust/tests/obs.rs).
+fn run_dse_obs(args: &Args, m: &harflow3d::model::ModelGraph,
+               dev: &harflow3d::device::Device, rm: &ResourceModel,
+               telemetry: bool)
+    -> Result<(harflow3d::optim::OptResult,
+               Vec<harflow3d::obs::SaTelemetry>)> {
+    let progress = !args.flag("quiet");
     let chains = args.opt_usize("chains", 0);
     if chains > 0 {
         let par = harflow3d::optim::parallel::ParCfg {
             chains,
             exchange_every: args.opt_usize("exchange-every", 32),
         };
-        harflow3d::optim::parallel::optimize_parallel(
-            m, dev, rm, opt_cfg(args)?, &par)
+        harflow3d::optim::parallel::optimize_parallel_obs(
+            m, dev, rm, opt_cfg(args)?, &par, telemetry, progress)
             .map_err(|e| anyhow!(e))
     } else {
         let n_seeds = args.opt_u64("seeds", 6);
-        optim::optimize_multi(m, dev, rm, opt_cfg(args)?, n_seeds)
+        optim::optimize_multi_obs(m, dev, rm, opt_cfg(args)?, n_seeds,
+                                  telemetry, progress)
             .map_err(|e| anyhow!(e))
     }
 }
@@ -109,7 +137,13 @@ fn main() -> Result<()> {
             let dev = device::by_name(dev_name)
                 .ok_or(anyhow!("unknown device {dev_name}"))?;
             let rm = ResourceModel::default_fit();
-            let r = run_dse(&args, &m, &dev, &rm)?;
+            let trace_out = args.opt("trace-out").map(str::to_string);
+            let metrics_out =
+                args.opt("metrics-out").map(str::to_string);
+            let want_obs =
+                trace_out.is_some() || metrics_out.is_some();
+            let (r, tels) = run_dse_obs(&args, &m, &dev, &rm,
+                                        want_obs)?;
             if !args.flag("no-check") {
                 harflow3d::check::gate_design(&m, &r.design, &dev, &rm)
                     .map_err(|e| anyhow!(e))?;
@@ -117,6 +151,22 @@ fn main() -> Result<()> {
             if let Some(path) = args.opt("design-out") {
                 std::fs::write(path, r.design.to_json().to_string())?;
                 println!("wrote design to {path}");
+            }
+            if want_obs {
+                let mut buf = harflow3d::obs::TraceBuffer::new();
+                harflow3d::obs::sa_to_trace(&tels, &mut buf);
+                if let Some(path) = &trace_out {
+                    std::fs::write(path, buf.chrome_trace())?;
+                    eprintln!(
+                        "[{}] wrote SA trace ({} events) to {path} - \
+                         open at https://ui.perfetto.dev",
+                        args.command, buf.len());
+                }
+                if let Some(path) = &metrics_out {
+                    std::fs::write(path, buf.metrics_jsonl())?;
+                    eprintln!("[{}] wrote metrics snapshot to {path}",
+                              args.command);
+                }
             }
             let gops = m.total_macs() as f64 / 1e9 / (r.latency_ms / 1e3);
             println!(
@@ -260,7 +310,8 @@ fn main() -> Result<()> {
                 jobs: args.opt_usize("jobs", jobs_default),
             };
             let t0 = std::time::Instant::now();
-            let rows = report::sweep_points(&cfg).map_err(|e| anyhow!(e))?;
+            let rows = report::sweep_points_progress(
+                &cfg, !args.flag("quiet")).map_err(|e| anyhow!(e))?;
             println!("{}", report::sweep_table(
                 &cfg, &rows, t0.elapsed().as_secs_f64()));
             // Machine-readable JSON-lines (one object per point) for

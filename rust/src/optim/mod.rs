@@ -25,6 +25,7 @@ pub mod transforms;
 use crate::device::{Device, Resources};
 use crate::model::layer::LayerKind;
 use crate::model::ModelGraph;
+use crate::obs::{SaOutcome, SaSample, SaTelemetry};
 use crate::perf::BwEnv;
 use crate::resource::{NodeResCache, ResourceModel};
 use crate::sched::{self, LatencyMemo, SchedCfg};
@@ -502,6 +503,12 @@ pub struct Chain<'a> {
     /// SQNR proxy (no per-candidate allocation on the hot path).
     sqnr_scratch: Vec<f64>,
     sqnr_sinks: Vec<bool>,
+    /// SA convergence telemetry (obs subsystem), recorded only when
+    /// enabled via [`Chain::enable_telemetry`]. Recording draws no RNG
+    /// and changes no float computation, so traced and untraced chains
+    /// stay bit-identical; the disabled path is one `is-None` branch
+    /// per sample point (hot-path contract of `ci/check_bench.py`).
+    telemetry: Option<Box<SaTelemetry>>,
 }
 
 impl<'a> Chain<'a> {
@@ -553,7 +560,38 @@ impl<'a> Chain<'a> {
             quant_floor,
             sqnr_scratch: Vec::new(),
             sqnr_sinks,
+            telemetry: None,
         })
+    }
+
+    /// Start recording SA convergence telemetry under chain index
+    /// `chain` (the RNG stream / restart index, used as the Perfetto
+    /// track id).
+    pub fn enable_telemetry(&mut self, chain: u64) {
+        self.telemetry = Some(Box::new(SaTelemetry::new(chain)));
+    }
+
+    /// Take the recorded telemetry (None when never enabled). Call
+    /// before [`Chain::finish`] consumes the chain.
+    pub fn take_telemetry(&mut self) -> Option<SaTelemetry> {
+        self.telemetry.take().map(|t| *t)
+    }
+
+    /// Record one telemetry sample for a move that produced a
+    /// candidate. `cand_cycles` is the candidate's latency where it
+    /// was priced, or the incumbent's for infeasible candidates.
+    fn record_sample(&mut self, kind: transforms::MoveKind,
+                     outcome: SaOutcome, cand_cycles: f64) {
+        if let Some(t) = self.telemetry.as_deref_mut() {
+            t.samples.push(SaSample {
+                iter: self.iter,
+                kind: kind.name(),
+                outcome,
+                cand_ms: cand_cycles / self.cycles_per_ms,
+                best_ms: self.best_lat / self.cycles_per_ms,
+                tau: self.tau,
+            });
+        }
     }
 
     /// Annealing complete (temperature at/below the floor)?
@@ -581,10 +619,10 @@ impl<'a> Chain<'a> {
             self.iter += 1;
             let prev_total = self.ev.lat.total;
             self.log.begin(&self.design);
-            let touched = transforms::random_move_logged(
+            let touched = transforms::random_move_logged_kind(
                 self.model, &mut self.design, &mut self.rng, &self.cfg,
                 &mut self.log);
-            let Some(touched) = touched else {
+            let Some((kind, touched)) = touched else {
                 self.log.undo(&mut self.design); // no-op: nothing logged
                 continue;
             };
@@ -595,6 +633,8 @@ impl<'a> Chain<'a> {
             // pipeline outputs.
             if self.design.validate_nodes(self.model, &touched).is_err() {
                 self.log.undo(&mut self.design);
+                self.record_sample(kind, SaOutcome::Infeasible,
+                                   prev_total);
                 continue;
             }
             // Accuracy budget (quant subsystem, search mode only).
@@ -617,6 +657,8 @@ impl<'a> Chain<'a> {
                         &mut self.sqnr_scratch);
                     if sqnr < floor {
                         self.log.undo(&mut self.design);
+                        self.record_sample(kind, SaOutcome::Infeasible,
+                                           prev_total);
                         continue;
                     }
                 }
@@ -625,6 +667,8 @@ impl<'a> Chain<'a> {
                                               &self.log, &touched);
             if !cand_res.fits(&self.device.avail) {
                 self.ev.reject(&mut self.design, &mut self.log);
+                self.record_sample(kind, SaOutcome::Infeasible,
+                                   prev_total);
                 continue;
             }
             let new_total = self.ev.eval_latency(
@@ -654,8 +698,12 @@ impl<'a> Chain<'a> {
                                        self.best_lat
                                            / self.cycles_per_ms));
                 }
+                self.record_sample(kind, SaOutcome::Accepted,
+                                   new_total);
             } else {
                 self.ev.reject(&mut self.design, &mut self.log);
+                self.record_sample(kind, SaOutcome::Rejected,
+                                   new_total);
             }
         }
         self.tau *= self.cfg.cooling;
@@ -717,6 +765,26 @@ pub fn optimize(model: &ModelGraph, device: &Device, rm: &ResourceModel,
     Optimizer::new(model, device, rm, cfg).run()
 }
 
+/// [`optimize`] with SA convergence telemetry recording on. The
+/// returned [`OptResult`] is bit-identical to the untraced run
+/// (telemetry draws no RNG — pinned by `rust/tests/obs.rs`).
+pub fn optimize_traced(model: &ModelGraph, device: &Device,
+                       rm: &ResourceModel, cfg: OptCfg)
+    -> Result<(OptResult, SaTelemetry), String> {
+    let opt = Optimizer::new(model, device, rm, cfg);
+    let mut chain = Chain::new(&opt, 0)?;
+    chain.enable_telemetry(0);
+    while !chain.done() {
+        chain.step_temp();
+    }
+    let tel = chain.take_telemetry().unwrap_or_default();
+    let r = chain.finish();
+    r.design.validate(model).map_err(|e| {
+        format!("optimizer produced an invalid design: {e}")
+    })?;
+    Ok((r, tel))
+}
+
 /// Best-of-N restarts (SA is stochastic; the toolflow launches a small
 /// portfolio of annealing runs in parallel threads and keeps the best
 /// design — restarts are embarrassingly parallel).
@@ -730,6 +798,20 @@ pub fn optimize(model: &ModelGraph, device: &Device, rm: &ResourceModel,
 pub fn optimize_multi(model: &ModelGraph, device: &Device,
                       rm: &ResourceModel, cfg: OptCfg, n_seeds: u64)
     -> Result<OptResult, String> {
+    optimize_multi_obs(model, device, rm, cfg, n_seeds, false, false)
+        .map(|(r, _)| r)
+}
+
+/// [`optimize_multi`] with observability hooks: when `telemetry` is
+/// set, every restart records SA convergence telemetry (returned in
+/// worker order, `SaTelemetry::chain` = restart index); when
+/// `progress` is set, one line per finished restart goes to stderr
+/// (stdout byte-pins are unaffected). Both off reproduces
+/// [`optimize_multi`] exactly — same derived seeds, same tie-breaking.
+pub fn optimize_multi_obs(model: &ModelGraph, device: &Device,
+                          rm: &ResourceModel, cfg: OptCfg, n_seeds: u64,
+                          telemetry: bool, progress: bool)
+    -> Result<(OptResult, Vec<SaTelemetry>), String> {
     std::thread::scope(|scope| {
         let handles: Vec<_> = (0..n_seeds)
             .map(|i| {
@@ -737,18 +819,47 @@ pub fn optimize_multi(model: &ModelGraph, device: &Device,
                     seed: cfg.seed.wrapping_add(i.wrapping_mul(0x9E37)),
                     ..cfg.clone()
                 };
-                scope.spawn(move || optimize(model, device, rm, cfg_i))
+                scope.spawn(move || -> Result<_, String> {
+                    let opt = Optimizer::new(model, device, rm, cfg_i);
+                    let mut chain = Chain::new(&opt, 0)?;
+                    if telemetry {
+                        chain.enable_telemetry(i);
+                    }
+                    while !chain.done() {
+                        chain.step_temp();
+                    }
+                    let tel = chain.take_telemetry();
+                    let r = chain.finish();
+                    r.design.validate(model).map_err(|e| {
+                        format!("optimizer produced an invalid \
+                                 design: {e}")
+                    })?;
+                    Ok((r, tel))
+                })
             })
             .collect();
         let mut best: Option<OptResult> = None;
-        for h in handles {
-            let r = h.join().map_err(|_| "SA worker panicked")??;
+        let mut tels: Vec<SaTelemetry> = Vec::new();
+        for (i, h) in handles.into_iter().enumerate() {
+            let (r, tel) =
+                h.join().map_err(|_| "SA worker panicked")??;
+            if progress {
+                eprintln!(
+                    "[optimize] restart {}/{}: best {:.3} ms \
+                     ({} accepted / {} moves)",
+                    i + 1, n_seeds, r.latency_ms, r.accepted_moves,
+                    r.iterations);
+            }
+            if let Some(t) = tel {
+                tels.push(t);
+            }
             best = Some(match best {
                 Some(b) if b.latency_cycles <= r.latency_cycles => b,
                 _ => r,
             });
         }
-        best.ok_or_else(|| "no seeds".to_string())
+        let best = best.ok_or_else(|| "no seeds".to_string())?;
+        Ok((best, tels))
     })
 }
 

@@ -119,18 +119,52 @@ fn merge(results: Vec<OptResult>) -> OptResult {
 pub fn optimize_parallel(model: &ModelGraph, device: &Device,
                          rm: &ResourceModel, cfg: OptCfg, par: &ParCfg)
     -> Result<OptResult, String> {
+    optimize_parallel_obs(model, device, rm, cfg, par, false, false)
+        .map(|(r, _)| r)
+}
+
+/// [`optimize_parallel`] with observability hooks: when `telemetry`
+/// is set, every chain records SA convergence telemetry (returned in
+/// chain order); when `progress` is set, one line per exchange barrier
+/// goes to stderr (stdout byte-pins are unaffected). Both off
+/// reproduces [`optimize_parallel`] exactly — recording draws no RNG
+/// and the barrier/exchange schedule is untouched (pinned by
+/// `rust/tests/obs.rs`).
+pub fn optimize_parallel_obs(model: &ModelGraph, device: &Device,
+                             rm: &ResourceModel, cfg: OptCfg,
+                             par: &ParCfg, telemetry: bool,
+                             progress: bool)
+    -> Result<(OptResult, Vec<crate::obs::SaTelemetry>), String> {
     let k = par.chains.max(1);
     let opt = Optimizer::new(model, device, rm, cfg);
     if k == 1 {
         // One chain IS the sequential engine — delegating makes the
         // bit-identity contract true by construction.
-        return opt.run();
+        let mut chain = Chain::new(&opt, 0)?;
+        if telemetry {
+            chain.enable_telemetry(0);
+        }
+        while !chain.done() {
+            chain.step_temp();
+        }
+        let tels: Vec<_> = chain.take_telemetry().into_iter().collect();
+        let r = chain.finish();
+        r.design.validate(model).map_err(|e| {
+            format!("optimizer produced an invalid design: {e}")
+        })?;
+        return Ok((r, tels));
     }
     let mut chains = (0..k as u64)
         .map(|i| Chain::new(&opt, i))
         .collect::<Result<Vec<_>, _>>()?;
+    if telemetry {
+        for (i, chain) in chains.iter_mut().enumerate() {
+            chain.enable_telemetry(i as u64);
+        }
+    }
 
     let rounds = par.exchange_every.max(1);
+    let mut barrier = 0usize;
     while chains.iter().any(|c| !c.done()) {
         std::thread::scope(|scope| {
             for chain in chains.iter_mut() {
@@ -144,6 +178,16 @@ pub fn optimize_parallel(model: &ModelGraph, device: &Device,
                 });
             }
         });
+        barrier += 1;
+        if progress {
+            let best = chains
+                .iter()
+                .map(Chain::best_latency)
+                .fold(f64::INFINITY, f64::min);
+            eprintln!(
+                "[optimize] barrier {barrier}: {k} chains, best \
+                 {best:.0} cycles");
+        }
         // Exchanging after the final round would be wasted work:
         // chains share one temperature schedule, so they all finish
         // together, and merge() already selects the global best.
@@ -152,13 +196,17 @@ pub fn optimize_parallel(model: &ModelGraph, device: &Device,
         }
     }
 
+    let tels: Vec<_> = chains
+        .iter_mut()
+        .filter_map(Chain::take_telemetry)
+        .collect();
     let r = merge(chains.into_iter().map(Chain::finish).collect());
     // Same result-level §V-B validation the sequential engine runs —
     // the merged best came from a chain, but verify after compaction.
     r.design.validate(model).map_err(|e| {
         format!("optimizer produced an invalid design: {e}")
     })?;
-    Ok(r)
+    Ok((r, tels))
 }
 
 #[cfg(test)]

@@ -343,17 +343,45 @@ pub fn fit_dims_to_max(model: &ModelGraph, design: &mut Design, n: usize) {
     refix_folding(node);
 }
 
+/// The transformation family a random move dispatched to — recorded
+/// in SA convergence telemetry (`obs::SaSample`) and named on the
+/// Perfetto SA tracks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MoveKind {
+    Wordlength,
+    Reshape,
+    Coarse,
+    Fine,
+    Separate,
+    Combine,
+}
+
+impl MoveKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MoveKind::Wordlength => "wordlength",
+            MoveKind::Reshape => "reshape",
+            MoveKind::Coarse => "coarse",
+            MoveKind::Fine => "fine",
+            MoveKind::Separate => "separate",
+            MoveKind::Combine => "combine",
+        }
+    }
+}
+
 /// Apply one random transformation in place, recording every mutation
-/// in `log` (call `log.begin(design)` first). Returns the touched node
-/// indices (whose mapped layers need re-scheduling), or None if the
-/// move was a no-op — in which case nothing was mutated.
+/// in `log` (call `log.begin(design)` first). Returns the dispatched
+/// move kind plus the touched node indices (whose mapped layers need
+/// re-scheduling), or None if the move was a no-op — in which case
+/// nothing was mutated.
 ///
 /// The RNG consumption is identical for every dispatch path whether or
 /// not the caller later undoes the move, which is what keeps SA runs
 /// bit-identical to the historical clone-per-candidate engine.
-pub fn random_move_logged(model: &ModelGraph, design: &mut Design,
-                          rng: &mut Rng, cfg: &OptCfg,
-                          log: &mut UndoLog) -> Option<Vec<usize>> {
+pub fn random_move_logged_kind(model: &ModelGraph, design: &mut Design,
+                               rng: &mut Rng, cfg: &OptCfg,
+                               log: &mut UndoLog)
+                               -> Option<(MoveKind, Vec<usize>)> {
     let used = used_nodes(design);
     if used.is_empty() {
         return None;
@@ -368,7 +396,8 @@ pub fn random_move_logged(model: &ModelGraph, design: &mut Design,
     let roll = if cfg.quant_search() {
         if roll >= 0.875 {
             log.save_node(design, n);
-            return wordlength(design, rng, n).then(|| vec![n]);
+            return wordlength(design, rng, n)
+                .then(|| (MoveKind::Wordlength, vec![n]));
         }
         roll / 0.875
     } else {
@@ -378,19 +407,19 @@ pub fn random_move_logged(model: &ModelGraph, design: &mut Design,
         // Baseline hardware cannot tile below its compile-time dims:
         // feature-map reshaping is unavailable, and combination /
         // separation must re-size nodes to the max of their layers.
-        let touched = if roll < 0.45 {
+        let (kind, touched) = if roll < 0.45 {
             log.save_node(design, n);
-            coarse(design, rng, n).then(|| vec![n])
+            (MoveKind::Coarse, coarse(design, rng, n).then(|| vec![n]))
         } else if roll < 0.60 {
             log.save_node(design, n);
-            fine(design, rng, n).then(|| vec![n])
+            (MoveKind::Fine, fine(design, rng, n).then(|| vec![n]))
         } else if cfg.enable_combine && roll < 0.80 {
-            separate(model, design, rng, cfg.l_e, log)
+            (MoveKind::Separate, separate(model, design, rng, cfg.l_e, log))
         } else if cfg.enable_combine {
-            combine(model, design, rng, cfg.n_c, log)
+            (MoveKind::Combine, combine(model, design, rng, cfg.n_c, log))
         } else {
             log.save_node(design, n);
-            coarse(design, rng, n).then(|| vec![n])
+            (MoveKind::Coarse, coarse(design, rng, n).then(|| vec![n]))
         };
         if let Some(ts) = &touched {
             for &t in ts {
@@ -398,26 +427,38 @@ pub fn random_move_logged(model: &ModelGraph, design: &mut Design,
                 fit_dims_to_max(model, design, t);
             }
         }
-        return touched;
+        return touched.map(|t| (kind, t));
     }
     if roll < 0.30 {
         log.save_node(design, n);
-        reshape(model, design, rng, n).then(|| vec![n])
+        reshape(model, design, rng, n)
+            .then(|| (MoveKind::Reshape, vec![n]))
     } else if roll < 0.60 {
         log.save_node(design, n);
-        coarse(design, rng, n).then(|| vec![n])
+        coarse(design, rng, n).then(|| (MoveKind::Coarse, vec![n]))
     } else if roll < 0.75 {
         log.save_node(design, n);
-        fine(design, rng, n).then(|| vec![n])
+        fine(design, rng, n).then(|| (MoveKind::Fine, vec![n]))
     } else if cfg.enable_combine && roll < 0.875 {
         separate(model, design, rng, cfg.l_e, log)
+            .map(|t| (MoveKind::Separate, t))
     } else if cfg.enable_combine {
         combine(model, design, rng, cfg.n_c, log)
+            .map(|t| (MoveKind::Combine, t))
     } else {
         // Combine/separate disabled: fall back to a folding move.
         log.save_node(design, n);
-        coarse(design, rng, n).then(|| vec![n])
+        coarse(design, rng, n).then(|| (MoveKind::Coarse, vec![n]))
     }
+}
+
+/// [`random_move_logged_kind`] without the kind tag, for callers that
+/// don't record telemetry.
+pub fn random_move_logged(model: &ModelGraph, design: &mut Design,
+                          rng: &mut Rng, cfg: &OptCfg,
+                          log: &mut UndoLog) -> Option<Vec<usize>> {
+    random_move_logged_kind(model, design, rng, cfg, log)
+        .map(|(_, t)| t)
 }
 
 /// Apply one random transformation; returns the touched node indices

@@ -746,6 +746,16 @@ pub struct SweepRow {
 /// seed (the multi-chain engine included), so the results do not
 /// depend on scheduling.
 pub fn sweep_points(cfg: &SweepCfg) -> Result<Vec<SweepRow>, String> {
+    sweep_points_progress(cfg, false)
+}
+
+/// [`sweep_points`] with optional per-point progress reporting: when
+/// `progress` is set, one line per finished design point goes to
+/// stderr (stdout byte-pins are unaffected). `progress = false` is
+/// exactly [`sweep_points`] — the worker pool, work order, and every
+/// computed point are untouched.
+pub fn sweep_points_progress(cfg: &SweepCfg, progress: bool)
+    -> Result<Vec<SweepRow>, String> {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Mutex;
 
@@ -767,6 +777,7 @@ pub fn sweep_points(cfg: &SweepCfg) -> Result<Vec<SweepRow>, String> {
     let results: Mutex<Vec<Option<Result<SweepPoint, String>>>> =
         Mutex::new(vec![None; n]);
     let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
     let workers = cfg.jobs.max(1).min(n);
 
     std::thread::scope(|scope| {
@@ -819,6 +830,19 @@ pub fn sweep_points(cfg: &SweepCfg) -> Result<Vec<SweepRow>, String> {
                         sa_states: r.iterations,
                     })
                 })();
+                if progress {
+                    let finished =
+                        done.fetch_add(1, Ordering::Relaxed) + 1;
+                    let status = match &out {
+                        Ok(p) => format!(
+                            "{:.2} ms, {} SA states",
+                            p.latency_ms, p.sa_states),
+                        Err(e) => format!("error: {e}"),
+                    };
+                    eprintln!(
+                        "[sweep] {finished}/{n} {mname}@{dname} \
+                         w{bits}: {status}");
+                }
                 results.lock().unwrap()[i] = Some(out);
             });
         }
@@ -904,8 +928,16 @@ pub fn sweep_jsonl(rows: &[SweepRow]) -> String {
 
 /// Run the sweep and render the table (the CLI's plain path).
 pub fn sweep(cfg: &SweepCfg) -> Result<String, String> {
+    sweep_progress(cfg, false)
+}
+
+/// [`sweep`] with per-point stderr progress (see
+/// [`sweep_points_progress`]); the rendered table is byte-identical
+/// either way.
+pub fn sweep_progress(cfg: &SweepCfg, progress: bool)
+    -> Result<String, String> {
     let t0 = std::time::Instant::now();
-    let rows = sweep_points(cfg)?;
+    let rows = sweep_points_progress(cfg, progress)?;
     Ok(sweep_table(cfg, &rows, t0.elapsed().as_secs_f64()))
 }
 
@@ -1009,6 +1041,68 @@ pub fn fleet_rep(cfg: &ReportCfg) -> String {
             t.render(), bt.render())
 }
 
+// ------------------------------------------------------------------------
+// Convergence — SA telemetry (obs subsystem): per-chain acceptance
+// behaviour and decimated best-latency curves for the multi-chain
+// engine. Not part of `all` (it re-runs the DSE with telemetry on);
+// ask for it with `report convergence`.
+// ------------------------------------------------------------------------
+
+pub fn convergence(cfg: &ReportCfg) -> String {
+    let rm = ResourceModel::default_fit();
+    let m = zoo::c3d();
+    let dev = device::by_name("zcu102").unwrap();
+    let par = optim::parallel::ParCfg { chains: 4, exchange_every: 32 };
+    let (r, tels) = match optim::parallel::optimize_parallel_obs(
+        &m, &dev, &rm, cfg.opt_cfg(), &par, true, false) {
+        Ok(v) => v,
+        Err(e) => return format!("convergence: {e}\n"),
+    };
+
+    let mut t = Table::new(&format!(
+        "SA convergence — C3D @ {}, {} chains (merged best {:.3} ms)",
+        dev.name, par.chains, r.latency_ms,
+    ))
+    .header(&["Chain", "Moves", "Accepted", "Accept %", "Infeasible",
+              "Best (ms)"]);
+    for tel in &tels {
+        let best = tel.best_curve().last().map(|&(_, ms)| ms);
+        t.row(vec![
+            format!("{}", tel.chain),
+            format!("{}", tel.proposed()),
+            format!("{}", tel.accepted()),
+            num(100.0 * tel.acceptance_rate(), 1),
+            format!("{}", tel.infeasible()),
+            best.map(|b| num(b, 3)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+
+    let mut out = t.render();
+    for tel in &tels {
+        let curve = tel.best_curve();
+        let Some(&last) = curve.last() else { continue };
+        // Same decimation idiom as fig4: ~8 waypoints plus the final
+        // best, so the curve reads at a glance.
+        let step = (curve.len() / 8).max(1);
+        let mut pts: Vec<String> = curve
+            .iter()
+            .step_by(step)
+            .map(|&(it, ms)| format!("{it}:{ms:.3}"))
+            .collect();
+        let tail = format!("{}:{:.3}", last.0, last.1);
+        if pts.last() != Some(&tail) {
+            pts.push(tail);
+        }
+        out.push_str(&format!("chain {} best-ms curve (iter:ms): {}\n",
+                              tel.chain, pts.join(" -> ")));
+    }
+    out.push_str(&format!(
+        "convergence: merged best {:.3} ms over {} SA states, \
+         {} accepted moves\n",
+        r.latency_ms, r.iterations, r.accepted_moves));
+    out
+}
+
 /// Run every report in paper order.
 pub fn all(cfg: &ReportCfg) -> String {
     let mut out = String::new();
@@ -1052,6 +1146,7 @@ pub fn by_name(which: &str, cfg: &ReportCfg) -> Option<String> {
         "ablation" => ablation(cfg),
         "ext" => ext(cfg),
         "fleet" => fleet_rep(cfg),
+        "convergence" => convergence(cfg),
         "all" => all(cfg),
         _ => return None,
     })

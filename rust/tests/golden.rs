@@ -240,6 +240,67 @@ fn fleet_cli_output_is_pinned_for_profiles_and_trace() {
 }
 
 #[test]
+fn fleet_cli_trace_out_is_deterministic_and_leaves_stdout_pinned() {
+    // The obs surface end-to-end: --trace-out/--metrics-out write
+    // byte-identical files run-to-run for a fixed seed, and the
+    // rendered stdout is byte-identical to a run without the flags
+    // (tracing must not perturb a single computed number).
+    let profiles = write_tmp(
+        "harflow3d_obs_profiles.jsonl",
+        "{\"bram\":100,\"device\":\"zcu102\",\"dsp\":64,\
+         \"dsp_pct\":2.5,\"ff\":1000,\"fill_ms\":4,\"gops\":50,\
+         \"latency_ms\":8,\"lut\":2000,\"model\":\"c3d\",\
+         \"reconfig_ms\":5,\"sa_states\":100,\"sim_ms\":10}\n");
+    let trace_out = std::env::temp_dir()
+        .join(format!("{}_harflow3d_obs_trace.json",
+                      std::process::id()));
+    let metrics_out = std::env::temp_dir()
+        .join(format!("{}_harflow3d_obs_metrics.jsonl",
+                      std::process::id()));
+    let base = [
+        "fleet", "--profiles", profiles.to_str().unwrap(),
+        "--boards", "2", "--rate", "150", "--requests", "300",
+        "--slo-ms", "100", "--seed", "7", "--faults", "crash",
+        "--deadline-ms", "80", "--retries", "2", "--quiet",
+    ];
+    let plain_args = Args::parse(base.iter().map(|s| s.to_string()));
+    let plain = fleet::cli::run(&plain_args).unwrap();
+
+    let run_traced = || {
+        let argv: Vec<String> = base
+            .iter()
+            .map(|s| s.to_string())
+            .chain([
+                "--trace-out".to_string(),
+                trace_out.to_str().unwrap().to_string(),
+                "--metrics-out".to_string(),
+                metrics_out.to_str().unwrap().to_string(),
+            ])
+            .collect();
+        let out = fleet::cli::run(&Args::parse(argv.into_iter()))
+            .unwrap();
+        (out,
+         std::fs::read_to_string(&trace_out).unwrap(),
+         std::fs::read_to_string(&metrics_out).unwrap())
+    };
+    let (out_a, trace_a, metrics_a) = run_traced();
+    let (out_b, trace_b, metrics_b) = run_traced();
+    assert_eq!(out_a, plain,
+               "--trace-out must not change the rendered output");
+    assert_eq!(out_a, out_b);
+    assert_eq!(trace_a, trace_b,
+               "trace must be byte-stable for a seed");
+    assert_eq!(metrics_a, metrics_b,
+               "metrics snapshot must be byte-stable for a seed");
+    // Perfetto-loadability floor: valid JSON with the expected shape
+    // (the full structural contract is pinned in rust/tests/obs.rs
+    // and gated by ci/check_trace.py).
+    let doc = Json::parse(&trace_a).unwrap();
+    assert!(matches!(doc.get("traceEvents"), Some(Json::Arr(evs))
+                     if !evs.is_empty()));
+}
+
+#[test]
 fn fleet_cli_errors_are_clean_strings() {
     // End-to-end regression for the CLI bugfix: bad inputs come back
     // as Err strings (printed as one-line diagnostics), never panics.
