@@ -49,6 +49,15 @@ pub struct BenchResult {
     /// extra event kinds and retries, so the regression gate refuses
     /// cross-scenario comparisons, mirroring `batch`/`bits`.
     pub fault: Option<String>,
+    /// Arrival process of the scenario (fleet benches only):
+    /// poisson/diurnal/flash/selfsim. Each generator shapes queueing
+    /// (and therefore events/sec) differently, so the regression gate
+    /// refuses cross-generator comparisons, mirroring `fault`.
+    pub arrivals: Option<String>,
+    /// Worker shards the arrival stream was generated across (fleet
+    /// benches only; 1 = unsharded). A different shard count is a
+    /// different stream, so the gate refuses cross-shard comparisons.
+    pub shards: Option<usize>,
 }
 
 #[allow(dead_code)]
@@ -85,6 +94,12 @@ impl BenchResult {
         }
         if let Some(f) = &self.fault {
             s.push_str(&format!(",\"fault\":\"{f}\""));
+        }
+        if let Some(a) = &self.arrivals {
+            s.push_str(&format!(",\"arrivals\":\"{a}\""));
+        }
+        if let Some(n) = self.shards {
+            s.push_str(&format!(",\"shards\":{n}"));
         }
         s.push('}');
         s
@@ -132,6 +147,8 @@ pub fn bench_rec<F: FnMut()>(name: &str, iters: usize, mut f: F)
         batch: None,
         bits: None,
         fault: None,
+        arrivals: None,
+        shards: None,
     }
 }
 

@@ -12,6 +12,9 @@
 //! the batching dimension. Fault-injected scenarios carry a `fault`
 //! field naming the scenario for the same reason: a crashed fleet
 //! processes Crash/Recover/Retry events a fault-free run never sees.
+//! Non-Poisson generator rows carry an `arrivals` field and sharded
+//! rows a `shards` field — a diurnal peak or a resharded stream is a
+//! different workload, not a regression.
 
 mod common;
 
@@ -138,6 +141,51 @@ fn main() {
         results.push(b);
     }
 
+    // Generator + sharding scenarios: the same 8-board slo-aware fleet
+    // under a diurnal arrival stream (peaks at 1.8x the mean rate, so
+    // queues breathe) and under the 4-shard generator (the stream the
+    // `--shards` fan-out produces — tagged so the gate never compares
+    // it against the unsharded row it deliberately differs from).
+    {
+        let mx = canned_matrix(2);
+        let n_boards = 8usize;
+        let rate = 0.85 * n_boards as f64 / (10.0 * 1e-3);
+        for (name, kind, shards) in [
+            ("fleet/sim 8 boards slo-aware 2 models diurnal",
+             arrivals::ArrivalKind::Diurnal, 1usize),
+            ("fleet/sim 8 boards slo-aware 2 models sharded4",
+             arrivals::ArrivalKind::Poisson, 4),
+        ] {
+            let arr = arrivals::sharded(kind, n_req, rate, 2, 7,
+                                        shards);
+            let cfg = FleetCfg {
+                boards: (0..n_boards)
+                    .map(|i| BoardSpec { device: 0, preload: i % 2 })
+                    .collect(),
+                policy: Policy::SloAware,
+                queue: QueueDiscipline::Fifo,
+                slo_ms: 60.0,
+                batch: BatchCfg::default(),
+                faults: FaultPlan::none(),
+                resilience: ResilienceCfg::none(),
+            };
+            let events = Cell::new(0usize);
+            let p99 = Cell::new(0.0f64);
+            let mut b = common::bench_rec(name, iters, || {
+                let met = fleet::simulate_fleet(&mx, &cfg, &arr);
+                events.set(met.events);
+                p99.set(met.p99_ms);
+                std::hint::black_box(&met);
+            });
+            b.events_per_sec = Some(events.get() as f64 / b.mean_s);
+            b.p99_ms = Some(p99.get());
+            b.batch = Some(1);
+            b.arrivals = Some(kind.name().to_string());
+            b.shards = Some(shards);
+            results.push(b);
+        }
+    }
+
     // Planner end-to-end: board-count search + certification sims,
     // homogeneous and mixed (two device types: the canned device plus
     // a half-speed, cheaper sibling).
@@ -172,6 +220,8 @@ fn main() {
             faults: None,
             resilience: ResilienceCfg::none(),
             shed_cap: 0.0,
+            arrivals: arrivals::ArrivalKind::Poisson,
+            shards: 1,
         };
         let p99 = Cell::new(0.0f64);
         let mut b = common::bench_rec(name, iters, || {

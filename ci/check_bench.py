@@ -21,7 +21,11 @@ rule — a width change redefines the workload, so throughput is never
 compared across widths; fault-injected fleet rows carry a ``fault``
 scenario name with the same rule again — a crashed or straggling
 fleet processes different event kinds, so its events/sec is never
-compared against a fault-free row or a different scenario's). Rows
+compared against a fault-free row or a different scenario's; rows
+carrying an ``arrivals`` generator name or a ``shards`` count follow
+the same rule — a diurnal peak or a resharded stream queues
+differently, so throughput is never compared across generators or
+shard counts). Rows
 present in only one of the two files
 are reported but never fail the gate — new benches must be able to
 land before a baseline exists for them.
@@ -151,7 +155,9 @@ def run_gate(args):
             redefined = False
             for key, what in (("batch", "batch cap"),
                               ("bits", "wordlength"),
-                              ("fault", "fault scenario")):
+                              ("fault", "fault scenario"),
+                              ("arrivals", "arrival process"),
+                              ("shards", "shard count")):
                 bv, cv = base.get(key), cur.get(key)
                 if (bv is not None or cv is not None) and bv != cv:
                     print(f"note: '{name}' {what} changed "
@@ -165,6 +171,10 @@ def run_gate(args):
             tag += f" [bits={base['bits']}]"
         if base.get("fault") is not None:
             tag += f" [fault={base['fault']}]"
+        if base.get("arrivals") is not None:
+            tag += f" [arrivals={base['arrivals']}]"
+        if base.get("shards") is not None:
+            tag += f" [shards={base['shards']}]"
         for metric in METRICS:
             sps_base = base.get(metric)
             # A zero/absent baseline cannot be compared against (and a
@@ -250,6 +260,25 @@ def self_test():
          gate([{"name": "dse", "states_per_sec": 1000.0, "bits": 16}],
               [{"name": "dse", "schema": 1, "states_per_sec": 10.0,
                 "bits": 8}]), 0),
+        ("arrival-process change is not gated",
+         gate([{"name": "fleet", "events_per_sec": 1000.0,
+                "arrivals": "poisson"}],
+              [{"name": "fleet", "schema": 1, "events_per_sec": 10.0,
+                "arrivals": "diurnal"}]), 0),
+        ("shard-count change is not gated",
+         gate([{"name": "fleet", "events_per_sec": 1000.0,
+                "shards": 1}],
+              [{"name": "fleet", "schema": 1, "events_per_sec": 10.0,
+                "shards": 4}]), 0),
+        ("arrivals appearing on one side only is not gated",
+         gate([{"name": "fleet", "events_per_sec": 1000.0}],
+              [{"name": "fleet", "schema": 1, "events_per_sec": 10.0,
+                "arrivals": "flash"}]), 0),
+        ("same arrivals and shards still gate a regression",
+         gate([{"name": "fleet", "events_per_sec": 1000.0,
+                "arrivals": "diurnal", "shards": 4}],
+              [{"name": "fleet", "schema": 1, "events_per_sec": 500.0,
+                "arrivals": "diurnal", "shards": 4}]), 1),
         ("missing baseline bootstraps",
          gate(None, [{"name": "dse", "schema": 1,
                       "states_per_sec": 10.0}]), 0),

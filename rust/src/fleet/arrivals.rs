@@ -1,17 +1,36 @@
 //! Clip arrival processes for the fleet simulator.
 //!
-//! Two sources, both producing a time-sorted `Vec<Request>`:
+//! Generators and sources, all producing a time-sorted `Vec<Request>`:
 //!
 //! * [`poisson`] — a seeded Poisson process at a target rate, the
 //!   open-loop traffic model capacity planning assumes. Inter-arrival
 //!   times and model picks draw from *separate* RNG streams
 //!   (`util::rng::stream_seed`), so adding a model to the mix does not
 //!   perturb the arrival-time sequence.
+//! * [`diurnal`] / [`flash`] / [`selfsim`] — the production traffic
+//!   shapes the flat Poisson model misses ([`ArrivalKind`] names the
+//!   taxonomy for `fleet --arrivals`): a sinusoidal day/night rate
+//!   cycle, a flash crowd spiking the middle of the stream, and
+//!   heavy-tailed (Pareto) inter-arrivals as the classic proxy for
+//!   self-similar traffic. All three follow the same two-stream seed
+//!   discipline as [`poisson`].
+//! * [`sharded`] — one logical stream split deterministically across
+//!   worker threads (`--shards N`): each shard draws an independent
+//!   substream at `rate / N` from `stream_seed(seed, shard)`, and the
+//!   superposition is merged into one sorted stream. `shards == 1` is
+//!   pinned byte-identical to the unsharded generator (stream 0 *is*
+//!   the base seed). The sharded path accumulates time with
+//!   compensated (Kahan) summation so absolute float error stays flat
+//!   over multi-million-event streams; the legacy unsharded
+//!   [`poisson`] keeps its naive accumulator so every existing seed
+//!   pin stays bit-identical.
 //! * [`from_trace`] — a recorded trace, one request per line, for
-//!   replaying production traffic shapes the Poisson model misses
-//!   (bursts, diurnal ramps).
+//!   replaying production traffic shapes no generator reproduces.
 
-use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::thread;
+
+use crate::util::rng::{stream_seed, Rng};
 
 use super::Request;
 
@@ -20,8 +39,94 @@ use super::Request;
 const STREAM_INTERARRIVAL: u64 = 1;
 const STREAM_MODEL_PICK: u64 = 2;
 
+/// Sinusoidal "day" period of the [`diurnal`] generator (simulated
+/// ms). One minute of simulated time is a full day/night cycle, so
+/// even fast CI-sized runs see several peaks and troughs.
+pub const DIURNAL_PERIOD_MS: f64 = 60_000.0;
+/// Peak-to-mean rate swing of the [`diurnal`] generator: the
+/// instantaneous rate cycles within `[0.2, 1.8] * rate_rps`.
+pub const DIURNAL_AMPLITUDE: f64 = 0.8;
+/// Rate multiplier of the [`flash`] crowd window.
+pub const FLASH_FACTOR: f64 = 10.0;
+/// Pareto tail exponent of the [`selfsim`] generator. `1 < α < 2`
+/// gives finite mean but infinite variance — the heavy-tail regime
+/// that produces burst trains and long silences at every timescale.
+pub const SELFSIM_ALPHA: f64 = 1.5;
+
+/// Named arrival generators — the shared vocabulary of
+/// `fleet --arrivals`, the planner's certification stream and the
+/// bench `arrivals` dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Flat-rate Poisson (the default; [`poisson`]).
+    Poisson,
+    /// Sinusoidal day/night rate cycle ([`diurnal`]).
+    Diurnal,
+    /// Flash crowd: the middle sixth of the stream arrives at
+    /// [`FLASH_FACTOR`] times the rate ([`flash`]).
+    Flash,
+    /// Heavy-tailed (Pareto) inter-arrivals ([`selfsim`]).
+    SelfSim,
+}
+
+/// Accepted `--arrivals` names, for error messages.
+pub const ARRIVAL_NAMES: &str = "poisson, diurnal, flash, selfsim";
+
+impl ArrivalKind {
+    pub fn parse(s: &str) -> Option<ArrivalKind> {
+        match s {
+            "poisson" => Some(ArrivalKind::Poisson),
+            "diurnal" => Some(ArrivalKind::Diurnal),
+            "flash" | "flash-crowd" => Some(ArrivalKind::Flash),
+            "selfsim" | "self-similar" => Some(ArrivalKind::SelfSim),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalKind::Poisson => "poisson",
+            ArrivalKind::Diurnal => "diurnal",
+            ArrivalKind::Flash => "flash",
+            ArrivalKind::SelfSim => "selfsim",
+        }
+    }
+}
+
+/// Compensated (Kahan) accumulator for the generator paths that sum
+/// millions of inter-arrival gaps: the running compensation keeps the
+/// absolute timestamp error O(ε) instead of growing with the sum,
+/// which is what keeps duplicate-timestamp runs from stressing event
+/// tie-breaking at scale. The legacy unsharded [`poisson`] deliberately
+/// does NOT use it — its naive accumulator is pinned bit-identical by
+/// every existing seed test.
+#[derive(Debug, Default, Clone, Copy)]
+struct Kahan {
+    sum: f64,
+    c: f64,
+}
+
+impl Kahan {
+    fn add(&mut self, x: f64) {
+        let y = x - self.c;
+        let t = self.sum + y;
+        self.c = (t - self.sum) - y;
+        self.sum = t;
+    }
+
+    fn value(&self) -> f64 {
+        self.sum
+    }
+}
+
 /// `n` Poisson arrivals at `rate_rps` requests/second, uniformly mixed
 /// over `n_models` models. Times are in ms starting just after 0.
+///
+/// This is the **legacy unsharded path**: it accumulates time naively
+/// (`t += gap`) and must stay bit-identical for every existing seed —
+/// the golden CLI pins, the planner certification stream and the
+/// bench scenarios all ride on it. The sharded / new-generator paths
+/// use compensated summation instead.
 pub fn poisson(n: usize, rate_rps: f64, n_models: usize, seed: u64)
     -> Vec<Request> {
     assert!(rate_rps > 0.0, "arrival rate must be positive");
@@ -37,6 +142,215 @@ pub fn poisson(n: usize, rate_rps: f64, n_models: usize, seed: u64)
             Request { id, model, arrival_ms: t_ms }
         })
         .collect()
+}
+
+/// [`poisson`] with the compensated accumulator — the sharded
+/// substream generator. Kept private: the only way to reach it is
+/// through [`sharded`] with `shards > 1`, so the legacy path cannot
+/// drift.
+fn poisson_compensated(n: usize, rate_rps: f64, n_models: usize,
+                       seed: u64) -> Vec<Request> {
+    assert!(rate_rps > 0.0, "arrival rate must be positive");
+    assert!(n_models > 0, "need at least one model");
+    let mut t_rng = Rng::stream(seed, STREAM_INTERARRIVAL);
+    let mut m_rng = Rng::stream(seed, STREAM_MODEL_PICK);
+    let mut t = Kahan::default();
+    (0..n)
+        .map(|id| {
+            t.add(t_rng.exponential(rate_rps) * 1e3);
+            let model =
+                if n_models == 1 { 0 } else { m_rng.below(n_models) };
+            Request { id, model, arrival_ms: t.value() }
+        })
+        .collect()
+}
+
+/// `n` arrivals under a sinusoidal day/night cycle: the instantaneous
+/// rate is `rate_rps * (1 + A sin(2π t / P))` with amplitude
+/// [`DIURNAL_AMPLITUDE`] and period [`DIURNAL_PERIOD_MS`], sampled by
+/// drawing each gap at the rate in force when it starts. Mean rate
+/// over a full cycle is `rate_rps`.
+pub fn diurnal(n: usize, rate_rps: f64, n_models: usize, seed: u64)
+    -> Vec<Request> {
+    assert!(rate_rps > 0.0, "arrival rate must be positive");
+    assert!(n_models > 0, "need at least one model");
+    let mut t_rng = Rng::stream(seed, STREAM_INTERARRIVAL);
+    let mut m_rng = Rng::stream(seed, STREAM_MODEL_PICK);
+    let mut t = Kahan::default();
+    (0..n)
+        .map(|id| {
+            let phase = 2.0 * std::f64::consts::PI
+                * (t.value() / DIURNAL_PERIOD_MS);
+            let rate =
+                rate_rps * (1.0 + DIURNAL_AMPLITUDE * phase.sin());
+            t.add(t_rng.exponential(rate) * 1e3);
+            let model =
+                if n_models == 1 { 0 } else { m_rng.below(n_models) };
+            Request { id, model, arrival_ms: t.value() }
+        })
+        .collect()
+}
+
+/// `n` arrivals with a flash crowd: Poisson at `rate_rps` except the
+/// middle sixth of the stream (requests `n/3 .. n/3 + n/6`), which
+/// arrives at [`FLASH_FACTOR`] times the rate — the thundering-herd
+/// shape that stresses admission control and batch formation.
+pub fn flash(n: usize, rate_rps: f64, n_models: usize, seed: u64)
+    -> Vec<Request> {
+    assert!(rate_rps > 0.0, "arrival rate must be positive");
+    assert!(n_models > 0, "need at least one model");
+    let mut t_rng = Rng::stream(seed, STREAM_INTERARRIVAL);
+    let mut m_rng = Rng::stream(seed, STREAM_MODEL_PICK);
+    let (burst_from, burst_to) = (n / 3, n / 3 + n / 6);
+    let mut t = Kahan::default();
+    (0..n)
+        .map(|id| {
+            let rate = if id >= burst_from && id < burst_to {
+                rate_rps * FLASH_FACTOR
+            } else {
+                rate_rps
+            };
+            t.add(t_rng.exponential(rate) * 1e3);
+            let model =
+                if n_models == 1 { 0 } else { m_rng.below(n_models) };
+            Request { id, model, arrival_ms: t.value() }
+        })
+        .collect()
+}
+
+/// `n` arrivals with Pareto inter-arrival gaps (tail exponent
+/// [`SELFSIM_ALPHA`], scale chosen so the mean gap is `1/rate_rps`) —
+/// the classic heavy-tailed proxy for self-similar traffic: burst
+/// trains and long silences at every timescale, unlike the memoryless
+/// Poisson stream.
+pub fn selfsim(n: usize, rate_rps: f64, n_models: usize, seed: u64)
+    -> Vec<Request> {
+    assert!(rate_rps > 0.0, "arrival rate must be positive");
+    assert!(n_models > 0, "need at least one model");
+    let mut t_rng = Rng::stream(seed, STREAM_INTERARRIVAL);
+    let mut m_rng = Rng::stream(seed, STREAM_MODEL_PICK);
+    // Pareto(x_m, α) has mean α x_m / (α - 1); solve for the scale
+    // that hits a 1/rate mean gap.
+    let xm_s = (SELFSIM_ALPHA - 1.0) / SELFSIM_ALPHA / rate_rps;
+    let mut t = Kahan::default();
+    (0..n)
+        .map(|id| {
+            let u = t_rng.uniform(); // [0, 1): 1 - u is in (0, 1]
+            let gap_s = xm_s / (1.0 - u).powf(1.0 / SELFSIM_ALPHA);
+            t.add(gap_s * 1e3);
+            let model =
+                if n_models == 1 { 0 } else { m_rng.below(n_models) };
+            Request { id, model, arrival_ms: t.value() }
+        })
+        .collect()
+}
+
+/// Generate `n` arrivals of the named [`ArrivalKind`] — the unsharded
+/// entry point. `Poisson` is exactly the legacy [`poisson`] path,
+/// bit-identical for every existing seed.
+pub fn generate(kind: ArrivalKind, n: usize, rate_rps: f64,
+                n_models: usize, seed: u64) -> Vec<Request> {
+    match kind {
+        ArrivalKind::Poisson => poisson(n, rate_rps, n_models, seed),
+        ArrivalKind::Diurnal => diurnal(n, rate_rps, n_models, seed),
+        ArrivalKind::Flash => flash(n, rate_rps, n_models, seed),
+        ArrivalKind::SelfSim => selfsim(n, rate_rps, n_models, seed),
+    }
+}
+
+/// The compensated substream generator behind each shard worker.
+fn generate_compensated(kind: ArrivalKind, n: usize, rate_rps: f64,
+                        n_models: usize, seed: u64) -> Vec<Request> {
+    match kind {
+        ArrivalKind::Poisson => {
+            poisson_compensated(n, rate_rps, n_models, seed)
+        }
+        // The other generators are compensated already.
+        _ => generate(kind, n, rate_rps, n_models, seed),
+    }
+}
+
+/// One logical arrival stream of `n` requests at `rate_rps`, split
+/// deterministically across `shards` worker threads. Shard `s` draws
+/// an independent substream of `~n/shards` arrivals at
+/// `rate_rps / shards` from base seed `stream_seed(seed, s)` (the
+/// superposition of N thinned Poisson processes is the full-rate
+/// process), and the substreams are merged into one sorted stream with
+/// ties broken by shard index — a pure function of
+/// `(kind, n, rate, n_models, seed, shards)`, whatever the thread
+/// schedule.
+///
+/// `shards == 1` short-circuits to the unsharded [`generate`] path and
+/// is pinned **byte-identical** to it: `stream_seed(seed, 0) == seed`,
+/// so a single shard *is* the base stream. Shards `> 1` accumulate
+/// time with compensated (Kahan) summation — the new path where
+/// multi-million-event float error would otherwise accumulate.
+pub fn sharded(kind: ArrivalKind, n: usize, rate_rps: f64,
+               n_models: usize, seed: u64, shards: usize)
+    -> Vec<Request> {
+    assert!(shards >= 1, "need at least one shard");
+    if shards == 1 {
+        return generate(kind, n, rate_rps, n_models, seed);
+    }
+    let per = n / shards;
+    let extra = n % shards;
+    let rate_s = rate_rps / shards as f64;
+    let mut subs: Vec<Vec<Request>> = Vec::with_capacity(shards);
+    // A panic in a worker is a bug in a deterministic generator, not a
+    // runtime condition to recover from; propagate it.
+    #[allow(clippy::disallowed_methods)]
+    thread::scope(|sc| {
+        let handles: Vec<_> = (0..shards)
+            .map(|s| {
+                let n_s = per + usize::from(s < extra);
+                let seed_s = stream_seed(seed, s as u64);
+                sc.spawn(move || {
+                    generate_compensated(kind, n_s, rate_s, n_models,
+                                         seed_s)
+                })
+            })
+            .collect();
+        for h in handles {
+            subs.push(h.join().expect("shard worker panicked"));
+        }
+    });
+    merge_substreams(&subs)
+}
+
+/// Deterministic k-way merge of per-shard sorted substreams: ascending
+/// `arrival_ms` with ties broken by shard index, ids reassigned in
+/// final stream order (matching the unsharded generators' `id ==
+/// position` invariant).
+fn merge_substreams(subs: &[Vec<Request>]) -> Vec<Request> {
+    let total: usize = subs.iter().map(|v| v.len()).sum();
+    let mut heads = vec![0usize; subs.len()];
+    let mut out = Vec::with_capacity(total);
+    for id in 0..total {
+        let mut best: Option<usize> = None;
+        for (s, sub) in subs.iter().enumerate() {
+            if heads[s] >= sub.len() {
+                continue;
+            }
+            let t = sub[heads[s]].arrival_ms;
+            let better = match best {
+                None => true,
+                Some(bs) => {
+                    t.total_cmp(&subs[bs][heads[bs]].arrival_ms)
+                        == Ordering::Less
+                }
+            };
+            if better {
+                best = Some(s);
+            }
+        }
+        let Some(s) = best else {
+            break; // unreachable: total counts every substream element
+        };
+        let r = subs[s][heads[s]];
+        heads[s] += 1;
+        out.push(Request { id, model: r.model, arrival_ms: r.arrival_ms });
+    }
+    out
 }
 
 /// Parse a trace: one request per line, `<t_ms> [model]`, where
@@ -144,6 +458,166 @@ mod tests {
             assert_eq!(x.arrival_ms.to_bits(), y.arrival_ms.to_bits());
         }
         assert!(b.iter().any(|r| r.model > 0));
+    }
+
+    #[test]
+    fn arrival_kind_parse_round_trips() {
+        for name in ["poisson", "diurnal", "flash", "selfsim"] {
+            let k = ArrivalKind::parse(name).expect(name);
+            assert_eq!(k.name(), name);
+            assert!(ARRIVAL_NAMES.contains(name));
+        }
+        assert_eq!(ArrivalKind::parse("flash-crowd"),
+                   Some(ArrivalKind::Flash));
+        assert_eq!(ArrivalKind::parse("self-similar"),
+                   Some(ArrivalKind::SelfSim));
+        assert!(ArrivalKind::parse("meteor").is_none());
+    }
+
+    #[test]
+    fn every_generator_is_sorted_and_seed_deterministic() {
+        // The determinism pin for each new arrival generator: two runs
+        // of the same (kind, seed) are bit-identical, a different seed
+        // moves the stream, and every stream is time-sorted with
+        // strictly positive timestamps.
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Diurnal,
+                     ArrivalKind::Flash, ArrivalKind::SelfSim] {
+            let a = generate(kind, 400, 200.0, 3, 11);
+            let b = generate(kind, 400, 200.0, 3, 11);
+            assert_eq!(a.len(), 400, "{kind:?}");
+            assert!(a.windows(2)
+                        .all(|w| w[0].arrival_ms <= w[1].arrival_ms),
+                    "{kind:?} must be time-sorted");
+            assert!(a[0].arrival_ms > 0.0, "{kind:?}");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival_ms.to_bits(),
+                           y.arrival_ms.to_bits(), "{kind:?}");
+                assert_eq!(x.model, y.model, "{kind:?}");
+            }
+            let c = generate(kind, 400, 200.0, 3, 12);
+            assert_ne!(a[0].arrival_ms.to_bits(),
+                       c[0].arrival_ms.to_bits(),
+                       "{kind:?} must react to the seed");
+        }
+    }
+
+    #[test]
+    fn flash_burst_compresses_the_middle_of_the_stream() {
+        let n = 6000;
+        let arr = flash(n, 100.0, 1, 5);
+        let gap = |i: usize| {
+            arr[i + 1].arrival_ms - arr[i].arrival_ms
+        };
+        let mean = |from: usize, to: usize| {
+            (from..to).map(gap).sum::<f64>() / (to - from) as f64
+        };
+        let pre = mean(0, n / 3 - 1);
+        let burst = mean(n / 3, n / 3 + n / 6 - 1);
+        assert!(burst < pre / 4.0,
+                "10x the rate: burst gap {burst} vs baseline {pre}");
+    }
+
+    #[test]
+    fn diurnal_mean_rate_tracks_the_target() {
+        // Over whole periods the sinusoid averages out: the realised
+        // mean rate stays near the target (loose tolerance — the
+        // rate-vs-time sampling is approximate by construction).
+        let n = 30_000;
+        let arr = diurnal(n, 500.0, 1, 3);
+        let span_s = arr.last().unwrap().arrival_ms / 1e3;
+        let rate = n as f64 / span_s;
+        assert!((rate - 500.0).abs() < 75.0,
+                "realised {rate} req/s vs target 500");
+    }
+
+    #[test]
+    fn selfsim_gaps_are_heavy_tailed() {
+        let n = 20_000;
+        let arr = selfsim(n, 100.0, 1, 21);
+        let gaps: Vec<f64> = arr.windows(2)
+            .map(|w| w[1].arrival_ms - w[0].arrival_ms)
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let max = gaps.iter().cloned().fold(0.0, f64::max);
+        // Every gap is at least the Pareto scale, and the tail is far
+        // heavier than an exponential's (whose max/mean ~ ln n ≈ 10).
+        let xm_ms = (SELFSIM_ALPHA - 1.0) / SELFSIM_ALPHA / 100.0 * 1e3;
+        assert!(gaps.iter().all(|&g| g >= xm_ms * 0.999));
+        assert!(max / mean > 30.0,
+                "heavy tail expected: max {max} / mean {mean}");
+    }
+
+    #[test]
+    fn one_shard_is_byte_identical_to_unsharded() {
+        // The `--shards 1` pin: a single shard routes through the
+        // legacy generator (stream_seed(seed, 0) == seed), so every
+        // field of every request matches bit for bit — for every kind.
+        for kind in [ArrivalKind::Poisson, ArrivalKind::Diurnal,
+                     ArrivalKind::Flash, ArrivalKind::SelfSim] {
+            let flat = generate(kind, 300, 150.0, 2, 77);
+            let one = sharded(kind, 300, 150.0, 2, 77, 1);
+            assert_eq!(flat.len(), one.len());
+            for (x, y) in flat.iter().zip(&one) {
+                assert_eq!(x.id, y.id, "{kind:?}");
+                assert_eq!(x.model, y.model, "{kind:?}");
+                assert_eq!(x.arrival_ms.to_bits(),
+                           y.arrival_ms.to_bits(), "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_stream_is_deterministic_sorted_and_complete() {
+        for shards in [2usize, 3, 8] {
+            let a = sharded(ArrivalKind::Poisson, 1000, 400.0, 3, 13,
+                            shards);
+            let b = sharded(ArrivalKind::Poisson, 1000, 400.0, 3, 13,
+                            shards);
+            assert_eq!(a.len(), 1000, "{shards} shards");
+            assert!(a.windows(2)
+                        .all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+            assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(),
+                       (0..1000).collect::<Vec<_>>(),
+                       "ids follow merged stream order");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.arrival_ms.to_bits(),
+                           y.arrival_ms.to_bits(),
+                           "{shards} shards must replay bit-identically");
+                assert_eq!(x.model, y.model);
+            }
+            // The sharded superposition holds the configured rate.
+            let span_s = a.last().unwrap().arrival_ms / 1e3;
+            let rate = 1000.0 / span_s;
+            assert!((rate - 400.0).abs() < 60.0,
+                    "{shards} shards: realised {rate} req/s");
+        }
+    }
+
+    #[test]
+    fn shard_count_changes_the_stream_but_not_its_shape() {
+        // Different shard counts are different (deterministic) samples
+        // of the same process — not reorderings of one sample.
+        let a = sharded(ArrivalKind::Poisson, 500, 200.0, 1, 3, 2);
+        let b = sharded(ArrivalKind::Poisson, 500, 200.0, 1, 3, 4);
+        assert_ne!(a[0].arrival_ms.to_bits(), b[0].arrival_ms.to_bits());
+        assert_eq!(a.len(), b.len());
+    }
+
+    #[test]
+    fn kahan_accumulator_beats_naive_summation() {
+        // 1.0 followed by many gaps below the ulp of the running sum:
+        // the naive accumulator never advances, the compensated one
+        // carries the residue across adds.
+        let mut naive = 1.0f64;
+        let mut k = Kahan::default();
+        k.add(1.0);
+        for _ in 0..1000 {
+            naive += 1e-17;
+            k.add(1e-17);
+        }
+        assert_eq!(naive, 1.0, "naive summation loses every gap");
+        assert!(k.value() > 1.0,
+                "compensated sum keeps the residue: {}", k.value());
     }
 
     #[test]

@@ -10,11 +10,20 @@
 //!       [--policy rr|least-loaded|slo-aware] [--queue fifo|priority]
 //!       [--batch B] [--max-wait-ms W] [--mixed]
 //!       [--boards N] [--requests N] [--max-boards N] [--seed S]
+//!       [--arrivals poisson|diurnal|flash|selfsim] [--shards N]
 //!       [--faults crash|n-1|straggler|overload|flaky|chaos]
 //!       [--deadline-ms D] [--retries N] [--shed]
 //!       [--trace file] [--profiles points.json] [--fast]
 //!       [--trace-out t.json] [--metrics-out m.jsonl] [--quiet]
 //! ```
+//!
+//! `--arrivals` picks the synthetic arrival process (Poisson default,
+//! diurnal sine modulation, flash crowd, self-similar Pareto gaps) and
+//! `--shards N` generates that one logical stream across N
+//! deterministic worker shards — `--shards 1` is byte-identical to the
+//! unsharded generator, so every pinned output is unchanged. Both
+//! describe *generated* traffic and therefore conflict with `--trace`
+//! replay.
 //!
 //! `--faults` injects a named fault scenario into the simulation (a
 //! fixed `--boards N` fleet gets one seeded instance; the planner
@@ -79,6 +88,11 @@ pub struct FleetArgs {
     pub batch: BatchCfg,
     /// `--mixed`: let the planner search heterogeneous compositions.
     pub mixed: bool,
+    /// `--arrivals NAME`: synthetic arrival process.
+    pub arrivals: arrivals::ArrivalKind,
+    /// `--shards N`: generate the arrival stream across N deterministic
+    /// worker shards (1 == unsharded, byte-identical).
+    pub shards: usize,
     /// `--faults NAME`: inject a named fault scenario.
     pub faults: Option<Scenario>,
     /// `--deadline-ms D`: per-request deadline (0 = off).
@@ -272,11 +286,37 @@ impl FleetArgs {
                  let the planner pick by omitting --boards",
                 devices.len()));
         }
+        let arrivals_explicit = args.opt("arrivals").is_some();
+        let arrivals_kind = match args.opt("arrivals") {
+            Some(s) => arrivals::ArrivalKind::parse(s).ok_or(format!(
+                "fleet: unknown --arrivals {s:?} (accepted: {})",
+                arrivals::ARRIVAL_NAMES))?,
+            None => arrivals::ArrivalKind::Poisson,
+        };
+        let shards = int_opt(args, "shards", 1)?;
+        if shards == 0 {
+            return Err("fleet: --shards must be >= 1 worker shard \
+                        (1 reproduces the unsharded stream \
+                        byte-for-byte)"
+                .into());
+        }
         let trace = args.opt("trace").map(str::to_string);
         if trace.is_some() && fixed_boards == 0 {
             return Err("fleet: --trace replays onto a fixed fleet: \
                         pass --boards N (the planner sizes fleets for \
-                        Poisson traffic at --rate)"
+                        synthetic traffic at --rate)"
+                .into());
+        }
+        if trace.is_some() && arrivals_explicit {
+            return Err("fleet: --arrivals generates synthetic traffic; \
+                        --trace replays recorded arrivals — pass one \
+                        or the other"
+                .into());
+        }
+        if trace.is_some() && args.opt("shards").is_some() {
+            return Err("fleet: --shards shards the synthetic arrival \
+                        generator; a --trace replay is already a fixed \
+                        stream"
                 .into());
         }
 
@@ -300,6 +340,8 @@ impl FleetArgs {
             queue,
             batch: BatchCfg::new(max_batch, max_wait_ms),
             mixed,
+            arrivals: arrivals_kind,
+            shards,
             faults,
             deadline_ms,
             retries,
@@ -447,7 +489,10 @@ pub fn run(args: &Args) -> Result<String, String> {
             .map_err(|e| format!("fleet: cannot read --trace {tr}: {e}"))?;
         arrivals::from_trace(&text, &matrix.models)?
     } else {
-        arrivals::poisson(fa.requests, fa.rate, n_models, fa.seed)
+        // Poisson at one shard is the legacy generator byte-for-byte,
+        // so every pinned default run is unchanged.
+        arrivals::sharded(fa.arrivals, fa.requests, fa.rate, n_models,
+                          fa.seed, fa.shards)
     };
     if arr.is_empty() {
         return Err("fleet: empty arrival stream".into());
@@ -503,6 +548,8 @@ pub fn run(args: &Args) -> Result<String, String> {
             faults: fa.faults,
             resilience: fa.resilience(),
             shed_cap: 0.0,
+            arrivals: fa.arrivals,
+            shards: fa.shards,
         };
         match planner::plan_traced(&matrix, &pcfg, buf.as_mut(),
                                    !fa.quiet) {
@@ -536,6 +583,14 @@ pub fn run(args: &Args) -> Result<String, String> {
                     out.push_str(&format!("  {r}\n"));
                 }
             }
+        }
+    }
+    // Shard fan-out is generator topology, not simulation state: a
+    // gauge only when sharding is actually on keeps single-shard
+    // snapshots byte-identical to the pre-sharding exporter.
+    if fa.shards > 1 {
+        if let Some(b) = buf.as_mut() {
+            b.gauge("fleet/shards", fa.shards as f64);
         }
     }
     if let Some(buf) = &buf {
@@ -637,11 +692,22 @@ fn metrics_block(matrix: &ProfileMatrix, met: &FleetMetrics,
         Some(s) => format!(", faults {}", s.name()),
         None => String::new(),
     };
+    // Non-default arrival processes and shard counts are named in the
+    // header; the Poisson/1-shard default adds nothing, keeping every
+    // pinned line byte-identical.
+    let mut arrival_note = String::new();
+    if fa.arrivals != arrivals::ArrivalKind::Poisson {
+        arrival_note.push_str(&format!(", arrivals {}",
+                                       fa.arrivals.name()));
+    }
+    if fa.shards > 1 {
+        arrival_note.push_str(&format!(", shards {}", fa.shards));
+    }
     // Offered = completed + every loss bucket; the extra buckets are
     // zero on a fault-free run, keeping the line byte-identical.
     s.push_str(&format!(
         "fleet sim ({} boards, {}, {} queue, {} requests, seed \
-         {}{batch_note}{fault_note}):\n",
+         {}{batch_note}{fault_note}{arrival_note}):\n",
         met.boards.len(), fa.policy.name(), fa.queue.name(),
         met.completed + met.dropped + met.shed + met.failed, fa.seed));
     if met.completed == 0 {
@@ -873,6 +939,38 @@ mod tests {
             let e = parse(&bad).unwrap_err();
             assert!(e.contains("--deadline-ms"), "{bad:?} -> {e}");
         }
+    }
+
+    #[test]
+    fn arrival_flags_parse_and_validate() {
+        let fa = parse(&["fleet", "--arrivals", "diurnal", "--shards",
+                         "4"]).unwrap();
+        assert_eq!(fa.arrivals, arrivals::ArrivalKind::Diurnal);
+        assert_eq!(fa.shards, 4);
+        // Defaults: Poisson, unsharded — the pinned legacy stream.
+        let fa = parse(&["fleet"]).unwrap();
+        assert_eq!(fa.arrivals, arrivals::ArrivalKind::Poisson);
+        assert_eq!(fa.shards, 1);
+        // Unknown generators name the accepted taxonomy.
+        let e = parse(&["fleet", "--arrivals", "meteor"]).unwrap_err();
+        assert!(e.contains("--arrivals") && e.contains("meteor"), "{e}");
+        assert!(e.contains("poisson") && e.contains("selfsim"), "{e}");
+        // Zero shards cannot carry the stream.
+        let e = parse(&["fleet", "--shards", "0"]).unwrap_err();
+        assert!(e.contains("--shards") && e.contains(">= 1"), "{e}");
+        let e = parse(&["fleet", "--shards", "many"]).unwrap_err();
+        assert!(e.contains("--shards"), "{e}");
+    }
+
+    #[test]
+    fn generator_flags_conflict_with_trace_replay() {
+        let e = parse(&["fleet", "--boards", "2", "--trace", "t.txt",
+                        "--arrivals", "flash"]).unwrap_err();
+        assert!(e.contains("--arrivals") && e.contains("--trace"),
+                "{e}");
+        let e = parse(&["fleet", "--boards", "2", "--trace", "t.txt",
+                        "--shards", "2"]).unwrap_err();
+        assert!(e.contains("--shards") && e.contains("--trace"), "{e}");
     }
 
     #[test]

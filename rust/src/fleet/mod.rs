@@ -11,9 +11,14 @@
 //!   FIFO or priority queue, charging `sim::DesignLatencyProfile`
 //!   service latency per clip and the design-switch (reconfiguration)
 //!   cost when a board changes design — arrivals come from a seeded
-//!   Poisson process ([`arrivals::poisson`]) or a trace file
-//!   ([`arrivals::from_trace`]), and every tie is broken by sequence
-//!   number so a seed pins the run bit-for-bit;
+//!   generator ([`arrivals::generate`]: Poisson, diurnal, flash-crowd
+//!   or self-similar, optionally sharded across threads by
+//!   [`arrivals::sharded`]) or a trace file ([`arrivals::from_trace`]),
+//!   and every tie is broken by sequence number so a seed pins the run
+//!   bit-for-bit. The event queue is a calendar (bucket) queue popping
+//!   in exact `(t_ms, seq)` order — O(1) amortised against the heap's
+//!   O(log n) — and board/request state lives in index-based SoA
+//!   arrays with no per-event allocation;
 //! * **clip batching** ([`BatchCfg`]): up to `max_batch` queued clips
 //!   of the same model run as one invocation sequence, paying the
 //!   pipeline fill once ([`ServiceProfile::batch_ms`]); an idle board
@@ -37,7 +42,7 @@ pub mod faults;
 pub mod planner;
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::obs::{Recorder, TraceBuffer, PID_FLEET, PID_REQ};
 use crate::util::json::Json;
@@ -388,10 +393,13 @@ enum EventKind {
     Retry(usize),
 }
 
-/// Heap event. Ordered so `BinaryHeap::pop` yields the *earliest*
-/// time; equal times break by insertion sequence, which makes the
-/// event order — and therefore the whole run — independent of float
-/// coincidences and fully deterministic.
+/// Simulator event. The `Ord` impl is the pop contract — earliest
+/// `(t_ms, seq)` first (reversed for max-heap semantics): equal times
+/// break by insertion sequence, which makes the event order — and
+/// therefore the whole run — independent of float coincidences and
+/// fully deterministic. The hot loop runs on [`CalendarQueue`], which
+/// pops in exactly this order; the impls are kept as the reference
+/// ordering for the heap-equivalence test.
 #[derive(Debug, Clone, Copy)]
 struct Event {
     t_ms: f64,
@@ -420,82 +428,278 @@ impl Ord for Event {
     }
 }
 
+/// Order-preserving bit mapping of an `f64`: `key_bits(a) < key_bits(b)`
+/// iff `a.total_cmp(&b) == Less`. Sign-magnitude floats become
+/// monotone unsigned integers by flipping the sign bit for positives
+/// and all bits for negatives — the calendar queue compares these
+/// instead of calling `total_cmp` per element.
+fn key_bits(t: f64) -> u64 {
+    let b = t.to_bits();
+    if b >> 63 == 1 { !b } else { b | (1 << 63) }
+}
+
+/// Calendar (bucket) event queue — the simulator's hot loop structure.
+///
+/// Events hash into `buckets.len()` (a power of two) time buckets of
+/// `width_ms` each, wrapping around like days on a wall calendar:
+/// bucket `tick & mask` holds every pending event whose time falls in
+/// tick `tick = t_ms / width_ms` (plus aliases from other "laps",
+/// filtered on pop). Because discrete-event time is monotone — every
+/// push is at or after the last popped time — the pop cursor only
+/// moves forward, and popping is an O(bucket occupancy) scan of the
+/// current tick instead of the binary heap's O(log n) sift. Width is
+/// sized to the mean arrival gap, so the common case is a handful of
+/// events per tick.
+///
+/// Pop order is **exactly** the reference `BinaryHeap<Event>` order —
+/// minimum `(t_ms, seq)` by `total_cmp`, ties by insertion sequence —
+/// which is what keeps the engine bit-identical to the heap simulator
+/// (pinned by the equivalence test and every golden/obs byte pin).
+struct CalendarQueue {
+    buckets: Vec<Vec<Event>>,
+    /// Bucket time width (simulated ms).
+    width: f64,
+    /// `buckets.len() - 1`; the length is a power of two.
+    mask: usize,
+    /// Pending events across all buckets.
+    len: usize,
+    /// The tick the next pop starts scanning from. Monotone
+    /// non-decreasing (DES time never goes backwards).
+    cursor: u64,
+}
+
+impl CalendarQueue {
+    /// Size for a run of `n_hint` root events spanning `span_ms`:
+    /// bucket width ≈ the mean event gap (one arrival per tick on
+    /// average), bucket count the next power of two that keeps
+    /// occupancy low. Degenerate spans (empty runs, all-at-zero
+    /// bursts) fall back to a 1 ms width — correctness never depends
+    /// on the sizing, only the constant factor does.
+    fn for_horizon(n_hint: usize, span_ms: f64) -> CalendarQueue {
+        let n_buckets = n_hint.clamp(16, 1 << 20).next_power_of_two();
+        let width = span_ms / n_hint.max(1) as f64;
+        let width = if width.is_finite() && width > 0.0 {
+            width
+        } else {
+            1.0
+        };
+        CalendarQueue {
+            buckets: (0..n_buckets).map(|_| Vec::new()).collect(),
+            width,
+            mask: n_buckets - 1,
+            len: 0,
+            cursor: 0,
+        }
+    }
+
+    /// `t / width` as a saturating integer tick (the `as` cast clamps
+    /// negatives to 0 and huge values to `u64::MAX`, so hostile floats
+    /// only cost scan time, never unsoundness).
+    fn tick(&self, t_ms: f64) -> u64 {
+        (t_ms / self.width) as u64
+    }
+
+    fn push(&mut self, ev: Event) {
+        if self.len >= self.buckets.len() * 4 {
+            self.grow();
+        }
+        let bi = (self.tick(ev.t_ms) as usize) & self.mask;
+        self.buckets[bi].push(ev);
+        self.len += 1;
+    }
+
+    /// Double the bucket count (same width, so existing ticks — and
+    /// the cursor — stay valid) and rehash. Amortised O(1) per push,
+    /// exactly like `Vec` growth.
+    fn grow(&mut self) {
+        let n = self.buckets.len() * 2;
+        let mut pending: Vec<Event> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            pending.append(b);
+        }
+        self.buckets = (0..n).map(|_| Vec::new()).collect();
+        self.mask = n - 1;
+        for ev in pending {
+            let bi = (self.tick(ev.t_ms) as usize) & self.mask;
+            self.buckets[bi].push(ev);
+        }
+    }
+
+    /// Remove and return the minimum `(t_ms, seq)` event. Scans ticks
+    /// forward from the cursor; the earliest non-empty tick contains
+    /// the global minimum because time is monotone. If a whole lap of
+    /// the calendar holds nothing (a sparse far-future schedule, e.g.
+    /// a lone recovery event), falls back to one O(len) global scan
+    /// and jumps the cursor there.
+    fn pop(&mut self) -> Option<Event> {
+        if self.len == 0 {
+            return None;
+        }
+        for step in 0..self.buckets.len() as u64 {
+            let k = self.cursor.wrapping_add(step);
+            let bi = (k as usize) & self.mask;
+            let mut best: Option<(u64, u64, usize)> = None;
+            for (i, e) in self.buckets[bi].iter().enumerate() {
+                if (e.t_ms / self.width) as u64 != k {
+                    continue; // an alias from another lap
+                }
+                let key = (key_bits(e.t_ms), e.seq);
+                let better = match best {
+                    None => true,
+                    Some((kb, sb, _)) => key < (kb, sb),
+                };
+                if better {
+                    best = Some((key.0, key.1, i));
+                }
+            }
+            if let Some((_, _, i)) = best {
+                self.cursor = k;
+                self.len -= 1;
+                return Some(self.buckets[bi].swap_remove(i));
+            }
+        }
+        self.pop_sparse()
+    }
+
+    /// The slow path of [`CalendarQueue::pop`]: every pending event is
+    /// more than one calendar lap ahead of the cursor.
+    fn pop_sparse(&mut self) -> Option<Event> {
+        let mut loc: Option<(usize, usize)> = None;
+        let mut best = (u64::MAX, u64::MAX);
+        for (bi, bucket) in self.buckets.iter().enumerate() {
+            for (i, e) in bucket.iter().enumerate() {
+                let key = (key_bits(e.t_ms), e.seq);
+                if loc.is_none() || key < best {
+                    best = key;
+                    loc = Some((bi, i));
+                }
+            }
+        }
+        let (bi, i) = loc?;
+        self.len -= 1;
+        let ev = self.buckets[bi].swap_remove(i);
+        self.cursor = self.tick(ev.t_ms);
+        Some(ev)
+    }
+}
+
 /// Sentinel "no design loaded" row for a board that crashed (it comes
 /// back cold and pays a full reconfiguration on its first sequence).
 /// Never a valid model row, so every `prev == model` check misses.
 const NOTHING: usize = usize::MAX;
 
-/// Live board state during a run.
-struct BoardState {
-    device: usize,
+/// Live board state during a run, as index-based struct-of-arrays:
+/// board `b`'s state is element `b` of every vector (mirroring the
+/// PR-1 zero-clone SA layout). The dispatch policies scan a handful of
+/// hot fields (`up`, `free_at_ms`, `backlog_ms`, `tail_model`, queue
+/// lengths) across the whole fleet on **every arrival** — packing each
+/// field contiguously keeps those scans on a few cache lines instead
+/// of striding through 200-byte board structs.
+struct Boards {
+    device: Vec<usize>,
     /// Currently loaded design (model row), or [`NOTHING`] after a
     /// crash wiped the configuration.
-    loaded: usize,
+    loaded: Vec<usize>,
     /// Design loaded once the whole queue has drained — the backlog
     /// estimator's switch-cost anchor.
-    tail_model: usize,
-    queue: VecDeque<Request>,
+    tail_model: Vec<usize>,
+    queue: Vec<VecDeque<Request>>,
     /// Clips of the in-flight invocation sequence (empty = idle).
-    in_service: Vec<Request>,
-    free_at_ms: f64,
+    /// Taken with `mem::take` and restored (cleared, capacity kept)
+    /// by the handlers, so steady-state batches allocate nothing.
+    in_service: Vec<Vec<Request>>,
+    free_at_ms: Vec<f64>,
     /// Estimated queued work (service + expected switches), ms.
-    backlog_ms: f64,
-    busy_ms: f64,
-    completed: usize,
-    switches: usize,
-    batches: usize,
+    backlog_ms: Vec<f64>,
+    busy_ms: Vec<f64>,
+    completed: Vec<usize>,
+    switches: Vec<usize>,
+    batches: Vec<usize>,
     /// An idle board waiting out a batch hold window.
-    holding: bool,
+    holding: Vec<bool>,
     /// Bumped every time a hold is armed; a `HoldExpired` event only
     /// acts when its epoch still matches (invalidates stale timers).
-    hold_epoch: u64,
+    hold_epoch: Vec<u64>,
     /// False while crashed: the board takes no dispatches and its
     /// pending `Done` is stale.
-    up: bool,
+    up: Vec<bool>,
     /// Bumped when a crash interrupts an in-flight sequence, so the
     /// sequence's already-scheduled `Done` no-ops. 0 forever in a
     /// fault-free run, where every `Done` therefore matches.
-    service_epoch: u64,
+    service_epoch: Vec<u64>,
     /// The in-flight sequence drew a transient failure: its `Done`
     /// retries the clips instead of completing them.
-    service_failed: bool,
+    service_failed: Vec<bool>,
     /// Trace-only (written when a recorder is attached, read at the
     /// matching `Done`): start time and switch/fill share of the
     /// in-flight sequence, for the reconfig/fill/service slice
     /// decomposition on the board's Perfetto track.
-    seq_start_ms: f64,
-    seq_reconfig_ms: f64,
-    seq_fill_ms: f64,
+    seq_start_ms: Vec<f64>,
+    seq_reconfig_ms: Vec<f64>,
+    seq_fill_ms: Vec<f64>,
 }
 
-impl BoardState {
+impl Boards {
+    fn new(specs: &[BoardSpec]) -> Boards {
+        let n = specs.len();
+        Boards {
+            device: specs.iter().map(|b| b.device).collect(),
+            loaded: specs.iter().map(|b| b.preload).collect(),
+            tail_model: specs.iter().map(|b| b.preload).collect(),
+            queue: (0..n).map(|_| VecDeque::new()).collect(),
+            in_service: (0..n).map(|_| Vec::new()).collect(),
+            free_at_ms: vec![0.0; n],
+            backlog_ms: vec![0.0; n],
+            busy_ms: vec![0.0; n],
+            completed: vec![0; n],
+            switches: vec![0; n],
+            batches: vec![0; n],
+            holding: vec![false; n],
+            hold_epoch: vec![0; n],
+            up: vec![true; n],
+            service_epoch: vec![0; n],
+            service_failed: vec![false; n],
+            seq_start_ms: vec![0.0; n],
+            seq_reconfig_ms: vec![0.0; n],
+            seq_fill_ms: vec![0.0; n],
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.device.len()
+    }
+
     /// Estimated cost of serving one clip of `model` right after
-    /// `prev` on this board. Batch-aware: when batching is on and the
-    /// clip joins the same design's tail, it can ride an invocation
-    /// sequence and pays only the fill-free marginal cost; otherwise
-    /// it pays full service plus the switch if mismatched.
-    fn cost_after(&self, profiles: &ProfileMatrix, prev: usize,
-                  model: usize, batch: &BatchCfg) -> Option<f64> {
-        let p = profiles.get(model, self.device)?;
+    /// `prev` on board `b`. Batch-aware: when batching is on and the
+    /// clip joins the same design's **unfilled** tail batch, it rides
+    /// that invocation sequence and pays only the fill-free marginal
+    /// cost. The tail run is counted, not assumed: `tail % max_batch`
+    /// clips sit in the partially-built last batch, so a zero
+    /// remainder (empty tail, or a tail at exactly the cap) means the
+    /// joining clip opens a *new* sequence and pays the full per-clip
+    /// cost — the case the old estimator undercounted, systematically
+    /// under-pricing saturated boards. A mismatched design pays full
+    /// service plus the switch.
+    fn cost_after(&self, profiles: &ProfileMatrix, b: usize,
+                  prev: usize, model: usize, batch: &BatchCfg)
+        -> Option<f64> {
+        let p = profiles.get(model, self.device[b])?;
         if prev == model {
             if batch.max_batch > 1 {
-                return Some(p.batch_ms(2) - p.batch_ms(1));
+                let tail = self.queue[b]
+                    .iter()
+                    .rev()
+                    .take_while(|r| r.model == model)
+                    .count();
+                if tail % batch.max_batch != 0 {
+                    return Some(p.batch_ms(2) - p.batch_ms(1));
+                }
+                return Some(p.batch_ms(1));
             }
             return Some(p.service_ms);
         }
         Some(p.service_ms + p.reconfig_ms)
     }
-}
-
-/// Per-request resilience side state, indexed by arrival position.
-struct ReqState {
-    /// Current model row — degraded-mode fallback may downgrade it.
-    model: usize,
-    /// Remaining retry budget.
-    attempts_left: usize,
-    /// When the current attempt was queued on a board — the anchor of
-    /// the per-attempt deadline.
-    enqueued_ms: f64,
 }
 
 /// The running simulation: all mutable run state in one place so the
@@ -506,10 +710,19 @@ struct Sim<'a> {
     profiles: &'a ProfileMatrix,
     cfg: &'a FleetCfg,
     arrivals: &'a [Request],
-    boards: Vec<BoardState>,
-    heap: BinaryHeap<Event>,
+    boards: Boards,
+    events_q: CalendarQueue,
     seq: u64,
-    reqs: Vec<ReqState>,
+    /// Per-request resilience side state, indexed by arrival position
+    /// (SoA): the current model row (degraded-mode fallback may
+    /// downgrade it), the remaining retry budget, and when the current
+    /// attempt was queued — the per-attempt deadline's anchor.
+    req_model: Vec<usize>,
+    req_attempts_left: Vec<usize>,
+    req_enqueued_ms: Vec<f64>,
+    /// Reused crash-failover scratch (drained after every crash), so
+    /// failover re-dispatch allocates nothing in steady state.
+    failover_buf: Vec<Request>,
     latencies: Vec<f64>,
     dropped: usize,
     shed: usize,
@@ -563,31 +776,7 @@ pub fn simulate_fleet_traced(profiles: &ProfileMatrix, cfg: &FleetCfg,
                       .all(|w| w[0].arrival_ms <= w[1].arrival_ms),
                   "arrivals must be time-sorted");
 
-    let boards: Vec<BoardState> = cfg
-        .boards
-        .iter()
-        .map(|b| BoardState {
-            device: b.device,
-            loaded: b.preload,
-            tail_model: b.preload,
-            queue: VecDeque::new(),
-            in_service: Vec::new(),
-            free_at_ms: 0.0,
-            backlog_ms: 0.0,
-            busy_ms: 0.0,
-            completed: 0,
-            switches: 0,
-            batches: 0,
-            holding: false,
-            hold_epoch: 0,
-            up: true,
-            service_epoch: 0,
-            service_failed: false,
-            seq_start_ms: 0.0,
-            seq_reconfig_ms: 0.0,
-            seq_fill_ms: 0.0,
-        })
-        .collect();
+    let boards = Boards::new(&cfg.boards);
 
     if let Some(r) = rec.as_deref_mut() {
         r.process(PID_FLEET, "fleet boards");
@@ -600,22 +789,21 @@ pub fn simulate_fleet_traced(profiles: &ProfileMatrix, cfg: &FleetCfg,
         r.track(PID_REQ, 0, "lifecycle");
     }
 
+    // Calendar sized to the arrival stream: one tick ≈ one mean
+    // arrival gap (empty and single-burst streams fall back to 1 ms).
+    let span_ms = arrivals.last().map(|r| r.arrival_ms).unwrap_or(0.0);
     let mut sim = Sim {
         profiles,
         cfg,
         arrivals,
         boards,
-        heap: BinaryHeap::with_capacity(
-            arrivals.len() + cfg.boards.len()),
+        events_q: CalendarQueue::for_horizon(arrivals.len(), span_ms),
         seq: 0,
-        reqs: arrivals
-            .iter()
-            .map(|r| ReqState {
-                model: r.model,
-                attempts_left: cfg.resilience.retries,
-                enqueued_ms: 0.0,
-            })
-            .collect(),
+        req_model: arrivals.iter().map(|r| r.model).collect(),
+        req_attempts_left: vec![cfg.resilience.retries;
+                                arrivals.len()],
+        req_enqueued_ms: vec![0.0; arrivals.len()],
+        failover_buf: Vec::new(),
         latencies: Vec::with_capacity(arrivals.len()),
         dropped: 0,
         shed: 0,
@@ -657,17 +845,15 @@ pub fn simulate_fleet_traced(profiles: &ProfileMatrix, cfg: &FleetCfg,
     let mut sorted = sim.latencies;
     sorted.sort_by(|a, b| a.total_cmp(b));
     let makespan_ms = sim.makespan_ms;
-    let board_reports: Vec<BoardReport> = sim
-        .boards
-        .iter()
+    let board_reports: Vec<BoardReport> = (0..sim.boards.len())
         .map(|b| BoardReport {
-            device: b.device,
-            completed: b.completed,
-            batches: b.batches,
-            switches: b.switches,
-            busy_ms: b.busy_ms,
+            device: sim.boards.device[b],
+            completed: sim.boards.completed[b],
+            batches: sim.boards.batches[b],
+            switches: sim.boards.switches[b],
+            busy_ms: sim.boards.busy_ms[b],
             utilization: if makespan_ms > 0.0 {
-                b.busy_ms / makespan_ms
+                sim.boards.busy_ms[b] / makespan_ms
             } else {
                 0.0
             },
@@ -689,8 +875,8 @@ pub fn simulate_fleet_traced(profiles: &ProfileMatrix, cfg: &FleetCfg,
         makespan_ms,
         slo_ms: cfg.slo_ms,
         slo_violations,
-        switches: sim.boards.iter().map(|b| b.switches).sum(),
-        batches: sim.boards.iter().map(|b| b.batches).sum(),
+        switches: sim.boards.switches.iter().sum(),
+        batches: sim.boards.batches.iter().sum(),
         events: sim.events,
         shed: sim.shed,
         timeouts: sim.timeouts,
@@ -725,12 +911,12 @@ pub fn simulate_fleet_traced(profiles: &ProfileMatrix, cfg: &FleetCfg,
 impl Sim<'_> {
     /// Schedule an event, assigning the next tie-break sequence.
     fn push(&mut self, t_ms: f64, kind: EventKind) {
-        self.heap.push(Event { t_ms, seq: self.seq, kind });
+        self.events_q.push(Event { t_ms, seq: self.seq, kind });
         self.seq += 1;
     }
 
     fn run(&mut self) {
-        while let Some(ev) = self.heap.pop() {
+        while let Some(ev) = self.events_q.pop() {
             self.events += 1;
             let now = ev.t_ms;
             match ev.kind {
@@ -755,7 +941,7 @@ impl Sim<'_> {
         // the id leaves the fault-free run untouched.
         let mut req = Request {
             id: i,
-            model: self.reqs[i].model,
+            model: self.req_model[i],
             arrival_ms: self.arrivals[i].arrival_ms,
         };
         if let Some(r) = self.rec.as_deref_mut() {
@@ -804,7 +990,7 @@ impl Sim<'_> {
                                 ("to", Json::Num(f as f64)),
                             ]);
                         }
-                        self.reqs[i].model = f;
+                        self.req_model[i] = f;
                         req.model = f;
                     }
                     None => {
@@ -830,7 +1016,7 @@ impl Sim<'_> {
             // the request backs off and tries again (the fleet may
             // just be mid-crash); without one it is dropped, exactly
             // as the fault-free engine drops unservable models.
-            if self.reqs[i].attempts_left > 0 {
+            if self.req_attempts_left[i] > 0 {
                 self.retry_or_fail(i, now);
             } else {
                 self.dropped += 1;
@@ -858,20 +1044,20 @@ impl Sim<'_> {
         else {
             return false;
         };
-        self.reqs[req.id].enqueued_ms = now;
+        self.req_enqueued_ms[req.id] = now;
         let (rid, rmodel) = (req.id, req.model);
-        let board = &mut self.boards[b];
-        let est = board
-            .cost_after(self.profiles, board.tail_model, req.model,
-                        &self.cfg.batch)
+        let est = self
+            .boards
+            .cost_after(self.profiles, b, self.boards.tail_model[b],
+                        req.model, &self.cfg.batch)
             .expect("dispatch returned a capable board");
-        board.backlog_ms += est;
-        board.tail_model = req.model;
-        board.queue.push_back(req);
-        let idle = board.in_service.is_empty();
+        self.boards.backlog_ms[b] += est;
+        self.boards.tail_model[b] = req.model;
+        self.boards.queue[b].push_back(req);
+        let idle = self.boards.in_service[b].is_empty();
         if self.rec.is_some() {
             let depth: usize =
-                self.boards.iter().map(|bd| bd.queue.len()).sum();
+                self.boards.queue.iter().map(|q| q.len()).sum();
             if let Some(r) = self.rec.as_deref_mut() {
                 let ts = now * 1000.0;
                 r.instant(PID_REQ, 0, "req", "enqueue", ts, vec![
@@ -890,14 +1076,17 @@ impl Sim<'_> {
     }
 
     fn on_done(&mut self, b: usize, epoch: u64, now: f64) {
-        if self.boards[b].service_epoch != epoch {
+        if self.boards.service_epoch[b] != epoch {
             // The board crashed mid-sequence; this work already
             // failed over.
             return;
         }
         let failed_seq =
-            std::mem::take(&mut self.boards[b].service_failed);
-        let batch = std::mem::take(&mut self.boards[b].in_service);
+            std::mem::take(&mut self.boards.service_failed[b]);
+        // Taken, processed, then restored cleared — the board's batch
+        // vector keeps its capacity across sequences, so the hot loop
+        // never allocates per completion.
+        let mut batch = std::mem::take(&mut self.boards.in_service[b]);
         assert!(!batch.is_empty(),
                 "completion without in-service request");
         if self.rec.is_some() {
@@ -906,10 +1095,11 @@ impl Sim<'_> {
             // at completion (not start) so a crash never leaves
             // forward-dated timestamps behind it — the interrupted
             // sequence's `Done` is staled above and draws nothing.
-            let (start, reconfig_d, fill_d) = {
-                let bd = &self.boards[b];
-                (bd.seq_start_ms, bd.seq_reconfig_ms, bd.seq_fill_ms)
-            };
+            let (start, reconfig_d, fill_d) = (
+                self.boards.seq_start_ms[b],
+                self.boards.seq_reconfig_ms[b],
+                self.boards.seq_fill_ms[b],
+            );
             let model = batch[0].model;
             let n = batch.len();
             let outcome = if failed_seq { "failed" } else { "ok" };
@@ -948,7 +1138,7 @@ impl Sim<'_> {
                 self.retry_or_fail(req.id, now);
             }
         } else {
-            self.boards[b].completed += batch.len();
+            self.boards.completed[b] += batch.len();
             for req in &batch {
                 let lat = now - req.arrival_ms;
                 self.latencies.push(lat);
@@ -971,48 +1161,51 @@ impl Sim<'_> {
             }
             self.makespan_ms = self.makespan_ms.max(now);
         }
-        if !self.boards[b].queue.is_empty() {
+        // Hand the emptied batch vector back (capacity intact) before
+        // the next sequence gathers into it.
+        batch.clear();
+        self.boards.in_service[b] = batch;
+        if !self.boards.queue[b].is_empty() {
             self.maybe_start(b, now);
         }
     }
 
     fn on_hold(&mut self, b: usize, epoch: u64, now: f64) {
-        let board = &self.boards[b];
-        if board.holding && board.hold_epoch == epoch
-            && board.in_service.is_empty()
-            && !board.queue.is_empty()
+        if self.boards.holding[b] && self.boards.hold_epoch[b] == epoch
+            && self.boards.in_service[b].is_empty()
+            && !self.boards.queue[b].is_empty()
         {
-            self.boards[b].holding = false;
+            self.boards.holding[b] = false;
             self.start_next(b, now);
         }
     }
 
     fn on_crash(&mut self, b: usize, now: f64) {
-        if !self.boards[b].up {
+        if !self.boards.up[b] {
             return; // overlapping crash windows
         }
-        let lost: Vec<Request> = {
-            let board = &mut self.boards[b];
-            board.up = false;
-            board.holding = false;
-            let mut lost: Vec<Request> = Vec::new();
-            if !board.in_service.is_empty() {
-                // The unfinished remainder of the interrupted
-                // sequence never ran: refund it and stale the
-                // pending `Done` via the service epoch.
-                board.busy_ms -= (board.free_at_ms - now).max(0.0);
-                board.service_epoch += 1;
-                board.service_failed = false;
-                lost.append(&mut board.in_service);
-            }
-            lost.extend(board.queue.drain(..));
-            board.backlog_ms = 0.0;
-            board.loaded = NOTHING;
-            board.tail_model = NOTHING;
-            lost
-        };
+        // Reused scratch (always left empty): crashes drain into the
+        // same buffer run after run, no per-crash allocation.
+        let mut lost = std::mem::take(&mut self.failover_buf);
+        debug_assert!(lost.is_empty());
+        self.boards.up[b] = false;
+        self.boards.holding[b] = false;
+        if !self.boards.in_service[b].is_empty() {
+            // The unfinished remainder of the interrupted
+            // sequence never ran: refund it and stale the
+            // pending `Done` via the service epoch.
+            self.boards.busy_ms[b] -=
+                (self.boards.free_at_ms[b] - now).max(0.0);
+            self.boards.service_epoch[b] += 1;
+            self.boards.service_failed[b] = false;
+            lost.append(&mut self.boards.in_service[b]);
+        }
+        lost.extend(self.boards.queue[b].drain(..));
+        self.boards.backlog_ms[b] = 0.0;
+        self.boards.loaded[b] = NOTHING;
+        self.boards.tail_model[b] = NOTHING;
         if self.rec.is_some() {
-            let up = self.boards.iter().filter(|bd| bd.up).count();
+            let up = self.boards.up.iter().filter(|&&u| u).count();
             if let Some(r) = self.rec.as_deref_mut() {
                 let ts = now * 1000.0;
                 r.instant(PID_FLEET, b as u64, "board", "crash", ts,
@@ -1024,7 +1217,7 @@ impl Sim<'_> {
         // Failover re-dispatch is free (no retry budget consumed);
         // only a clip stranded with no live capable board burns a
         // retry — or fails, if it has none left.
-        for req in lost {
+        for req in lost.drain(..) {
             self.failovers += 1;
             if let Some(r) = self.rec.as_deref_mut() {
                 r.instant(PID_REQ, 0, "req", "failover", now * 1000.0,
@@ -1034,15 +1227,16 @@ impl Sim<'_> {
                 self.retry_or_fail(req.id, now);
             }
         }
+        self.failover_buf = lost;
     }
 
     fn on_recover(&mut self, b: usize, now: f64) {
         // Back up, cold: `loaded` stays `NOTHING`, so the first
         // sequence pays a full reconfiguration. Work that failed over
         // stays where it went; new arrivals find the board again.
-        self.boards[b].up = true;
+        self.boards.up[b] = true;
         if self.rec.is_some() {
-            let up = self.boards.iter().filter(|bd| bd.up).count();
+            let up = self.boards.up.iter().filter(|&&u| u).count();
             if let Some(r) = self.rec.as_deref_mut() {
                 let ts = now * 1000.0;
                 r.instant(PID_FLEET, b as u64, "board", "recover", ts,
@@ -1055,7 +1249,7 @@ impl Sim<'_> {
     fn on_retry(&mut self, i: usize, now: f64) {
         let req = Request {
             id: i,
-            model: self.reqs[i].model,
+            model: self.req_model[i],
             arrival_ms: self.arrivals[i].arrival_ms,
         };
         if !self.try_enqueue(req, now) {
@@ -1067,11 +1261,11 @@ impl Sim<'_> {
     /// exponential backoff) or, with the budget exhausted, count the
     /// request as permanently failed.
     fn retry_or_fail(&mut self, i: usize, now: f64) {
-        if self.reqs[i].attempts_left > 0 {
-            self.reqs[i].attempts_left -= 1;
+        if self.req_attempts_left[i] > 0 {
+            self.req_attempts_left[i] -= 1;
             self.retries += 1;
             let attempt = self.cfg.resilience.retries
-                - self.reqs[i].attempts_left;
+                - self.req_attempts_left[i];
             if let Some(r) = self.rec.as_deref_mut() {
                 let ts = now * 1000.0;
                 r.instant(PID_REQ, 0, "req", "retry", ts, vec![
@@ -1114,13 +1308,13 @@ impl Sim<'_> {
             return;
         }
         let mut qi = 0;
-        while qi < self.boards[b].queue.len() {
-            let req = self.boards[b].queue[qi];
-            if now - self.reqs[req.id].enqueued_ms <= deadline {
+        while qi < self.boards.queue[b].len() {
+            let req = self.boards.queue[b][qi];
+            if now - self.req_enqueued_ms[req.id] <= deadline {
                 qi += 1;
                 continue;
             }
-            let _ = self.boards[b].queue.remove(qi);
+            let _ = self.boards.queue[b].remove(qi);
             self.timeouts += 1;
             if let Some(r) = self.rec.as_deref_mut() {
                 r.instant(PID_REQ, 0, "req", "timeout", now * 1000.0,
@@ -1135,7 +1329,7 @@ impl Sim<'_> {
                 .flatten()
             {
                 if fb != req.model {
-                    self.reqs[req.id].model = fb;
+                    self.req_model[req.id] = fb;
                     self.fallbacks += 1;
                 }
             }
@@ -1149,17 +1343,16 @@ impl Sim<'_> {
     /// non-empty queue and an idle board.
     fn maybe_start(&mut self, b: usize, now: f64) {
         let full = !self.cfg.batch.holds()
-            || candidate_batch_len(self.profiles, &self.boards[b],
+            || candidate_batch_len(self.profiles, &self.boards, b,
                                    self.cfg.queue, &self.cfg.batch)
                 >= self.cfg.batch.max_batch;
         if full {
-            self.boards[b].holding = false;
+            self.boards.holding[b] = false;
             self.start_next(b, now);
-        } else if !self.boards[b].holding {
-            let board = &mut self.boards[b];
-            board.holding = true;
-            board.hold_epoch += 1;
-            let epoch = board.hold_epoch;
+        } else if !self.boards.holding[b] {
+            self.boards.holding[b] = true;
+            self.boards.hold_epoch[b] += 1;
+            let epoch = self.boards.hold_epoch[b];
             self.push(now + self.cfg.batch.max_wait_ms,
                       EventKind::HoldExpired(b, epoch));
         }
@@ -1180,42 +1373,55 @@ impl Sim<'_> {
     #[allow(clippy::disallowed_methods)]
     fn start_next(&mut self, b: usize, now: f64) {
         self.sweep_timeouts(b, now);
-        if self.boards[b].queue.is_empty() {
-            let board = &mut self.boards[b];
-            board.holding = false;
-            board.backlog_ms = 0.0;
-            board.tail_model = board.loaded;
+        if self.boards.queue[b].is_empty() {
+            self.boards.holding[b] = false;
+            self.boards.backlog_ms[b] = 0.0;
+            self.boards.tail_model[b] = self.boards.loaded[b];
             return;
         }
-        let pick = pick_index(self.profiles, &self.boards[b],
+        let pick = pick_index(self.profiles, &self.boards, b,
                               self.cfg.queue, &self.cfg.batch);
-        let board = &mut self.boards[b];
-        let first =
-            board.queue.remove(pick).expect("queue checked non-empty");
+        let first = self
+            .boards
+            .queue[b]
+            .remove(pick)
+            .expect("queue checked non-empty");
         let model = first.model;
-        let mut batch = vec![first];
-        if self.cfg.batch.max_batch > 1 {
-            let mut i = 0;
-            while batch.len() < self.cfg.batch.max_batch
-                && i < board.queue.len()
-            {
-                if board.queue[i].model == model {
-                    batch.push(
-                        board.queue.remove(i).expect("index in range"));
+        // Gather the batch into the board's reused (empty, capacity
+        // kept) in-service vector: one forward pass that keeps
+        // non-matching clips compacted in arrival order — replacing
+        // the old O(queue · batch) repeated `VecDeque::remove` scan.
+        // Selected clips and survivors both keep arrival order, so
+        // the gathered batch is identical to the old scan's.
+        let mut batch = std::mem::take(&mut self.boards.in_service[b]);
+        debug_assert!(batch.is_empty());
+        batch.push(first);
+        if self.cfg.batch.max_batch > 1
+            && !self.boards.queue[b].is_empty()
+        {
+            let cap = self.cfg.batch.max_batch;
+            let queue = &mut self.boards.queue[b];
+            let mut kept = 0usize;
+            for qi in 0..queue.len() {
+                let r = queue[qi];
+                if batch.len() < cap && r.model == model {
+                    batch.push(r);
                 } else {
-                    i += 1;
+                    queue[kept] = r;
+                    kept += 1;
                 }
             }
+            queue.truncate(kept);
         }
         let p = self
             .profiles
-            .get(model, board.device)
+            .get(model, self.boards.device[b])
             .expect("queued request must be servable");
-        let switch = if board.loaded == model {
+        let switch = if self.boards.loaded[b] == model {
             0.0
         } else {
-            board.switches += 1;
-            board.loaded = model;
+            self.boards.switches[b] += 1;
+            self.boards.loaded[b] = model;
             p.reconfig_ms
         };
         let mut cost = switch + p.batch_ms(batch.len());
@@ -1229,44 +1435,47 @@ impl Sim<'_> {
         }
         // Transient invocation failure draw (never taken — and the
         // stream never advanced — when the probability is 0).
-        board.service_failed = self.cfg.faults.flaky_fail_prob > 0.0
-            && self.flaky_rng.uniform()
-                < self.cfg.faults.flaky_fail_prob;
+        self.boards.service_failed[b] =
+            self.cfg.faults.flaky_fail_prob > 0.0
+                && self.flaky_rng.uniform()
+                    < self.cfg.faults.flaky_fail_prob;
         // Keep the backlog estimator in sync: remove this sequence's
         // estimated contribution. Priority reordering and batch
         // amortisation can make realised costs diverge from the
         // enqueue-time estimates, so an empty queue resets the
         // estimator exactly instead of carrying a residue that would
         // bias SLO-aware dispatch against this board.
-        if board.queue.is_empty() {
-            board.backlog_ms = 0.0;
-            board.tail_model = model;
+        if self.boards.queue[b].is_empty() {
+            self.boards.backlog_ms[b] = 0.0;
+            self.boards.tail_model[b] = model;
         } else {
-            board.backlog_ms = (board.backlog_ms - cost).max(0.0);
+            self.boards.backlog_ms[b] =
+                (self.boards.backlog_ms[b] - cost).max(0.0);
         }
-        board.busy_ms += cost;
-        board.free_at_ms = now + cost;
-        board.in_service = batch;
-        board.batches += 1;
+        self.boards.busy_ms[b] += cost;
+        self.boards.free_at_ms[b] = now + cost;
+        let clips = batch.len();
+        self.boards.in_service[b] = batch;
+        self.boards.batches[b] += 1;
         if self.rec.is_some() {
             // Stash the (straggler-scaled) switch/fill share of this
             // sequence for the reconfig/fill/service slice
             // decomposition its `Done` emits on the board track.
-            let clips = board.in_service.len();
             let pre = switch + p.batch_ms(clips);
             let scale = if pre > 0.0 { cost / pre } else { 1.0 };
-            board.seq_start_ms = now;
-            board.seq_reconfig_ms = switch * scale;
-            board.seq_fill_ms =
+            self.boards.seq_start_ms[b] = now;
+            self.boards.seq_reconfig_ms[b] = switch * scale;
+            self.boards.seq_fill_ms[b] =
                 p.fill_ms.max(0.0).min(p.batch_ms(clips)) * scale;
         }
-        let epoch = board.service_epoch;
+        let epoch = self.boards.service_epoch[b];
         self.push(now + cost, EventKind::Done(b, epoch));
         if self.rec.is_some() {
             let busy = self
                 .boards
+                .in_service
                 .iter()
-                .filter(|bd| !bd.in_service.is_empty())
+                .filter(|s| !s.is_empty())
                 .count();
             if let Some(r) = self.rec.as_deref_mut() {
                 r.counter(PID_REQ, 0, "boards_busy", now * 1000.0,
@@ -1280,25 +1489,25 @@ impl Sim<'_> {
 /// boards — the admission-control estimate (the SLO-aware dispatch
 /// formula, minimised over the fleet). `None` when no live board can
 /// serve the model.
-fn best_completion_est(profiles: &ProfileMatrix, boards: &[BoardState],
+fn best_completion_est(profiles: &ProfileMatrix, boards: &Boards,
                        model: usize, now: f64, batch: &BatchCfg)
     -> Option<f64> {
     let mut best: Option<f64> = None;
-    for b in boards {
-        if !b.up {
+    for b in 0..boards.len() {
+        if !boards.up[b] {
             continue;
         }
-        let Some(own) =
-            b.cost_after(profiles, b.tail_model, model, batch)
+        let Some(own) = boards.cost_after(
+            profiles, b, boards.tail_model[b], model, batch)
         else {
             continue;
         };
-        let start = if b.in_service.is_empty() {
+        let start = if boards.in_service[b].is_empty() {
             now
         } else {
-            b.free_at_ms.max(now)
+            boards.free_at_ms[b].max(now)
         };
-        let est = start + b.backlog_ms + own;
+        let est = start + boards.backlog_ms[b] + own;
         let better = match best {
             None => true,
             Some(e) => est < e,
@@ -1314,11 +1523,12 @@ fn best_completion_est(profiles: &ProfileMatrix, boards: &[BoardState],
 /// feasible design for the request's model — and boards that are down
 /// (crashed, not yet recovered) — are skipped; `None` means no board
 /// can serve it right now.
-fn dispatch(profiles: &ProfileMatrix, boards: &[BoardState],
+fn dispatch(profiles: &ProfileMatrix, boards: &Boards,
             policy: Policy, rr_next: &mut usize, req: &Request,
             now: f64, batch: &BatchCfg) -> Option<usize> {
-    let capable = |b: &BoardState| {
-        b.up && profiles.get(req.model, b.device).is_some()
+    let capable = |b: usize| {
+        boards.up[b]
+            && profiles.get(req.model, boards.device[b]).is_some()
     };
     match policy {
         Policy::RoundRobin => {
@@ -1328,7 +1538,7 @@ fn dispatch(profiles: &ProfileMatrix, boards: &[BoardState],
             for _ in 0..boards.len() {
                 let b = *rr_next % boards.len();
                 *rr_next = (*rr_next + 1) % boards.len();
-                if capable(&boards[b]) {
+                if capable(b) {
                     return Some(b);
                 }
             }
@@ -1337,47 +1547,44 @@ fn dispatch(profiles: &ProfileMatrix, boards: &[BoardState],
         // Load is measured in clips (queued + in flight), so a board
         // running a full batch reads as busier than one running a
         // single clip — the batch-aware load signal.
-        Policy::LeastLoaded => boards
-            .iter()
-            .enumerate()
-            .filter(|(_, b)| capable(b))
-            .min_by_key(|(i, b)| {
-                (b.queue.len() + b.in_service.len(), *i)
-            })
-            .map(|(i, _)| i),
+        Policy::LeastLoaded => (0..boards.len())
+            .filter(|&b| capable(b))
+            .min_by_key(|&b| {
+                (boards.queue[b].len() + boards.in_service[b].len(), b)
+            }),
         Policy::SloAware => {
             // Earliest estimated completion of this request: current
             // service tail + queued backlog + its own cost, which is
             // batch-aware (a clip joining its design's resident tail
             // pays only the marginal batched cost — see
-            // `BoardState::cost_after`). The backlog term is an
+            // `Boards::cost_after`). The backlog term is an
             // estimate under priority reordering, exact under FIFO.
             let mut best: Option<(f64, usize)> = None;
-            for (i, b) in boards.iter().enumerate() {
-                if !b.up {
+            for b in 0..boards.len() {
+                if !boards.up[b] {
                     continue;
                 }
-                let Some(own) =
-                    b.cost_after(profiles, b.tail_model, req.model,
-                                 batch)
+                let Some(own) = boards.cost_after(
+                    profiles, b, boards.tail_model[b], req.model,
+                    batch)
                 else {
                     continue;
                 };
-                let start = if b.in_service.is_empty() {
+                let start = if boards.in_service[b].is_empty() {
                     now
                 } else {
-                    b.free_at_ms.max(now)
+                    boards.free_at_ms[b].max(now)
                 };
-                let est = start + b.backlog_ms + own;
+                let est = start + boards.backlog_ms[b] + own;
                 let better = match best {
                     None => true,
                     Some((e, _)) => est < e,
                 };
                 if better {
-                    best = Some((est, i));
+                    best = Some((est, b));
                 }
             }
-            best.map(|(_, i)| i)
+            best.map(|(_, b)| b)
         }
     }
 }
@@ -1387,7 +1594,7 @@ fn dispatch(profiles: &ProfileMatrix, boards: &[BoardState],
 // The `expect` documents the servability invariant of queued
 // requests; see `Sim::try_enqueue`.
 #[allow(clippy::disallowed_methods)]
-fn pick_index(profiles: &ProfileMatrix, board: &BoardState,
+fn pick_index(profiles: &ProfileMatrix, boards: &Boards, b: usize,
               queue: QueueDiscipline, batch: &BatchCfg) -> usize {
     match queue {
         QueueDiscipline::Fifo => 0,
@@ -1397,9 +1604,10 @@ fn pick_index(profiles: &ProfileMatrix, board: &BoardState,
             // scan is cheaper and more deterministic than a heap.
             let mut best = 0usize;
             let mut best_cost = f64::INFINITY;
-            for (i, r) in board.queue.iter().enumerate() {
-                let c = board
-                    .cost_after(profiles, board.loaded, r.model, batch)
+            for (i, r) in boards.queue[b].iter().enumerate() {
+                let c = boards
+                    .cost_after(profiles, b, boards.loaded[b],
+                                r.model, batch)
                     .expect("queued request must be servable");
                 if c < best_cost {
                     best_cost = c;
@@ -1414,13 +1622,12 @@ fn pick_index(profiles: &ProfileMatrix, board: &BoardState,
 /// Clips the next invocation sequence would carry if started now: the
 /// discipline's pick plus every queued clip of the same model, capped
 /// at `max_batch`. Only consulted while deciding whether to hold.
-fn candidate_batch_len(profiles: &ProfileMatrix, board: &BoardState,
-                       queue: QueueDiscipline, batch: &BatchCfg)
-    -> usize {
-    let pick = pick_index(profiles, board, queue, batch);
-    let model = board.queue[pick].model;
-    board
-        .queue
+fn candidate_batch_len(profiles: &ProfileMatrix, boards: &Boards,
+                       b: usize, queue: QueueDiscipline,
+                       batch: &BatchCfg) -> usize {
+    let pick = pick_index(profiles, boards, b, queue, batch);
+    let model = boards.queue[b][pick].model;
+    boards.queue[b]
         .iter()
         .filter(|r| r.model == model)
         .take(batch.max_batch)
@@ -1920,6 +2127,161 @@ mod tests {
         assert_eq!(a.p99_ms.to_bits(), b.p99_ms.to_bits());
         assert_eq!(a.goodput_p99_ms.to_bits(), b.goodput_p99_ms.to_bits());
         assert_eq!(a.makespan_ms.to_bits(), b.makespan_ms.to_bits());
+    }
+
+    #[test]
+    fn calendar_queue_pops_in_reference_heap_order() {
+        use std::collections::BinaryHeap;
+        // Drive a CalendarQueue and the reference BinaryHeap through
+        // an identical DES-shaped schedule — a burst of 4-way exact
+        // time ties, then pops interleaved with pushes at/after the
+        // popped time (same-time events, near-future completions and
+        // far-future recoveries spanning many calendar laps). The
+        // queue is deliberately undersized (4 buckets for dozens of
+        // events) so growth and bucket aliasing are both exercised.
+        // Pop sequences must agree bit-for-bit.
+        let mut cal = CalendarQueue::for_horizon(4, 10.0);
+        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        let mut seq = 0u64;
+        for i in 0..40usize {
+            let ev = Event {
+                t_ms: (i / 4) as f64 * 2.5,
+                seq,
+                kind: EventKind::Arrival(i),
+            };
+            seq += 1;
+            cal.push(ev);
+            heap.push(ev);
+        }
+        let mut popped = 0usize;
+        while let Some(h) = heap.pop() {
+            let c = cal.pop().expect("calendar agrees on emptiness");
+            assert_eq!(h.t_ms.to_bits(), c.t_ms.to_bits(),
+                       "pop {popped}: time diverged");
+            assert_eq!(h.seq, c.seq, "pop {popped}: tie-break diverged");
+            popped += 1;
+            if popped % 3 == 0 && seq < 120 {
+                // DES pushes land at or after the time just popped.
+                for dt in [0.0, 7.5, 400.0] {
+                    let ev = Event {
+                        t_ms: h.t_ms + dt,
+                        seq,
+                        kind: EventKind::Done(0, 0),
+                    };
+                    seq += 1;
+                    cal.push(ev);
+                    heap.push(ev);
+                }
+            }
+        }
+        assert!(cal.pop().is_none(), "both drain together");
+        assert!(popped >= 120, "interleaved schedule ran: {popped}");
+    }
+
+    #[test]
+    fn calendar_queue_finds_events_beyond_one_lap() {
+        // A sparse schedule whose events sit many laps past the
+        // cursor (a lone far-future recovery is the simulator case):
+        // the global-scan fallback must find them in exact order.
+        let mut cal = CalendarQueue::for_horizon(4, 10.0);
+        let times = [0.0, 1e6, 1e6 + 1.0, 5.0, 2.5e8];
+        for (i, &t) in times.iter().enumerate() {
+            cal.push(Event {
+                t_ms: t,
+                seq: i as u64,
+                kind: EventKind::Arrival(i),
+            });
+        }
+        let mut sorted = times;
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        for &want in &sorted {
+            let got = cal.pop().expect("event present");
+            assert_eq!(got.t_ms.to_bits(), want.to_bits());
+        }
+        assert!(cal.pop().is_none());
+    }
+
+    #[test]
+    fn cost_after_counts_joinable_tail_clips() {
+        // service 10 / fill 4 / reconfig 5; batch cap 2.
+        let m = matrix_fill(10.0, 4.0);
+        let batch2 = BatchCfg::new(2, 0.0);
+        let specs = [BoardSpec { device: 0, preload: 0 }];
+        let mut boards = Boards::new(&specs);
+        // Idle with an empty queue: a joining clip opens its own
+        // sequence and pays the full per-clip cost — the old
+        // estimator wrongly billed the 6 ms fill-free marginal here.
+        assert_eq!(boards.cost_after(&m, 0, 0, 0, &batch2),
+                   Some(10.0));
+        // One clip in the tail batch: the next one rides it at the
+        // marginal cost (batch_ms(2) - batch_ms(1) = 6).
+        boards.queue[0].push_back(
+            Request { id: 0, model: 0, arrival_ms: 0.0 });
+        assert_eq!(boards.cost_after(&m, 0, 0, 0, &batch2),
+                   Some(6.0));
+        // Tail batch at the cap: the third clip opens a new sequence
+        // and pays full fill again.
+        boards.queue[0].push_back(
+            Request { id: 1, model: 0, arrival_ms: 0.0 });
+        assert_eq!(boards.cost_after(&m, 0, 0, 0, &batch2),
+                   Some(10.0));
+        // Mismatched design: full service + reconfiguration.
+        assert_eq!(boards.cost_after(&m, 0, NOTHING, 0, &batch2),
+                   Some(15.0));
+        // Batching off: plain service cost, queue ignored.
+        assert_eq!(
+            boards.cost_after(&m, 0, 0, 0, &BatchCfg::default()),
+            Some(10.0));
+    }
+
+    #[test]
+    fn full_tail_batch_routes_to_the_cheaper_board() {
+        // The cost_after regression pin. Two boards on one device:
+        // b0 preloads m0 (service 10 / fill 4), b1 preloads m1
+        // (service 20 / fill 0); reconfig 1; SLO-aware dispatch with
+        // batch cap 2. A0(m1), A1..A3(m0) at t=0 route identically
+        // under the old and fixed estimators (b1 takes A0; b0 serves
+        // A1 and queues [A2, A3] — a tail batch exactly at the cap).
+        // A4(m0) at t=1 is the discriminating dispatch: the old
+        // estimator still priced b0 at the fill-free marginal
+        // (est 10 + 12 + 6 = 28 < 31 via b1) and mis-routed A4
+        // behind the full batch, where it started a fresh sequence
+        // at t=26 and finished at 36 (35 ms latency, 0 switches).
+        // Counting joinable tail clips prices b0 honestly
+        // (10 + 16 + 10 = 36 > 31), so A4 goes to b1, pays the m0
+        // reload there and finishes at t=31 — a 30 ms latency.
+        let mut m = ProfileMatrix::new(vec!["m0".into(), "m1".into()],
+                                       vec!["dev".into()]);
+        m.set(0, 0, ServiceProfile { service_ms: 10.0,
+                                     reconfig_ms: 1.0, fill_ms: 4.0 });
+        m.set(1, 0, ServiceProfile { service_ms: 20.0,
+                                     reconfig_ms: 1.0, fill_ms: 0.0 });
+        let cfg = FleetCfg {
+            boards: vec![BoardSpec { device: 0, preload: 0 },
+                         BoardSpec { device: 0, preload: 1 }],
+            policy: Policy::SloAware,
+            queue: QueueDiscipline::Fifo,
+            slo_ms: 100.0,
+            batch: BatchCfg::new(2, 0.0),
+            faults: FaultPlan::none(),
+            resilience: ResilienceCfg::none(),
+        };
+        let arr = vec![
+            Request { id: 0, model: 1, arrival_ms: 0.0 },
+            Request { id: 1, model: 0, arrival_ms: 0.0 },
+            Request { id: 2, model: 0, arrival_ms: 0.0 },
+            Request { id: 3, model: 0, arrival_ms: 0.0 },
+            Request { id: 4, model: 0, arrival_ms: 1.0 },
+        ];
+        let met = simulate_fleet(&m, &cfg, &arr);
+        assert_eq!(met.completed, 5);
+        assert_eq!(met.switches, 1, "b1 reloads m0 for A4");
+        assert_eq!(met.batches, 4);
+        assert_eq!(met.max_ms, 30.0,
+                   "the old estimator parked A4 behind a full batch \
+                    for a 35 ms tail");
+        assert_eq!(met.makespan_ms, 31.0);
+        assert_eq!(met.events, 9, "5 arrivals + 4 completions");
     }
 
     #[test]

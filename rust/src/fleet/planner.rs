@@ -70,6 +70,13 @@ pub struct PlanCfg {
     /// shed + failed + dropped requests over offered requests. 0
     /// (default) demands every offered request complete.
     pub shed_cap: f64,
+    /// Arrival process the candidate fleets are certified against.
+    /// [`arrivals::ArrivalKind::Poisson`] (default) keeps the planner
+    /// bit-identical to the pre-generator search.
+    pub arrivals: arrivals::ArrivalKind,
+    /// Worker shards the certification stream is generated across.
+    /// 1 (default) is byte-identical to the unsharded generator.
+    pub shards: usize,
 }
 
 impl Default for PlanCfg {
@@ -87,6 +94,8 @@ impl Default for PlanCfg {
             faults: None,
             resilience: ResilienceCfg::none(),
             shed_cap: 0.0,
+            arrivals: arrivals::ArrivalKind::Poisson,
+            shards: 1,
         }
     }
 }
@@ -378,11 +387,20 @@ fn plan_inner(profiles: &ProfileMatrix, cfg: &PlanCfg,
         };
     }
 
+    if cfg.shards == 0 {
+        return Verdict::Infeasible {
+            reasons: vec!["certification stream needs >= 1 shard"
+                .into()],
+        };
+    }
+
     let n_models = profiles.models.len();
     // One arrival stream certifies every candidate — homogeneous and
-    // mixed alike — so cost comparisons are apples-to-apples.
-    let arr = arrivals::poisson(cfg.requests, cfg.rate_rps, n_models,
-                                cfg.seed);
+    // mixed alike — so cost comparisons are apples-to-apples. Poisson
+    // with one shard reproduces the legacy stream byte-for-byte.
+    let arr = arrivals::sharded(cfg.arrivals, cfg.requests,
+                                cfg.rate_rps, n_models, cfg.seed,
+                                cfg.shards);
     let mut best: Option<FleetPlan> = None;
     let mut reasons: Vec<String> = Vec::new();
     let mut feasible: Vec<DeviceCand> = Vec::new();
@@ -951,6 +969,52 @@ mod tests {
         assert!(reasons[0].contains("n-1"), "{reasons:?}");
         assert!(reasons[0].contains("fault-free plan: 1 boards"),
                 "{reasons:?}");
+    }
+
+    #[test]
+    fn plan_rejects_zero_shards() {
+        let m = matrix(10.0);
+        let cfg = PlanCfg { shards: 0, ..PlanCfg::default() };
+        let Verdict::Infeasible { reasons } = plan(&m, &cfg) else {
+            panic!("a zero-shard stream cannot certify anything");
+        };
+        assert!(reasons[0].contains("shard"), "{reasons:?}");
+    }
+
+    #[test]
+    fn plan_certifies_under_every_generator_and_sharding() {
+        // The planner is a deterministic function of (profiles, cfg)
+        // whatever the arrival process or shard count — re-planning
+        // must reproduce the composition exactly, and a diurnal peak
+        // (1.8x the mean rate) may need more boards, never fewer
+        // p99 honesty than Poisson at the same mean.
+        let m = matrix(10.0);
+        for kind in [arrivals::ArrivalKind::Poisson,
+                     arrivals::ArrivalKind::Diurnal,
+                     arrivals::ArrivalKind::Flash,
+                     arrivals::ArrivalKind::SelfSim] {
+            for shards in [1usize, 4] {
+                let cfg = PlanCfg {
+                    rate_rps: 150.0,
+                    slo_ms: 80.0,
+                    requests: 800,
+                    arrivals: kind,
+                    shards,
+                    ..PlanCfg::default()
+                };
+                let Verdict::Feasible(p) = plan(&m, &cfg) else {
+                    panic!("{}/{shards} shards must be feasible",
+                           kind.name());
+                };
+                assert!(p.metrics.p99_ms <= 80.0);
+                let Verdict::Feasible(p2) = plan(&m, &cfg) else {
+                    panic!("replanning must stay feasible");
+                };
+                assert_eq!(p.device_counts, p2.device_counts,
+                           "{}/{shards} shards not deterministic",
+                           kind.name());
+            }
+        }
     }
 
     #[test]

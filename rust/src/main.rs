@@ -22,6 +22,8 @@
 //!                 [--queue fifo|priority] [--batch B] [--max-wait-ms W]
 //!                 [--mixed] [--boards N] [--requests N]
 //!                 [--max-boards N] [--seed S] [--trace file]
+//!                 [--arrivals poisson|diurnal|flash|selfsim]
+//!                 [--shards N]
 //!                 [--faults crash|n-1|straggler|overload|flaky|chaos]
 //!                 [--deadline-ms D] [--retries N] [--shed]
 //!                 [--profiles points.json] [--fast]

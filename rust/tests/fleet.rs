@@ -185,6 +185,8 @@ fn planner_meets_slo_or_reports_infeasible() {
         faults: None,
         resilience: ResilienceCfg::none(),
         shed_cap: 0.0,
+        arrivals: arrivals::ArrivalKind::Poisson,
+        shards: 1,
     };
     match planner::plan(&mx, &pcfg) {
         planner::Verdict::Feasible(p) => {
@@ -227,6 +229,8 @@ fn planner_is_deterministic() {
         faults: None,
         resilience: ResilienceCfg::none(),
         shed_cap: 0.0,
+        arrivals: arrivals::ArrivalKind::Poisson,
+        shards: 1,
     };
     let (a, b) = (planner::plan(&mx, &pcfg), planner::plan(&mx, &pcfg));
     match (a, b) {
@@ -385,6 +389,130 @@ fn same_seed_and_fault_plan_replay_bit_identically() {
     assert_eq!(a.goodput_p99_ms.to_bits(), b.goodput_p99_ms.to_bits());
     assert_eq!(a.makespan_ms.to_bits(), b.makespan_ms.to_bits());
     assert_eq!(a.mean_ms.to_bits(), b.mean_ms.to_bits());
+}
+
+// ---------------------------------------------------------------------
+// ISSUE 9: calendar-queue engine equivalence, arrival sharding, and
+// the generator taxonomy, pinned through the whole simulator.
+// ---------------------------------------------------------------------
+
+use harflow3d::obs::TraceBuffer;
+
+/// Run a config traced and return (metrics, trace bytes, snapshot).
+fn traced(mx: &ProfileMatrix, cfg: &FleetCfg, arr: &[Request])
+    -> (fleet::FleetMetrics, String, String) {
+    let mut buf = TraceBuffer::new();
+    let met = fleet::simulate_fleet_traced(mx, cfg, arr,
+                                           Some(&mut buf));
+    (met, buf.chrome_trace(), buf.metrics_jsonl())
+}
+
+#[test]
+fn engine_replays_bit_identically_across_the_scenario_suite() {
+    // The calendar-queue engine's event-order contract: fault-free,
+    // chaos, batched, and trace-replay runs all replay with identical
+    // metrics AND identical exported trace bytes — any event popping
+    // out of `(t_ms, seq)` order would reorder a slice or flow and
+    // change the bytes. (The pop order itself is pinned against a
+    // reference `BinaryHeap` by the in-module equivalence test.)
+    let (mx, base, arr) = chaos_fixture();
+
+    let mut chaos = base.clone();
+    chaos.faults = Scenario::parse("chaos").unwrap()
+        .single(chaos.boards.len(),
+                arr.last().unwrap().arrival_ms, 23);
+    chaos.resilience = ResilienceCfg { deadline_ms: 55.0, retries: 2,
+                                       seed: 23,
+                                       ..ResilienceCfg::none() };
+
+    let mut batched = base.clone();
+    batched.batch = BatchCfg::new(4, 1.0);
+
+    let replay_arr = arrivals::from_trace(
+        "0.0 a\n1.5 a\n1.5 a\n# burst\n3.0 a\n9.0 a\n",
+        &mx.models).unwrap();
+
+    for (name, cfg, stream) in [("fault-free", &base, &arr),
+                                ("chaos", &chaos, &arr),
+                                ("batched", &batched, &arr),
+                                ("trace-replay", &base, &replay_arr)] {
+        let (m1, t1, s1) = traced(&mx, cfg, stream);
+        let (m2, t2, s2) = traced(&mx, cfg, stream);
+        assert_eq!(t1, t2, "{name}: trace bytes diverged");
+        assert_eq!(s1, s2, "{name}: metrics snapshot diverged");
+        assert_eq!(m1.events, m2.events, "{name}");
+        assert_eq!(m1.completed, m2.completed, "{name}");
+        assert_eq!(m1.p99_ms.to_bits(), m2.p99_ms.to_bits(), "{name}");
+        assert_eq!(m1.makespan_ms.to_bits(), m2.makespan_ms.to_bits(),
+                   "{name}");
+        // Tracing never steers the simulation.
+        let plain = fleet::simulate_fleet(&mx, cfg, stream);
+        assert_eq!(plain.events, m1.events, "{name}");
+        assert_eq!(plain.p99_ms.to_bits(), m1.p99_ms.to_bits(),
+                   "{name}");
+    }
+}
+
+#[test]
+fn one_shard_reproduces_the_unsharded_simulation_byte_for_byte() {
+    // `--shards 1` is the unsharded generator byte-for-byte, all the
+    // way through the simulator and the exported trace.
+    let (mx, cfg, _) = chaos_fixture();
+    for kind in [arrivals::ArrivalKind::Poisson,
+                 arrivals::ArrivalKind::Diurnal,
+                 arrivals::ArrivalKind::Flash,
+                 arrivals::ArrivalKind::SelfSim] {
+        let solo = arrivals::generate(kind, 600, 300.0, 1, 17);
+        let one = arrivals::sharded(kind, 600, 300.0, 1, 17, 1);
+        assert_eq!(solo.len(), one.len());
+        for (a, b) in solo.iter().zip(&one) {
+            assert_eq!(a.id, b.id, "{}", kind.name());
+            assert_eq!(a.model, b.model, "{}", kind.name());
+            assert_eq!(a.arrival_ms.to_bits(), b.arrival_ms.to_bits(),
+                       "{}", kind.name());
+        }
+        let (ma, ta, sa) = traced(&mx, &cfg, &solo);
+        let (mb, tb, sb) = traced(&mx, &cfg, &one);
+        assert_eq!(ta, tb, "{}", kind.name());
+        assert_eq!(sa, sb, "{}", kind.name());
+        assert_eq!(ma.p99_ms.to_bits(), mb.p99_ms.to_bits(),
+                   "{}", kind.name());
+        assert_eq!(ma.events, mb.events, "{}", kind.name());
+    }
+}
+
+#[test]
+fn every_generator_drives_a_deterministic_simulation() {
+    // Determinism pin per generator: the same (kind, seed, shards)
+    // always simulates to the same bits; a different seed moves the
+    // makespan (the stream actually depends on it).
+    let (mx, cfg, _) = chaos_fixture();
+    for kind in [arrivals::ArrivalKind::Poisson,
+                 arrivals::ArrivalKind::Diurnal,
+                 arrivals::ArrivalKind::Flash,
+                 arrivals::ArrivalKind::SelfSim] {
+        for shards in [1usize, 3] {
+            let run = |seed: u64| {
+                let arr = arrivals::sharded(kind, 500, 300.0, 1, seed,
+                                            shards);
+                fleet::simulate_fleet(&mx, &cfg, &arr)
+            };
+            let a = run(29);
+            let b = run(29);
+            assert_eq!(a.completed, b.completed,
+                       "{}/{shards}", kind.name());
+            assert_eq!(a.events, b.events, "{}/{shards}", kind.name());
+            assert_eq!(a.p99_ms.to_bits(), b.p99_ms.to_bits(),
+                       "{}/{shards}", kind.name());
+            assert_eq!(a.mean_ms.to_bits(), b.mean_ms.to_bits(),
+                       "{}/{shards}", kind.name());
+            assert_eq!(a.makespan_ms.to_bits(), b.makespan_ms.to_bits(),
+                       "{}/{shards}", kind.name());
+            let c = run(30);
+            assert_ne!(a.makespan_ms.to_bits(), c.makespan_ms.to_bits(),
+                       "{}/{shards}: seed must matter", kind.name());
+        }
+    }
 }
 
 #[test]

@@ -62,6 +62,8 @@ fn pinned_cfg(mixed: bool) -> planner::PlanCfg {
         faults: None,
         resilience: ResilienceCfg::none(),
         shed_cap: 0.0,
+        arrivals: arrivals::ArrivalKind::Poisson,
+        shards: 1,
     }
 }
 
@@ -362,6 +364,8 @@ fn planner_certifies_with_the_requested_batch_cfg() {
         faults: None,
         resilience: ResilienceCfg::none(),
         shed_cap: 0.0,
+        arrivals: arrivals::ArrivalKind::Poisson,
+        shards: 1,
     };
     let planner::Verdict::Infeasible { reasons } =
         planner::plan(&m, &base)
@@ -410,6 +414,8 @@ fn pinned_n_minus_one_plan_adds_exactly_one_board() {
         faults: None,
         resilience: ResilienceCfg::none(),
         shed_cap: 0.0,
+        arrivals: arrivals::ArrivalKind::Poisson,
+        shards: 1,
     };
     let base = expect_feasible(planner::plan(&m, &base_cfg));
     assert_eq!(base.boards.len(), 2,
