@@ -58,6 +58,12 @@ pub struct BenchResult {
     /// benches only; 1 = unsharded). A different shard count is a
     /// different stream, so the gate refuses cross-shard comparisons.
     pub shards: Option<usize>,
+    /// Observability mode of the run (fleet benches only): "stream"
+    /// when a streaming-stats pipeline rode the hot loop. An obs-on
+    /// row pays sketch inserts and window closes a bare row never
+    /// sees, so the gate refuses cross-obs comparisons, mirroring
+    /// `fault`/`arrivals`.
+    pub obs: Option<String>,
 }
 
 #[allow(dead_code)]
@@ -100,6 +106,9 @@ impl BenchResult {
         }
         if let Some(n) = self.shards {
             s.push_str(&format!(",\"shards\":{n}"));
+        }
+        if let Some(o) = &self.obs {
+            s.push_str(&format!(",\"obs\":\"{o}\""));
         }
         s.push('}');
         s
@@ -149,6 +158,7 @@ pub fn bench_rec<F: FnMut()>(name: &str, iters: usize, mut f: F)
         fault: None,
         arrivals: None,
         shards: None,
+        obs: None,
     }
 }
 

@@ -14,7 +14,9 @@
 //! processes Crash/Recover/Retry events a fault-free run never sees.
 //! Non-Poisson generator rows carry an `arrivals` field and sharded
 //! rows a `shards` field — a diurnal peak or a resharded stream is a
-//! different workload, not a regression.
+//! different workload, not a regression. The streaming-telemetry row
+//! carries an `obs` tag: its events/sec includes the sketch/window
+//! overhead and must never be compared against a bare row.
 
 mod common;
 
@@ -24,6 +26,7 @@ use harflow3d::fleet::faults::{FaultPlan, ResilienceCfg, Scenario};
 use harflow3d::fleet::{self, arrivals, planner, BatchCfg, BoardSpec,
                        FleetCfg, Policy, ProfileMatrix,
                        QueueDiscipline, ServiceProfile};
+use harflow3d::obs::{StatsCfg, StreamStats};
 
 /// Canned profile grid: `n_models` designs on one device, 8/12 ms
 /// service with a 3 ms pipeline-fill slice, 25 ms design switch —
@@ -95,6 +98,46 @@ fn main() {
         b.events_per_sec = Some(events.get() as f64 / b.mean_s);
         b.p99_ms = Some(p99.get());
         b.batch = Some(batch);
+        results.push(b);
+    }
+
+    // Streaming-stats overhead row: the first scenario re-run with the
+    // bounded-memory telemetry pipeline attached (sketch insert per
+    // completion, window close per 100 simulated ms, burn-monitor
+    // update per window). The gap between this row's events/sec and
+    // the bare round-robin row above is the observability tax; the
+    // `obs` tag keeps the gate from reading that tax as a regression.
+    {
+        let mx = canned_matrix(1);
+        let rate = 0.85 * 8.0 / (10.0 * 1e-3);
+        let arr = arrivals::poisson(n_req, rate, 1, 7);
+        let cfg = FleetCfg {
+            boards: (0..8)
+                .map(|_| BoardSpec { device: 0, preload: 0 })
+                .collect(),
+            policy: Policy::RoundRobin,
+            queue: QueueDiscipline::Fifo,
+            slo_ms: 60.0,
+            batch: BatchCfg::new(1, 0.0),
+            faults: FaultPlan::none(),
+            resilience: ResilienceCfg::none(),
+        };
+        let events = Cell::new(0usize);
+        let p99 = Cell::new(0.0f64);
+        let mut b = common::bench_rec(
+            "fleet/sim 8 boards round-robin 1 model obs", iters, || {
+                let mut stats = StreamStats::new(StatsCfg::default());
+                let met = fleet::simulate_fleet_obs(
+                    &mx, &cfg, &arr, None, Some(&mut stats));
+                events.set(met.events);
+                p99.set(met.p99_ms);
+                std::hint::black_box(&stats);
+                std::hint::black_box(&met);
+            });
+        b.events_per_sec = Some(events.get() as f64 / b.mean_s);
+        b.p99_ms = Some(p99.get());
+        b.batch = Some(1);
+        b.obs = Some("stream".to_string());
         results.push(b);
     }
 

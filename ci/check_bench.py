@@ -25,7 +25,10 @@ compared against a fault-free row or a different scenario's; rows
 carrying an ``arrivals`` generator name or a ``shards`` count follow
 the same rule — a diurnal peak or a resharded stream queues
 differently, so throughput is never compared across generators or
-shard counts). Rows
+shard counts; rows carrying an ``obs`` observability-mode tag follow
+it too — a run with the streaming-stats pipeline attached pays sketch
+and window work a bare run never sees, so its events/sec is never
+compared against an untagged row). Rows
 present in only one of the two files
 are reported but never fail the gate — new benches must be able to
 land before a baseline exists for them.
@@ -157,7 +160,8 @@ def run_gate(args):
                               ("bits", "wordlength"),
                               ("fault", "fault scenario"),
                               ("arrivals", "arrival process"),
-                              ("shards", "shard count")):
+                              ("shards", "shard count"),
+                              ("obs", "observability mode")):
                 bv, cv = base.get(key), cur.get(key)
                 if (bv is not None or cv is not None) and bv != cv:
                     print(f"note: '{name}' {what} changed "
@@ -175,6 +179,8 @@ def run_gate(args):
             tag += f" [arrivals={base['arrivals']}]"
         if base.get("shards") is not None:
             tag += f" [shards={base['shards']}]"
+        if base.get("obs") is not None:
+            tag += f" [obs={base['obs']}]"
         for metric in METRICS:
             sps_base = base.get(metric)
             # A zero/absent baseline cannot be compared against (and a
@@ -270,6 +276,10 @@ def self_test():
                 "shards": 1}],
               [{"name": "fleet", "schema": 1, "events_per_sec": 10.0,
                 "shards": 4}]), 0),
+        ("observability-mode change is not gated",
+         gate([{"name": "fleet", "events_per_sec": 1000.0}],
+              [{"name": "fleet", "schema": 1, "events_per_sec": 10.0,
+                "obs": "stream"}]), 0),
         ("arrivals appearing on one side only is not gated",
          gate([{"name": "fleet", "events_per_sec": 1000.0}],
               [{"name": "fleet", "schema": 1, "events_per_sec": 10.0,

@@ -1,0 +1,332 @@
+#!/usr/bin/env python3
+"""Structural validator for `fleet --stats-out` JSON-lines files.
+
+The streaming-telemetry pipeline (``rust/src/obs/window.rs``,
+``docs/observability.md``) exports one JSON object per line: a ``meta``
+header, one ``window`` line per closed tumbling window, zero or more
+``breach`` lines from the burn-rate monitors, and a final ``summary``
+line. Downstream tooling diffs the file byte-for-byte across same-seed
+runs and plots the window series directly, so this gate checks the
+structural contract CI relies on:
+
+* every line parses as a JSON object carrying a known ``kind``
+  (``meta``, ``window``, ``breach``, ``summary``);
+* the first line is the ``meta`` header (``schema`` 1, ``shards`` >= 1,
+  ``window_ms`` > 0, ``slo_target`` strictly inside (0, 1)) and the
+  last line is the single ``summary``;
+* window lines carry exactly the documented key set, their ``index``
+  runs contiguously from 0 in file order, ``start_ms``/``end_ms`` sit
+  on the window grid (``index * window_ms``), and counters are
+  non-negative integers;
+* window accounting balances: ``good + bad`` equals
+  ``completions + sheds + failures`` and ``good <= completions``;
+* percentiles are ``null`` (empty/defunct tail) or finite and >= 0,
+  and ``p50 <= p95 <= p99`` whenever all three are present;
+* breach lines name a known monitor (``fast``/``slow``), carry a
+  positive ``threshold``, and a ``burn_rate`` at or above it;
+* the summary's ``windows`` count matches the window lines seen.
+
+Usage:
+
+    ci/check_stats.py stats.jsonl [more.jsonl ...]
+    ci/check_stats.py --self-test
+
+``--self-test`` runs the validator against synthetic good/bad fixtures
+and exits nonzero if any misjudges — the CI sanity check for this
+script itself.
+"""
+
+import argparse
+import json
+import sys
+
+KNOWN_KINDS = {"meta", "window", "breach", "summary"}
+WINDOW_KEYS = {
+    "arrivals", "bad", "boards_up", "completions", "end_ms",
+    "failures", "good", "goodput_p99_ms", "index", "kind", "p50_ms",
+    "p95_ms", "p99_ms", "queue_depth", "rate_rps", "retries", "sheds",
+    "start_ms", "timeouts",
+}
+COUNTER_KEYS = ("arrivals", "bad", "boards_up", "completions",
+                "failures", "good", "queue_depth", "retries", "sheds",
+                "timeouts")
+KNOWN_MONITORS = {"fast", "slow"}
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) \
+        and v == v
+
+
+def check_stats(lines, label="stats"):
+    """Validate one parsed stats file; return a list of problems."""
+    errors = []
+
+    def err(msg):
+        errors.append(f"{label}: {msg}")
+
+    if not lines:
+        err("empty file")
+        return errors
+
+    window_ms = None
+    next_index = 0
+    summary = None
+
+    for i, rec in enumerate(lines):
+        where = f"line {i}"
+        if not isinstance(rec, dict):
+            err(f"{where}: not an object")
+            continue
+        kind = rec.get("kind")
+        if kind not in KNOWN_KINDS:
+            err(f"{where}: unknown kind {kind!r}")
+            continue
+
+        if kind == "meta":
+            if i != 0:
+                err(f"{where}: meta header not on the first line")
+            if rec.get("schema") != 1:
+                err(f"{where}: schema {rec.get('schema')!r} != 1")
+            shards = rec.get("shards")
+            if not is_num(shards) or shards < 1:
+                err(f"{where}: shards {shards!r} must be >= 1")
+            window_ms = rec.get("window_ms")
+            if not is_num(window_ms) or window_ms <= 0:
+                err(f"{where}: window_ms {window_ms!r} must be > 0")
+                window_ms = None
+            target = rec.get("slo_target")
+            if not is_num(target) or not 0.0 < target < 1.0:
+                err(f"{where}: slo_target {target!r} outside (0, 1)")
+        elif kind == "window":
+            got = set(rec)
+            if got != WINDOW_KEYS:
+                extra = sorted(got - WINDOW_KEYS)
+                missing = sorted(WINDOW_KEYS - got)
+                err(f"{where}: window key set drifted "
+                    f"(extra {extra}, missing {missing})")
+                continue
+            if rec["index"] != next_index:
+                err(f"{where}: index {rec['index']!r} breaks the "
+                    f"contiguous run (expected {next_index})")
+            next_index += 1
+            for key in COUNTER_KEYS:
+                v = rec[key]
+                if not is_num(v) or v < 0 or v != int(v):
+                    err(f"{where}: {key} {v!r} is not a "
+                        f"non-negative integer")
+            if window_ms is not None:
+                idx = rec["index"]
+                if is_num(idx) and is_num(rec["start_ms"]) \
+                        and is_num(rec["end_ms"]):
+                    want_start = idx * window_ms
+                    want_end = (idx + 1) * window_ms
+                    if abs(rec["start_ms"] - want_start) > 1e-9 \
+                            or abs(rec["end_ms"] - want_end) > 1e-9:
+                        err(f"{where}: window [{rec['start_ms']}, "
+                            f"{rec['end_ms']}) off the "
+                            f"{window_ms} ms grid for index {idx}")
+            if all(is_num(rec[k]) for k in
+                   ("good", "bad", "completions", "sheds", "failures")):
+                lhs = rec["good"] + rec["bad"]
+                rhs = rec["completions"] + rec["sheds"] \
+                    + rec["failures"]
+                if lhs != rhs:
+                    err(f"{where}: good+bad {lhs} != completions+"
+                        f"sheds+failures {rhs}")
+                if rec["good"] > rec["completions"]:
+                    err(f"{where}: good {rec['good']} > completions "
+                        f"{rec['completions']}")
+            ps = []
+            for key in ("p50_ms", "p95_ms", "p99_ms"):
+                v = rec[key]
+                if v is None:
+                    continue  # empty window / defunct tail
+                if not is_num(v) or v < 0:
+                    err(f"{where}: {key} {v!r} is neither null nor a "
+                        f"finite value >= 0")
+                else:
+                    ps.append(v)
+            if len(ps) == 3 and not ps[0] <= ps[1] <= ps[2]:
+                err(f"{where}: percentiles not ordered "
+                    f"p50 {ps[0]} <= p95 {ps[1]} <= p99 {ps[2]}")
+            g = rec["goodput_p99_ms"]
+            if g is not None and (not is_num(g) or g < 0):
+                err(f"{where}: goodput_p99_ms {g!r} is neither null "
+                    f"nor a finite value >= 0")
+        elif kind == "breach":
+            mon = rec.get("monitor")
+            if mon not in KNOWN_MONITORS:
+                err(f"{where}: unknown monitor {mon!r}")
+            thr = rec.get("threshold")
+            if not is_num(thr) or thr <= 0:
+                err(f"{where}: threshold {thr!r} must be > 0")
+            burn = rec.get("burn_rate")
+            if not is_num(burn):
+                err(f"{where}: non-numeric burn_rate {burn!r}")
+            elif is_num(thr) and burn < thr:
+                err(f"{where}: burn_rate {burn} below its own "
+                    f"threshold {thr}")
+            if not is_num(rec.get("at_ms")):
+                err(f"{where}: non-numeric at_ms "
+                    f"{rec.get('at_ms')!r}")
+        elif kind == "summary":
+            if summary is not None:
+                err(f"{where}: second summary line")
+            summary = (i, rec)
+
+    if not isinstance(lines[0], dict) or lines[0].get("kind") != "meta":
+        err("first line is not the meta header")
+    if summary is None:
+        err("no summary line")
+    else:
+        at, rec = summary
+        if at != len(lines) - 1:
+            err(f"summary on line {at}, not last")
+        if rec.get("windows") != next_index:
+            err(f"summary windows {rec.get('windows')!r} != "
+                f"{next_index} window line(s) seen")
+    return errors
+
+
+def check_file(path):
+    lines = []
+    try:
+        with open(path) as fh:
+            for raw in fh:
+                raw = raw.strip()
+                if raw:
+                    lines.append(json.loads(raw))
+    except (OSError, ValueError) as e:
+        return [f"{path}: cannot parse: {e}"]
+    return check_stats(lines, label=path)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("stats", nargs="*",
+                    help="--stats-out JSON-lines files to validate")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the validator against synthetic fixtures "
+                         "and exit (CI sanity check for this script)")
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    if not args.stats:
+        print("check_stats: no stats files given (see --help)")
+        return 1
+    bad = 0
+    for path in args.stats:
+        problems = check_file(path)
+        if problems:
+            bad += 1
+            for p in problems:
+                print(f"FAIL: {p}")
+        else:
+            with open(path) as fh:
+                n = sum(1 for line in fh if line.strip())
+            print(f"ok: {path}: {n} lines, structurally valid")
+    if bad:
+        print(f"stats gate FAILED for {bad} file(s)")
+        return 1
+    print("stats gate passed")
+    return 0
+
+
+def self_test():
+    """Run the validator on synthetic fixtures.
+
+    One known-good file exercising every line kind, then one fixture
+    per independently-detected defect class. Returns 0 only if every
+    fixture is judged as expected.
+    """
+    def meta(**over):
+        base = {"kind": "meta", "schema": 1, "shards": 1,
+                "slo_target": 0.99, "window_ms": 10.0}
+        base.update(over)
+        return base
+
+    def window(index, **over):
+        base = {"arrivals": 4, "bad": 1, "boards_up": 2,
+                "completions": 3, "end_ms": (index + 1) * 10.0,
+                "failures": 0, "good": 3, "goodput_p99_ms": 8.0,
+                "index": index, "kind": "window", "p50_ms": 4.0,
+                "p95_ms": 7.0, "p99_ms": 8.0, "queue_depth": 1,
+                "rate_rps": 400.0, "retries": 0, "sheds": 1,
+                "start_ms": index * 10.0, "timeouts": 0}
+        base.update(over)
+        return base
+
+    def breach(**over):
+        base = {"at_ms": 20.0, "burn_rate": 20.0, "kind": "breach",
+                "monitor": "fast", "threshold": 14.4, "window": 1}
+        base.update(over)
+        return base
+
+    def summary(**over):
+        base = {"breaches": 1, "completions": 6, "failures": 0,
+                "goodput_p99_ms": 8.0, "kind": "summary",
+                "p50_ms": 4.0, "p95_ms": 7.0, "p99_ms": 8.0,
+                "sheds": 2, "windows": 2}
+        base.update(over)
+        return base
+
+    good = [meta(), window(0), window(1), breach(), summary()]
+    cases = [
+        ("valid file passes", good, 0),
+        ("empty file", [], 1),
+        ("unknown kind", [meta(), {"kind": "mystery"}, summary()], 1),
+        ("meta not first",
+         [window(0, bad=0, sheds=0, good=4, completions=4), meta(),
+          summary(windows=1, breaches=0, sheds=0, completions=4)], 1),
+        ("bad meta schema", [meta(schema=2), summary(windows=0)], 1),
+        ("zero window width",
+         [meta(window_ms=0), summary(windows=0)], 1),
+        ("slo target outside (0,1)",
+         [meta(slo_target=1.0), summary(windows=0)], 1),
+        ("window key drift",
+         [meta(), window(0, extra_key=1), summary(windows=1)], 1),
+        ("non-contiguous indices",
+         [meta(), window(0), window(2), summary()], 1),
+        ("negative counter",
+         [meta(), window(0, sheds=-1), summary(windows=1)], 1),
+        ("off-grid window bounds",
+         [meta(), window(0, end_ms=11.0), summary(windows=1)], 1),
+        ("good/bad accounting broken",
+         [meta(), window(0, good=9), summary(windows=1)], 1),
+        ("percentiles out of order",
+         [meta(), window(0, p50_ms=9.0), summary(windows=1)], 1),
+        ("null percentile is fine",
+         [meta(), window(0, goodput_p99_ms=None),
+          summary(windows=1)], 0),
+        ("unknown breach monitor",
+         [meta(), window(0), breach(monitor="glacial"),
+          summary(windows=1)], 1),
+        ("burn rate below its threshold",
+         [meta(), window(0), breach(burn_rate=1.0),
+          summary(windows=1)], 1),
+        ("no summary", [meta(), window(0)], 1),
+        ("summary not last",
+         [meta(), summary(windows=0), window(0)], 1),
+        ("summary window count wrong",
+         [meta(), window(0), summary(windows=5)], 1),
+    ]
+    bad = []
+    for name, fixture, want in cases:
+        problems = check_stats(fixture, label=name)
+        got = 1 if problems else 0
+        status = "ok" if got == want else "FAIL"
+        print(f"self-test {status}: {name} (exit {got}, want {want})")
+        if got != want:
+            for p in problems:
+                print(f"    {p}")
+            bad.append(name)
+    if bad:
+        print(f"check_stats self-test FAILED: {', '.join(bad)}")
+        return 1
+    print("check_stats self-test passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

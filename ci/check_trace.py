@@ -16,7 +16,8 @@ This gate checks the structural contract CI relies on:
 * timestamps are non-decreasing per (pid, tid) track *in file order*
   (metadata events are exempt — they carry no timeline position);
 * every non-metadata event's category is one of the emitter's known
-  categories (``board``, ``req``, ``sa``, ``plan``, ``counter``);
+  categories (``board``, ``req``, ``sa``, ``plan``, ``counter``,
+  ``obs``);
 * flow events are well-formed: each flow id starts with ``s`` before
   any ``t``/``f``, and every started flow terminates in exactly one
   ``f``.
@@ -36,7 +37,7 @@ import json
 import sys
 
 KNOWN_PHASES = {"X", "B", "E", "i", "C", "s", "t", "f", "M"}
-KNOWN_CATEGORIES = {"board", "req", "sa", "plan", "counter"}
+KNOWN_CATEGORIES = {"board", "req", "sa", "plan", "counter", "obs"}
 REQUIRED_KEYS = ("name", "ph", "pid", "tid", "ts")
 
 

@@ -1,16 +1,18 @@
-//! Fleet-config passes (`H3D-040..042`): cross-field sanity for a
-//! serving configuration.
+//! Fleet-config passes (`H3D-040..044`): cross-field sanity for a
+//! serving configuration and its streaming-stats attachment.
 //!
 //! The `fleet` CLI validates its *flags* (every rejection names the
-//! offending flag), but a [`FleetCfg`] can also be built
-//! programmatically — the planner, the benches, library users — and
-//! those paths historically got no cross-field checking at all. This
-//! pass promotes the CLI's cross-field rules to the config itself, so
-//! every construction route hits the same invariants. For CLI-built
-//! configs the gate is unreachable (the flag validation is strictly
-//! stronger), keeping `fleet` output byte-identical.
+//! offending flag), but a [`FleetCfg`] — and likewise a [`StatsCfg`]
+//! — can also be built programmatically: the planner, the benches,
+//! library users. Those paths historically got no cross-field
+//! checking at all. This pass promotes the CLI's cross-field rules to
+//! the configs themselves, so every construction route hits the same
+//! invariants. For CLI-built configs the gates are unreachable (the
+//! flag validation is strictly stronger), keeping `fleet` output
+//! byte-identical.
 
 use crate::fleet::FleetCfg;
+use crate::obs::StatsCfg;
 
 use super::{Diagnostic, Location};
 
@@ -82,6 +84,33 @@ pub fn check_fleet_cfg(cfg: &FleetCfg) -> Vec<Diagnostic> {
     out
 }
 
+/// Streaming-stats config sanity (`H3D-043` windows, `H3D-044` burn
+/// monitors): a degenerate window width would close zero or
+/// infinitely many windows, and a burn monitor with no error budget
+/// divides by zero.
+pub fn check_stats_cfg(cfg: &StatsCfg) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    if !cfg.window_ms.is_finite() || cfg.window_ms <= 0.0 {
+        out.push(Diagnostic::error(
+            "H3D-043", Location::FleetField("stats.window_ms"),
+            format!("window width must be a positive finite simulated \
+                     ms value (got {})", cfg.window_ms)));
+    }
+    if cfg.shards == 0 {
+        out.push(Diagnostic::error(
+            "H3D-043", Location::FleetField("stats.shards"),
+            "zero sketch shards cannot carry the latency stream \
+             (1 = unsharded)".into()));
+    }
+    if !(cfg.slo_target > 0.0 && cfg.slo_target < 1.0) {
+        out.push(Diagnostic::error(
+            "H3D-044", Location::FleetField("stats.slo_target"),
+            format!("SLO objective must be a good-fraction strictly \
+                     between 0 and 1 (got {})", cfg.slo_target)));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +162,26 @@ mod tests {
         c.resilience.retries = 3;
         c.resilience.shed = true;
         assert!(check_fleet_cfg(&c).is_empty());
+    }
+
+    #[test]
+    fn stats_cfg_cross_field() {
+        assert!(check_stats_cfg(&StatsCfg::default()).is_empty());
+        for bad in [0.0, -5.0, f64::INFINITY, f64::NAN] {
+            let c = StatsCfg { window_ms: bad, ..StatsCfg::default() };
+            let diags = check_stats_cfg(&c);
+            assert!(diags.iter().any(|d| d.code == "H3D-043"),
+                    "window_ms {bad}: {diags:?}");
+        }
+        let c = StatsCfg { shards: 0, ..StatsCfg::default() };
+        assert!(check_stats_cfg(&c).iter()
+            .any(|d| d.code == "H3D-043"));
+        for bad in [0.0, 1.0, 1.5, -0.1, f64::NAN] {
+            let c = StatsCfg { slo_target: bad, ..StatsCfg::default() };
+            let diags = check_stats_cfg(&c);
+            assert!(diags.iter().any(|d| d.code == "H3D-044"),
+                    "slo_target {bad}: {diags:?}");
+        }
     }
 
     #[test]

@@ -24,7 +24,8 @@
 //!   agreement between node wordlengths and the emitted Verilog
 //!   headers (`H3D-030..031`).
 //! * [`fleetpass`] — cross-field serving-config sanity promoted from
-//!   the CLI so programmatic callers get it too (`H3D-040..042`).
+//!   the CLI so programmatic callers get it too, plus streaming-stats
+//!   window/burn-monitor config sanity (`H3D-040..044`).
 //!
 //! The `check` CLI subcommand runs every pass and exits 1 on any
 //! error-severity diagnostic; `optimize`/`schedule`/`generate`/`fleet`
@@ -42,6 +43,7 @@ use crate::codegen::Project;
 use crate::device::Device;
 use crate::fleet::FleetCfg;
 use crate::model::ModelGraph;
+use crate::obs::StatsCfg;
 use crate::resource::ResourceModel;
 use crate::sched::{self, SchedCfg};
 use crate::sdf::Design;
@@ -174,6 +176,10 @@ pub const REGISTRY: &[(&str, Severity, &str)] = &[
     ("H3D-041", Severity::Error,
      "resilience config cross-field violation"),
     ("H3D-042", Severity::Error, "traffic/SLO config violation"),
+    ("H3D-043", Severity::Error,
+     "streaming-stats window config violation"),
+    ("H3D-044", Severity::Error,
+     "SLO burn-rate monitor config violation"),
 ];
 
 /// A pass run's collected diagnostics.
@@ -315,6 +321,14 @@ pub fn gate_fleet_cfg(cfg: &FleetCfg) -> Result<(), String> {
     let mut rep = Report::new();
     rep.extend(fleetpass::check_fleet_cfg(cfg));
     rep.gate("fleet config")
+}
+
+/// Pipeline gate for streaming-stats configs (`fleet --stats-out` and
+/// programmatic `StreamStats` users).
+pub fn gate_stats_cfg(cfg: &StatsCfg) -> Result<(), String> {
+    let mut rep = Report::new();
+    rep.extend(fleetpass::check_stats_cfg(cfg));
+    rep.gate("streaming-stats config")
 }
 
 #[cfg(test)]

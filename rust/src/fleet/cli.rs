@@ -15,6 +15,7 @@
 //!       [--deadline-ms D] [--retries N] [--shed]
 //!       [--trace file] [--profiles points.json] [--fast]
 //!       [--trace-out t.json] [--metrics-out m.jsonl] [--quiet]
+//!       [--stats-out s.jsonl] [--window-ms W] [--slo-target T]
 //! ```
 //!
 //! `--arrivals` picks the synthetic arrival process (Poisson default,
@@ -46,6 +47,15 @@
 //! ignored by every stdout byte-pin (see `docs/observability.md`).
 //! `--quiet` suppresses the per-point/per-candidate progress lines
 //! the DSE sweep and the planner search print to stderr.
+//!
+//! `--stats-out` streams bounded-memory per-window telemetry from
+//! inside the hot loop: tumbling `--window-ms` windows of *simulated*
+//! time carrying rates, loss buckets, gauges, and mergeable-sketch
+//! percentiles, plus Google-SRE-style burn-rate monitors against
+//! `--slo-target`, exported as a deterministic JSON-lines series
+//! (schema in `docs/observability.md`). Fixed `--boards` runs only —
+//! the planner path simulates many candidate fleets, and a stats
+//! series of one of them would be arbitrary.
 //!
 //! Every option is validated up front with a specific error message —
 //! an unknown model or device name, a non-positive `--rate`/`--slo-ms`,
@@ -107,6 +117,14 @@ pub struct FleetArgs {
     pub trace_out: Option<String>,
     /// `--metrics-out FILE`: write the JSON-lines metrics snapshot.
     pub metrics_out: Option<String>,
+    /// `--stats-out FILE`: write the streaming per-window stats
+    /// series (JSON-lines; obs subsystem). Fixed-`--boards` only.
+    pub stats_out: Option<String>,
+    /// `--window-ms W`: tumbling stats window width in simulated ms.
+    pub window_ms: f64,
+    /// `--slo-target T`: burn-monitor good-fraction objective in
+    /// (0, 1).
+    pub slo_target: f64,
     /// `--quiet`: suppress stderr progress lines.
     pub quiet: bool,
     pub profiles: Option<String>,
@@ -320,6 +338,34 @@ impl FleetArgs {
                 .into());
         }
 
+        let stats_out = args.opt("stats-out").map(str::to_string);
+        let window_ms = num_opt(args, "window-ms", 100.0)?;
+        if !(window_ms > 0.0) || !window_ms.is_finite() {
+            return Err(format!(
+                "fleet: --window-ms must be a positive finite window \
+                 width in simulated ms (got {window_ms})"));
+        }
+        let slo_target = num_opt(args, "slo-target", 0.99)?;
+        if !(slo_target > 0.0 && slo_target < 1.0) {
+            return Err(format!(
+                "fleet: --slo-target must be a good-fraction strictly \
+                 between 0 and 1 (got {slo_target})"));
+        }
+        if stats_out.is_none()
+            && (args.opt("window-ms").is_some()
+                || args.opt("slo-target").is_some())
+        {
+            return Err("fleet: --window-ms/--slo-target shape the \
+                        streaming stats series: pass --stats-out FILE"
+                .into());
+        }
+        if stats_out.is_some() && fixed_boards == 0 {
+            return Err("fleet: --stats-out streams one simulation's \
+                        windows: pass --boards N (the planner path \
+                        simulates many candidate fleets)"
+                .into());
+        }
+
         let jobs_default = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1);
@@ -349,6 +395,9 @@ impl FleetArgs {
             trace,
             trace_out: args.opt("trace-out").map(str::to_string),
             metrics_out: args.opt("metrics-out").map(str::to_string),
+            stats_out,
+            window_ms,
+            slo_target,
             quiet: args.flag("quiet"),
             profiles,
             fast: args.flag("fast"),
@@ -394,6 +443,26 @@ pub fn run(args: &Args) -> Result<String, String> {
         } else {
             None
         };
+    // Streaming stats pipeline (obs subsystem) behind the same
+    // `Option` zero-cost discipline. Flag validation restricted
+    // `--stats-out` to the fixed-boards route, so the planner path
+    // always carries `None` here.
+    let mut stats = match &fa.stats_out {
+        Some(_) => {
+            let scfg = crate::obs::StatsCfg {
+                window_ms: fa.window_ms,
+                shards: fa.shards.max(1),
+                slo_target: fa.slo_target,
+            };
+            // Unreachable for CLI-built configs (flag validation is
+            // strictly stronger) — same belt-and-braces as the fleet
+            // cfg gate below.
+            crate::check::gate_stats_cfg(&scfg)
+                .map_err(|e| format!("fleet: {e}"))?;
+            Some(crate::obs::StreamStats::new(scfg))
+        }
+        None => None,
+    };
 
     // -- serving profiles: model x device service/switch/fill grid ------
     let points = load_points(&fa, &mut out)?;
@@ -530,8 +599,9 @@ pub fn run(args: &Args) -> Result<String, String> {
         // cross-field invariants as programmatic callers.
         crate::check::gate_fleet_cfg(&fc)
             .map_err(|e| format!("fleet: {e}"))?;
-        let met = super::simulate_fleet_traced(&matrix, &fc, &arr,
-                                               buf.as_mut());
+        let met = super::simulate_fleet_obs(&matrix, &fc, &arr,
+                                            buf.as_mut(),
+                                            stats.as_mut());
         out.push_str(&metrics_block(&matrix, &met, &fa));
         out.push_str(&verdict_line(&met, fa.slo_ms));
     } else {
@@ -611,6 +681,19 @@ pub fn run(args: &Args) -> Result<String, String> {
             if !fa.quiet {
                 eprintln!("[fleet] wrote metrics snapshot to {path}");
             }
+        }
+    }
+    if let (Some(path), Some(s)) = (&fa.stats_out, &stats) {
+        std::fs::write(path, s.to_jsonl()).map_err(|e| {
+            format!("fleet: cannot write --stats-out {path}: {e}")
+        })?;
+        if !fa.quiet {
+            // Self-profiling throughput is wall clock — stderr only,
+            // never in the exported series or on stdout.
+            eprintln!("[fleet] wrote {} windows, {} breaches to {path} \
+                       ({:.0} engine events/s)",
+                      s.rows().len(), s.breaches().len(),
+                      s.events_per_sec());
         }
     }
     Ok(out)
@@ -985,6 +1068,45 @@ mod tests {
         assert!(fa.trace_out.is_none());
         assert!(fa.metrics_out.is_none());
         assert!(!fa.quiet);
+    }
+
+    #[test]
+    fn stats_flags_parse_and_validate() {
+        let fa = parse(&["fleet", "--boards", "2", "--stats-out",
+                         "s.jsonl", "--window-ms", "50",
+                         "--slo-target", "0.995"]).unwrap();
+        assert_eq!(fa.stats_out.as_deref(), Some("s.jsonl"));
+        assert_eq!(fa.window_ms, 50.0);
+        assert_eq!(fa.slo_target, 0.995);
+        // Defaults: no series, 100 ms windows, 99% objective.
+        let fa = parse(&["fleet"]).unwrap();
+        assert!(fa.stats_out.is_none());
+        assert_eq!(fa.window_ms, 100.0);
+        assert_eq!(fa.slo_target, 0.99);
+    }
+
+    #[test]
+    fn rejects_bad_stats_flags() {
+        // Window/target knobs without a series to shape.
+        let e = parse(&["fleet", "--boards", "2", "--window-ms",
+                        "50"]).unwrap_err();
+        assert!(e.contains("--stats-out"), "{e}");
+        let e = parse(&["fleet", "--boards", "2", "--slo-target",
+                        "0.9"]).unwrap_err();
+        assert!(e.contains("--stats-out"), "{e}");
+        // Stats stream one simulation; the planner runs many.
+        let e = parse(&["fleet", "--stats-out", "s.jsonl"])
+            .unwrap_err();
+        assert!(e.contains("--boards"), "{e}");
+        // Degenerate window widths and objectives.
+        for (k, v) in [("--window-ms", "0"), ("--window-ms", "-5"),
+                       ("--window-ms", "inf"), ("--slo-target", "0"),
+                       ("--slo-target", "1"), ("--slo-target", "1.5"),
+                       ("--slo-target", "nan")] {
+            let e = parse(&["fleet", "--boards", "2", "--stats-out",
+                            "s.jsonl", k, v]).unwrap_err();
+            assert!(e.contains(k), "{k} {v} -> {e}");
+        }
     }
 
     #[test]

@@ -44,7 +44,8 @@ pub mod planner;
 use std::cmp::Ordering;
 use std::collections::VecDeque;
 
-use crate::obs::{Recorder, TraceBuffer, PID_FLEET, PID_REQ};
+use crate::obs::{Breach, Recorder, StreamStats, TraceBuffer,
+                 PID_FLEET, PID_OBS, PID_REQ};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::{percentile_sorted, percentile_with_failures};
@@ -328,6 +329,12 @@ pub struct FleetMetrics {
     /// each failed request as `+inf`. Bit-identical to `p99_ms` when
     /// nothing failed, `+inf` when the tail is dominated by losses.
     pub goodput_p99_ms: f64,
+    /// SLO burn-rate monitor firings from the streaming telemetry
+    /// pipeline ([`crate::obs::StreamStats`]) — the future
+    /// autoscaler's trigger signal. Always empty when no stats
+    /// pipeline is attached (the default), so the tracing-off
+    /// bit-identity pins are unaffected.
+    pub breaches: Vec<Breach>,
     pub boards: Vec<BoardReport>,
 }
 
@@ -746,6 +753,11 @@ struct Sim<'a> {
     /// are simulated milliseconds, so attaching a recorder changes no
     /// metric bit (pinned by `rust/tests/obs.rs`).
     rec: Option<&'a mut TraceBuffer>,
+    /// Streaming telemetry pipeline (windowed sketches + burn-rate
+    /// monitors). Same zero-cost discipline as `rec`: `None` — the
+    /// default — leaves every hot-loop site a single `is-None` branch
+    /// and the metrics bit-identical.
+    stats: Option<&'a mut StreamStats>,
 }
 
 /// Run the fleet through a sorted arrival stream. Panics if `arrivals`
@@ -769,7 +781,26 @@ pub fn simulate_fleet(profiles: &ProfileMatrix, cfg: &FleetCfg,
 /// wall clock anywhere).
 pub fn simulate_fleet_traced(profiles: &ProfileMatrix, cfg: &FleetCfg,
                              arrivals: &[Request],
-                             mut rec: Option<&mut TraceBuffer>)
+                             rec: Option<&mut TraceBuffer>)
+    -> FleetMetrics {
+    simulate_fleet_obs(profiles, cfg, arrivals, rec, None)
+}
+
+/// [`simulate_fleet_traced`] with an optional streaming-stats pipeline
+/// attached: [`StreamStats`] hooks fire inside the event loop
+/// (windows advance on simulated time, latencies stream into the
+/// sharded quantile sketches, burn-rate monitors evaluate at window
+/// closes), closed windows mirror into the recorder's timestamped
+/// gauge series, and breaches land both in `FleetMetrics::breaches`
+/// and as `obs` instants on pid 5 of the trace. Metrics are
+/// bit-identical with and without either sink; the stats series is a
+/// pure function of (profiles, cfg, arrivals) — only the
+/// self-profiling fields (`engine_events`, `engine_wall_s`) touch the
+/// wall clock, and they never enter the exported series.
+pub fn simulate_fleet_obs(profiles: &ProfileMatrix, cfg: &FleetCfg,
+                          arrivals: &[Request],
+                          mut rec: Option<&mut TraceBuffer>,
+                          stats: Option<&mut StreamStats>)
     -> FleetMetrics {
     assert!(!cfg.boards.is_empty(), "fleet has no boards");
     debug_assert!(arrivals.windows(2)
@@ -819,7 +850,11 @@ pub fn simulate_fleet_traced(profiles: &ProfileMatrix, cfg: &FleetCfg,
         backoff_rng: Rng::stream(cfg.resilience.seed,
                                  faults::STREAM_BACKOFF),
         rec,
+        stats,
     };
+    if let Some(s) = sim.stats.as_deref_mut() {
+        s.set_boards_up(cfg.boards.len() as u64);
+    }
     for (i, r) in arrivals.iter().enumerate() {
         sim.push(r.arrival_ms, EventKind::Arrival(i));
     }
@@ -834,7 +869,24 @@ pub fn simulate_fleet_traced(profiles: &ProfileMatrix, cfg: &FleetCfg,
             }
         }
     }
+    // Self-profiling only when a stats pipeline is attached: the
+    // tracing-off hot path never reads the wall clock.
+    let timer = sim.stats.is_some().then(std::time::Instant::now);
     sim.run();
+    let newly = match sim.stats.as_deref_mut() {
+        Some(s) => s.finalize(),
+        None => 0,
+    };
+    if newly > 0 {
+        sim.window_gauges(newly);
+    }
+    if let Some(t) = timer {
+        let events = sim.events as u64;
+        if let Some(s) = sim.stats.as_deref_mut() {
+            s.engine_events = events;
+            s.engine_wall_s = t.elapsed().as_secs_f64();
+        }
+    }
 
     let slo_violations =
         sim.latencies.iter().filter(|&&l| l > cfg.slo_ms).count();
@@ -886,8 +938,26 @@ pub fn simulate_fleet_traced(profiles: &ProfileMatrix, cfg: &FleetCfg,
         failed: sim.failed,
         goodput_p99_ms: percentile_with_failures(&sorted, sim.failed,
                                                  99.0),
+        breaches: sim.stats.as_deref()
+            .map(|s| s.breaches().to_vec())
+            .unwrap_or_default(),
         boards: board_reports,
     };
+    if !metrics.breaches.is_empty() {
+        if let Some(r) = sim.rec.as_deref_mut() {
+            r.process(PID_OBS, "slo monitors");
+            r.track(PID_OBS, 0, "burn rate");
+            for b in &metrics.breaches {
+                r.instant(PID_OBS, 0, "obs",
+                          &format!("breach:{}", b.monitor.name()),
+                          b.at_ms * 1000.0, vec![
+                    ("burn_rate", Json::Num(b.burn_rate)),
+                    ("threshold", Json::Num(b.threshold)),
+                    ("window", Json::Num(b.window as f64)),
+                ]);
+            }
+        }
+    }
     if let Some(r) = sim.rec {
         r.gauge("fleet/batches", metrics.batches as f64);
         r.gauge("fleet/completed", metrics.completed as f64);
@@ -919,6 +989,15 @@ impl Sim<'_> {
         while let Some(ev) = self.events_q.pop() {
             self.events += 1;
             let now = ev.t_ms;
+            // Close stats windows *before* processing the event: an
+            // event exactly on a boundary belongs to the next window.
+            let newly = match self.stats.as_deref_mut() {
+                Some(s) => s.advance_to(now),
+                None => 0,
+            };
+            if newly > 0 {
+                self.window_gauges(newly);
+            }
             match ev.kind {
                 EventKind::Arrival(i) => self.on_arrival(i, now),
                 EventKind::Done(b, epoch) => {
@@ -931,6 +1010,30 @@ impl Sim<'_> {
                 EventKind::Recover(b) => self.on_recover(b, now),
                 EventKind::Retry(i) => self.on_retry(i, now),
             }
+        }
+    }
+
+    /// Mirror the latest `newly` closed stats windows into the
+    /// recorder's timestamped gauge series, so `--metrics-out` gauges
+    /// reflect the run's time-series (last-write-wins per window
+    /// boundary) instead of only its end-of-run values. Distinct
+    /// `fleet/window/*` names keep the exact end-of-run gauges
+    /// untouched.
+    fn window_gauges(&mut self, newly: usize) {
+        let Some(s) = self.stats.as_deref() else { return };
+        let Some(r) = self.rec.as_deref_mut() else { return };
+        let rows = s.rows();
+        for row in &rows[rows.len() - newly..] {
+            let ts = row.end_ms;
+            r.gauge_at("fleet/window/boards_up", ts,
+                       row.boards_up as f64);
+            r.gauge_at("fleet/window/completions", ts,
+                       row.completions as f64);
+            r.gauge_at("fleet/window/p99_ms", ts, row.p99_ms);
+            r.gauge_at("fleet/window/queue_depth", ts,
+                       row.queue_depth as f64);
+            r.gauge_at("fleet/window/retries", ts, row.retries as f64);
+            r.gauge_at("fleet/window/sheds", ts, row.sheds as f64);
         }
     }
 
@@ -951,6 +1054,9 @@ impl Sim<'_> {
                 ("model", Json::Num(req.model as f64)),
                 ("req", Json::Num(i as f64)),
             ]);
+        }
+        if let Some(s) = self.stats.as_deref_mut() {
+            s.on_arrival();
         }
         if self.cfg.resilience.shed
             && self.cfg.resilience.deadline_ms > 0.0
@@ -995,6 +1101,9 @@ impl Sim<'_> {
                     }
                     None => {
                         self.shed += 1;
+                        if let Some(s) = self.stats.as_deref_mut() {
+                            s.on_shed();
+                        }
                         if let Some(r) = self.rec.as_deref_mut() {
                             let ts = now * 1000.0;
                             r.instant(PID_REQ, 0, "req", "shed", ts,
@@ -1055,9 +1164,12 @@ impl Sim<'_> {
         self.boards.tail_model[b] = req.model;
         self.boards.queue[b].push_back(req);
         let idle = self.boards.in_service[b].is_empty();
-        if self.rec.is_some() {
+        if self.rec.is_some() || self.stats.is_some() {
             let depth: usize =
                 self.boards.queue.iter().map(|q| q.len()).sum();
+            if let Some(s) = self.stats.as_deref_mut() {
+                s.set_queue_depth(depth as u64);
+            }
             if let Some(r) = self.rec.as_deref_mut() {
                 let ts = now * 1000.0;
                 r.instant(PID_REQ, 0, "req", "enqueue", ts, vec![
@@ -1142,6 +1254,9 @@ impl Sim<'_> {
             for req in &batch {
                 let lat = now - req.arrival_ms;
                 self.latencies.push(lat);
+                if let Some(s) = self.stats.as_deref_mut() {
+                    s.on_complete(lat, lat <= self.cfg.slo_ms);
+                }
                 if let Some(r) = self.rec.as_deref_mut() {
                     let ts = now * 1000.0;
                     r.instant(PID_REQ, 0, "req", "complete", ts, vec![
@@ -1204,8 +1319,11 @@ impl Sim<'_> {
         self.boards.backlog_ms[b] = 0.0;
         self.boards.loaded[b] = NOTHING;
         self.boards.tail_model[b] = NOTHING;
-        if self.rec.is_some() {
+        if self.rec.is_some() || self.stats.is_some() {
             let up = self.boards.up.iter().filter(|&&u| u).count();
+            if let Some(s) = self.stats.as_deref_mut() {
+                s.set_boards_up(up as u64);
+            }
             if let Some(r) = self.rec.as_deref_mut() {
                 let ts = now * 1000.0;
                 r.instant(PID_FLEET, b as u64, "board", "crash", ts,
@@ -1235,8 +1353,11 @@ impl Sim<'_> {
         // sequence pays a full reconfiguration. Work that failed over
         // stays where it went; new arrivals find the board again.
         self.boards.up[b] = true;
-        if self.rec.is_some() {
+        if self.rec.is_some() || self.stats.is_some() {
             let up = self.boards.up.iter().filter(|&&u| u).count();
+            if let Some(s) = self.stats.as_deref_mut() {
+                s.set_boards_up(up as u64);
+            }
             if let Some(r) = self.rec.as_deref_mut() {
                 let ts = now * 1000.0;
                 r.instant(PID_FLEET, b as u64, "board", "recover", ts,
@@ -1264,6 +1385,9 @@ impl Sim<'_> {
         if self.req_attempts_left[i] > 0 {
             self.req_attempts_left[i] -= 1;
             self.retries += 1;
+            if let Some(s) = self.stats.as_deref_mut() {
+                s.on_retry();
+            }
             let attempt = self.cfg.resilience.retries
                 - self.req_attempts_left[i];
             if let Some(r) = self.rec.as_deref_mut() {
@@ -1287,6 +1411,9 @@ impl Sim<'_> {
             self.push(now + delay, EventKind::Retry(i));
         } else {
             self.failed += 1;
+            if let Some(s) = self.stats.as_deref_mut() {
+                s.on_failed();
+            }
             if let Some(r) = self.rec.as_deref_mut() {
                 let ts = now * 1000.0;
                 r.instant(PID_REQ, 0, "req", "failed", ts,
@@ -1316,6 +1443,9 @@ impl Sim<'_> {
             }
             let _ = self.boards.queue[b].remove(qi);
             self.timeouts += 1;
+            if let Some(s) = self.stats.as_deref_mut() {
+                s.on_timeout();
+            }
             if let Some(r) = self.rec.as_deref_mut() {
                 r.instant(PID_REQ, 0, "req", "timeout", now * 1000.0,
                           vec![("req", Json::Num(req.id as f64))]);
@@ -2127,6 +2257,34 @@ mod tests {
         assert_eq!(a.p99_ms.to_bits(), b.p99_ms.to_bits());
         assert_eq!(a.goodput_p99_ms.to_bits(), b.goodput_p99_ms.to_bits());
         assert_eq!(a.makespan_ms.to_bits(), b.makespan_ms.to_bits());
+    }
+
+    #[test]
+    fn stats_pipeline_observes_without_changing_metrics() {
+        // 3 clips at t=0, 10 ms each, 10 ms windows: window 0 holds
+        // the arrivals, windows 1..=3 one completion each (the t=10
+        // completion lands *after* the boundary closes window 0).
+        let m = matrix1(10.0, 5.0);
+        let arr: Vec<Request> = (0..3)
+            .map(|id| Request { id, model: 0, arrival_ms: 0.0 })
+            .collect();
+        let plain = simulate_fleet(&m, &fleet(1), &arr);
+        let mut stats = StreamStats::new(crate::obs::StatsCfg {
+            window_ms: 10.0, shards: 1, slo_target: 0.99 });
+        let met = simulate_fleet_obs(&m, &fleet(1), &arr, None,
+                                     Some(&mut stats));
+        assert_eq!(format!("{plain:?}"), format!("{met:?}"),
+                   "attaching stats changes no metric bit");
+        let rows = stats.rows();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].arrivals, 3);
+        assert_eq!(rows[0].completions, 0);
+        assert_eq!(rows.iter().map(|r| r.completions).sum::<u64>(), 3);
+        assert!(rows.iter().all(|r| r.good == r.completions),
+                "all under the 100 ms SLO");
+        assert!(stats.breaches().is_empty());
+        assert_eq!(stats.engine_events, met.events as u64);
+        assert!(stats.engine_wall_s > 0.0, "self-profiling stamped");
     }
 
     #[test]

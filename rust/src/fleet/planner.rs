@@ -230,11 +230,16 @@ struct PlanObs<'a> {
     /// Candidates certified so far — the deterministic timestamp of
     /// the planner track.
     seq: u64,
+    /// Cheapest certified-ok cost so far — each improvement lands as
+    /// one `plan/best_cost` gauge sample, so the metrics snapshot
+    /// shows the search's cost descent over candidate sequence.
+    best_cost: f64,
 }
 
 impl PlanObs<'_> {
     fn off() -> PlanObs<'static> {
-        PlanObs { rec: None, progress: false, seq: 0 }
+        PlanObs { rec: None, progress: false, seq: 0,
+                  best_cost: f64::INFINITY }
     }
 
     /// Record one *actually simulated* certification (memo hits are
@@ -254,6 +259,12 @@ impl PlanObs<'_> {
                 ("ok", Json::Bool(ok)),
                 ("p99_ms", Json::Num(p99_ms)),
             ]);
+        }
+        if ok && cost < self.best_cost {
+            self.best_cost = cost;
+            if let Some(r) = self.rec.as_deref_mut() {
+                r.gauge_at("plan/best_cost", self.seq as f64, cost);
+            }
         }
         self.seq += 1;
     }
@@ -352,7 +363,8 @@ pub fn plan_traced(profiles: &ProfileMatrix, cfg: &PlanCfg,
         r.process(PID_PLAN, "capacity planner");
         r.track(PID_PLAN, 0, "candidates");
     }
-    let mut obs = PlanObs { rec, progress, seq: 0 };
+    let mut obs = PlanObs { rec, progress, seq: 0,
+                            best_cost: f64::INFINITY };
     let verdict = plan_inner(profiles, cfg, &mut obs);
     let certified = obs.seq;
     if let Some(r) = obs.rec {

@@ -28,10 +28,12 @@
 //!                 [--deadline-ms D] [--retries N] [--shed]
 //!                 [--profiles points.json] [--fast]
 //!                 [--trace-out t.json] [--metrics-out m.jsonl]
+//!                 [--stats-out s.jsonl] [--window-ms W]
+//!                 [--slo-target T]
 //!                 [--quiet]                           serving sim + planner
 //! harflow3d report <table2|table3|table4|table5|table6|
 //!                   fig1|fig4|fig6|fig7|fig8|ablation|fleet|
-//!                   convergence|all> [--fast]
+//!                   convergence|obs|all> [--fast]
 //! harflow3d serve [--clips N] [--tiled] [--no-verify]  e2e PJRT serving
 //! harflow3d export <model> <out.json>                  ONNX-JSON export
 //! harflow3d devices | models                           list targets
@@ -45,11 +47,15 @@
 //! `--trace-out` writes a Chrome Trace Event Format timeline (open it
 //! at <https://ui.perfetto.dev>) and `--metrics-out` a JSON-lines
 //! metrics snapshot — SA convergence telemetry on the DSE commands,
-//! the full board/request timeline on `fleet`. Both are deterministic
-//! per seed and leave every stdout byte-pin and every computed result
-//! bit-identical (obs subsystem, docs/observability.md). `--quiet`
-//! suppresses the stderr progress lines the DSE restarts / exchange
-//! barriers / sweep points print by default.
+//! the full board/request timeline on `fleet`. `fleet --stats-out`
+//! streams bounded-memory per-window telemetry (tumbling
+//! `--window-ms` windows, mergeable-sketch percentiles, SLO
+//! burn-rate monitors against `--slo-target`) on fixed-`--boards`
+//! runs. All are deterministic per seed and leave every stdout
+//! byte-pin and every computed result bit-identical (obs subsystem,
+//! docs/observability.md). `--quiet` suppresses the stderr progress
+//! lines the DSE restarts / exchange barriers / sweep points print
+//! by default.
 //!
 //! `optimize`/`schedule`/`simulate`/`generate` gate their results
 //! through the static verifier (`H3D-0xx` diagnostics, catalogued in

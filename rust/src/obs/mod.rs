@@ -38,10 +38,28 @@
 //!   per proposed move (ts = iteration) + tau / best-ms counters.
 //! * pid 4 (`PID_PLAN`) — planner candidates: one unit-length slice
 //!   per certified fleet composition (ts = candidate sequence).
+//! * pid 5 (`PID_OBS`) — streaming-telemetry monitors: one instant per
+//!   SLO burn-rate breach (ts = window close, sim ms).
+//!
+//! The streaming side lives in the submodules: [`stream`] (mergeable
+//! log-bucketed quantile sketch), [`window`] (tumbling sim-time
+//! windows + JSON-lines `--stats-out` export) and [`slo`]
+//! (multi-window burn-rate monitors). Unlike [`TraceBuffer`] those are
+//! bounded-memory and run inside the hot loop.
 //!
 //! Schemas, the span/counter taxonomy and the Perfetto how-to live in
 //! `docs/observability.md`; `ci/check_trace.py` validates exported
 //! traces structurally in CI.
+
+pub mod slo;
+pub mod stream;
+pub mod window;
+
+pub use slo::{Breach, Monitor};
+pub use stream::QuantileSketch;
+pub use window::{StatsCfg, StreamStats, WindowRow};
+
+use std::collections::BTreeMap;
 
 use crate::util::json::Json;
 
@@ -53,11 +71,13 @@ pub const PID_REQ: u32 = 2;
 pub const PID_SA: u32 = 3;
 /// Capacity-planner candidate track (tid 0).
 pub const PID_PLAN: u32 = 4;
+/// Streaming-telemetry monitor track (SLO breach instants, tid 0).
+pub const PID_OBS: u32 = 5;
 
 /// Every category an exported event may carry — `ci/check_trace.py`
 /// rejects unknown categories, so extend both together.
-pub const CATEGORIES: [&str; 5] = ["board", "req", "sa", "plan",
-                                   "counter"];
+pub const CATEGORIES: [&str; 6] = ["board", "req", "sa", "plan",
+                                   "counter", "obs"];
 
 /// Chrome Trace Event phases this layer emits.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -199,6 +219,11 @@ impl Recorder for NoopRecorder {}
 pub struct TraceBuffer {
     events: Vec<TraceEvent>,
     gauges: Vec<(String, f64)>,
+    /// Timestamped gauge series: last-write-wins per (ts, name), kept
+    /// ordered so the metrics snapshot is deterministic. `ts_ms` is
+    /// keyed by bit pattern — non-negative sim timestamps order the
+    /// same by bits as by value.
+    gauge_points: BTreeMap<(u64, String), f64>,
 }
 
 impl TraceBuffer {
@@ -208,6 +233,7 @@ impl TraceBuffer {
 
     pub fn is_empty(&self) -> bool {
         self.events.is_empty() && self.gauges.is_empty()
+            && self.gauge_points.is_empty()
     }
 
     /// Recorded event count (metadata included).
@@ -236,9 +262,22 @@ impl TraceBuffer {
         out
     }
 
-    /// Export every counter sample (in recorded order) plus the final
-    /// gauges as JSON-lines with alphabetical keys — the same
-    /// deterministic-rendering convention as the `check` JSON output.
+    /// A timestamped gauge sample: last write wins per `(ts_ms, name)`
+    /// — the window-boundary series behind the satellite fix that made
+    /// `--metrics-out` reflect the run, not just its final state. The
+    /// snapshot emits these between the counter samples and the final
+    /// (timestamp-less) gauges; runs that never call this export
+    /// byte-identically to the pre-series format.
+    pub fn gauge_at(&mut self, name: &str, ts_ms: f64, value: f64) {
+        self.gauge_points
+            .insert((ts_ms.to_bits(), name.to_string()), value);
+    }
+
+    /// Export every counter sample (in recorded order), the
+    /// timestamped gauge series (ordered by `(ts_ms, name)`,
+    /// last-write-wins), then the final gauges — JSON-lines with
+    /// alphabetical keys, the same deterministic-rendering convention
+    /// as the `check` JSON output.
     pub fn metrics_jsonl(&self) -> String {
         let mut out = String::new();
         for ev in &self.events {
@@ -252,6 +291,16 @@ impl TraceBuffer {
                 ("tid", Json::Num(ev.tid as f64)),
                 ("ts_ms", Json::Num(ev.ts_us / 1000.0)),
                 ("value", Json::Num(ev.value)),
+            ]);
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        for ((ts_bits, name), value) in &self.gauge_points {
+            let line = Json::obj(vec![
+                ("kind", Json::Str("gauge".to_string())),
+                ("name", Json::Str(name.clone())),
+                ("ts_ms", Json::Num(f64::from_bits(*ts_bits))),
+                ("value", Json::Num(*value)),
             ]);
             out.push_str(&line.to_string());
             out.push('\n');
@@ -550,6 +599,29 @@ mod tests {
         let one = buf.chrome_trace();
         assert!(one.contains("chain2/tau"));
         assert!(one.contains("\"outcome\":\"accepted\""));
+    }
+
+    #[test]
+    fn gauge_series_is_ordered_and_last_write_wins() {
+        let mut b = TraceBuffer::new();
+        b.gauge_at("fleet/window/queue_depth", 20.0, 3.0);
+        b.gauge_at("fleet/window/queue_depth", 10.0, 9.0);
+        b.gauge_at("fleet/window/queue_depth", 10.0, 5.0); // overwrite
+        b.gauge("fleet/completed", 1.0);
+        let m = b.metrics_jsonl();
+        let lines: Vec<&str> = m.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("\"ts_ms\":10") &&
+                lines[0].contains("\"value\":5"), "{}", lines[0]);
+        assert!(lines[1].contains("\"ts_ms\":20"));
+        assert!(!lines[2].contains("ts_ms"),
+                "final gauges stay timestamp-less: {}", lines[2]);
+        // A buffer that never records a series exports the old format.
+        let mut plain = TraceBuffer::new();
+        plain.gauge("fleet/completed", 1.0);
+        assert_eq!(plain.metrics_jsonl(),
+                   "{\"kind\":\"gauge\",\"name\":\"fleet/completed\",\
+                    \"value\":1}\n");
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Multi-window SLO burn-rate monitors (Google-SRE-style alerting)
+//! over the streaming window series.
+//!
+//! An SLO target of `t` (good-fraction, e.g. 0.99) leaves an error
+//! budget of `1 - t`. The **burn rate** over a span of windows is
+//!
+//! ```text
+//! burn = (bad events / total events over the span) / (1 - target)
+//! ```
+//!
+//! — 1.0 means the fleet spends its budget exactly at the sustainable
+//! pace; 14.4 means a 30-day budget burns in ~2 days. Two monitors
+//! with the classic SRE-workbook pairing watch every closed window:
+//! a **fast** monitor (last [`FAST_WINDOWS`] windows, threshold
+//! [`FAST_THRESHOLD`]) that catches sharp outages quickly, and a
+//! **slow** monitor (last [`SLOW_WINDOWS`] windows, threshold
+//! [`SLOW_THRESHOLD`]) that catches sustained simmer a fast monitor
+//! resets past. Each closed window with a monitor at or over its
+//! threshold emits one [`Breach`] — the record the future autoscaler
+//! keys on, exported in `FleetMetrics::breaches`, the `--stats-out`
+//! series, and as `obs` instants on the Perfetto trace.
+//!
+//! Everything here is integer counts and one division per window:
+//! deterministic, allocation-free after the ring fills, and byte
+//! reproducible per seed.
+
+use std::collections::VecDeque;
+
+/// Fast monitor span (windows) — catches sharp burn quickly.
+pub const FAST_WINDOWS: usize = 5;
+/// Fast monitor threshold (burn rate) — the SRE workbook's 14.4x
+/// page-now level (a 30-day budget gone in ~2 days).
+pub const FAST_THRESHOLD: f64 = 14.4;
+/// Slow monitor span (windows) — catches sustained simmer.
+pub const SLOW_WINDOWS: usize = 60;
+/// Slow monitor threshold (burn rate) — the 6x ticket level.
+pub const SLOW_THRESHOLD: f64 = 6.0;
+
+/// Which burn-rate monitor fired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Monitor {
+    Fast,
+    Slow,
+}
+
+impl Monitor {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Monitor::Fast => "fast",
+            Monitor::Slow => "slow",
+        }
+    }
+
+    /// Windows the monitor averages over.
+    pub fn windows(&self) -> usize {
+        match self {
+            Monitor::Fast => FAST_WINDOWS,
+            Monitor::Slow => SLOW_WINDOWS,
+        }
+    }
+
+    pub fn threshold(&self) -> f64 {
+        match self {
+            Monitor::Fast => FAST_THRESHOLD,
+            Monitor::Slow => SLOW_THRESHOLD,
+        }
+    }
+}
+
+/// One monitor firing at one window close.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Breach {
+    pub monitor: Monitor,
+    /// Index of the window whose close tripped the monitor.
+    pub window: u64,
+    /// Simulated time of that window's close (ms).
+    pub at_ms: f64,
+    /// The burn rate that tripped it.
+    pub burn_rate: f64,
+    /// The monitor's threshold, denormalised for self-contained
+    /// breach records in exported series.
+    pub threshold: f64,
+}
+
+/// Rolling (bad, total) history of the last [`SLOW_WINDOWS`] closed
+/// windows plus the error budget — all the state burn evaluation
+/// needs.
+#[derive(Debug, Clone)]
+pub struct BurnState {
+    /// Error budget `1 - slo_target` (bad-fraction the SLO allows).
+    budget: f64,
+    /// Per-window (bad, total) pairs, most recent last.
+    ring: VecDeque<(u64, u64)>,
+}
+
+impl BurnState {
+    /// `slo_target` is the good-fraction objective in (0, 1); the
+    /// config gate (`check::gate_stats_cfg`, H3D-044) rejects
+    /// anything else before a simulation starts.
+    pub fn new(slo_target: f64) -> BurnState {
+        BurnState {
+            budget: 1.0 - slo_target,
+            ring: VecDeque::with_capacity(SLOW_WINDOWS),
+        }
+    }
+
+    /// Burn rate averaged over the last `monitor.windows()` observed
+    /// windows (fewer while history is short; 0.0 with no traffic).
+    pub fn burn_rate(&self, monitor: Monitor) -> f64 {
+        let span = monitor.windows().min(self.ring.len());
+        let (mut bad, mut total) = (0u64, 0u64);
+        for &(b, t) in self.ring.iter().rev().take(span) {
+            bad += b;
+            total += t;
+        }
+        if total == 0 || !(self.budget > 0.0) {
+            return 0.0;
+        }
+        (bad as f64 / total as f64) / self.budget
+    }
+
+    /// Record a closed window's (bad, total) outcome and evaluate
+    /// both monitors, appending a [`Breach`] per monitor at or over
+    /// threshold.
+    pub fn observe(&mut self, window: u64, end_ms: f64, bad: u64,
+                   total: u64, out: &mut Vec<Breach>) {
+        if self.ring.len() == SLOW_WINDOWS {
+            self.ring.pop_front();
+        }
+        self.ring.push_back((bad, total));
+        for monitor in [Monitor::Fast, Monitor::Slow] {
+            let burn = self.burn_rate(monitor);
+            if burn >= monitor.threshold() {
+                out.push(Breach {
+                    monitor,
+                    window,
+                    at_ms: end_ms,
+                    burn_rate: burn,
+                    threshold: monitor.threshold(),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_windows_never_breach() {
+        let mut b = BurnState::new(0.99);
+        let mut out = Vec::new();
+        for w in 0..100 {
+            b.observe(w, w as f64 * 10.0, 0, 50, &mut out);
+        }
+        assert!(out.is_empty());
+        assert_eq!(b.burn_rate(Monitor::Fast), 0.0);
+        assert_eq!(b.burn_rate(Monitor::Slow), 0.0);
+    }
+
+    #[test]
+    fn outage_trips_fast_then_recovery_clears_it() {
+        // 1% budget; a window with 50% bad burns at 50x — over both
+        // thresholds. After 5 clean windows the fast monitor's span
+        // has rotated past the outage; the slow monitor still sees it.
+        let mut b = BurnState::new(0.99);
+        let mut out = Vec::new();
+        b.observe(0, 10.0, 25, 50, &mut out);
+        assert_eq!(out.len(), 2, "fast + slow both fire: {out:?}");
+        assert_eq!(out[0].monitor, Monitor::Fast);
+        assert!(out[0].burn_rate >= 14.4);
+        out.clear();
+        for w in 1..=5 {
+            b.observe(w, 10.0 * (w + 1) as f64, 0, 50, &mut out);
+        }
+        assert!(b.burn_rate(Monitor::Fast) < FAST_THRESHOLD,
+                "outage rotated out of the fast span");
+        assert!(b.burn_rate(Monitor::Slow) > SLOW_THRESHOLD,
+                "slow span still remembers the outage");
+    }
+
+    #[test]
+    fn sustainable_burn_stays_under_thresholds() {
+        // Exactly on-budget traffic (1 bad per 100) burns at 1.0.
+        let mut b = BurnState::new(0.99);
+        let mut out = Vec::new();
+        for w in 0..80 {
+            b.observe(w, w as f64, 1, 100, &mut out);
+        }
+        assert!(out.is_empty(), "{out:?}");
+        let burn = b.burn_rate(Monitor::Slow);
+        assert!((burn - 1.0).abs() < 1e-12, "burn {burn}");
+    }
+
+    #[test]
+    fn empty_windows_contribute_no_burn() {
+        let mut b = BurnState::new(0.999);
+        let mut out = Vec::new();
+        b.observe(0, 5.0, 0, 0, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(b.burn_rate(Monitor::Fast), 0.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Mergeable quantile sketch — the bounded-memory replacement for
+//! full-vector `percentile` sorts on streaming paths.
+//!
+//! DDSketch-style log-bucketed histogram with a twist that keeps it
+//! exactly deterministic: bucket boundaries come from the **bit
+//! pattern** of the `f64` (top exponent + mantissa bits), not from a
+//! `ln()` call, so the value → bucket mapping involves no float
+//! arithmetic at all. Counts are integers, which makes every property
+//! the fleet pipeline relies on trivial:
+//!
+//! * **merge = counter addition** — associative, commutative, and
+//!   bit-identical however the input stream was partitioned across
+//!   shards (the `--shards N` aggregation pin);
+//! * **no float-order sensitivity** — inserting the same multiset in
+//!   any order yields the same sketch, unlike a Kahan-less running
+//!   sum;
+//! * **bounded memory** — at most one bucket per distinct
+//!   (octave, 1/128-octave) value class ever touched, independent of
+//!   stream length.
+//!
+//! Rank queries use the same nearest-rank rule as
+//! [`crate::util::stats::percentile_sorted`] (shared via
+//! [`crate::util::stats::nearest_rank`]), so the sketch answers the
+//! *exact* rank the exact estimator would pick, quantized down to its
+//! bucket floor: the relative value error is bounded by one kept
+//! mantissa step, `2^-7` (&lt; 0.79%), pinned by `rust/tests/stream.rs`
+//! against `util::stats::percentile` on adversarial distributions.
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::nearest_rank;
+
+/// Mantissa bits kept per octave: 7 bits = 128 sub-buckets per power
+/// of two, a worst-case relative value error of `2^-7 < 0.79%`.
+const MANTISSA_KEEP: u32 = 7;
+/// Bits discarded from the raw `f64` pattern when bucketing.
+const BUCKET_SHIFT: u32 = 52 - MANTISSA_KEEP;
+
+/// Bucket index of a positive finite value: the top
+/// `11 + MANTISSA_KEEP` bits of its IEEE-754 pattern. For positive
+/// floats the bit pattern is monotone in the value, so bucket order
+/// is value order and a cumulative-count walk finds exact ranks.
+fn bucket_of(v: f64) -> i32 {
+    (v.to_bits() >> BUCKET_SHIFT) as i32
+}
+
+/// Lower edge of bucket `idx` — the sketch's representative value
+/// (an under-estimate by at most one `2^-7` mantissa step).
+fn bucket_floor(idx: i32) -> f64 {
+    f64::from_bits((idx as u64) << BUCKET_SHIFT)
+}
+
+/// Mergeable log-bucketed quantile sketch over non-negative samples
+/// (simulated latencies in ms). Zero, negative and non-finite inserts
+/// land in a dedicated zero bucket that sorts below every positive
+/// bucket; "failed request = +inf latency" is handled by the caller
+/// as an explicit count ([`QuantileSketch::quantile_with_failures`])
+/// so the bucket map itself stays finite.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct QuantileSketch {
+    counts: BTreeMap<i32, u64>,
+    zero: u64,
+    total: u64,
+}
+
+impl QuantileSketch {
+    pub fn new() -> QuantileSketch {
+        QuantileSketch::default()
+    }
+
+    /// Record one sample. O(log buckets); allocates only when a value
+    /// class is seen for the first time.
+    pub fn insert(&mut self, v: f64) {
+        if v > 0.0 && v.is_finite() {
+            *self.counts.entry(bucket_of(v)).or_insert(0) += 1;
+        } else {
+            self.zero += 1;
+        }
+        self.total += 1;
+    }
+
+    /// Fold `other` into `self` by adding bucket counts. Associative
+    /// and commutative (integer addition), so any shard partition of
+    /// a stream merges to the bit-identical unsharded sketch.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        for (&idx, &c) in &other.counts {
+            *self.counts.entry(idx).or_insert(0) += c;
+        }
+        self.zero += other.zero;
+        self.total += other.total;
+    }
+
+    /// Samples recorded (inserts, not buckets).
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Distinct buckets held — the bounded-memory witness reported by
+    /// `report obs` (grows with distinct value classes, never with
+    /// stream length).
+    pub fn buckets(&self) -> usize {
+        self.counts.len() + usize::from(self.zero > 0)
+    }
+
+    /// Nearest-rank percentile estimate (`p` in 0..=100): the bucket
+    /// floor of the bucket holding the rank
+    /// [`nearest_rank`]`(count, p)` sample. 0.0 on an empty sketch,
+    /// matching [`crate::util::stats::percentile`].
+    pub fn quantile(&self, p: f64) -> f64 {
+        self.quantile_with_failures(0, p)
+    }
+
+    /// [`QuantileSketch::quantile`] over the union of this sketch's
+    /// samples and `failures` additional samples at `+inf` — the
+    /// goodput-tail convention of
+    /// [`crate::util::stats::percentile_with_failures`]. Returns
+    /// `+inf` when the rank falls in the failure mass.
+    pub fn quantile_with_failures(&self, failures: u64, p: f64) -> f64 {
+        let n = self.total + failures;
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = nearest_rank(n as usize, p) as u64;
+        if rank >= self.total {
+            return f64::INFINITY;
+        }
+        if rank < self.zero {
+            return 0.0;
+        }
+        let mut cum = self.zero;
+        for (&idx, &c) in &self.counts {
+            cum += c;
+            if rank < cum {
+                return bucket_floor(idx);
+            }
+        }
+        // Unreachable: rank < total and the buckets sum to
+        // total - zero; keep a safe value rather than a panic path.
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_mapping_is_monotone_and_tight() {
+        let vals = [1e-6, 0.5, 1.0, 1.5, 2.0, 3.75, 1e3, 1e9];
+        for w in vals.windows(2) {
+            assert!(bucket_of(w[0]) <= bucket_of(w[1]),
+                    "monotone: {} vs {}", w[0], w[1]);
+        }
+        for &v in &vals {
+            let floor = bucket_floor(bucket_of(v));
+            assert!(floor <= v, "floor {floor} over {v}");
+            assert!((v - floor) / v < 0.0079,
+                    "bucket too wide at {v}: floor {floor}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_sample_edges() {
+        let mut s = QuantileSketch::new();
+        assert_eq!(s.quantile(99.0), 0.0);
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.buckets(), 0);
+        s.insert(42.0);
+        assert_eq!(s.count(), 1);
+        for p in [0.0, 50.0, 100.0] {
+            let q = s.quantile(p);
+            assert!(q <= 42.0 && (42.0 - q) / 42.0 < 0.0079, "{q}");
+        }
+    }
+
+    #[test]
+    fn zero_and_failure_mass_sort_at_the_ends() {
+        let mut s = QuantileSketch::new();
+        s.insert(0.0);
+        s.insert(-3.0);
+        s.insert(10.0);
+        assert_eq!(s.quantile(0.0), 0.0, "zero bucket sorts first");
+        assert!(s.quantile(100.0) > 9.0);
+        // 3 finite samples + 7 failures: the p99 rank lands in the
+        // failure mass.
+        assert!(s.quantile_with_failures(7, 99.0).is_infinite());
+        assert_eq!(s.quantile_with_failures(7, 0.0), 0.0);
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let vals = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let mut all = QuantileSketch::new();
+        for &v in &vals {
+            all.insert(v);
+        }
+        let mut a = QuantileSketch::new();
+        let mut b = QuantileSketch::new();
+        for (i, &v) in vals.iter().enumerate() {
+            if i % 2 == 0 { a.insert(v) } else { b.insert(v) }
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, all);
+        assert_eq!(ba, all);
+    }
+}

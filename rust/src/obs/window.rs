@@ -1,0 +1,525 @@
+//! Tumbling time-windows over simulated time: the streaming stats
+//! pipeline that turns hot-loop events into a bounded-memory
+//! per-window time-series plus online percentiles.
+//!
+//! [`StreamStats`] sits next to the `TraceBuffer` recorder behind the
+//! same `Option<&mut _>` zero-cost discipline: when `--stats-out` is
+//! off the simulator carries `None` and the hot loop is bit-identical
+//! to the untraced build. When on, the simulator calls the count hooks
+//! (`on_arrival`, `on_complete`, ...) as events happen and
+//! [`StreamStats::advance_to`] at the top of the event loop; windows
+//! close deterministically at multiples of `window_ms` of *simulated*
+//! time, so the whole series is byte-reproducible per seed. Wall clock
+//! appears only in the self-profiling fields (`engine_events`,
+//! `engine_wall_s`), which are surfaced by `report obs` and stderr —
+//! never in the exported series.
+//!
+//! Latencies go through `shards` interleaved [`QuantileSketch`]es
+//! (round-robin by insert sequence) merged at window close — the
+//! in-process model of `--shards N` workers aggregating. Because
+//! sketch merge is integer counter addition, the merged window rows
+//! are bit-identical for any shard count over the same event stream;
+//! `rust/tests/stream.rs` pins 4 shards against 1.
+
+use crate::util::json::Json;
+
+use super::slo::{Breach, BurnState};
+use super::stream::QuantileSketch;
+
+/// Streaming-stats configuration, validated by
+/// `check::gate_stats_cfg` (H3D-043/044) before a simulation starts.
+#[derive(Debug, Clone)]
+pub struct StatsCfg {
+    /// Tumbling window width in simulated ms.
+    pub window_ms: f64,
+    /// Interleaved sketch shards (the `--shards` merge model; 1 = no
+    /// interleaving). Results are bit-identical for any value ≥ 1.
+    pub shards: usize,
+    /// SLO good-fraction objective in (0, 1) for the burn monitors.
+    pub slo_target: f64,
+}
+
+impl Default for StatsCfg {
+    fn default() -> StatsCfg {
+        StatsCfg { window_ms: 100.0, shards: 1, slo_target: 0.99 }
+    }
+}
+
+/// One closed window of the time-series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowRow {
+    pub index: u64,
+    pub start_ms: f64,
+    pub end_ms: f64,
+    pub arrivals: u64,
+    pub completions: u64,
+    pub sheds: u64,
+    pub retries: u64,
+    pub timeouts: u64,
+    pub failures: u64,
+    /// Completions within the request SLO (`lat <= slo_ms`).
+    pub good: u64,
+    /// SLO-bad events: over-SLO completions + sheds + failures.
+    pub bad: u64,
+    /// Last-observed queue depth in the window (gauge).
+    pub queue_depth: u64,
+    /// Last-observed boards-up count in the window (gauge).
+    pub boards_up: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// p99 over completions plus this window's failures at +inf.
+    pub goodput_p99_ms: f64,
+}
+
+/// Open-window accumulator (counts only; latencies live in the shard
+/// sketches).
+#[derive(Debug, Clone, Default)]
+struct WindowAcc {
+    arrivals: u64,
+    completions: u64,
+    sheds: u64,
+    retries: u64,
+    timeouts: u64,
+    failures: u64,
+    good: u64,
+    /// Any count hook fired this window (gauge writes don't count) —
+    /// `finalize` only closes a trailing window that saw activity.
+    active: bool,
+}
+
+/// The streaming telemetry pipeline: tumbling windows + sharded
+/// mergeable sketches + burn-rate monitors + self-profiling.
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    cfg: StatsCfg,
+    /// Per-shard sketches for the open window, interleaved round-robin
+    /// by completion sequence.
+    shard_cur: Vec<QuantileSketch>,
+    /// Cumulative sketch over all closed windows (summary line).
+    overall: QuantileSketch,
+    insert_seq: u64,
+    cur: WindowAcc,
+    win_index: u64,
+    rows: Vec<WindowRow>,
+    /// Current gauge values (carried across events; sampled
+    /// last-write-wins at window close).
+    queue_depth: u64,
+    boards_up: u64,
+    /// Cumulative failures across closed windows (summary goodput).
+    cum_failures: u64,
+    burn: BurnState,
+    breaches: Vec<Breach>,
+    /// Self-profiling (wall clock; never exported in the series):
+    /// engine events processed while stats were attached.
+    pub engine_events: u64,
+    /// Wall seconds of the engine run, set by the simulator.
+    pub engine_wall_s: f64,
+}
+
+impl StreamStats {
+    pub fn new(cfg: StatsCfg) -> StreamStats {
+        let shards = cfg.shards.max(1);
+        let burn = BurnState::new(cfg.slo_target);
+        StreamStats {
+            cfg,
+            shard_cur: vec![QuantileSketch::new(); shards],
+            overall: QuantileSketch::new(),
+            insert_seq: 0,
+            cur: WindowAcc::default(),
+            win_index: 0,
+            rows: Vec::new(),
+            queue_depth: 0,
+            boards_up: 0,
+            cum_failures: 0,
+            burn,
+            breaches: Vec::new(),
+            engine_events: 0,
+            engine_wall_s: 0.0,
+        }
+    }
+
+    pub fn cfg(&self) -> &StatsCfg {
+        &self.cfg
+    }
+
+    // -- event hooks (simulated-time ordering is the caller's loop) ----------
+
+    pub fn on_arrival(&mut self) {
+        self.cur.arrivals += 1;
+        self.cur.active = true;
+    }
+
+    pub fn on_shed(&mut self) {
+        self.cur.sheds += 1;
+        self.cur.active = true;
+    }
+
+    pub fn on_retry(&mut self) {
+        self.cur.retries += 1;
+        self.cur.active = true;
+    }
+
+    pub fn on_timeout(&mut self) {
+        self.cur.timeouts += 1;
+        self.cur.active = true;
+    }
+
+    pub fn on_failed(&mut self) {
+        self.cur.failures += 1;
+        self.cur.active = true;
+    }
+
+    /// A request completed with latency `lat_ms`; `within_slo` is the
+    /// simulator's `lat <= slo_ms` verdict.
+    pub fn on_complete(&mut self, lat_ms: f64, within_slo: bool) {
+        let shard = (self.insert_seq % self.shard_cur.len() as u64) as usize;
+        self.insert_seq += 1;
+        self.shard_cur[shard].insert(lat_ms);
+        self.cur.completions += 1;
+        if within_slo {
+            self.cur.good += 1;
+        }
+        self.cur.active = true;
+    }
+
+    pub fn set_queue_depth(&mut self, depth: u64) {
+        self.queue_depth = depth;
+    }
+
+    pub fn set_boards_up(&mut self, up: u64) {
+        self.boards_up = up;
+    }
+
+    // -- window machinery ----------------------------------------------------
+
+    /// End of the open window. Boundaries come from multiplication,
+    /// not accumulation, so long runs never drift.
+    fn win_end(&self) -> f64 {
+        (self.win_index + 1) as f64 * self.cfg.window_ms
+    }
+
+    /// Advance simulated time to `now_ms`, closing every window whose
+    /// end is ≤ `now_ms`. Call *before* processing the event at
+    /// `now_ms` — an event exactly on a boundary lands in the next
+    /// window. Returns how many windows closed (the caller mirrors the
+    /// new rows into metrics-snapshot gauge series).
+    pub fn advance_to(&mut self, now_ms: f64) -> usize {
+        let mut closed = 0;
+        while now_ms >= self.win_end() {
+            self.close_window();
+            closed += 1;
+        }
+        closed
+    }
+
+    /// Close the trailing window if it saw any activity. Returns the
+    /// number of windows closed (0 or 1).
+    pub fn finalize(&mut self) -> usize {
+        if self.cur.active {
+            self.close_window();
+            1
+        } else {
+            0
+        }
+    }
+
+    fn close_window(&mut self) {
+        // Merge the shard sketches; any partition merges to the
+        // bit-identical unsharded sketch (integer counter addition).
+        let mut merged = QuantileSketch::new();
+        for s in &self.shard_cur {
+            merged.merge(s);
+        }
+        let acc = std::mem::take(&mut self.cur);
+        let bad = (acc.completions - acc.good) + acc.sheds + acc.failures;
+        let row = WindowRow {
+            index: self.win_index,
+            start_ms: self.win_index as f64 * self.cfg.window_ms,
+            end_ms: self.win_end(),
+            arrivals: acc.arrivals,
+            completions: acc.completions,
+            sheds: acc.sheds,
+            retries: acc.retries,
+            timeouts: acc.timeouts,
+            failures: acc.failures,
+            good: acc.good,
+            bad,
+            queue_depth: self.queue_depth,
+            boards_up: self.boards_up,
+            p50_ms: merged.quantile(50.0),
+            p95_ms: merged.quantile(95.0),
+            p99_ms: merged.quantile(99.0),
+            goodput_p99_ms: merged
+                .quantile_with_failures(acc.failures, 99.0),
+        };
+        let total = acc.completions + acc.sheds + acc.failures;
+        self.burn.observe(row.index, row.end_ms, bad, total,
+                          &mut self.breaches);
+        self.overall.merge(&merged);
+        self.cum_failures += acc.failures;
+        self.rows.push(row);
+        self.win_index += 1;
+        for s in &mut self.shard_cur {
+            *s = QuantileSketch::new();
+        }
+    }
+
+    // -- results -------------------------------------------------------------
+
+    pub fn rows(&self) -> &[WindowRow] {
+        &self.rows
+    }
+
+    pub fn breaches(&self) -> &[Breach] {
+        &self.breaches
+    }
+
+    /// Online percentile over every closed window (p in 0..=100).
+    pub fn overall_quantile(&self, p: f64) -> f64 {
+        self.overall.quantile(p)
+    }
+
+    /// Online goodput percentile: closed-window completions plus all
+    /// closed-window failures at +inf.
+    pub fn overall_goodput(&self, p: f64) -> f64 {
+        self.overall.quantile_with_failures(self.cum_failures, p)
+    }
+
+    /// Largest bucket count across live sketches — the
+    /// bounded-memory witness for `report obs`.
+    pub fn max_buckets(&self) -> usize {
+        self.overall.buckets()
+    }
+
+    /// Wall-clock engine throughput while stats were attached (0.0
+    /// until the simulator stamps `engine_wall_s`).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.engine_wall_s > 0.0 {
+            self.engine_events as f64 / self.engine_wall_s
+        } else {
+            0.0
+        }
+    }
+
+    // -- export --------------------------------------------------------------
+
+    /// The `--stats-out` JSON-lines document: one `meta` line, one
+    /// `window` line per closed window, one `breach` line per monitor
+    /// firing, one `summary` line. Keys are alphabetical per line
+    /// (BTreeMap), values deterministic functions of the event stream
+    /// — byte-reproducible per seed. Non-finite percentiles (e.g. a
+    /// goodput tail that is all failures) render as `null`.
+    pub fn to_jsonl(&self) -> String {
+        fn num(v: f64) -> Json {
+            if v.is_finite() { Json::Num(v) } else { Json::Null }
+        }
+        fn int(v: u64) -> Json {
+            Json::Num(v as f64)
+        }
+        let mut out = String::new();
+        let meta = Json::obj(vec![
+            ("kind", Json::Str("meta".into())),
+            ("schema", Json::Num(1.0)),
+            ("shards", Json::Num(self.shard_cur.len() as f64)),
+            ("slo_target", Json::Num(self.cfg.slo_target)),
+            ("window_ms", Json::Num(self.cfg.window_ms)),
+        ]);
+        out.push_str(&meta.to_string());
+        out.push('\n');
+        for r in &self.rows {
+            let rate = r.arrivals as f64 / self.cfg.window_ms * 1000.0;
+            let line = Json::obj(vec![
+                ("arrivals", int(r.arrivals)),
+                ("bad", int(r.bad)),
+                ("boards_up", int(r.boards_up)),
+                ("completions", int(r.completions)),
+                ("end_ms", Json::Num(r.end_ms)),
+                ("failures", int(r.failures)),
+                ("good", int(r.good)),
+                ("goodput_p99_ms", num(r.goodput_p99_ms)),
+                ("index", int(r.index)),
+                ("kind", Json::Str("window".into())),
+                ("p50_ms", num(r.p50_ms)),
+                ("p95_ms", num(r.p95_ms)),
+                ("p99_ms", num(r.p99_ms)),
+                ("queue_depth", int(r.queue_depth)),
+                ("rate_rps", num(rate)),
+                ("retries", int(r.retries)),
+                ("sheds", int(r.sheds)),
+                ("start_ms", Json::Num(r.start_ms)),
+                ("timeouts", int(r.timeouts)),
+            ]);
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        for b in &self.breaches {
+            let line = Json::obj(vec![
+                ("at_ms", Json::Num(b.at_ms)),
+                ("burn_rate", num(b.burn_rate)),
+                ("kind", Json::Str("breach".into())),
+                ("monitor", Json::Str(b.monitor.name().into())),
+                ("threshold", Json::Num(b.threshold)),
+                ("window", int(b.window)),
+            ]);
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        let (c, s, f) = self.rows.iter().fold((0, 0, 0), |(c, s, f), r| {
+            (c + r.completions, s + r.sheds, f + r.failures)
+        });
+        let summary = Json::obj(vec![
+            ("breaches", int(self.breaches.len() as u64)),
+            ("completions", int(c)),
+            ("failures", int(f)),
+            ("goodput_p99_ms", num(self.overall_goodput(99.0))),
+            ("kind", Json::Str("summary".into())),
+            ("p50_ms", num(self.overall_quantile(50.0))),
+            ("p95_ms", num(self.overall_quantile(95.0))),
+            ("p99_ms", num(self.overall_quantile(99.0))),
+            ("sheds", int(s)),
+            ("windows", int(self.rows.len() as u64)),
+        ]);
+        out.push_str(&summary.to_string());
+        out.push('\n');
+        out
+    }
+}
+
+/// Percentile labels and values the summary/report surfaces share.
+/// Kept here (not in `report/`) so `report obs` and tests name the
+/// same ranks the windows use.
+pub const REPORT_PERCENTILES: [(&str, f64); 3] =
+    [("p50", 50.0), ("p95", 95.0), ("p99", 99.0)];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(window_ms: f64, shards: usize) -> StatsCfg {
+        StatsCfg { window_ms, shards, slo_target: 0.99 }
+    }
+
+    #[test]
+    fn windows_close_on_boundaries_and_boundary_events_go_next() {
+        let mut s = StreamStats::new(cfg(10.0, 1));
+        s.on_arrival();
+        assert_eq!(s.advance_to(9.9), 0, "window still open");
+        // An event at exactly t=10 belongs to window 1: advance first.
+        assert_eq!(s.advance_to(10.0), 1);
+        s.on_arrival();
+        assert_eq!(s.advance_to(35.0), 3, "t=35 closes windows 1..=3");
+        assert_eq!(s.finalize(), 0, "open window saw nothing");
+        let rows = s.rows();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].arrivals, 1);
+        assert_eq!(rows[1].arrivals, 1);
+        assert_eq!(rows[2].arrivals, 0);
+        assert_eq!(rows[0].start_ms, 0.0);
+        assert_eq!(rows[0].end_ms, 10.0);
+        assert_eq!(rows[3].end_ms, 40.0);
+    }
+
+    #[test]
+    fn finalize_closes_only_active_windows() {
+        let mut s = StreamStats::new(cfg(10.0, 1));
+        assert_eq!(s.finalize(), 0, "nothing ever happened");
+        let mut s = StreamStats::new(cfg(10.0, 1));
+        s.advance_to(0.0);
+        s.on_complete(5.0, true);
+        assert_eq!(s.finalize(), 1);
+        assert_eq!(s.rows().len(), 1);
+        assert_eq!(s.rows()[0].completions, 1);
+        assert_eq!(s.rows()[0].good, 1);
+    }
+
+    #[test]
+    fn gauges_are_last_write_wins_per_window() {
+        let mut s = StreamStats::new(cfg(10.0, 1));
+        s.set_queue_depth(3);
+        s.set_queue_depth(7);
+        s.set_boards_up(4);
+        s.on_arrival();
+        s.advance_to(10.0);
+        assert_eq!(s.rows()[0].queue_depth, 7);
+        assert_eq!(s.rows()[0].boards_up, 4);
+        // Gauges carry into later windows until overwritten.
+        s.on_arrival();
+        s.advance_to(20.0);
+        assert_eq!(s.rows()[1].queue_depth, 7);
+    }
+
+    #[test]
+    fn sharded_series_is_bit_identical_to_unsharded() {
+        let lats = [12.0, 3.5, 80.0, 41.0, 2.0, 99.5, 7.25, 64.0, 15.0];
+        let mut run = |shards: usize| {
+            let mut s = StreamStats::new(cfg(50.0, shards));
+            for (i, &l) in lats.iter().enumerate() {
+                s.advance_to(i as f64 * 10.0);
+                s.on_arrival();
+                s.on_complete(l, l <= 50.0);
+            }
+            s.finalize();
+            s.to_jsonl()
+        };
+        let one = run(1);
+        assert_eq!(one, run(4), "4-way interleave == unsharded");
+        assert_eq!(one, run(3), "odd shard count too");
+    }
+
+    #[test]
+    fn bad_counts_drive_breaches() {
+        // 1% budget, every request shed: burn = 100x, both monitors.
+        let mut s = StreamStats::new(cfg(10.0, 1));
+        for w in 0..3 {
+            s.advance_to(w as f64 * 10.0);
+            for _ in 0..20 {
+                s.on_arrival();
+                s.on_shed();
+            }
+        }
+        s.finalize();
+        assert_eq!(s.rows().len(), 3);
+        assert!(!s.breaches().is_empty());
+        let b = &s.breaches()[0];
+        assert_eq!(b.window, 0);
+        assert_eq!(b.at_ms, 10.0);
+        assert!(b.burn_rate >= b.threshold);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_order() {
+        let mut s = StreamStats::new(cfg(10.0, 2));
+        s.on_arrival();
+        s.on_complete(4.0, true);
+        s.finalize();
+        let text = s.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 3);
+        let kinds: Vec<String> = lines
+            .iter()
+            .map(|l| {
+                let v = Json::parse(l).expect("valid json line");
+                v.get("kind").and_then(Json::as_str)
+                    .expect("kind field").to_string()
+            })
+            .collect();
+        assert_eq!(kinds.first().map(String::as_str), Some("meta"));
+        assert_eq!(kinds.last().map(String::as_str), Some("summary"));
+        assert!(kinds[1..kinds.len() - 1].iter()
+                    .all(|k| k == "window" || k == "breach"));
+    }
+
+    #[test]
+    fn infinite_goodput_renders_null_not_inf() {
+        let mut s = StreamStats::new(cfg(10.0, 1));
+        s.on_arrival();
+        s.on_failed();
+        s.finalize();
+        let text = s.to_jsonl();
+        assert!(!text.contains("inf"), "no bare inf in JSON: {text}");
+        let row = Json::parse(text.lines().nth(1).expect("window line"))
+            .expect("parses");
+        assert_eq!(row.get("goodput_p99_ms"), Some(&Json::Null));
+    }
+}

@@ -1044,8 +1044,9 @@ pub fn fleet_rep(cfg: &ReportCfg) -> String {
 // ------------------------------------------------------------------------
 // Convergence — SA telemetry (obs subsystem): per-chain acceptance
 // behaviour and decimated best-latency curves for the multi-chain
-// engine. Not part of `all` (it re-runs the DSE with telemetry on);
-// ask for it with `report convergence`.
+// engine. Runs last in `report all` (it re-runs the DSE with
+// telemetry on, so it goes after the paper sections) and stands alone
+// as `report convergence`.
 // ------------------------------------------------------------------------
 
 pub fn convergence(cfg: &ReportCfg) -> String {
@@ -1103,51 +1104,161 @@ pub fn convergence(cfg: &ReportCfg) -> String {
     out
 }
 
-/// Run every report in paper order.
+// ------------------------------------------------------------------------
+// Obs — streaming-telemetry self-report (obs subsystem): the window
+// series, burn-rate breaches, and the engine's self-profiled
+// throughput over a canned overloaded fleet. Wall clock appears in
+// the events/s line, so `obs` stays out of `all` (which must be
+// byte-reproducible); ask for it with `report obs`.
+// ------------------------------------------------------------------------
+
+pub fn obs_rep(cfg: &ReportCfg) -> String {
+    use crate::fleet::{self, arrivals, planner};
+    use crate::obs::window::REPORT_PERCENTILES;
+    use crate::obs::{StatsCfg, StreamStats};
+
+    // Canned service profile (no DSE): this section demonstrates the
+    // telemetry pipeline under overload, not a tuned design point.
+    let mut mx = fleet::ProfileMatrix::new(vec!["c3d".to_string()],
+                                           vec!["zcu102".to_string()]);
+    let service_ms = 8.0;
+    mx.set(0, 0, fleet::ServiceProfile {
+        service_ms, reconfig_ms: 40.0, fill_ms: 2.0 });
+    mx.costs = vec![1.0];
+    let boards = 2usize;
+    let cap_rps = boards as f64 / (service_ms / 1e3);
+    let arr = arrivals::poisson(4000, 1.3 * cap_rps, 1, cfg.seed);
+    let fc = fleet::FleetCfg {
+        boards: planner::preload_round_robin(0, boards, 1),
+        policy: fleet::Policy::SloAware,
+        queue: fleet::QueueDiscipline::Fifo,
+        slo_ms: 3.0 * service_ms,
+        batch: fleet::BatchCfg::default(),
+        faults: fleet::faults::FaultPlan::none(),
+        resilience: fleet::faults::ResilienceCfg {
+            deadline_ms: 6.0 * service_ms,
+            shed: true,
+            seed: cfg.seed,
+            ..fleet::faults::ResilienceCfg::none()
+        },
+    };
+    let mut stats = StreamStats::new(StatsCfg {
+        window_ms: 250.0, shards: 4, slo_target: 0.99 });
+    let met = fleet::simulate_fleet_obs(&mx, &fc, &arr, None,
+                                        Some(&mut stats));
+
+    let rows = stats.rows();
+    let mut t = Table::new(&format!(
+        "Streaming telemetry — canned C3D fleet at 130% capacity, \
+         {:.0} ms windows, {} sketch shards",
+        stats.cfg().window_ms, stats.cfg().shards))
+    .header(&["Win", "Rate (r/s)", "Done", "Shed", "Queue",
+              "p50 (ms)", "p99 (ms)"]);
+    // Same decimation idiom as the convergence curves: ~10 waypoints.
+    let step = (rows.len() / 10).max(1);
+    for r in rows.iter().step_by(step) {
+        t.row(vec![
+            format!("{}", r.index),
+            num(r.arrivals as f64 / stats.cfg().window_ms * 1e3, 1),
+            format!("{}", r.completions),
+            format!("{}", r.sheds),
+            format!("{}", r.queue_depth),
+            num(r.p50_ms, 2),
+            num(r.p99_ms, 2),
+        ]);
+    }
+    let mut out = t.render();
+    let mut pcts = String::new();
+    for (label, p) in REPORT_PERCENTILES {
+        pcts.push_str(&format!(" {label} {:.2}",
+                               stats.overall_quantile(p)));
+    }
+    out.push_str(&format!(
+        "sketch percentiles (ms):{pcts} | {} log-buckets held for {} \
+         samples\n",
+        stats.max_buckets(), met.completed));
+    let n_breach = stats.breaches().len();
+    out.push_str(&format!(
+        "burn monitors: {n_breach} breach(es) over {} windows \
+         (slo_target {})\n",
+        rows.len(), stats.cfg().slo_target));
+    for b in stats.breaches().iter().take(5) {
+        out.push_str(&format!(
+            "  breach: {} monitor at window {} (t={:.0} ms) burn \
+             {:.1}x >= {:.1}x\n",
+            b.monitor.name(), b.window, b.at_ms, b.burn_rate,
+            b.threshold));
+    }
+    if n_breach > 5 {
+        out.push_str(&format!("  ... {} more\n", n_breach - 5));
+    }
+    // Self-profiling (wall clock — this line alone keeps `obs` out of
+    // the byte-reproducible `all` composition).
+    out.push_str(&format!(
+        "engine: {} events in {:.3} s wall ({:.0} events/s with stats \
+         attached); completed {} shed {}\n",
+        stats.engine_events, stats.engine_wall_s,
+        stats.events_per_sec(), met.completed, met.shed));
+    out
+}
+
+/// A `report` section renderer.
+pub type SectionFn = fn(&ReportCfg) -> String;
+
+/// Section id → renderer, sorted by id. The single dispatch surface:
+/// `report <id>` resolves here, and [`all`] composes [`ALL_ORDER`]
+/// from the same table — an id can never render differently alone vs
+/// inside `all`.
+pub const SECTIONS: &[(&str, SectionFn)] = &[
+    ("ablation", ablation),
+    ("convergence", convergence),
+    ("ext", ext),
+    ("fig1", fig1),
+    ("fig4", fig4),
+    ("fig6", fig6),
+    ("fig7", fig7),
+    ("fig8", fig8),
+    ("fleet", fleet_rep),
+    ("obs", obs_rep),
+    ("table2", table2),
+    ("table3", table3),
+    ("table4", table4),
+    ("table5", table5),
+    ("table6", table6),
+];
+
+/// `report all` composition: the paper sections in paper order, then
+/// `convergence` (regression: it used to be reachable only by name).
+/// `ext`, `fleet`, and `obs` stay opt-in — they model beyond-paper
+/// serving scale, and `obs` prints self-profiled wall clock.
+pub const ALL_ORDER: &[&str] = &[
+    "fig1", "fig4", "table2", "table3", "fig6", "table4", "ablation",
+    "fig7", "table5", "fig8", "table6", "convergence",
+];
+
+fn section(which: &str) -> Option<SectionFn> {
+    SECTIONS.iter().find(|(n, _)| *n == which).map(|&(_, f)| f)
+}
+
+/// Run every [`ALL_ORDER`] report in order, blank-line separated.
 pub fn all(cfg: &ReportCfg) -> String {
     let mut out = String::new();
-    out.push_str(&fig1(cfg));
-    out.push('\n');
-    out.push_str(&fig4(cfg));
-    out.push('\n');
-    out.push_str(&table2(cfg));
-    out.push('\n');
-    out.push_str(&table3(cfg));
-    out.push('\n');
-    out.push_str(&fig6(cfg));
-    out.push('\n');
-    out.push_str(&table4(cfg));
-    out.push('\n');
-    out.push_str(&ablation(cfg));
-    out.push('\n');
-    out.push_str(&fig7(cfg));
-    out.push('\n');
-    out.push_str(&table5(cfg));
-    out.push('\n');
-    out.push_str(&fig8(cfg));
-    out.push('\n');
-    out.push_str(&table6(cfg));
+    for (i, id) in ALL_ORDER.iter().enumerate() {
+        if i > 0 {
+            out.push('\n');
+        }
+        // ALL_ORDER ids are pinned against SECTIONS by the golden
+        // suite; an unknown id here is a programming error.
+        out.push_str(&section(id).expect("ALL_ORDER id in SECTIONS")(
+            cfg));
+    }
     out
 }
 
 /// Dispatch by experiment id.
 pub fn by_name(which: &str, cfg: &ReportCfg) -> Option<String> {
-    Some(match which {
-        "table2" => table2(cfg),
-        "table3" => table3(cfg),
-        "table4" => table4(cfg),
-        "table5" => table5(cfg),
-        "table6" => table6(cfg),
-        "fig1" => fig1(cfg),
-        "fig4" => fig4(cfg),
-        "fig6" => fig6(cfg),
-        "fig7" => fig7(cfg),
-        "fig8" => fig8(cfg),
-        "ablation" => ablation(cfg),
-        "ext" => ext(cfg),
-        "fleet" => fleet_rep(cfg),
-        "convergence" => convergence(cfg),
-        "all" => all(cfg),
-        _ => return None,
-    })
+    if which == "all" {
+        return Some(all(cfg));
+    }
+    section(which).map(|f| f(cfg))
 }

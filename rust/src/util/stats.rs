@@ -43,6 +43,18 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
+/// The nearest-rank rule every percentile estimator in the toolflow
+/// shares: the 0-based index of the `p`-th percentile (`p` in
+/// [0, 100]) in an ascending population of `n` samples. Factored out
+/// so the streaming sketch (`obs::stream::QuantileSketch`) answers the
+/// *same* rank as the exact sorted-vector estimators here — their
+/// results then differ only by bucket quantization, never by rank
+/// convention. `n` must be non-zero (callers handle empty first).
+pub fn nearest_rank(n: usize, p: f64) -> usize {
+    let idx = ((n as f64 - 1.0) * p / 100.0).round() as usize;
+    idx.min(n - 1)
+}
+
 /// Nearest-rank percentile (`p` in [0, 100]) over unsorted samples —
 /// the convention of `coordinator::Metrics::percentile`, shared by the
 /// fleet-serving latency metrics. Returns 0 for an empty slice.
@@ -58,8 +70,7 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let idx = ((sorted.len() as f64 - 1.0) * p / 100.0).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    sorted[nearest_rank(sorted.len(), p)]
 }
 
 /// Goodput percentile: [`percentile_sorted`] over the completed
@@ -76,8 +87,7 @@ pub fn percentile_with_failures(sorted: &[f64], failures: usize,
     if total == 0 {
         return 0.0;
     }
-    let idx = ((total as f64 - 1.0) * p / 100.0).round() as usize;
-    let idx = idx.min(total - 1);
+    let idx = nearest_rank(total, p);
     if idx < sorted.len() { sorted[idx] } else { f64::INFINITY }
 }
 
@@ -169,6 +179,18 @@ mod tests {
     fn std_dev_known() {
         let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
         assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nearest_rank_matches_percentile_sorted() {
+        let sorted = [1.0, 2.0, 3.0, 4.0, 5.0];
+        for p in [0.0, 12.5, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(sorted[nearest_rank(sorted.len(), p)],
+                       percentile_sorted(&sorted, p));
+        }
+        assert_eq!(nearest_rank(1, 0.0), 0);
+        assert_eq!(nearest_rank(1, 100.0), 0);
+        assert_eq!(nearest_rank(100, 99.0), 98);
     }
 
     #[test]

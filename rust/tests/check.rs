@@ -25,6 +25,7 @@ use harflow3d::fleet::{BatchCfg, BoardSpec, FleetCfg, Policy,
 use harflow3d::model::graph::{GraphBuilder, INPUT};
 use harflow3d::model::layer::{ActKind, EltOp, LayerKind, PoolOp, Shape};
 use harflow3d::model::zoo;
+use harflow3d::obs::StatsCfg;
 use harflow3d::resource::ResourceModel;
 use harflow3d::sched::{self, SchedCfg};
 use harflow3d::sdf::{Design, MapTarget, NodeKind};
@@ -244,6 +245,23 @@ fn fixture_h3d_042_traffic_slo() {
     assert_fires(&check::fleetpass::check_fleet_cfg(&c), "H3D-042");
 }
 
+#[test]
+fn fixture_h3d_043_stats_window() {
+    let c = StatsCfg { window_ms: 0.0, ..StatsCfg::default() };
+    assert_fires(&check::fleetpass::check_stats_cfg(&c), "H3D-043");
+    let c = StatsCfg { shards: 0, ..StatsCfg::default() };
+    assert_fires(&check::fleetpass::check_stats_cfg(&c), "H3D-043");
+}
+
+#[test]
+fn fixture_h3d_044_slo_monitor() {
+    let c = StatsCfg { slo_target: 1.5, ..StatsCfg::default() };
+    assert_fires(&check::fleetpass::check_stats_cfg(&c), "H3D-044");
+    // The CLI-facing gate renders the code into its error string.
+    let e = check::gate_stats_cfg(&c).unwrap_err();
+    assert!(e.contains("H3D-044"), "{e}");
+}
+
 /// Every registered code has a fixture above — count them so adding a
 /// code without a fixture fails here.
 #[test]
@@ -254,7 +272,7 @@ fn every_registered_code_has_a_fixture() {
         "H3D-001", "H3D-002", "H3D-003", "H3D-010", "H3D-011",
         "H3D-012", "H3D-013", "H3D-014", "H3D-015", "H3D-016",
         "H3D-017", "H3D-020", "H3D-021", "H3D-030", "H3D-031",
-        "H3D-040", "H3D-041", "H3D-042",
+        "H3D-040", "H3D-041", "H3D-042", "H3D-043", "H3D-044",
     ];
     let registered: Vec<&str> =
         check::REGISTRY.iter().map(|r| r.0).collect();

@@ -301,6 +301,96 @@ fn fleet_cli_trace_out_is_deterministic_and_leaves_stdout_pinned() {
 }
 
 #[test]
+fn fleet_cli_stats_out_is_deterministic_and_leaves_stdout_pinned() {
+    // The streaming-telemetry surface end-to-end: --stats-out writes
+    // a byte-identical JSON-lines series run-to-run for a fixed seed,
+    // and the rendered stdout is byte-identical to a run without the
+    // flag (the stats pipeline must not perturb a computed number).
+    let profiles = write_tmp(
+        "harflow3d_stats_profiles.jsonl",
+        "{\"bram\":100,\"device\":\"zcu102\",\"dsp\":64,\
+         \"dsp_pct\":2.5,\"ff\":1000,\"fill_ms\":4,\"gops\":50,\
+         \"latency_ms\":8,\"lut\":2000,\"model\":\"c3d\",\
+         \"reconfig_ms\":5,\"sa_states\":100,\"sim_ms\":10}\n");
+    let stats_out = std::env::temp_dir()
+        .join(format!("{}_harflow3d_stats.jsonl", std::process::id()));
+    let base = [
+        "fleet", "--profiles", profiles.to_str().unwrap(),
+        "--boards", "2", "--rate", "150", "--requests", "300",
+        "--slo-ms", "100", "--seed", "7", "--faults", "crash",
+        "--deadline-ms", "80", "--retries", "2", "--quiet",
+    ];
+    let plain_args = Args::parse(base.iter().map(|s| s.to_string()));
+    let plain = fleet::cli::run(&plain_args).unwrap();
+
+    let run_stats = || {
+        let argv: Vec<String> = base
+            .iter()
+            .map(|s| s.to_string())
+            .chain([
+                "--stats-out".to_string(),
+                stats_out.to_str().unwrap().to_string(),
+                "--window-ms".to_string(),
+                "50".to_string(),
+            ])
+            .collect();
+        let out = fleet::cli::run(&Args::parse(argv.into_iter()))
+            .unwrap();
+        (out, std::fs::read_to_string(&stats_out).unwrap())
+    };
+    let (out_a, series_a) = run_stats();
+    let (out_b, series_b) = run_stats();
+    assert_eq!(out_a, plain,
+               "--stats-out must not change the rendered output");
+    assert_eq!(out_a, out_b);
+    assert_eq!(series_a, series_b,
+               "stats series must be byte-stable for a seed");
+    // Schema floor: JSON-lines, meta first, summary last, several
+    // windows in between (the full key contract is gated by
+    // ci/check_stats.py and the unit pins in obs::window).
+    let lines: Vec<&str> = series_a.lines().collect();
+    assert!(lines.len() > 3, "expected a multi-window series");
+    let kind = |l: &str| -> String {
+        Json::parse(l).unwrap().get("kind").and_then(Json::as_str)
+            .unwrap().to_string()
+    };
+    assert_eq!(kind(lines[0]), "meta");
+    assert_eq!(kind(lines[lines.len() - 1]), "summary");
+    assert!(lines[1..lines.len() - 1].iter()
+                .filter(|&&l| kind(l) == "window").count() >= 2);
+}
+
+#[test]
+fn report_all_order_is_pinned_and_resolvable() {
+    // ISSUE 10 satellite: `report convergence` was reachable only by
+    // name — `all` now ends with it, and both `all` and `by_name`
+    // dispatch through one SECTIONS table. Pin the composition and
+    // the table's invariants structurally (running the sections here
+    // would re-run the DSE).
+    assert_eq!(report::ALL_ORDER, &[
+        "fig1", "fig4", "table2", "table3", "fig6", "table4",
+        "ablation", "fig7", "table5", "fig8", "table6", "convergence",
+    ][..]);
+    let names: Vec<&str> =
+        report::SECTIONS.iter().map(|&(n, _)| n).collect();
+    let mut sorted = names.clone();
+    sorted.sort();
+    sorted.dedup();
+    assert_eq!(names, sorted, "SECTIONS must stay sorted and unique");
+    for id in report::ALL_ORDER {
+        assert!(names.contains(id),
+                "ALL_ORDER id {id:?} missing from SECTIONS");
+    }
+    // Opt-in sections exist but stay out of `all`: `obs` prints
+    // self-profiled wall clock, `ext`/`fleet` model beyond the paper.
+    for id in ["obs", "ext", "fleet"] {
+        assert!(names.contains(&id), "{id} must be dispatchable");
+        assert!(!report::ALL_ORDER.contains(&id),
+                "{id} must stay out of `all`");
+    }
+}
+
+#[test]
 fn fleet_cli_errors_are_clean_strings() {
     // End-to-end regression for the CLI bugfix: bad inputs come back
     // as Err strings (printed as one-line diagnostics), never panics.
@@ -311,6 +401,10 @@ fn fleet_cli_errors_are_clean_strings() {
         &["fleet", "--slo-ms", "-1"][..],
         &["fleet", "--batch", "0"][..],
         &["fleet", "--profiles", "/nonexistent/points.json"][..],
+        &["fleet", "--stats-out", "s.jsonl"][..],
+        &["fleet", "--boards", "2", "--window-ms", "50"][..],
+        &["fleet", "--boards", "2", "--stats-out", "s.jsonl",
+          "--slo-target", "1.5"][..],
     ] {
         let args = Args::parse(argv.iter().map(|s| s.to_string()));
         let e = fleet::cli::run(&args).unwrap_err();

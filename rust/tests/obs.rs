@@ -108,7 +108,7 @@ fn assert_structurally_valid(trace: &str) {
         let ts = nf(ev, "ts");
         assert!(ts.is_finite(), "{name}: non-finite ts");
         let cat = sf(ev, "cat");
-        assert!(["board", "req", "sa", "plan", "counter"]
+        assert!(["board", "req", "sa", "plan", "counter", "obs"]
                     .contains(&cat.as_str()),
                 "{name}: unknown category {cat}");
         if let Some(&prev) = last_ts.get(&track) {
@@ -175,6 +175,48 @@ fn metrics_snapshot_lines_parse_and_cover_summary_gauges() {
                  "queue_depth"] {
         assert!(names.iter().any(|n| n == want),
                 "metrics snapshot missing {want}: {names:?}");
+    }
+}
+
+#[test]
+fn stats_attached_run_mirrors_window_series_into_metrics_snapshot() {
+    use harflow3d::obs::{StatsCfg, StreamStats};
+    let (mx, cfg, arr) = chaos_fixture();
+    let mut buf = TraceBuffer::new();
+    let mut stats = StreamStats::new(StatsCfg {
+        window_ms: 100.0, shards: 1, slo_target: 0.99 });
+    let met = fleet::simulate_fleet_obs(&mx, &cfg, &arr,
+                                        Some(&mut buf),
+                                        Some(&mut stats));
+    // Regression (ISSUE 10 satellite): the metrics snapshot used to
+    // record only end-of-run gauge values; with a stats pipeline
+    // attached, every window close now lands a timestamped sample, so
+    // the snapshot carries the series, not just the final state.
+    let snap = buf.metrics_jsonl();
+    let mut ts = Vec::new();
+    for line in snap.lines() {
+        let j = Json::parse(line).expect("metrics line parses");
+        if j.get("name").and_then(Json::as_str)
+            == Some("fleet/window/completions")
+        {
+            match j.get("ts_ms") {
+                Some(Json::Num(t)) => ts.push(*t),
+                other => panic!("series sample without ts_ms: \
+                                 {other:?}"),
+            }
+        }
+    }
+    assert!(ts.len() >= 2, "expected a multi-window series:\n{snap}");
+    assert!(ts.windows(2).all(|w| w[0] < w[1]),
+            "window series timestamps must increase: {ts:?}");
+    // The trace stays structurally valid with the new obs category,
+    // and breaches surface both in FleetMetrics and (when present) as
+    // obs instants on the SLO-monitor track.
+    let trace = buf.chrome_trace();
+    assert_structurally_valid(&trace);
+    assert_eq!(met.breaches.len(), stats.breaches().len());
+    if !met.breaches.is_empty() {
+        assert!(trace.contains("slo monitors"), "missing obs track");
     }
 }
 

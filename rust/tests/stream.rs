@@ -1,0 +1,300 @@
+//! Streaming-telemetry pins (ISSUE 10 acceptance): the mergeable
+//! quantile sketch is order- and partition-independent (sharded merge
+//! is bit-identical to unsharded), its rank error against the exact
+//! sorted-vector estimators stays inside the log-bucket bound on
+//! adversarial distributions, and a fleet run's `--stats-out` series
+//! is byte-reproducible per seed with shard count not changing a byte.
+
+use harflow3d::fleet::faults::{ResilienceCfg, Scenario};
+use harflow3d::fleet::{self, arrivals, BatchCfg, BoardSpec, FleetCfg,
+                       Policy, ProfileMatrix, QueueDiscipline, Request,
+                       ServiceProfile};
+use harflow3d::obs::{QuantileSketch, StatsCfg, StreamStats};
+use harflow3d::util::stats;
+
+/// Deterministic LCG in [0, 1) — no rand crate offline.
+fn lcg(seed: &mut u64) -> f64 {
+    *seed = seed
+        .wrapping_mul(6364136223846793005)
+        .wrapping_add(1442695040888963407);
+    ((*seed >> 11) as f64) / ((1u64 << 53) as f64)
+}
+
+/// Adversarial latency populations for the rank-error bound: spread
+/// over many octaves, a heavy tail, a constant, and a bimodal split —
+/// each a way bucketed estimators historically go wrong.
+fn distributions() -> Vec<(&'static str, Vec<f64>)> {
+    let mut seed = 0x5EED;
+    let mut u = |n: usize| -> Vec<f64> {
+        (0..n).map(|_| lcg(&mut seed)).collect()
+    };
+    vec![
+        ("log-uniform",
+         u(4000).iter().map(|&x| 10f64.powf(-3.0 + 9.0 * x)).collect()),
+        ("pareto-tail",
+         u(4000).iter().map(|&x| (1.0 - x).powf(-3.0)).collect()),
+        ("constant", vec![42.42; 500]),
+        ("two-point",
+         u(1000).iter().map(|&x| if x < 0.5 { 1.0 } else { 1e6 })
+             .collect()),
+        ("tiny-and-huge",
+         u(1000).iter()
+             .map(|&x| if x < 0.1 { 1e-300 } else { 1e300 * x })
+             .collect()),
+    ]
+}
+
+fn sketch_of(vals: &[f64]) -> QuantileSketch {
+    let mut s = QuantileSketch::new();
+    for &v in vals {
+        s.insert(v);
+    }
+    s
+}
+
+#[test]
+fn merge_is_associative_and_commutative() {
+    let vals = distributions().remove(0).1;
+    let (a, b, c) = (sketch_of(&vals[..700]),
+                     sketch_of(&vals[700..1900]),
+                     sketch_of(&vals[1900..]));
+    // (a + b) + c == a + (b + c): integer counter addition.
+    let mut left = a.clone();
+    left.merge(&b);
+    left.merge(&c);
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut right = a.clone();
+    right.merge(&bc);
+    assert_eq!(left, right, "merge must be associative");
+    // a + b == b + a.
+    let mut ab = a.clone();
+    ab.merge(&b);
+    let mut ba = b.clone();
+    ba.merge(&a);
+    assert_eq!(ab, ba, "merge must be commutative");
+    assert_eq!(left.count(), vals.len() as u64);
+}
+
+#[test]
+fn sharded_partition_merges_bit_identical_to_unsharded() {
+    for (name, vals) in distributions() {
+        let whole = sketch_of(&vals);
+        for shards in [2usize, 3, 4, 7] {
+            let mut parts = vec![QuantileSketch::new(); shards];
+            for (i, &v) in vals.iter().enumerate() {
+                parts[i % shards].insert(v);
+            }
+            let mut merged = QuantileSketch::new();
+            for p in &parts {
+                merged.merge(p);
+            }
+            assert_eq!(merged, whole,
+                       "{name}: {shards}-way partition must merge to \
+                        the unsharded sketch");
+            for p in [50.0, 95.0, 99.0] {
+                assert_eq!(merged.quantile(p).to_bits(),
+                           whole.quantile(p).to_bits(),
+                           "{name}: p{p} must be bit-identical");
+            }
+        }
+    }
+}
+
+#[test]
+fn rank_error_stays_inside_the_bucket_bound() {
+    // 7 mantissa bits kept => 128 sub-buckets per octave => the
+    // sketch's answer is the bucket floor of the exact rank value:
+    // never above it, and relatively below by less than 2^-7.
+    let bound = 1.0 / 128.0 + 1e-12;
+    for (name, vals) in distributions() {
+        let s = sketch_of(&vals);
+        for p in [0.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            let exact = stats::percentile(&vals, p);
+            let approx = s.quantile(p);
+            assert!(approx <= exact,
+                    "{name} p{p}: sketch {approx} above exact {exact}");
+            if exact > 0.0 {
+                let rel = (exact - approx) / exact;
+                assert!(rel < bound,
+                        "{name} p{p}: rel error {rel} vs {exact}");
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_and_degenerate_populations() {
+    let s = QuantileSketch::new();
+    assert!(s.is_empty());
+    assert_eq!(s.count(), 0);
+    assert_eq!(s.quantile(99.0), 0.0, "empty sketch reports 0");
+    // Single sample: every percentile answers that sample's bucket.
+    let s = sketch_of(&[7.25]);
+    let q = s.quantile(0.0);
+    for p in [50.0, 99.0, 100.0] {
+        assert_eq!(s.quantile(p).to_bits(), q.to_bits());
+    }
+    assert!(q <= 7.25 && (7.25 - q) / 7.25 < 1.0 / 128.0);
+    // Merging an empty sketch changes nothing.
+    let mut m = s.clone();
+    m.merge(&QuantileSketch::new());
+    assert_eq!(m, s);
+    // All-failure goodput is +inf (matching percentile_with_failures).
+    assert!(QuantileSketch::new()
+                .quantile_with_failures(5, 99.0)
+                .is_infinite());
+    assert_eq!(QuantileSketch::new().quantile_with_failures(0, 99.0),
+               0.0);
+}
+
+#[test]
+fn sketch_goodput_matches_exact_rank_rule() {
+    // Same nearest-rank rule as util::stats::percentile_with_failures:
+    // the +inf failure mass tips the same ranks over to infinity.
+    let vals = [10.0, 20.0, 30.0, 40.0];
+    let s = sketch_of(&vals);
+    let mut sorted = vals.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    for failures in [0usize, 1, 2, 10] {
+        for p in [50.0, 75.0, 99.0, 100.0] {
+            let exact =
+                stats::percentile_with_failures(&sorted, failures, p);
+            let approx =
+                s.quantile_with_failures(failures as u64, p);
+            assert_eq!(approx.is_infinite(), exact.is_infinite(),
+                       "failures {failures} p{p}: {approx} vs {exact}");
+            if exact.is_finite() && exact > 0.0 {
+                assert!(approx <= exact
+                            && (exact - approx) / exact < 1.0 / 128.0,
+                        "failures {failures} p{p}: {approx} vs {exact}");
+            }
+        }
+    }
+}
+
+// -- fleet-level pins --------------------------------------------------------
+
+/// Chaos fleet (crash faults + deadlines/retries/shedding) so the
+/// window series carries every loss bucket, same shape as the
+/// rust/tests/obs.rs fixture.
+fn fixture() -> (ProfileMatrix, FleetCfg, Vec<Request>) {
+    let mut mx = ProfileMatrix::new(vec!["a".into()], vec!["d".into()]);
+    mx.set(0, 0, ServiceProfile { service_ms: 4.0, reconfig_ms: 2.0,
+                                  fill_ms: 1.0 });
+    let arr = arrivals::poisson(400, 300.0, 1, 7);
+    let span = arr.last().map(|r| r.arrival_ms).unwrap_or(0.0);
+    let cfg = FleetCfg {
+        boards: (0..2).map(|_| BoardSpec { device: 0, preload: 0 })
+            .collect(),
+        policy: Policy::SloAware,
+        queue: QueueDiscipline::Fifo,
+        slo_ms: 60.0,
+        batch: BatchCfg::new(4, 0.0),
+        faults: Scenario::Crash.single(2, span, 7),
+        resilience: ResilienceCfg {
+            deadline_ms: 120.0,
+            retries: 2,
+            shed: true,
+            seed: 7,
+            ..ResilienceCfg::none()
+        },
+    };
+    (mx, cfg, arr)
+}
+
+fn stats_run(shards: usize) -> (fleet::FleetMetrics, StreamStats) {
+    let (mx, cfg, arr) = fixture();
+    let mut stats = StreamStats::new(StatsCfg {
+        window_ms: 100.0, shards, slo_target: 0.99 });
+    let met = fleet::simulate_fleet_obs(&mx, &cfg, &arr, None,
+                                        Some(&mut stats));
+    (met, stats)
+}
+
+#[test]
+fn stats_pipeline_leaves_fleet_metrics_bit_identical() {
+    let (mx, cfg, arr) = fixture();
+    let plain = fleet::simulate_fleet(&mx, &cfg, &arr);
+    let (with_stats, stats) = stats_run(1);
+    // `breaches` is the one field the stats pipeline owns; everything
+    // else must be bit-for-bit the plain run's.
+    let mut scrubbed = with_stats.clone();
+    scrubbed.breaches.clear();
+    assert_eq!(format!("{plain:?}"), format!("{scrubbed:?}"));
+    assert!(!stats.rows().is_empty(), "chaos run closed no windows");
+    // Conservation per window: arrivals eventually complete, shed,
+    // fail, or carry over — totals must bound the offered load.
+    let done: u64 = stats.rows().iter().map(|r| r.completions).sum();
+    assert_eq!(done, with_stats.completed as u64);
+}
+
+#[test]
+fn sharded_stats_series_is_byte_identical_to_unsharded() {
+    // ISSUE 10 acceptance: N interleaved sketch shards merged at each
+    // window close reproduce the unsharded series byte-for-byte.
+    let (_, one) = stats_run(1);
+    for shards in [2usize, 4] {
+        let (_, n) = stats_run(shards);
+        let a = one.to_jsonl();
+        let b = n.to_jsonl();
+        // Only the advertised shard count may differ (the meta line).
+        let strip = |s: &str| -> String {
+            s.lines()
+                .filter(|l| !l.contains("\"kind\":\"meta\""))
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        assert_eq!(strip(&a), strip(&b),
+                   "{shards}-shard series must match unsharded");
+    }
+}
+
+#[test]
+fn stats_out_series_is_byte_reproducible_per_seed() {
+    let (_, a) = stats_run(4);
+    let (_, b) = stats_run(4);
+    assert_eq!(a.to_jsonl(), b.to_jsonl());
+    // Self-profiling is wall clock and must stay out of the exported
+    // bytes: two runs with different wall times still matched above.
+    assert!(a.engine_wall_s > 0.0);
+    assert!(a.events_per_sec() > 0.0);
+    assert!(!a.to_jsonl().contains("events_per_sec"));
+}
+
+#[test]
+fn overloaded_fleet_trips_burn_monitors() {
+    // 4x overload with shedding: most windows are majority-bad, far
+    // over the 14.4x fast threshold at a 99% objective.
+    let mut mx = ProfileMatrix::new(vec!["a".into()],
+                                    vec!["d".into()]);
+    mx.set(0, 0, ServiceProfile { service_ms: 10.0, reconfig_ms: 1.0,
+                                  fill_ms: 0.0 });
+    let arr = arrivals::poisson(600, 400.0, 1, 11);
+    let cfg = FleetCfg {
+        boards: vec![BoardSpec { device: 0, preload: 0 }],
+        policy: Policy::SloAware,
+        queue: QueueDiscipline::Fifo,
+        slo_ms: 30.0,
+        batch: BatchCfg::default(),
+        faults: harflow3d::fleet::faults::FaultPlan::none(),
+        resilience: ResilienceCfg {
+            deadline_ms: 60.0,
+            shed: true,
+            seed: 11,
+            ..ResilienceCfg::none()
+        },
+    };
+    let mut stats = StreamStats::new(StatsCfg {
+        window_ms: 100.0, shards: 1, slo_target: 0.99 });
+    let met = fleet::simulate_fleet_obs(&mx, &cfg, &arr, None,
+                                        Some(&mut stats));
+    assert!(met.shed > 0, "overload fixture must shed: {met:?}");
+    assert!(!met.breaches.is_empty(),
+            "sustained overload must trip the burn monitors");
+    assert_eq!(met.breaches, stats.breaches().to_vec());
+    let b = &met.breaches[0];
+    assert!(b.burn_rate >= b.threshold);
+    // Breach lines land in the export too.
+    assert!(stats.to_jsonl().contains("\"kind\":\"breach\""));
+}
